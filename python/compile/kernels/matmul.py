@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: tiled matmul.
+
+The compute hot-spot of every L2 graph (model forward, the closed-form
+backward, the A·g projection, and AMP's Aᵀr) is a dense matmul, so this is
+the kernel the whole stack funnels through.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output into
+(BM × BN) blocks; each program instance loads an (BM × K) strip of `x` and a
+(K × BN) strip of `w` into VMEM via BlockSpec and feeds the MXU. Block
+shapes are chosen so the VMEM footprint
+    BM·K + K·BN + BM·BN  floats
+stays well under the ~16 MiB/core budget at this paper's shapes (K ≤ 7850:
+128·7850·4 B ≈ 3.8 MiB per strip). On CPU we run interpret=True — real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-tile shape (MXU-aligned: multiples of 128 feed the
+# 128x128 systolic array without padding waste).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BM, BN) output tile: full-K strips are resident in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr = rows - a.shape[0]
+    pc = cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul(x: jax.Array, w: jax.Array, *, block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """`x @ w` for 2-D f32 arrays via the Pallas kernel.
+
+    Shapes need not be multiples of the block size: inputs are zero-padded
+    to the grid and the result is sliced back.
+    """
+    assert x.ndim == 2 and w.ndim == 2, (x.shape, w.shape)
+    assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block_m, max(m, 1))
+    bn = min(block_n, max(n, 1))
+    gm = -(-m // bm)
+    gn = -(-n // bn)
+    xp = _pad_to(x.astype(jnp.float32), gm * bm, k)
+    wp = _pad_to(w.astype(jnp.float32), k, gn * bn)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def matvec(a: jax.Array, v: jax.Array) -> jax.Array:
+    """`A @ v` through the same kernel (v as an n×1 column)."""
+    return matmul(a, v[:, None])[:, 0]
+
+
+def vecmat(v: jax.Array, a: jax.Array) -> jax.Array:
+    """`v @ A` (≡ Aᵀv for the AMP pseudo-data) through the kernel."""
+    return matmul(v[None, :], a)[0]
+
+
+def vmem_estimate_bytes(m: int, k: int, n: int, block_m: int = BLOCK_M, block_n: int = BLOCK_N) -> int:
+    """Estimated per-instance VMEM footprint (f32) for DESIGN.md §Perf."""
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    return 4 * (bm * k + k * bn + bm * bn)

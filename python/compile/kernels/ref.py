@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every L1 kernel and L2 graph.
+
+pytest checks each Pallas kernel against its oracle (hypothesis sweeps the
+shapes); the oracles themselves are checked against jax.grad where a
+closed-form claim is involved (the per-device gradient).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def project_ref(a, g):
+    return jnp.dot(a, g, preferred_element_type=jnp.float32)
+
+
+def soft_threshold_ref(x, tau):
+    mag = jnp.abs(x) - tau
+    return jnp.where(mag > 0, mag * jnp.sign(x), 0.0)
+
+
+def axpby_ref(a, x, b, y):
+    return a * x + b * y
+
+
+def logits_ref(params, images):
+    """Single-layer network: images [N,784], params [7850] → [N,10]."""
+    w = params[: 784 * 10].reshape(10, 784)
+    b = params[784 * 10 :]
+    return images @ w.T + b
+
+
+def loss_ref(params, images, labels_onehot):
+    """Mean softmax cross-entropy."""
+    lg = logits_ref(params, images)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+def per_device_grads_ref(params, images, labels_onehot):
+    """Autodiff oracle for the closed-form L2 graph: images [M,B,784]."""
+    g = jax.vmap(jax.grad(loss_ref), in_axes=(None, 0, 0))(
+        params, images, labels_onehot
+    )
+    return g
+
+
+def amp_step_ref(a, y, x, r, threshold_mult):
+    """One AMP iteration (mirrors rust amp::recover's loop body)."""
+    s = a.shape[0]
+    sigma = jnp.linalg.norm(r) / jnp.sqrt(jnp.asarray(s, jnp.float32))
+    tau = threshold_mult * sigma
+    pseudo = x + a.T @ r
+    x_new = soft_threshold_ref(pseudo, tau)
+    b = jnp.count_nonzero(x_new).astype(jnp.float32) / s
+    r_new = y - a @ x_new + b * r
+    return x_new, r_new, tau

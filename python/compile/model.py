@@ -1,0 +1,79 @@
+"""L2 JAX graphs, all funnelling through the L1 Pallas kernels.
+
+Three build-time graphs, AOT-lowered by `aot.py`:
+
+* `per_device_grads` — the paper's device-side computation: batched
+  per-device gradients of the single-layer network (d = 7850) in closed
+  form. Forward logits AND the backward einsum both run through the
+  Pallas matmul kernel, so the entire gradient pipeline exercises L1.
+* `project` — the A-DSGD random projection (re-exported kernel).
+* `amp_step` — one AMP decoder iteration (projection + elementwise
+  kernels), matching `rust/src/amp`'s loop body bit-for-bit in structure.
+
+The closed form used for the gradient (softmax cross-entropy):
+    err  = (softmax(XWᵀ + b) − Y) / B         [B, 10]
+    ∇W   = errᵀ X                              [10, 784]
+    ∇b   = Σ_b err                             [10]
+which `kernels/ref.py` cross-checks against jax.grad.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import elementwise, matmul, projection
+
+IMG = 784
+CLASSES = 10
+PARAM_DIM = IMG * CLASSES + CLASSES  # 7850
+
+
+def unpack(params):
+    w = params[: IMG * CLASSES].reshape(CLASSES, IMG)
+    b = params[IMG * CLASSES :]
+    return w, b
+
+
+def per_device_grads(params, images, labels_onehot):
+    """params [d], images [M,B,784], labels [M,B,10] → grads [M, d].
+
+    The per-device loop unrolls at trace time (M is static), producing one
+    Pallas matmul per device for the backward einsum plus one shared
+    forward matmul over all M·B rows.
+    """
+    m, b, _ = images.shape
+    w, bias = unpack(params)
+    x = images.reshape(m * b, IMG)
+    logits = matmul.matmul(x, w.T) + bias  # [M·B, 10]
+    probs = jax.nn.softmax(logits, axis=-1)
+    err = (probs - labels_onehot.reshape(m * b, CLASSES)) / b  # [M·B, 10]
+    grads = []
+    for dev in range(m):
+        e = err[dev * b : (dev + 1) * b]  # [B, 10]
+        xm = x[dev * b : (dev + 1) * b]  # [B, 784]
+        gw = matmul.matmul(e.T, xm)  # [10, 784]
+        gb = jnp.sum(e, axis=0)  # [10]
+        grads.append(jnp.concatenate([gw.reshape(-1), gb]))
+    return jnp.stack(grads)
+
+
+def project(a, g):
+    """A-DSGD projection g̃ = A·g (L1 kernel)."""
+    return projection.project(a, g)
+
+
+def amp_step(a, y, x, r, threshold_mult):
+    """One AMP iteration: (x, r) → (x', r', τ). Mirrors rust amp::recover."""
+    s = a.shape[0]
+    sigma = jnp.linalg.norm(r) / jnp.sqrt(jnp.asarray(s, jnp.float32))
+    tau = threshold_mult * sigma
+    # Pseudo-data u = x + Aᵀr via the matmul kernel (vecmat form).
+    at_r = matmul.vecmat(r, a)
+    pseudo = elementwise.axpby(1.0, x, 1.0, at_r)
+    x_new = elementwise.soft_threshold(pseudo, tau)
+    onsager = jnp.count_nonzero(x_new).astype(jnp.float32) / s
+    ax = projection.project(a, x_new)
+    # r' = (y − Ax') + b·r
+    r_new = elementwise.axpby(1.0, y - ax, onsager, r)
+    return x_new, r_new, tau

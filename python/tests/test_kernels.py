@@ -1,0 +1,105 @@
+"""L1 Pallas kernels vs pure-jnp oracles (hypothesis sweeps shapes/values)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, matmul, projection, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def assert_close(a, b, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+@st.composite
+def matmul_shapes(draw):
+    m = draw(st.integers(1, 200))
+    k = draw(st.integers(1, 150))
+    n = draw(st.integers(1, 60))
+    return m, k, n
+
+
+@given(matmul_shapes(), st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(shape, seed):
+    m, k, n = shape
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (m, k)).astype(np.float32)
+    w = rng.normal(0, 1, (k, n)).astype(np.float32)
+    got = matmul.matmul(jnp.asarray(x), jnp.asarray(w))
+    want = ref.matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    assert_close(got, want, atol=1e-3 * max(1, k // 32))
+
+
+@given(st.integers(1, 300), st.integers(1, 400), st.integers(0, 2**31 - 1))
+def test_projection_matches_ref(s_tilde, d, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.normal(0, 1, (s_tilde, d)) / np.sqrt(s_tilde)).astype(np.float32)
+    g = rng.normal(0, 1, d).astype(np.float32)
+    got = projection.project(jnp.asarray(a), jnp.asarray(g))
+    want = ref.project_ref(jnp.asarray(a), jnp.asarray(g))
+    assert_close(got, want, atol=1e-3)
+
+
+@given(st.integers(1, 5000), st.floats(0.0, 3.0), st.integers(0, 2**31 - 1))
+def test_soft_threshold_matches_ref(n, tau, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n).astype(np.float32)
+    got = elementwise.soft_threshold(jnp.asarray(x), tau)
+    want = ref.soft_threshold_ref(jnp.asarray(x), jnp.float32(tau))
+    assert_close(got, want, atol=1e-6)
+
+
+@given(
+    st.integers(1, 3000),
+    st.floats(-2.0, 2.0),
+    st.floats(-2.0, 2.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_axpby_matches_ref(n, a, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n).astype(np.float32)
+    y = rng.normal(0, 1, n).astype(np.float32)
+    got = elementwise.axpby(a, jnp.asarray(x), b, jnp.asarray(y))
+    want = ref.axpby_ref(np.float32(a), x, np.float32(b), y)
+    assert_close(got, want, atol=1e-5)
+
+
+def test_matmul_nonaligned_shapes():
+    """Shapes that are not block multiples exercise the padding path."""
+    rng = np.random.default_rng(0)
+    for (m, k, n) in [(1, 1, 1), (127, 33, 129), (128, 784, 10), (200, 7850, 1)]:
+        x = rng.normal(0, 1, (m, k)).astype(np.float32)
+        w = rng.normal(0, 1, (k, n)).astype(np.float32)
+        assert_close(
+            matmul.matmul(jnp.asarray(x), jnp.asarray(w)),
+            x @ w,
+            atol=1e-2,
+        )
+
+
+def test_matvec_vecmat_forms():
+    rng = np.random.default_rng(1)
+    a = rng.normal(0, 1, (37, 53)).astype(np.float32)
+    v = rng.normal(0, 1, 53).astype(np.float32)
+    u = rng.normal(0, 1, 37).astype(np.float32)
+    assert_close(matmul.matvec(jnp.asarray(a), jnp.asarray(v)), a @ v, atol=1e-4)
+    assert_close(matmul.vecmat(jnp.asarray(u), jnp.asarray(a)), u @ a, atol=1e-4)
+
+
+def test_soft_threshold_kills_subthreshold():
+    x = jnp.asarray(np.array([0.5, -0.5, 2.0, -2.0], np.float32))
+    out = np.asarray(elementwise.soft_threshold(x, 1.0))
+    assert out[0] == 0.0 and out[1] == 0.0
+    assert out[2] == 1.0 and out[3] == -1.0
+
+
+def test_vmem_estimate_within_tpu_budget():
+    """The paper-scale shapes must fit a 16 MiB VMEM budget per instance."""
+    # Largest matmul strip: forward logits at M=25, B=1000: (25000, 784)@(784, 10)
+    assert matmul.vmem_estimate_bytes(25000, 784, 10) < 16 * 2**20
+    # Projection strip at s̃=3924, d=7850 with 128-row blocks:
+    assert 4 * (128 * 7850 + 7850) < 16 * 2**20

@@ -1,0 +1,95 @@
+"""L2 graph correctness: closed-form per-device gradients vs jax.grad,
+AMP step vs the reference loop body."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", deadline=None, max_examples=10)
+settings.load_profile("model")
+
+
+def rand_state(seed, m, b):
+    rng = np.random.default_rng(seed)
+    params = rng.normal(0, 0.05, model.PARAM_DIM).astype(np.float32)
+    imgs = rng.random((m, b, model.IMG)).astype(np.float32)
+    labels = np.eye(model.CLASSES, dtype=np.float32)[
+        rng.integers(0, model.CLASSES, (m, b))
+    ]
+    return params, imgs, labels
+
+
+@given(st.integers(1, 6), st.integers(1, 40), st.integers(0, 2**31 - 1))
+def test_closed_form_grads_match_autodiff(m, b, seed):
+    params, imgs, labels = rand_state(seed, m, b)
+    got = model.per_device_grads(
+        jnp.asarray(params), jnp.asarray(imgs), jnp.asarray(labels)
+    )
+    want = ref.per_device_grads_ref(
+        jnp.asarray(params), jnp.asarray(imgs), jnp.asarray(labels)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-6)
+
+
+def test_grads_shape_and_zero_params_symmetry():
+    params = np.zeros(model.PARAM_DIM, np.float32)
+    _, imgs, labels = rand_state(0, 3, 10)
+    g = np.asarray(
+        model.per_device_grads(jnp.asarray(params), jnp.asarray(imgs), jnp.asarray(labels))
+    )
+    assert g.shape == (3, model.PARAM_DIM)
+    # At θ=0 softmax is uniform: db_c = mean(1/10 − 1{y=c}).
+    gb = g[:, model.IMG * model.CLASSES :]
+    counts = labels.sum(axis=1) / labels.shape[1]  # [3, 10]
+    np.testing.assert_allclose(gb, 0.1 - counts, atol=1e-6)
+
+
+def test_gradient_descent_reduces_loss():
+    params, imgs, labels = rand_state(3, 2, 30)
+    p = jnp.asarray(params)
+    imgs_j, labels_j = jnp.asarray(imgs), jnp.asarray(labels)
+    flat_imgs = imgs_j.reshape(-1, model.IMG)
+    flat_labels = labels_j.reshape(-1, model.CLASSES)
+    l0 = float(ref.loss_ref(p, flat_imgs, flat_labels))
+    for _ in range(10):
+        g = model.per_device_grads(p, imgs_j, labels_j)
+        p = p - 0.1 * jnp.mean(g, axis=0)
+    l1 = float(ref.loss_ref(p, flat_imgs, flat_labels))
+    assert l1 < l0
+
+
+@given(st.integers(10, 60), st.integers(30, 160), st.integers(0, 2**31 - 1))
+def test_amp_step_matches_ref(s_tilde, d, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.normal(0, 1, (s_tilde, d)) / np.sqrt(s_tilde)).astype(np.float32)
+    x_true = np.zeros(d, np.float32)
+    idx = rng.choice(d, size=max(1, d // 10), replace=False)
+    x_true[idx] = rng.normal(0, 1, len(idx))
+    y = (a @ x_true).astype(np.float32)
+    x0 = np.zeros(d, np.float32)
+    got = model.amp_step(jnp.asarray(a), jnp.asarray(y), jnp.asarray(x0), jnp.asarray(y), 1.1)
+    want = ref.amp_step_ref(jnp.asarray(a), jnp.asarray(y), jnp.asarray(x0), jnp.asarray(y), 1.1)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=2e-4)
+
+
+def test_amp_iterations_recover_sparse_signal():
+    """Iterating the L2 amp_step graph must actually solve the CS problem."""
+    rng = np.random.default_rng(7)
+    s_tilde, d, k = 120, 300, 12
+    a = (rng.normal(0, 1, (s_tilde, d)) / np.sqrt(s_tilde)).astype(np.float32)
+    x_true = np.zeros(d, np.float32)
+    idx = rng.choice(d, size=k, replace=False)
+    x_true[idx] = rng.normal(0, 1, k)
+    y = (a @ x_true).astype(np.float32)
+    x = jnp.zeros(d, jnp.float32)
+    r = jnp.asarray(y)
+    for _ in range(40):
+        x, r, _ = model.amp_step(jnp.asarray(a), jnp.asarray(y), x, r, 1.1)
+    err = np.linalg.norm(np.asarray(x) - x_true) / np.linalg.norm(x_true)
+    assert err < 0.05, f"relative error {err}"

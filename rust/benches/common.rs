@@ -1,0 +1,44 @@
+//! Shared helpers for the bench targets (no criterion offline — the
+//! harness lives in `ota_dsgd::util::bench`).
+
+use ota_dsgd::config::{DatasetSpec, RunConfig};
+use ota_dsgd::coordinator::Trainer;
+use ota_dsgd::util::bench::{Bench, BenchResult};
+use std::time::Duration;
+
+/// Shrink a figure preset's *runtime* knobs so a bench round is fast, while
+/// keeping the channel dimensions (s, k, d, M, P̄) paper-exact — those are
+/// what the round cost depends on.
+pub fn benchify(mut cfg: RunConfig, rounds: usize) -> RunConfig {
+    cfg.local_samples = cfg.local_samples.min(200);
+    cfg.iterations = rounds;
+    cfg.eval_every = usize::MAX / 2; // no eval inside the timed region
+    cfg.dataset = DatasetSpec::Synthetic {
+        train: cfg.devices * cfg.local_samples,
+        test: 64,
+    };
+    cfg
+}
+
+/// Time `rounds` synchronous rounds of the given config (setup excluded
+/// from the timed region). Reports seconds *per round* via the throughput
+/// field (rounds/sec).
+pub fn bench_rounds(name: &str, cfg: RunConfig, rounds: usize) -> BenchResult {
+    let cfg = benchify(cfg, rounds);
+    // Corpus load/partition happens once, outside the timed region; each
+    // timed call is a full T=`rounds` job (device transmit, MAC, decode,
+    // optimizer) including per-run state init.
+    let mut tr = Trainer::new(cfg).expect("trainer");
+    Bench::new(name)
+        .warmup(0)
+        .iters(2, 5)
+        .target_time(Duration::from_secs(4))
+        .throughput(rounds as u64)
+        .run(move || tr.run().records.len())
+}
+
+/// Entry-point boilerplate shared by the per-figure bench mains.
+pub fn print_header(fig: &str, what: &str) {
+    println!("=== bench {fig}: {what} ===");
+    println!("(throughput column = DSGD rounds/sec incl. setup; lower-level component timings live in the `components` bench)");
+}

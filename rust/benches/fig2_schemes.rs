@@ -1,0 +1,18 @@
+//! Fig. 2 bench: one-round cost of every scheme at the figure's channel
+//! shape (M=25, s=d/2, k=s/2, P̄=500), IID and non-IID.
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header("fig2", "scheme shoot-out (IID + non-IID)");
+    for noniid in [false, true] {
+        let spec = figures::fig2(noniid, false);
+        for (label, cfg) in spec.runs {
+            let tag = if noniid { "non-IID" } else { "IID" };
+            common::bench_rounds(&format!("{label} [{tag}]"), cfg, 2);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Fig. 3 bench: D-DSGD under the four power-allocation schedules
+//! (Eq. 45a–c) + the analog/error-free anchors, at P̄ = 200.
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header("fig3", "power-allocation schedules (P̄=200)");
+    let spec = figures::fig3(false);
+    for (label, cfg) in spec.runs {
+        common::bench_rounds(&label, cfg, 2);
+    }
+}

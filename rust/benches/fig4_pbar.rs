@@ -1,0 +1,14 @@
+//! Fig. 4 bench: A-DSGD vs D-DSGD round cost across P̄ ∈ {200, 1000}.
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header("fig4", "average-power sweep");
+    let spec = figures::fig4(false);
+    for (label, cfg) in spec.runs {
+        common::bench_rounds(&label, cfg, 2);
+    }
+}

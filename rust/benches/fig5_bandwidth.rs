@@ -1,0 +1,16 @@
+//! Fig. 5 bench: round cost across channel bandwidths s ∈ {d/2, 3d/10}
+//! (the AMP/projection cost scales with s — this is where bandwidth hits
+//! compute).
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header("fig5", "channel-bandwidth sweep (M=20)");
+    let spec = figures::fig5(false);
+    for (label, cfg) in spec.runs {
+        common::bench_rounds(&label, cfg, 2);
+    }
+}

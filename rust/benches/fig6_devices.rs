@@ -1,0 +1,16 @@
+//! Fig. 6 bench: device-count scaling (M,B) ∈ {(10,2000),(20,1000)} with
+//! MB fixed — round cost vs fleet size, including the P̄=1 regime where
+//! D-DSGD's budget is zero bits.
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header("fig6", "device scaling, MB fixed (s=d/4)");
+    let spec = figures::fig6(false);
+    for (label, cfg) in spec.runs {
+        common::bench_rounds(&label, cfg, 2);
+    }
+}

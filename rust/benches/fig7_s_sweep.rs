@@ -1,0 +1,16 @@
+//! Fig. 7 bench: A-DSGD round cost across s ∈ {d/10, d/5, d/2} with
+//! k = 4s/5 — the bandwidth/latency trade-off's compute side: smaller s
+//! means cheaper rounds (Fig. 7b's x-axis is t·s).
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header("fig7", "A-DSGD bandwidth/latency sweep (P̄=50)");
+    let spec = figures::fig7(false);
+    for (label, cfg) in spec.runs {
+        common::bench_rounds(&label, cfg, 2);
+    }
+}

@@ -1,0 +1,303 @@
+//! A-DSGD device and PS pipelines (Algorithm 1 + §IV-A mean removal).
+//!
+//! Device side per iteration t (lines 4–9):
+//!   1. error-compensate:  g_ec = g + Δ(t)
+//!   2. sparsify:          g_sp = sp_k(g_ec);  Δ(t+1) = g_ec − g_sp
+//!   3. project:           g̃ = A_s̃ · g_sp
+//!   4. scale & frame:     x = [√α·g̃ᵀ, √α]ᵀ with α = P_t/(‖g̃‖²+1)
+//!      (mean removal:     x = [√α·(g̃−μ1)ᵀ, √α·μ, √α]ᵀ, Eq. 20–22)
+//!
+//! PS side (lines 11–12): normalize the projected block by the received
+//! Σ√α (last channel use), run AMP with the shared matrix, update θ.
+
+use crate::amp::{self, AmpConfig};
+use crate::compress::ErrorAccumulator;
+use crate::tensor::sparsify_topk_inplace;
+
+use super::projection::Projection;
+
+/// Per-device analog state.
+pub struct AnalogDevice {
+    accum: ErrorAccumulator,
+    /// Sparsification level k.
+    pub k: usize,
+}
+
+/// What a device emits in one round.
+#[derive(Clone, Debug)]
+pub struct AnalogFrame {
+    /// The length-s channel input x_m(t).
+    pub x: Vec<f32>,
+    /// √α_m(t) (diagnostic; also the last entry of x).
+    pub sqrt_alpha: f64,
+}
+
+impl AnalogDevice {
+    pub fn new(dim: usize, k: usize) -> AnalogDevice {
+        assert!(k >= 1 && k <= dim);
+        AnalogDevice {
+            accum: ErrorAccumulator::new(dim),
+            k,
+        }
+    }
+
+    /// Standard framing (s̃ = s−1): Alg. 1 lines 4–9.
+    pub fn transmit(&mut self, g: &[f32], proj: &Projection, p_t: f64) -> AnalogFrame {
+        let (g_sp, support) = self.sparsify_step(g);
+        let g_tilde = proj.apply_sparse(&g_sp, &support);
+        // Eq. 13: α = P_t / (‖g̃‖² + 1)
+        let alpha = p_t / (crate::tensor::norm_sq(&g_tilde) + 1.0);
+        let sa = alpha.sqrt();
+        let mut x = Vec::with_capacity(g_tilde.len() + 1);
+        x.extend(g_tilde.iter().map(|&v| (sa as f32) * v));
+        x.push(sa as f32);
+        AnalogFrame { x, sqrt_alpha: sa }
+    }
+
+    /// Mean-removal framing (s̃ = s−2): §IV-A, Eq. 19–22.
+    pub fn transmit_mean_removed(
+        &mut self,
+        g: &[f32],
+        proj: &Projection,
+        p_t: f64,
+        s: usize,
+    ) -> AnalogFrame {
+        assert_eq!(proj.s_tilde(), s - 2, "mean removal uses s̃ = s − 2");
+        let (g_sp, support) = self.sparsify_step(g);
+        let g_tilde = proj.apply_sparse(&g_sp, &support);
+        let s_tilde = g_tilde.len();
+        let mu = crate::tensor::mean(&g_tilde) as f64;
+        // Eq. 22: α = P_t / (‖g̃‖² − (s−3)μ² + 1).
+        // ‖g̃ − μ1‖² = ‖g̃‖² − s̃μ², and the μ side-channel adds μ² back,
+        // hence the (s̃ − 1) = (s − 3) in the denominator.
+        let denom = crate::tensor::norm_sq(&g_tilde) - (s as f64 - 3.0) * mu * mu + 1.0;
+        let alpha = p_t / denom.max(1e-12);
+        let sa = alpha.sqrt();
+        let mut x = Vec::with_capacity(s_tilde + 2);
+        x.extend(g_tilde.iter().map(|&v| (sa as f32) * (v - mu as f32)));
+        x.push((sa * mu) as f32);
+        x.push(sa as f32);
+        AnalogFrame { x, sqrt_alpha: sa }
+    }
+
+    /// Lines 4–7: compensate, sparsify, update Δ. Returns (g_sp, support).
+    fn sparsify_step(&mut self, g: &[f32]) -> (Vec<f32>, Vec<usize>) {
+        let g_ec = self.accum.compensate(g);
+        let mut g_sp = g_ec.clone();
+        let support = sparsify_topk_inplace(&mut g_sp, self.k);
+        self.accum.update(&g_ec, &g_sp);
+        (g_sp, support)
+    }
+
+    pub fn accumulator_norm(&self) -> f64 {
+        self.accum.norm()
+    }
+}
+
+/// PS-side decoder.
+pub struct AnalogPs {
+    proj: Projection,
+    pub amp_cfg: AmpConfig,
+}
+
+impl AnalogPs {
+    pub fn new(proj: Projection, amp_cfg: AmpConfig) -> AnalogPs {
+        AnalogPs { proj, amp_cfg }
+    }
+
+    pub fn projection(&self) -> &Projection {
+        &self.proj
+    }
+
+    /// Decode the standard framing: y = [y^{s−1}; y_s] (Eq. 17–18).
+    /// Returns ĝ ≈ (1/M)Σ g^sp plus the AMP trace.
+    pub fn decode(&self, y: &[f32]) -> (Vec<f32>, amp::AmpTrace) {
+        let s = y.len();
+        assert_eq!(s - 1, self.proj.s_tilde());
+        let y_s = y[s - 1];
+        let scale = if y_s.abs() < 1e-12 { 1e-12 } else { y_s };
+        let v: Vec<f32> = y[..s - 1].iter().map(|&yi| yi / scale).collect();
+        amp::recover_with(
+            &self.proj.matrix,
+            Some(&self.proj.matrix_t),
+            &v,
+            &self.amp_cfg,
+        )
+    }
+
+    /// Decode the mean-removal framing (Eq. 23–25):
+    /// AMP over (y^{s−2} + y_{s−1}·1)/y_s.
+    pub fn decode_mean_removed(&self, y: &[f32]) -> (Vec<f32>, amp::AmpTrace) {
+        let s = y.len();
+        assert_eq!(s - 2, self.proj.s_tilde());
+        let y_s = y[s - 1];
+        let y_mu = y[s - 2];
+        let scale = if y_s.abs() < 1e-12 { 1e-12 } else { y_s };
+        let v: Vec<f32> = y[..s - 2].iter().map(|&yi| (yi + y_mu) / scale).collect();
+        amp::recover_with(
+            &self.proj.matrix,
+            Some(&self.proj.matrix_t),
+            &v,
+            &self.amp_cfg,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::GaussianMac;
+    use crate::util::rng::Pcg64;
+
+    fn rel_err(x: &[f32], y: &[f32]) -> f64 {
+        let num: f64 = x
+            .iter()
+            .zip(y)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        num / crate::tensor::norm(x).max(1e-12)
+    }
+
+    /// Full round-trip: M devices, shared-seed projection, MAC, AMP.
+    fn round_trip(mean_removal: bool, noise_var: f64, pbar: f64) -> f64 {
+        let (d, s, k, m_devices) = (600, 301, 40, 8);
+        let s_tilde = if mean_removal { s - 2 } else { s - 1 };
+        let proj = Projection::generate(s_tilde, d, 77);
+        let mut rng = Pcg64::new(4);
+        let mut mac = GaussianMac::new(s, m_devices, noise_var, 5);
+
+        // Devices share a common sparse "direction" plus small private
+        // noise so the superposed supports stay recoverable (mirrors
+        // aligned gradients early in training).
+        let mut base = vec![0f32; d];
+        for i in rng.sample_indices(d, k / 2) {
+            base[i] = rng.normal_ms(0.0, 1.0) as f32;
+        }
+        let mut devices: Vec<AnalogDevice> =
+            (0..m_devices).map(|_| AnalogDevice::new(d, k)).collect();
+        let mut truth_sum = vec![0f32; d];
+        let mut frames = Vec::new();
+        for dev in devices.iter_mut() {
+            let g: Vec<f32> = base
+                .iter()
+                .map(|&b| b + rng.normal_ms(0.0, 0.02) as f32)
+                .collect();
+            // Track the true average of the *sparsified* vectors.
+            let g_sp = crate::tensor::sparsify_topk(&g, k);
+            for (t, v) in truth_sum.iter_mut().zip(&g_sp) {
+                *t += v;
+            }
+            let frame = if mean_removal {
+                dev.transmit_mean_removed(&g, &proj, pbar, s)
+            } else {
+                dev.transmit(&g, &proj, pbar)
+            };
+            assert_eq!(frame.x.len(), s);
+            frames.push(frame.x);
+        }
+        let y = mac.transmit(&frames);
+        let ps = AnalogPs::new(proj, AmpConfig {
+            max_iters: 60,
+            tol: 1e-6,
+            threshold_mult: 1.1,
+        });
+        let (ghat, _) = if mean_removal {
+            ps.decode_mean_removed(&y)
+        } else {
+            ps.decode(&y)
+        };
+        let truth_avg: Vec<f32> = truth_sum.iter().map(|&v| v / m_devices as f32).collect();
+        rel_err(&truth_avg, &ghat)
+    }
+
+    #[test]
+    fn frame_power_equals_pt() {
+        // Eq. 12: ‖x_m(t)‖² = P_t exactly (standard framing).
+        let d = 200;
+        let proj = Projection::generate(49, d, 1);
+        let mut dev = AnalogDevice::new(d, 10);
+        let mut rng = Pcg64::new(2);
+        let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        for &p_t in &[1.0, 50.0, 500.0] {
+            let frame = dev.transmit(&g, &proj, p_t);
+            let power = crate::tensor::norm_sq(&frame.x);
+            assert!(
+                (power - p_t).abs() < 1e-3 * p_t.max(1.0),
+                "power {power} != P_t {p_t}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_removed_frame_power_equals_pt() {
+        let d = 200;
+        let s = 50;
+        let proj = Projection::generate(s - 2, d, 1);
+        let mut dev = AnalogDevice::new(d, 10);
+        let mut rng = Pcg64::new(3);
+        let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32 + 0.5).collect();
+        let frame = dev.transmit_mean_removed(&g, &proj, 100.0, s);
+        let power = crate::tensor::norm_sq(&frame.x);
+        assert!((power - 100.0).abs() < 1e-2, "power {power}");
+    }
+
+    #[test]
+    fn mean_removal_never_costs_more_power_per_signal() {
+        // Eq. 21 argument: for the same P_t, mean removal spends
+        // α·(s−3)·μ² less on the mean, i.e. the scaling α_az ≥ α when μ≠0 —
+        // more of the budget goes to the informative signal.
+        let d = 300;
+        let s = 62;
+        let proj_std = Projection::generate(s - 1, d, 9);
+        let proj_mr = Projection::generate(s - 2, d, 9);
+        let mut dev1 = AnalogDevice::new(d, 15);
+        let mut dev2 = AnalogDevice::new(d, 15);
+        let mut rng = Pcg64::new(5);
+        // Gradient with a strong common offset → large projected mean.
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal_ms(0.0, 0.05) as f32).collect();
+        let f_std = dev1.transmit(&g, &proj_std, 100.0);
+        let f_mr = dev2.transmit_mean_removed(&g, &proj_mr, 100.0, s);
+        assert!(
+            f_mr.sqrt_alpha >= f_std.sqrt_alpha * 0.99,
+            "α_az {} < α {}",
+            f_mr.sqrt_alpha,
+            f_std.sqrt_alpha
+        );
+    }
+
+    #[test]
+    fn end_to_end_recovery_standard() {
+        let err = round_trip(false, 1.0, 500.0);
+        assert!(err < 0.25, "relative error {err}");
+    }
+
+    #[test]
+    fn end_to_end_recovery_mean_removed() {
+        let err = round_trip(true, 1.0, 500.0);
+        assert!(err < 0.25, "relative error {err}");
+    }
+
+    #[test]
+    fn more_power_helps() {
+        let hi = round_trip(false, 1.0, 500.0);
+        let lo = round_trip(false, 1.0, 0.05);
+        assert!(
+            hi < lo,
+            "recovery should improve with power: hi-P err {hi}, lo-P err {lo}"
+        );
+    }
+
+    #[test]
+    fn error_accumulates_what_sparsification_drops() {
+        let d = 100;
+        let proj = Projection::generate(19, d, 3);
+        let mut dev = AnalogDevice::new(d, 5);
+        let g: Vec<f32> = (0..d).map(|i| (i as f32) / d as f32).collect();
+        let norm_before = crate::tensor::norm(&g);
+        let _ = dev.transmit(&g, &proj, 10.0);
+        let lam = (((d - 5) as f64) / d as f64).sqrt();
+        assert!(dev.accumulator_norm() > 0.0);
+        assert!(dev.accumulator_norm() <= lam * norm_before + 1e-6);
+    }
+}

@@ -1,0 +1,7 @@
+//! A-DSGD: the paper's analog over-the-air scheme (§IV, Algorithm 1).
+
+pub mod adsgd;
+pub mod projection;
+
+pub use adsgd::{AnalogDevice, AnalogPs};
+pub use projection::Projection;

@@ -1,0 +1,132 @@
+//! The shared pseudo-random projection (§IV): `A_s̃ ∈ R^{s̃×d}` with i.i.d.
+//! N(0, 1/s̃) entries generated from a seed shared between the PS and all
+//! devices before training starts. Devices compute `g̃ = A·g^sp`; the PS
+//! uses the same matrix inside AMP.
+
+use crate::amp::measurement_matrix;
+use crate::tensor::Matf;
+
+/// A cached projection matrix tied to its (s̃, d, seed) identity.
+///
+/// Both layouts are kept: `matrix` (s̃×d, row-major) for the PS-side AMP
+/// pseudo-data pass, and `matrix_t` (d×s̃) so that sparse applies
+/// `A·g^sp = Σ_{j∈supp} g_j·col_j(A)` become *contiguous* axpys over rows
+/// of Aᵀ — the §Perf optimization that took the device transmit path from
+/// 17 ms to ~4 ms and AMP's A·x̂ pass off the strided-gather cliff (see
+/// EXPERIMENTS.md §Perf). Costs one extra s̃·d·4-byte buffer.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    pub matrix: Matf,
+    /// Aᵀ (d × s̃), derived from `matrix`.
+    pub matrix_t: Matf,
+    pub seed: u64,
+}
+
+impl Projection {
+    /// Generate (deterministically) the shared matrix.
+    pub fn generate(s_tilde: usize, d: usize, seed: u64) -> Projection {
+        assert!(s_tilde > 0 && d > 0);
+        let matrix = measurement_matrix(s_tilde, d, seed);
+        let matrix_t = transpose(&matrix);
+        Projection {
+            matrix,
+            matrix_t,
+            seed,
+        }
+    }
+
+    #[inline]
+    pub fn s_tilde(&self) -> usize {
+        self.matrix.rows
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.matrix.cols
+    }
+
+    /// Apply to a k-sparse vector given its support: cost s̃·k, contiguous
+    /// (axpy over rows of Aᵀ). This is the device-side hot path (Alg. 1
+    /// line 8).
+    pub fn apply_sparse(&self, g_sp: &[f32], support: &[usize]) -> Vec<f32> {
+        assert_eq!(g_sp.len(), self.d());
+        let mut out = vec![0f32; self.s_tilde()];
+        for &j in support {
+            crate::tensor::axpy(g_sp[j], self.matrix_t.row(j), &mut out);
+        }
+        out
+    }
+
+    /// Dense apply (tests / reference).
+    pub fn apply_dense(&self, g: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.s_tilde()];
+        crate::tensor::gemv(&self.matrix, g, &mut out);
+        out
+    }
+}
+
+/// Blocked transpose (cache-tiled).
+pub fn transpose(a: &Matf) -> Matf {
+    let mut t = Matf::zeros(a.cols, a.rows);
+    const B: usize = 64;
+    for r0 in (0..a.rows).step_by(B) {
+        let r1 = (r0 + B).min(a.rows);
+        for c0 in (0..a.cols).step_by(B) {
+            let c1 = (c0 + B).min(a.cols);
+            for r in r0..r1 {
+                let row = a.row(r);
+                for c in c0..c1 {
+                    t.data[c * a.rows + r] = row[c];
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::sparsify_topk_inplace;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn sparse_apply_matches_dense() {
+        let proj = Projection::generate(40, 120, 3);
+        let mut rng = Pcg64::new(1);
+        let mut g: Vec<f32> = (0..120).map(|_| rng.normal() as f32).collect();
+        let support = sparsify_topk_inplace(&mut g, 10);
+        let sparse = proj.apply_sparse(&g, &support);
+        let dense = proj.apply_dense(&g);
+        for (a, b) in sparse.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shared_seed_identical_across_parties() {
+        let device_side = Projection::generate(64, 256, 99);
+        let ps_side = Projection::generate(64, 256, 99);
+        assert_eq!(device_side.matrix.data, ps_side.matrix.data);
+    }
+
+    #[test]
+    fn projection_roughly_preserves_norm() {
+        // E‖A x‖² = ‖x‖² for N(0, 1/s̃) entries — check concentration.
+        let proj = Projection::generate(500, 1000, 5);
+        let mut rng = Pcg64::new(2);
+        let mut g = vec![0f32; 1000];
+        let support = {
+            let idx = rng.sample_indices(1000, 50);
+            for &i in &idx {
+                g[i] = rng.normal() as f32;
+            }
+            let mut s = idx;
+            s.sort_unstable();
+            s
+        };
+        let proj_g = proj.apply_sparse(&g, &support);
+        let ratio = crate::tensor::norm_sq(&proj_g) / crate::tensor::norm_sq(&g);
+        assert!((0.7..1.3).contains(&ratio), "ratio={ratio}");
+    }
+}

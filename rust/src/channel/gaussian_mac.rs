@@ -1,0 +1,152 @@
+//! Gaussian MAC simulator (Eq. 5): `y(t) = Σ_m x_m(t) + z(t)` with
+//! `z ~ N(0, σ² I_s)`, plus per-device transmit-power metering that enforces
+//! the paper's average power constraint (Eq. 6) at the end of a run.
+//!
+//! The paper models the uplink as an ideal synchronous AWGN MAC — the
+//! simulator *is* that model, so no fidelity is lost by simulating (see
+//! DESIGN.md §3). The metering exists so tests can prove every scheme obeys
+//! `(1/T) Σ_t ‖x_m(t)‖² ≤ P̄` rather than assuming it.
+
+use crate::util::rng::Pcg64;
+
+/// Per-device power accounting over a run.
+#[derive(Clone, Debug)]
+pub struct PowerReport {
+    /// Σ_t ‖x_m(t)‖² per device.
+    pub energy: Vec<f64>,
+    /// Number of channel uses consumed (MAC invocations × s).
+    pub uses: usize,
+    /// Number of MAC rounds.
+    pub rounds: usize,
+}
+
+impl PowerReport {
+    /// Average per-round transmit power of device m.
+    pub fn avg_power(&self, m: usize) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.energy[m] / self.rounds as f64
+        }
+    }
+
+    /// Check Eq. 6 for every device (with a small numerical slack).
+    pub fn satisfies(&self, pbar: f64, tol: f64) -> bool {
+        (0..self.energy.len()).all(|m| self.avg_power(m) <= pbar * (1.0 + tol))
+    }
+}
+
+/// The s-use Gaussian MAC.
+pub struct GaussianMac {
+    /// Channel uses per invocation (s).
+    pub s: usize,
+    /// Noise variance σ².
+    pub noise_var: f64,
+    devices: usize,
+    rng: Pcg64,
+    energy: Vec<f64>,
+    rounds: usize,
+}
+
+impl GaussianMac {
+    pub fn new(s: usize, devices: usize, noise_var: f64, seed: u64) -> GaussianMac {
+        assert!(s > 0 && devices > 0 && noise_var >= 0.0);
+        GaussianMac {
+            s,
+            noise_var,
+            devices,
+            rng: Pcg64::with_stream(seed, 0x3AC),
+            energy: vec![0.0; devices],
+            rounds: 0,
+        }
+    }
+
+    /// Transmit: each row of `inputs` is one device's length-s channel input
+    /// x_m(t). Returns y(t) = Σ_m x_m(t) + z(t) and meters per-device energy.
+    pub fn transmit(&mut self, inputs: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(inputs.len(), self.devices, "one input row per device");
+        let mut y = vec![0f32; self.s];
+        for (m, x) in inputs.iter().enumerate() {
+            assert_eq!(x.len(), self.s, "device {m} input must be length s={}", self.s);
+            self.energy[m] += crate::tensor::norm_sq(x);
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi += xi;
+            }
+        }
+        let sd = self.noise_var.sqrt();
+        for yi in y.iter_mut() {
+            *yi += (self.rng.normal() * sd) as f32;
+        }
+        self.rounds += 1;
+        y
+    }
+
+    /// Energy metered so far (for Eq. 6 verification).
+    pub fn power_report(&self) -> PowerReport {
+        PowerReport {
+            energy: self.energy.clone(),
+            uses: self.rounds * self.s,
+            rounds: self.rounds,
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn superposition_without_noise() {
+        let mut mac = GaussianMac::new(4, 3, 0.0, 1);
+        let inputs = vec![
+            vec![1.0, 0.0, -1.0, 2.0],
+            vec![0.5, 0.5, 0.5, 0.5],
+            vec![-1.5, 1.0, 0.0, 0.0],
+        ];
+        let y = mac.transmit(&inputs);
+        assert_eq!(y, vec![0.0, 1.5, -0.5, 2.5]);
+    }
+
+    #[test]
+    fn noise_statistics() {
+        let s = 20_000;
+        let mut mac = GaussianMac::new(s, 1, 4.0, 2);
+        let y = mac.transmit(&[vec![0.0; s]]);
+        let mean = y.iter().map(|&v| v as f64).sum::<f64>() / s as f64;
+        let var = y.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / s as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.2, "var={var}");
+    }
+
+    #[test]
+    fn energy_metering_accumulates() {
+        let mut mac = GaussianMac::new(2, 2, 0.0, 3);
+        mac.transmit(&[vec![3.0, 4.0], vec![1.0, 0.0]]);
+        mac.transmit(&[vec![0.0, 0.0], vec![2.0, 2.0]]);
+        let rep = mac.power_report();
+        assert!((rep.energy[0] - 25.0).abs() < 1e-6);
+        assert!((rep.energy[1] - 9.0).abs() < 1e-6);
+        assert_eq!(rep.rounds, 2);
+        assert!((rep.avg_power(0) - 12.5).abs() < 1e-6);
+        assert!(rep.satisfies(12.5, 1e-9));
+        assert!(!rep.satisfies(12.0, 1e-9));
+    }
+
+    #[test]
+    #[should_panic(expected = "length s")]
+    fn wrong_length_rejected() {
+        let mut mac = GaussianMac::new(3, 1, 1.0, 4);
+        mac.transmit(&[vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn deterministic_noise_per_seed() {
+        let mut a = GaussianMac::new(8, 1, 1.0, 9);
+        let mut b = GaussianMac::new(8, 1, 1.0, 9);
+        assert_eq!(a.transmit(&[vec![0.0; 8]]), b.transmit(&[vec![0.0; 8]]));
+    }
+}

@@ -1,0 +1,8 @@
+//! The wireless substrate: Gaussian multiple-access channel simulation and
+//! power allocation across iterations.
+
+pub mod gaussian_mac;
+pub mod power;
+
+pub use gaussian_mac::{GaussianMac, PowerReport};
+pub use power::PowerAllocator;

@@ -1,0 +1,151 @@
+//! Power allocation across DSGD iterations (§III Remark 1, §VI Fig. 3).
+//!
+//! The average power constraint (Eq. 7) is `(1/T) Σ_t P_t ≤ P̄`. Fig. 3
+//! evaluates four schedules at P̄ = 200 with T = 300 (Eq. 45a–c): constant,
+//! a linear "stair" ramp, and two three-block schedules. We normalize every
+//! schedule to its P̄ so the same enum generalizes beyond the figure's
+//! absolute numbers: the paper's (45a) `100·(2(t−1)/299 + 1)` is exactly
+//! `P̄·(t-linear ramp from 0.5 to 1.5)` at P̄ = 200, and (45b)/(45c) are the
+//! 0.5/1.0/1.5·P̄ blocks.
+
+use crate::config::PowerSchedule;
+
+/// Resolves P_t for every iteration of a run and proves Eq. 7 holds.
+#[derive(Clone, Debug)]
+pub struct PowerAllocator {
+    /// P_t for t = 0..T-1.
+    pub schedule: Vec<f64>,
+    pub pbar: f64,
+}
+
+impl PowerAllocator {
+    pub fn new(kind: PowerSchedule, pbar: f64, iterations: usize) -> PowerAllocator {
+        assert!(iterations > 0 && pbar > 0.0);
+        let t_total = iterations;
+        let schedule: Vec<f64> = match kind {
+            PowerSchedule::Constant => vec![pbar; t_total],
+            PowerSchedule::LhStair => {
+                // Eq. 45a generalized: linear ramp 0.5·P̄ → 1.5·P̄.
+                if t_total == 1 {
+                    vec![pbar]
+                } else {
+                    (0..t_total)
+                        .map(|t| {
+                            let frac = t as f64 / (t_total - 1) as f64;
+                            pbar * (0.5 + frac)
+                        })
+                        .collect()
+                }
+            }
+            PowerSchedule::Lh => blocks(pbar, t_total, [0.5, 1.0, 1.5]),
+            PowerSchedule::Hl => blocks(pbar, t_total, [1.5, 1.0, 0.5]),
+        };
+        let alloc = PowerAllocator { schedule, pbar };
+        debug_assert!(alloc.satisfies_average(1e-9));
+        alloc
+    }
+
+    /// Explicit per-iteration schedule (for custom sweeps).
+    pub fn custom(schedule: Vec<f64>, pbar: f64) -> PowerAllocator {
+        PowerAllocator { schedule, pbar }
+    }
+
+    #[inline]
+    pub fn p(&self, t: usize) -> f64 {
+        self.schedule[t.min(self.schedule.len() - 1)]
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Eq. 7: (1/T) Σ P_t ≤ P̄ (within tolerance).
+    pub fn satisfies_average(&self, tol: f64) -> bool {
+        let avg = self.schedule.iter().sum::<f64>() / self.schedule.len() as f64;
+        avg <= self.pbar * (1.0 + tol)
+    }
+}
+
+fn blocks(pbar: f64, t_total: usize, multipliers: [f64; 3]) -> Vec<f64> {
+    // Three equal blocks; remainder goes to the last block. For T not
+    // divisible by 3 we rescale so the average still equals P̄ exactly.
+    let mut out = Vec::with_capacity(t_total);
+    let block = t_total / 3;
+    for t in 0..t_total {
+        let idx = if block == 0 {
+            2
+        } else {
+            (t / block).min(2)
+        };
+        out.push(pbar * multipliers[idx]);
+    }
+    let avg = out.iter().sum::<f64>() / t_total as f64;
+    let fix = pbar / avg;
+    for p in out.iter_mut() {
+        *p *= fix;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_schedules_satisfy_eq7() {
+        for kind in [
+            PowerSchedule::Constant,
+            PowerSchedule::LhStair,
+            PowerSchedule::Lh,
+            PowerSchedule::Hl,
+        ] {
+            for t in [1usize, 2, 10, 299, 300] {
+                let a = PowerAllocator::new(kind, 200.0, t);
+                assert!(
+                    a.satisfies_average(1e-9),
+                    "{kind:?} T={t} avg={}",
+                    a.schedule.iter().sum::<f64>() / t as f64
+                );
+                assert!(a.schedule.iter().all(|&p| p > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_eq45a_values() {
+        // P̄=200, T=300: P_1 = 100, P_300 = 300, linear in between.
+        let a = PowerAllocator::new(PowerSchedule::LhStair, 200.0, 300);
+        assert!((a.p(0) - 100.0).abs() < 1e-9);
+        assert!((a.p(299) - 300.0).abs() < 1e-9);
+        let mid = a.p(150);
+        assert!((mid - 100.0 * (2.0 / 299.0 * 150.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_eq45b_blocks() {
+        let a = PowerAllocator::new(PowerSchedule::Lh, 200.0, 300);
+        assert!((a.p(0) - 100.0).abs() < 1e-9);
+        assert!((a.p(150) - 200.0).abs() < 1e-9);
+        assert!((a.p(299) - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_eq45c_blocks_reversed() {
+        let a = PowerAllocator::new(PowerSchedule::Hl, 200.0, 300);
+        assert!((a.p(0) - 300.0).abs() < 1e-9);
+        assert!((a.p(299) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_is_pbar_everywhere() {
+        let a = PowerAllocator::new(PowerSchedule::Constant, 500.0, 100);
+        assert!(a.schedule.iter().all(|&p| (p - 500.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn custom_schedule_passthrough() {
+        let a = PowerAllocator::custom(vec![1.0, 2.0, 3.0], 2.0);
+        assert_eq!(a.iterations(), 3);
+        assert!(a.satisfies_average(1e-9));
+    }
+}

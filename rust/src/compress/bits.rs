@@ -1,0 +1,129 @@
+//! Bit accounting for the digital schemes.
+//!
+//! §III: positions of q non-zero entries can always be described with
+//! `log2 C(d, q)` bits (enumerative coding of the sparsity pattern); the
+//! paper argues this beats the Golomb-coded inter-arrival distances of [21]
+//! whose cost is also implemented here for comparison benches. The MAC
+//! capacity bound `R_t` of Eq. 8 lives here too.
+
+use crate::util::stats::log2_binom;
+
+/// Eq. 8: per-device bit budget over s channel uses of the Gaussian MAC at
+/// iteration t: `R_t = s/(2M) · log2(1 + M·P_t/(s·σ²))`.
+pub fn capacity_bits(s: usize, devices: usize, p_t: f64, noise_var: f64) -> f64 {
+    assert!(devices > 0 && s > 0);
+    assert!(p_t >= 0.0 && noise_var > 0.0);
+    let snr = devices as f64 * p_t / (s as f64 * noise_var);
+    (s as f64 / (2.0 * devices as f64)) * (1.0 + snr).log2()
+}
+
+/// Enumerative position cost: log2 C(d, q) bits.
+pub fn position_bits(d: usize, q: usize) -> f64 {
+    log2_binom(d, q)
+}
+
+/// Golomb-coding position cost from [21] (Sparse Binary Compression):
+/// with sparsity probability p = q/d, the optimal Golomb parameter is
+/// `b* = 1 + ⌊log2( ln(φ−1) / ln(1−p) )⌋` (φ the golden ratio) and the
+/// expected bits per non-zero entry are `b* + 1/(1 − (1−p)^{2^{b*}})`.
+pub fn golomb_bits_per_entry(d: usize, q: usize) -> f64 {
+    assert!(q > 0 && q <= d);
+    let p = q as f64 / d as f64;
+    if p >= 1.0 {
+        return 1.0;
+    }
+    let phi_term = ((5f64.sqrt() - 1.0) / 2.0).ln(); // ln((√5−1)/2) < 0
+    let b_star = 1.0 + (phi_term / (1.0 - p).ln()).log2().floor();
+    let b_star = b_star.max(1.0);
+    b_star + 1.0 / (1.0 - (1.0 - p).powf(2f64.powf(b_star)))
+}
+
+/// Total Golomb position cost for q entries.
+pub fn golomb_total_bits(d: usize, q: usize) -> f64 {
+    golomb_bits_per_entry(d, q) * q as f64
+}
+
+/// Largest q (≤ q_max) such that `cost(q) ≤ budget`, where `cost` is
+/// monotone non-decreasing in q. Binary search; returns 0 when even q = 1
+/// does not fit.
+pub fn max_q_within_budget<F: Fn(usize) -> f64>(q_max: usize, budget: f64, cost: F) -> usize {
+    if q_max == 0 || cost(1) > budget {
+        return 0;
+    }
+    let (mut lo, mut hi) = (1usize, q_max); // cost(lo) <= budget
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if cost(mid) <= budget {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_matches_formula() {
+        // s=100, M=4, P=50, σ²=1 → R = 100/8 · log2(1 + 200/100)
+        let r = capacity_bits(100, 4, 50.0, 1.0);
+        assert!((r - 12.5 * (3f64).log2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_monotone_in_power_and_bandwidth() {
+        assert!(capacity_bits(100, 10, 200.0, 1.0) > capacity_bits(100, 10, 100.0, 1.0));
+        assert!(capacity_bits(200, 10, 100.0, 1.0) > capacity_bits(100, 10, 100.0, 1.0));
+        // More devices → smaller per-device share.
+        assert!(capacity_bits(100, 20, 100.0, 1.0) < capacity_bits(100, 10, 100.0, 1.0));
+    }
+
+    #[test]
+    fn zero_power_gives_zero_bits() {
+        assert_eq!(capacity_bits(100, 10, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn position_bits_monotone_up_to_half() {
+        let d = 7850;
+        let mut prev = 0.0;
+        for q in [1usize, 10, 100, 1000, d / 2] {
+            let b = position_bits(d, q);
+            assert!(b > prev, "q={q}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn golomb_not_cheaper_than_enumerative() {
+        // Enumerative coding is information-theoretically optimal for a
+        // uniform sparsity pattern; Golomb should cost at least as much.
+        let d = 7850;
+        for q in [5usize, 50, 500, 2000] {
+            let enumerative = position_bits(d, q);
+            let golomb = golomb_total_bits(d, q);
+            assert!(
+                golomb >= enumerative * 0.99,
+                "q={q}: golomb {golomb} < enum {enumerative}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_q_budget_search() {
+        let cost = |q: usize| q as f64 * 10.0;
+        assert_eq!(max_q_within_budget(100, 55.0, cost), 5);
+        assert_eq!(max_q_within_budget(100, 5.0, cost), 0);
+        assert_eq!(max_q_within_budget(3, 1e9, cost), 3);
+        // Real D-DSGD cost shape:
+        let d = 7850;
+        let budget = 2000.0;
+        let q = max_q_within_budget(d / 2, budget, |q| position_bits(d, q) + 33.0);
+        assert!(q > 0);
+        assert!(position_bits(d, q) + 33.0 <= budget);
+        assert!(position_bits(d, q + 1) + 33.0 > budget);
+    }
+}

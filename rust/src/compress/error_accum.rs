@@ -1,0 +1,113 @@
+//! Local error accumulation (§III / §IV, Eq. 10).
+//!
+//! Every lossy compressor in the paper keeps the compression residual
+//! Δ_m(t+1) = g_m(θ_t) + Δ_m(t) − compress(g_m(θ_t) + Δ_m(t))
+//! at the device and folds it into the next iteration's estimate, so
+//! information suppressed by sparsification is eventually delivered.
+
+/// Per-device error accumulator.
+#[derive(Clone, Debug)]
+pub struct ErrorAccumulator {
+    delta: Vec<f32>,
+}
+
+impl ErrorAccumulator {
+    pub fn new(dim: usize) -> ErrorAccumulator {
+        ErrorAccumulator {
+            delta: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.delta.len()
+    }
+
+    /// g_ec = g + Δ(t) (the error-compensated gradient, Alg. 1 line 5).
+    pub fn compensate(&self, g: &[f32]) -> Vec<f32> {
+        assert_eq!(g.len(), self.delta.len());
+        g.iter().zip(&self.delta).map(|(a, b)| a + b).collect()
+    }
+
+    /// Record the new residual: Δ(t+1) = g_ec − transmitted.
+    pub fn update(&mut self, g_ec: &[f32], transmitted: &[f32]) {
+        assert_eq!(g_ec.len(), self.delta.len());
+        assert_eq!(transmitted.len(), self.delta.len());
+        for (d, (e, t)) in self.delta.iter_mut().zip(g_ec.iter().zip(transmitted)) {
+            *d = e - t;
+        }
+    }
+
+    /// ‖Δ‖₂ — used by metrics and the Lemma-3 bound check.
+    pub fn norm(&self) -> f64 {
+        crate::tensor::norm(&self.delta)
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.delta
+    }
+
+    pub fn reset(&mut self) {
+        self.delta.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::sparsify_topk;
+
+    #[test]
+    fn starts_at_zero() {
+        let acc = ErrorAccumulator::new(8);
+        assert_eq!(acc.norm(), 0.0);
+        let g = vec![1.0; 8];
+        assert_eq!(acc.compensate(&g), g);
+    }
+
+    #[test]
+    fn accumulates_sparsification_residual() {
+        let mut acc = ErrorAccumulator::new(4);
+        let g = vec![4.0, 1.0, -3.0, 0.5];
+        let g_ec = acc.compensate(&g);
+        let sent = sparsify_topk(&g_ec, 2); // keeps 4.0, -3.0
+        acc.update(&g_ec, &sent);
+        assert_eq!(acc.as_slice(), &[0.0, 1.0, 0.0, 0.5]);
+        // Next round: residual rides along.
+        let g2 = vec![0.0, 1.0, 0.0, 0.0];
+        assert_eq!(acc.compensate(&g2), vec![0.0, 2.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn everything_eventually_transmitted() {
+        // With a k=1 compressor and zero new gradient, repeated rounds must
+        // drain the accumulator to zero — no information is lost forever.
+        let mut acc = ErrorAccumulator::new(5);
+        let g0 = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        let mut total_sent = vec![0.0f32; 5];
+        let zero = vec![0.0f32; 5];
+        let mut g = g0.clone();
+        for round in 0..10 {
+            let g_ec = acc.compensate(&g);
+            let sent = sparsify_topk(&g_ec, 1);
+            for (t, s) in total_sent.iter_mut().zip(&sent) {
+                *t += s;
+            }
+            acc.update(&g_ec, &sent);
+            g = zero.clone();
+            if round >= 4 {
+                break;
+            }
+        }
+        assert!(acc.norm() < 1e-6, "norm={}", acc.norm());
+        assert_eq!(total_sent, g0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut acc = ErrorAccumulator::new(3);
+        acc.update(&[1.0, 2.0, 3.0], &[0.0, 0.0, 0.0]);
+        assert!(acc.norm() > 0.0);
+        acc.reset();
+        assert_eq!(acc.norm(), 0.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Gradient compression: the digital quantizers and the shared
+//! error-accumulation machinery.
+//!
+//! Every digital scheme in the paper reduces to: select entries, quantize
+//! their values, count the bits needed to describe (values + positions),
+//! and fit inside the iteration's capacity budget `R_t`. The codecs here
+//! are *faithful bit-accounting* codecs — they produce the exact
+//! reconstruction the PS would decode and the exact number of bits the
+//! encoding costs (the paper assumes capacity-achieving channel codes, so
+//! transport is error-free once the payload fits the budget; see §III).
+
+pub mod bits;
+pub mod error_accum;
+pub mod qsgd;
+pub mod sbc;
+pub mod signsgd;
+
+pub use error_accum::ErrorAccumulator;
+
+/// A digitally-encoded gradient: the dense reconstruction the PS recovers
+/// plus the exact bill of bits it cost.
+#[derive(Clone, Debug)]
+pub struct DigitalPayload {
+    /// Dense d-dimensional reconstruction (what the decoder outputs).
+    pub reconstruction: Vec<f32>,
+    /// Number of non-zero (transmitted) entries.
+    pub nnz: usize,
+    /// Total bits of the encoding (values + positions + headers).
+    pub bits: f64,
+}
+
+impl DigitalPayload {
+    /// An empty payload (device stays silent this iteration).
+    pub fn silent(dim: usize) -> DigitalPayload {
+        DigitalPayload {
+            reconstruction: vec![0.0; dim],
+            nnz: 0,
+            bits: 0.0,
+        }
+    }
+}
+
+/// Common interface for the digital compressors (D-DSGD's SBC, SignSGD,
+/// QSGD). `budget_bits` is the capacity bound R_t for this iteration; the
+/// encoder picks its sparsity q_t as the largest value that fits.
+pub trait DigitalCompressor: Send {
+    /// Encode `g` (already error-compensated) within `budget_bits`.
+    /// `&mut self` because QSGD's stochastic rounding draws from an
+    /// encoder-owned RNG stream.
+    fn encode(&mut self, g: &[f32], budget_bits: f64) -> DigitalPayload;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silent_payload_is_zero() {
+        let p = DigitalPayload::silent(16);
+        assert_eq!(p.reconstruction.len(), 16);
+        assert!(p.reconstruction.iter().all(|&v| v == 0.0));
+        assert_eq!(p.bits, 0.0);
+        assert_eq!(p.nnz, 0);
+    }
+}

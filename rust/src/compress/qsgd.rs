@@ -1,0 +1,164 @@
+//! QSGD baseline [2] adapted to the capacity-limited MAC (§VI, Eq. 44).
+//!
+//! The device selects the q_{t,Q} largest-magnitude entries, then applies
+//! QSGD stochastic quantization to that sparse vector: each selected entry
+//! v_i is encoded as `‖v‖₂ · sign(v_i) · ξ_i` with ξ_i on a uniform grid of
+//! 2^{l_Q} levels in [0, 1], rounded stochastically so the quantizer is
+//! unbiased. Bit cost: `r_{t,Q} = 32 + log2 C(d, q) + (1 + l_Q)·q`
+//! (32-bit norm + positions + sign&level per entry); q is budget-fitted.
+
+use super::bits::{max_q_within_budget, position_bits};
+use super::{DigitalCompressor, DigitalPayload};
+use crate::tensor::topk_indices;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct QsgdCompressor {
+    /// l_Q: number of quantization bits (paper uses 2 → 4 levels).
+    pub levels_bits: u32,
+    rng: Pcg64,
+}
+
+impl QsgdCompressor {
+    pub fn new(levels_bits: u32, seed: u64) -> QsgdCompressor {
+        QsgdCompressor {
+            levels_bits,
+            rng: Pcg64::with_stream(seed, 0x0516D),
+        }
+    }
+
+    /// Eq. 44 bit cost.
+    pub fn bit_cost(d: usize, q: usize, levels_bits: u32) -> f64 {
+        32.0 + position_bits(d, q) + (1.0 + levels_bits as f64) * q as f64
+    }
+
+    pub fn pick_q(d: usize, budget_bits: f64, levels_bits: u32) -> usize {
+        max_q_within_budget(d, budget_bits, |q| Self::bit_cost(d, q, levels_bits))
+    }
+}
+
+impl DigitalCompressor for QsgdCompressor {
+    fn encode(&mut self, g: &[f32], budget_bits: f64) -> DigitalPayload {
+        let d = g.len();
+        let q = Self::pick_q(d, budget_bits, self.levels_bits);
+        if q == 0 {
+            return DigitalPayload::silent(d);
+        }
+        let idx = topk_indices(g, q);
+        // ‖v‖ over the selected entries only (that's the vector QSGD sees).
+        let norm = idx
+            .iter()
+            .map(|&i| (g[i] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        if norm == 0.0 {
+            return DigitalPayload {
+                reconstruction: vec![0.0; d],
+                nnz: 0,
+                bits: Self::bit_cost(d, q, self.levels_bits),
+            };
+        }
+        let s_levels = (1u32 << self.levels_bits) as f64; // number of grid cells
+        let mut recon = vec![0f32; d];
+        let mut nnz = 0usize;
+        for &i in &idx {
+            let v = g[i] as f64;
+            let ratio = v.abs() / norm * s_levels; // in [0, s]
+            let floor = ratio.floor();
+            let frac = ratio - floor;
+            // Stochastic rounding: up with prob = frac (unbiased).
+            let level = if self.rng.f64() < frac { floor + 1.0 } else { floor };
+            let val = norm * level / s_levels * v.signum();
+            if val != 0.0 {
+                recon[i] = val as f32;
+                nnz += 1;
+            }
+        }
+        DigitalPayload {
+            reconstruction: recon,
+            nnz,
+            bits: Self::bit_cost(d, q, self.levels_bits),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizer_is_unbiased() {
+        // Average many stochastic encodings: E[Q(v)] = v.
+        let g = [0.3f32, -0.7, 0.05, 0.0];
+        let budget = QsgdCompressor::bit_cost(4, 3, 2) + 0.1;
+        let mut sums = vec![0f64; 4];
+        let trials = 20_000;
+        let mut c = QsgdCompressor::new(2, 99);
+        for _ in 0..trials {
+            let p = c.encode(&g, budget);
+            for (s, &r) in sums.iter_mut().zip(&p.reconstruction) {
+                *s += r as f64;
+            }
+        }
+        for (i, s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!(
+                (mean - g[i] as f64).abs() < 0.01,
+                "coord {i}: E[Q]={mean} vs {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn values_on_grid() {
+        let g = [0.5f32, -1.0, 0.25, 0.0, 0.0];
+        let budget = QsgdCompressor::bit_cost(5, 3, 2) + 0.1;
+        let mut c = QsgdCompressor::new(2, 7);
+        let p = c.encode(&g, budget);
+        let idx = topk_indices(&g, 3);
+        let norm = idx
+            .iter()
+            .map(|&i| (g[i] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        for &r in &p.reconstruction {
+            if r != 0.0 {
+                let level = (r as f64).abs() * 4.0 / norm;
+                assert!((level - level.round()).abs() < 1e-5, "off-grid value {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn bits_match_eq44() {
+        let d = 7850;
+        for q in [1usize, 10, 200] {
+            let expect = 32.0 + position_bits(d, q) + 3.0 * q as f64;
+            assert!((QsgdCompressor::bit_cost(d, q, 2) - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g: Vec<f32> = (0..100).map(|i| ((i * 37) % 19) as f32 / 19.0 - 0.5).collect();
+        let budget = 500.0;
+        let mut a = QsgdCompressor::new(2, 5);
+        let mut b = QsgdCompressor::new(2, 5);
+        assert_eq!(
+            a.encode(&g, budget).reconstruction,
+            b.encode(&g, budget).reconstruction
+        );
+    }
+
+    #[test]
+    fn needs_at_least_35_bits() {
+        let mut c = QsgdCompressor::new(2, 1);
+        let p = c.encode(&vec![1.0; 100], 30.0);
+        assert_eq!(p.nnz, 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! The D-DSGD quantizer (§III), a modified Sparse Binary Compression [21].
+//!
+//! At iteration t the device keeps the q_t most-positive and q_t
+//! most-negative entries of its error-compensated gradient, computes the
+//! mean of the remaining positives μ⁺ and negatives μ⁻, and transmits only
+//! the winning-sign side, every survivor set to that side's mean. The
+//! encoding costs `r_t = log2 C(d, q_t) + 33` bits (enumerative positions +
+//! 32-bit mean magnitude + 1 sign bit, Eq. 9); q_t is the largest integer
+//! fitting the capacity budget R_t with q_t ≤ d/2.
+
+use super::bits::{max_q_within_budget, position_bits};
+use super::{DigitalCompressor, DigitalPayload};
+
+#[derive(Clone, Debug, Default)]
+pub struct SbcCompressor;
+
+impl SbcCompressor {
+    pub fn new() -> SbcCompressor {
+        SbcCompressor
+    }
+
+    /// Eq. 9 bit cost for a given q.
+    pub fn bit_cost(d: usize, q: usize) -> f64 {
+        position_bits(d, q) + 33.0
+    }
+
+    /// The largest q_t with bit_cost(q) ≤ budget and q ≤ d/2.
+    pub fn pick_q(d: usize, budget_bits: f64) -> usize {
+        max_q_within_budget(d / 2, budget_bits, |q| Self::bit_cost(d, q))
+    }
+
+    /// Core SBC transform for a fixed q (exposed for tests/benches).
+    pub fn compress_with_q(g: &[f32], q: usize) -> DigitalPayload {
+        let d = g.len();
+        if q == 0 {
+            return DigitalPayload::silent(d);
+        }
+        // Indices of the q most-positive and q most-negative values.
+        // (Selection is by *value*, not magnitude — §III keeps the highest
+        // q_t and the smallest q_t entries.)
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_unstable_by(|&a, &b| g[a].partial_cmp(&g[b]).unwrap());
+        let lowest = &order[..q.min(d)];
+        let highest = &order[d.saturating_sub(q)..];
+
+        // Means over the *positive* survivors and *negative* survivors.
+        let mut pos_sum = 0f64;
+        let mut pos_cnt = 0usize;
+        let mut neg_sum = 0f64;
+        let mut neg_cnt = 0usize;
+        for &i in highest.iter().chain(lowest.iter()) {
+            let v = g[i];
+            if v > 0.0 {
+                pos_sum += v as f64;
+                pos_cnt += 1;
+            } else if v < 0.0 {
+                neg_sum += v as f64;
+                neg_cnt += 1;
+            }
+        }
+        let mu_plus = if pos_cnt > 0 { pos_sum / pos_cnt as f64 } else { 0.0 };
+        let mu_minus = if neg_cnt > 0 { neg_sum / neg_cnt as f64 } else { 0.0 };
+
+        let mut recon = vec![0f32; d];
+        let mut nnz = 0usize;
+        if mu_plus > mu_minus.abs() {
+            for &i in highest.iter().chain(lowest.iter()) {
+                if g[i] > 0.0 {
+                    recon[i] = mu_plus as f32;
+                    nnz += 1;
+                }
+            }
+        } else if mu_minus != 0.0 || mu_plus > 0.0 {
+            for &i in highest.iter().chain(lowest.iter()) {
+                if g[i] < 0.0 {
+                    recon[i] = mu_minus as f32;
+                    nnz += 1;
+                }
+            }
+        }
+        DigitalPayload {
+            reconstruction: recon,
+            nnz,
+            bits: Self::bit_cost(d, q),
+        }
+    }
+}
+
+impl DigitalCompressor for SbcCompressor {
+    fn encode(&mut self, g: &[f32], budget_bits: f64) -> DigitalPayload {
+        let q = Self::pick_q(g.len(), budget_bits);
+        if q == 0 {
+            return DigitalPayload::silent(g.len());
+        }
+        Self::compress_with_q(g, q)
+    }
+
+    fn name(&self) -> &'static str {
+        "sbc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positive_side_wins() {
+        let g = [5.0, 4.0, -1.0, -0.5, 0.1, 0.0];
+        let p = SbcCompressor::compress_with_q(&g, 2);
+        // highest 2: {5,4}; lowest 2: {-1,-0.5}; μ+ = 4.5, μ− = −0.75 →
+        // positives win; entries 0,1 set to 4.5.
+        assert_eq!(p.nnz, 2);
+        assert!((p.reconstruction[0] - 4.5).abs() < 1e-6);
+        assert!((p.reconstruction[1] - 4.5).abs() < 1e-6);
+        assert!(p.reconstruction[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn negative_side_wins() {
+        let g = [-5.0, -4.0, 1.0, 0.5, 0.0, 0.0];
+        let p = SbcCompressor::compress_with_q(&g, 2);
+        assert_eq!(p.nnz, 2);
+        assert!((p.reconstruction[0] + 4.5).abs() < 1e-6);
+        assert!((p.reconstruction[1] + 4.5).abs() < 1e-6);
+        assert!(p.reconstruction[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn budget_controls_q() {
+        let d = 1000;
+        let tight = SbcCompressor::bit_cost(d, 3) + 0.5;
+        assert_eq!(SbcCompressor::pick_q(d, tight), 3);
+        assert_eq!(SbcCompressor::pick_q(d, 10.0), 0); // below cost(q=1)
+    }
+
+    #[test]
+    fn silent_when_budget_too_small() {
+        let mut c = SbcCompressor::new();
+        let g = vec![1.0f32; 100];
+        let p = c.encode(&g, 5.0);
+        assert_eq!(p.nnz, 0);
+        assert_eq!(p.bits, 0.0);
+    }
+
+    #[test]
+    fn bits_match_eq9() {
+        let mut c = SbcCompressor::new();
+        let g: Vec<f32> = (0..500).map(|i| (i as f32 - 250.0) / 100.0).collect();
+        let budget = 200.0;
+        let p = c.encode(&g, budget);
+        assert!(p.bits <= budget);
+        let q = SbcCompressor::pick_q(500, budget);
+        assert!((p.bits - (position_bits(500, q) + 33.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_zero_gradient_reconstructs_zero() {
+        let p = SbcCompressor::compress_with_q(&[0.0; 64], 4);
+        assert!(p.reconstruction.iter().all(|&v| v == 0.0));
+        assert_eq!(p.nnz, 0);
+    }
+
+    #[test]
+    fn q_bounded_by_half_d() {
+        assert!(SbcCompressor::pick_q(10, 1e9) <= 5);
+    }
+}

@@ -1,0 +1,106 @@
+//! SignSGD baseline [16] adapted to the capacity-limited MAC (§VI, Eq. 43).
+//!
+//! Each device selects the q_{t,S} largest-magnitude entries of its gradient
+//! and transmits one sign bit per entry plus the enumerative position code:
+//! `r_{t,S} = log2 C(d, q) + q` bits; q is the largest integer fitting R_t.
+//! The PS reconstructs ±1 at the selected positions (the magnitude scale is
+//! absorbed by the PS optimizer, as in [16]).
+
+use super::bits::{max_q_within_budget, position_bits};
+use super::{DigitalCompressor, DigitalPayload};
+use crate::tensor::topk_indices;
+
+#[derive(Clone, Debug, Default)]
+pub struct SignSgdCompressor;
+
+impl SignSgdCompressor {
+    pub fn new() -> SignSgdCompressor {
+        SignSgdCompressor
+    }
+
+    /// Eq. 43 bit cost.
+    pub fn bit_cost(d: usize, q: usize) -> f64 {
+        position_bits(d, q) + q as f64
+    }
+
+    pub fn pick_q(d: usize, budget_bits: f64) -> usize {
+        max_q_within_budget(d, budget_bits, |q| Self::bit_cost(d, q))
+    }
+}
+
+impl DigitalCompressor for SignSgdCompressor {
+    fn encode(&mut self, g: &[f32], budget_bits: f64) -> DigitalPayload {
+        let d = g.len();
+        let q = Self::pick_q(d, budget_bits);
+        if q == 0 {
+            return DigitalPayload::silent(d);
+        }
+        let idx = topk_indices(g, q);
+        let mut recon = vec![0f32; d];
+        let mut nnz = 0usize;
+        for &i in &idx {
+            if g[i] != 0.0 {
+                recon[i] = g[i].signum();
+                nnz += 1;
+            }
+        }
+        DigitalPayload {
+            reconstruction: recon,
+            nnz,
+            bits: Self::bit_cost(d, q),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signs_at_topk_positions() {
+        let mut c = SignSgdCompressor::new();
+        // d = 9 so that bit_cost is strictly monotone around q = 3.
+        let g = [3.0, -4.0, 0.1, -0.2, 2.0, 0.0, 0.05, -0.01, 0.02];
+        let budget = SignSgdCompressor::bit_cost(9, 3) + 0.1;
+        assert_eq!(SignSgdCompressor::pick_q(9, budget), 3);
+        let p = c.encode(&g, budget);
+        assert_eq!(
+            p.reconstruction,
+            vec![1.0, -1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]
+        );
+        assert_eq!(p.nnz, 3);
+    }
+
+    #[test]
+    fn bits_match_eq43() {
+        let d = 1000;
+        for q in [1usize, 7, 100] {
+            let expect = position_bits(d, q) + q as f64;
+            assert!((SignSgdCompressor::bit_cost(d, q) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn per_entry_sign_bits_cost_more_than_sbc_header_at_scale() {
+        // SBC pays a flat 33-bit header; SignSGD pays 1 bit per entry. Once
+        // q > 33 the per-entry sign bits dominate, so for a healthy budget
+        // SBC affords more entries than SignSGD.
+        let d = 7850;
+        let budget = 3000.0;
+        let q_sign = SignSgdCompressor::pick_q(d, budget);
+        let q_sbc = super::super::sbc::SbcCompressor::pick_q(d, budget);
+        assert!(q_sign > 33, "q_sign={q_sign}");
+        assert!(q_sbc >= q_sign, "q_sbc={q_sbc} q_sign={q_sign}");
+    }
+
+    #[test]
+    fn silent_under_tiny_budget() {
+        let mut c = SignSgdCompressor::new();
+        let p = c.encode(&vec![1.0; 50], 2.0);
+        assert_eq!(p.nnz, 0);
+    }
+}

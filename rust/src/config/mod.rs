@@ -1,0 +1,8 @@
+//! Configuration system: TOML-subset parser, run schema, per-figure presets.
+
+pub mod parser;
+pub mod presets;
+pub mod schema;
+
+pub use presets::MODEL_DIM;
+pub use schema::{Backend, ConfigError, DatasetSpec, PowerSchedule, RunConfig, Scheme};

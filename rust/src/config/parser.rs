@@ -1,0 +1,201 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supported: `[section]` headers, `key = value` pairs, comments (`#`),
+//! values: string (quoted), bool, integer, float, and flat arrays of those.
+//! This covers every config the launcher consumes; no serde in the offline
+//! vendor set.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+}
+
+pub type Section = BTreeMap<String, Value>;
+pub type Document = BTreeMap<String, Section>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("line {line}: {msg}")]
+    Syntax { line: usize, msg: String },
+}
+
+/// Parse a TOML-subset document. Keys before any `[section]` land in the
+/// section named "" (root).
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::new();
+    let mut current = String::new();
+    doc.entry(current.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body.strip_suffix(']').ok_or_else(|| ParseError::Syntax {
+                line: lineno + 1,
+                msg: "unterminated section header".into(),
+            })?;
+            current = name.trim().to_string();
+            doc.entry(current.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = k.trim().to_string();
+            let value = parse_value(v.trim()).map_err(|msg| ParseError::Syntax {
+                line: lineno + 1,
+                msg,
+            })?;
+            doc.get_mut(&current).unwrap().insert(key, value);
+        } else {
+            return Err(ParseError::Syntax {
+                line: lineno + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            });
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# experiment
+title = "fig2"
+[run]
+devices = 25
+pbar = 500.0
+noniid = false
+powers = [100, 200, 300]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"].as_str(), Some("fig2"));
+        assert_eq!(doc["run"]["devices"].as_usize(), Some(25));
+        assert_eq!(doc["run"]["pbar"].as_f64(), Some(500.0));
+        assert_eq!(doc["run"]["noniid"].as_bool(), Some(false));
+        match &doc["run"]["powers"] {
+            Value::Array(v) => assert_eq!(v.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("a = 1 # trailing\n\n# full line\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(doc[""]["a"].as_i64(), Some(1));
+        assert_eq!(doc[""]["b"].as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = parse("p = 500\n").unwrap();
+        assert_eq!(doc[""]["p"].as_f64(), Some(500.0));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = parse("good = 1\nnot a kv\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("xs = []\n").unwrap();
+        assert_eq!(doc[""]["xs"], Value::Array(vec![]));
+    }
+}

@@ -1,0 +1,492 @@
+//! Experiment configuration schema + validation.
+//!
+//! A `RunConfig` fully determines one training run: scheme, channel, power,
+//! data distribution, optimizer, and backend. Configs are constructed from
+//! presets (`config::presets`), from TOML files (`RunConfig::from_toml`), or
+//! from CLI overrides (`apply_overrides`).
+
+use super::parser::{self, Document, Value};
+
+/// Which transmission scheme the run uses (Section III / IV of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Analog over-the-air DSGD (Algorithm 1).
+    ADsgd,
+    /// Digital DSGD: SBC-style quantizer + capacity bit budget (Section III).
+    DDsgd,
+    /// SignSGD baseline through the same capacity pipe (Eq. 43).
+    SignSgd,
+    /// QSGD baseline through the same capacity pipe (Eq. 44).
+    Qsgd,
+    /// Noiseless benchmark: PS receives the exact average gradient.
+    ErrorFree,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "adsgd" | "a-dsgd" | "analog" => Scheme::ADsgd,
+            "ddsgd" | "d-dsgd" | "digital" => Scheme::DDsgd,
+            "signsgd" | "s-dsgd" | "sign" => Scheme::SignSgd,
+            "qsgd" | "q-dsgd" => Scheme::Qsgd,
+            "errorfree" | "error-free" | "shared-link" => Scheme::ErrorFree,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::ADsgd => "A-DSGD",
+            Scheme::DDsgd => "D-DSGD",
+            Scheme::SignSgd => "SignSGD",
+            Scheme::Qsgd => "QSGD",
+            Scheme::ErrorFree => "error-free",
+        }
+    }
+}
+
+/// Power allocation across iterations (Fig. 3, Eq. 45a–c). The schedule is
+/// normalized so that (1/T)Σ P_t = P̄ holds for every variant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PowerSchedule {
+    /// P_t = P̄ for all t.
+    Constant,
+    /// Eq. 45a: linear ramp 0.5·P̄ → 1.5·P̄ ("LH, stair").
+    LhStair,
+    /// Eq. 45b: three equal blocks 0.5/1.0/1.5 × P̄ (low→high).
+    Lh,
+    /// Eq. 45c: three equal blocks 1.5/1.0/0.5 × P̄ (high→low).
+    Hl,
+}
+
+impl PowerSchedule {
+    pub fn parse(s: &str) -> Option<PowerSchedule> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "const" | "constant" => PowerSchedule::Constant,
+            "lhstair" | "lh-stair" | "stair" => PowerSchedule::LhStair,
+            "lh" => PowerSchedule::Lh,
+            "hl" => PowerSchedule::Hl,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerSchedule::Constant => "const",
+            PowerSchedule::LhStair => "LH-stair",
+            PowerSchedule::Lh => "LH",
+            PowerSchedule::Hl => "HL",
+        }
+    }
+}
+
+/// Gradient/compute backend: pure rust reference, or the AOT-compiled JAX
+/// graphs executed through PJRT (`runtime::pjrt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Rust,
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "rust" => Backend::Rust,
+            "pjrt" | "xla" => Backend::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
+/// Where training data comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Deterministic MNIST-like synthetic corpus (see `data::synthetic`).
+    Synthetic { train: usize, test: usize },
+    /// Real MNIST IDX files under the given directory (auto-detected).
+    MnistIdx { dir: String },
+}
+
+/// Full specification of one training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub scheme: Scheme,
+    /// Number of devices M.
+    pub devices: usize,
+    /// Local dataset size B per device (batch = full local set, as in §VI).
+    pub local_samples: usize,
+    /// Channel uses per iteration, s.
+    pub channel_uses: usize,
+    /// A-DSGD sparsification level k.
+    pub sparsity: usize,
+    /// Average power constraint P̄ (per device, per iteration, Eq. 6).
+    pub pbar: f64,
+    /// Channel noise variance σ².
+    pub noise_var: f64,
+    /// Number of DSGD iterations T.
+    pub iterations: usize,
+    pub power: PowerSchedule,
+    /// Adam step size at the PS.
+    pub lr: f64,
+    /// Non-IID data split (two classes per device) vs IID.
+    pub noniid: bool,
+    pub seed: u64,
+    /// Use the §IV-A mean-removal variant for the first N iterations.
+    pub mean_removal_rounds: usize,
+    /// QSGD quantization bits l_Q (paper uses l_Q = 2).
+    pub qsgd_levels: u32,
+    pub backend: Backend,
+    pub dataset: DatasetSpec,
+    /// Evaluate test accuracy every `eval_every` iterations.
+    pub eval_every: usize,
+    /// AMP decoder iteration cap / tolerance / denoiser threshold α
+    /// (τ = α‖r‖/√s).
+    pub amp_iters: usize,
+    pub amp_tol: f64,
+    pub amp_threshold_mult: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            scheme: Scheme::ADsgd,
+            devices: 25,
+            local_samples: 1000,
+            channel_uses: 3925, // d/2 for d = 7850
+            sparsity: 1962,     // s/2
+            pbar: 500.0,
+            noise_var: 1.0,
+            iterations: 100,
+            power: PowerSchedule::Constant,
+            lr: 1e-3,
+            noniid: false,
+            seed: 1,
+            mean_removal_rounds: 20,
+            qsgd_levels: 2,
+            backend: Backend::Rust,
+            dataset: DatasetSpec::Synthetic {
+                train: 25_000,
+                test: 2_000,
+            },
+            eval_every: 5,
+            amp_iters: 30,
+            amp_tol: 1e-4,
+            amp_threshold_mult: 1.1,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse error: {0}")]
+    Parse(#[from] parser::ParseError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+impl RunConfig {
+    /// Validate the cross-field constraints the schemes rely on.
+    pub fn validate(&self, model_dim: usize) -> Result<(), ConfigError> {
+        let fail = |msg: String| Err(ConfigError::Invalid(msg));
+        if self.devices == 0 {
+            return fail("devices must be >= 1".into());
+        }
+        if self.local_samples == 0 {
+            return fail("local_samples must be >= 1".into());
+        }
+        if self.iterations == 0 {
+            return fail("iterations must be >= 1".into());
+        }
+        if self.pbar <= 0.0 {
+            return fail("pbar must be > 0".into());
+        }
+        if self.noise_var <= 0.0 {
+            return fail("noise_var must be > 0".into());
+        }
+        if self.scheme == Scheme::ADsgd {
+            // A-DSGD needs s >= 2 (s̃ = s−1 plus the scaling channel use);
+            // mean removal needs s >= 3 (§IV-A).
+            let min_s = if self.mean_removal_rounds > 0 { 3 } else { 2 };
+            if self.channel_uses < min_s {
+                return fail(format!(
+                    "A-DSGD requires s >= {min_s}, got {}",
+                    self.channel_uses
+                ));
+            }
+            if self.sparsity == 0 || self.sparsity > model_dim {
+                return fail(format!(
+                    "sparsity k={} out of range (1..={model_dim})",
+                    self.sparsity
+                ));
+            }
+            if self.sparsity >= self.channel_uses {
+                // Assumption 3 / Lemma 1 need k < s̃ for AMP recovery.
+                return fail(format!(
+                    "A-DSGD requires k < s (k={}, s={})",
+                    self.sparsity, self.channel_uses
+                ));
+            }
+        }
+        if self.channel_uses > model_dim {
+            return fail(format!(
+                "s={} exceeds model dimension d={model_dim}; uncoded transmission would \
+                 not need compression",
+                self.channel_uses
+            ));
+        }
+        match &self.dataset {
+            DatasetSpec::Synthetic { train, test } => {
+                if self.devices * self.local_samples > *train {
+                    return fail(format!(
+                        "M*B = {} exceeds synthetic train size {train}",
+                        self.devices * self.local_samples
+                    ));
+                }
+                if *test == 0 {
+                    return fail("test set must be non-empty".into());
+                }
+            }
+            DatasetSpec::MnistIdx { dir } => {
+                if dir.is_empty() {
+                    return fail("mnist dir must be non-empty".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (single `[run]` section or root keys).
+    pub fn from_toml(text: &str) -> Result<RunConfig, ConfigError> {
+        let doc = parser::parse(text)?;
+        let mut cfg = RunConfig::default();
+        let section = doc
+            .get("run")
+            .filter(|s| !s.is_empty())
+            .or_else(|| doc.get(""))
+            .cloned()
+            .unwrap_or_default();
+        cfg.apply_section(&section)?;
+        // Allow a separate [dataset] section.
+        if let Some(ds) = doc.get("dataset") {
+            cfg.apply_dataset(ds)?;
+        }
+        Ok(cfg)
+    }
+
+    fn apply_section(
+        &mut self,
+        s: &std::collections::BTreeMap<String, Value>,
+    ) -> Result<(), ConfigError> {
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in s {
+            match k.as_str() {
+                "scheme" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.scheme =
+                        Scheme::parse(name).ok_or_else(|| {
+                            ConfigError::Invalid(format!("unknown scheme {name:?}"))
+                        })?;
+                }
+                "devices" => self.devices = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "local_samples" => {
+                    self.local_samples = v.as_usize().ok_or_else(|| bad(k, v))?
+                }
+                "channel_uses" => {
+                    self.channel_uses = v.as_usize().ok_or_else(|| bad(k, v))?
+                }
+                "sparsity" => self.sparsity = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "pbar" => self.pbar = v.as_f64().ok_or_else(|| bad(k, v))?,
+                "noise_var" => self.noise_var = v.as_f64().ok_or_else(|| bad(k, v))?,
+                "iterations" => self.iterations = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "power" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.power = PowerSchedule::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown power schedule {name:?}"))
+                    })?;
+                }
+                "lr" => self.lr = v.as_f64().ok_or_else(|| bad(k, v))?,
+                "noniid" => self.noniid = v.as_bool().ok_or_else(|| bad(k, v))?,
+                "seed" => self.seed = v.as_i64().ok_or_else(|| bad(k, v))? as u64,
+                "mean_removal_rounds" => {
+                    self.mean_removal_rounds = v.as_usize().ok_or_else(|| bad(k, v))?
+                }
+                "qsgd_levels" => {
+                    self.qsgd_levels = v.as_usize().ok_or_else(|| bad(k, v))? as u32
+                }
+                "backend" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.backend = Backend::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown backend {name:?}"))
+                    })?;
+                }
+                "eval_every" => self.eval_every = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "amp_iters" => self.amp_iters = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "amp_tol" => self.amp_tol = v.as_f64().ok_or_else(|| bad(k, v))?,
+                "amp_threshold_mult" => {
+                    self.amp_threshold_mult = v.as_f64().ok_or_else(|| bad(k, v))?
+                }
+                other => {
+                    return Err(ConfigError::Invalid(format!("unknown key {other:?}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_dataset(
+        &mut self,
+        s: &std::collections::BTreeMap<String, Value>,
+    ) -> Result<(), ConfigError> {
+        let kind = s
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .unwrap_or("synthetic");
+        match kind {
+            "synthetic" => {
+                let train = s
+                    .get("train")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(25_000);
+                let test = s.get("test").and_then(|v| v.as_usize()).unwrap_or(2_000);
+                self.dataset = DatasetSpec::Synthetic { train, test };
+            }
+            "mnist" => {
+                let dir = s
+                    .get("dir")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("data/mnist")
+                    .to_string();
+                self.dataset = DatasetSpec::MnistIdx { dir };
+            }
+            other => {
+                return Err(ConfigError::Invalid(format!("unknown dataset {other:?}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-line summary, echoed into logs and CSV headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} M={} B={} s={} k={} P̄={} σ²={} T={} power={} noniid={} seed={}",
+            self.scheme.name(),
+            self.devices,
+            self.local_samples,
+            self.channel_uses,
+            self.sparsity,
+            self.pbar,
+            self.noise_var,
+            self.iterations,
+            self.power.name(),
+            self.noniid,
+            self.seed
+        )
+    }
+}
+
+/// Parse helper used by the launcher: read a whole document and report
+/// unknown sections.
+pub fn load_document(text: &str) -> Result<Document, ConfigError> {
+    Ok(parser::parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate(7850).unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip_overrides() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+scheme = "ddsgd"
+devices = 10
+local_samples = 2000
+pbar = 200.0
+power = "hl"
+noniid = true
+[dataset]
+kind = "synthetic"
+train = 20000
+test = 1000
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scheme, Scheme::DDsgd);
+        assert_eq!(cfg.devices, 10);
+        assert_eq!(cfg.local_samples, 2000);
+        assert_eq!(cfg.power, PowerSchedule::Hl);
+        assert!(cfg.noniid);
+        assert_eq!(
+            cfg.dataset,
+            DatasetSpec::Synthetic {
+                train: 20000,
+                test: 1000
+            }
+        );
+        cfg.validate(7850).unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = RunConfig::from_toml("bogus_key = 1\n").unwrap_err();
+        assert!(err.to_string().contains("bogus_key"));
+    }
+
+    #[test]
+    fn adsgd_requires_k_below_s() {
+        let cfg = RunConfig {
+            sparsity: 4000,
+            channel_uses: 3925,
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate(7850).is_err());
+    }
+
+    #[test]
+    fn mean_removal_needs_three_uses() {
+        let cfg = RunConfig {
+            channel_uses: 2,
+            sparsity: 1,
+            mean_removal_rounds: 5,
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate(7850).is_err());
+        let cfg2 = RunConfig {
+            channel_uses: 2,
+            sparsity: 1,
+            mean_removal_rounds: 0,
+            ..cfg
+        };
+        cfg2.validate(7850).unwrap();
+    }
+
+    #[test]
+    fn scheme_and_power_parsing() {
+        assert_eq!(Scheme::parse("A-DSGD"), Some(Scheme::ADsgd));
+        assert_eq!(Scheme::parse("qsgd"), Some(Scheme::Qsgd));
+        assert_eq!(Scheme::parse("nope"), None);
+        assert_eq!(PowerSchedule::parse("LH-stair"), Some(PowerSchedule::LhStair));
+    }
+
+    #[test]
+    fn mb_must_fit_in_corpus() {
+        let cfg = RunConfig {
+            devices: 100,
+            local_samples: 1000,
+            dataset: DatasetSpec::Synthetic {
+                train: 25_000,
+                test: 1000,
+            },
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate(7850).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Unified device-side state across schemes.
+
+use crate::analog::AnalogDevice;
+use crate::config::Scheme;
+use crate::digital::DigitalDevice;
+
+/// One edge device's scheme-specific transmitter state.
+pub enum DeviceState {
+    Analog(AnalogDevice),
+    Digital(DigitalDevice),
+    /// Error-free benchmark: the device "sends" its exact gradient.
+    Passthrough,
+}
+
+impl DeviceState {
+    pub fn new(scheme: Scheme, dim: usize, k: usize, qsgd_levels: u32, seed: u64) -> DeviceState {
+        match scheme {
+            Scheme::ADsgd => DeviceState::Analog(AnalogDevice::new(dim, k)),
+            Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => {
+                DeviceState::Digital(DigitalDevice::new(scheme, dim, qsgd_levels, seed))
+            }
+            Scheme::ErrorFree => DeviceState::Passthrough,
+        }
+    }
+
+    /// ‖Δ_m‖ for schemes that carry error accumulation, 0 otherwise.
+    pub fn accumulator_norm(&self) -> f64 {
+        match self {
+            DeviceState::Analog(d) => d.accumulator_norm(),
+            DeviceState::Digital(d) => d.accumulator_norm(),
+            DeviceState::Passthrough => 0.0,
+        }
+    }
+
+    pub fn as_analog_mut(&mut self) -> &mut AnalogDevice {
+        match self {
+            DeviceState::Analog(d) => d,
+            _ => panic!("not an analog device"),
+        }
+    }
+
+    pub fn as_digital_mut(&mut self) -> &mut DigitalDevice {
+        match self {
+            DeviceState::Digital(d) => d,
+            _ => panic!("not a digital device"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructs_right_variant() {
+        assert!(matches!(
+            DeviceState::new(Scheme::ADsgd, 100, 5, 2, 1),
+            DeviceState::Analog(_)
+        ));
+        assert!(matches!(
+            DeviceState::new(Scheme::DDsgd, 100, 5, 2, 1),
+            DeviceState::Digital(_)
+        ));
+        assert!(matches!(
+            DeviceState::new(Scheme::ErrorFree, 100, 5, 2, 1),
+            DeviceState::Passthrough
+        ));
+    }
+
+    #[test]
+    fn passthrough_has_no_accumulator() {
+        let d = DeviceState::new(Scheme::ErrorFree, 10, 1, 2, 1);
+        assert_eq!(d.accumulator_norm(), 0.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Gradient backends: where per-device gradients come from.
+//!
+//! The coordinator is backend-agnostic: [`RustBackend`] computes gradients
+//! with the pure-rust model (reference path); [`crate::runtime::PjrtBackend`]
+//! executes the AOT-lowered JAX graph (L2, which itself calls the L1 Pallas
+//! kernels) through the PJRT CPU client. Both produce the `[M, d]` matrix of
+//! per-device gradients for identical inputs — an integration test asserts
+//! they agree numerically.
+
+use crate::data::Dataset;
+use crate::tensor::Matf;
+
+/// Produces per-device gradient estimates g_m(θ_t) for all M devices.
+///
+/// Not `Send`: the PJRT backend wraps non-Send FFI handles; the trainer
+/// drives backends from the leader thread only (workers parallelize
+/// *inside* a backend call).
+pub trait GradientBackend {
+    /// `params`: flat θ (d); `shards[m]`: device m's sample indices into
+    /// `train`. Returns an M×d matrix, row m = g_m(θ).
+    fn per_device_gradients(
+        &mut self,
+        params: &[f32],
+        train: &Dataset,
+        shards: &[Vec<usize>],
+    ) -> Matf;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference backend (thread-parallel across devices).
+pub struct RustBackend {
+    workers: usize,
+}
+
+impl RustBackend {
+    pub fn new() -> RustBackend {
+        RustBackend { workers: 0 }
+    }
+
+    pub fn with_workers(workers: usize) -> RustBackend {
+        RustBackend { workers }
+    }
+}
+
+impl Default for RustBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GradientBackend for RustBackend {
+    fn per_device_gradients(
+        &mut self,
+        params: &[f32],
+        train: &Dataset,
+        shards: &[Vec<usize>],
+    ) -> Matf {
+        let workers = if self.workers == 0 {
+            crate::util::threadpool::default_workers(shards.len())
+        } else {
+            self.workers
+        };
+        crate::model::per_device_gradients(params, train, shards, workers)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn rust_backend_shapes() {
+        let ds = synthetic::generate(40, 1, 0);
+        let shards = vec![(0..20).collect::<Vec<_>>(), (20..40).collect::<Vec<_>>()];
+        let params = vec![0f32; crate::model::PARAM_DIM];
+        let mut be = RustBackend::new();
+        let g = be.per_device_gradients(&params, &ds, &shards);
+        assert_eq!(g.rows, 2);
+        assert_eq!(g.cols, crate::model::PARAM_DIM);
+        // Zero params → symmetric softmax → gradient rows non-zero.
+        assert!(crate::tensor::norm(g.row(0)) > 0.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Per-round metrics and the training log every experiment consumes.
+
+use std::io::Write as _;
+
+/// One synchronous round's record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub iter: usize,
+    /// Test accuracy (NaN when not evaluated this round).
+    pub test_accuracy: f64,
+    /// Training loss averaged over the devices' shards (NaN when skipped).
+    pub train_loss: f64,
+    /// ‖ĝ‖ of the PS's reconstructed gradient.
+    pub grad_norm: f64,
+    /// Digital: bits each device transmitted this round (0 for analog).
+    pub bits_per_device: f64,
+    /// Power P_t allocated this round.
+    pub p_t: f64,
+    /// AMP iterations used (0 for digital).
+    pub amp_iterations: usize,
+    /// Mean ‖Δ_m‖ across devices (error-accumulator magnitude).
+    pub accumulator_norm: f64,
+    /// Wall-clock seconds for the round.
+    pub round_secs: f64,
+}
+
+/// Full log of a run plus final power audit.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+    /// Per-device average transmit power measured over the run.
+    pub measured_avg_power: Vec<f64>,
+    pub pbar: f64,
+    /// Final test accuracy (last evaluated value).
+    pub final_accuracy: f64,
+    pub total_secs: f64,
+}
+
+impl TrainLog {
+    /// Accuracy series as (iteration, accuracy) for evaluated rounds only.
+    pub fn accuracy_series(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter(|r| !r.test_accuracy.is_nan())
+            .map(|r| (r.iter, r.test_accuracy))
+            .collect()
+    }
+
+    /// Best accuracy reached.
+    pub fn best_accuracy(&self) -> f64 {
+        self.accuracy_series()
+            .iter()
+            .map(|&(_, a)| a)
+            .fold(0.0, f64::max)
+    }
+
+    /// Eq. 6 audit: every device's measured average power within P̄.
+    pub fn power_constraint_ok(&self, tol: f64) -> bool {
+        self.measured_avg_power
+            .iter()
+            .all(|&p| p <= self.pbar * (1.0 + tol))
+    }
+
+    /// Write the full per-round series as CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::create(
+            path,
+            &[
+                "iter",
+                "test_accuracy",
+                "train_loss",
+                "grad_norm",
+                "bits_per_device",
+                "p_t",
+                "amp_iterations",
+                "accumulator_norm",
+                "round_secs",
+            ],
+        )?;
+        for r in &self.records {
+            w.write_row(&[
+                r.iter as f64,
+                r.test_accuracy,
+                r.train_loss,
+                r.grad_norm,
+                r.bits_per_device,
+                r.p_t,
+                r.amp_iterations as f64,
+                r.accumulator_norm,
+                r.round_secs,
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Human-oriented progress line.
+    pub fn print_progress(&self, r: &RoundRecord) {
+        let acc = if r.test_accuracy.is_nan() {
+            "  --  ".to_string()
+        } else {
+            format!("{:.4}", r.test_accuracy)
+        };
+        let mut line = format!(
+            "[{}] t={:<4} acc={} loss={:.4} ‖ĝ‖={:.4}",
+            self.label, r.iter, acc, r.train_loss, r.grad_norm
+        );
+        if r.bits_per_device > 0.0 {
+            line.push_str(&format!(" bits={:.0}", r.bits_per_device));
+        }
+        if r.amp_iterations > 0 {
+            line.push_str(&format!(" amp={}", r.amp_iterations));
+        }
+        println!("{line}");
+        let _ = std::io::stdout().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(iter: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            iter,
+            test_accuracy: acc,
+            train_loss: 1.0,
+            grad_norm: 0.5,
+            bits_per_device: 0.0,
+            p_t: 100.0,
+            amp_iterations: 3,
+            accumulator_norm: 0.0,
+            round_secs: 0.01,
+        }
+    }
+
+    #[test]
+    fn series_skips_unevaluated() {
+        let log = TrainLog {
+            label: "t".into(),
+            records: vec![record(0, 0.1), record(1, f64::NAN), record(2, 0.5)],
+            measured_avg_power: vec![90.0],
+            pbar: 100.0,
+            final_accuracy: 0.5,
+            total_secs: 1.0,
+        };
+        assert_eq!(log.accuracy_series(), vec![(0, 0.1), (2, 0.5)]);
+        assert_eq!(log.best_accuracy(), 0.5);
+        assert!(log.power_constraint_ok(1e-9));
+    }
+
+    #[test]
+    fn power_audit_fails_when_over() {
+        let log = TrainLog {
+            label: "t".into(),
+            records: vec![],
+            measured_avg_power: vec![120.0],
+            pbar: 100.0,
+            final_accuracy: 0.0,
+            total_secs: 0.0,
+        };
+        assert!(!log.power_constraint_ok(0.01));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("ota_metrics_test");
+        let path = dir.join("log.csv");
+        let log = TrainLog {
+            label: "t".into(),
+            records: vec![record(0, 0.3)],
+            measured_avg_power: vec![1.0],
+            pbar: 2.0,
+            final_accuracy: 0.3,
+            total_secs: 0.1,
+        };
+        log.write_csv(path.to_str().unwrap()).unwrap();
+        let rows = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][0], "0");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! The L3 coordinator: synchronous leader/worker rounds of DSGD over the
+//! simulated wireless MAC, scheme-agnostic.
+
+pub mod device;
+pub mod grad;
+pub mod metrics;
+pub mod orchestrator;
+
+pub use grad::{GradientBackend, RustBackend};
+pub use metrics::{RoundRecord, TrainLog};
+pub use orchestrator::Trainer;

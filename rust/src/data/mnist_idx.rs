@@ -1,0 +1,167 @@
+//! IDX-format MNIST loader (LeCun file layout).
+//!
+//! If the user drops the four canonical files (optionally without the
+//! `.idx3-ubyte` suffixes) into a directory, `load_dir` builds the real
+//! corpus; every experiment then runs on genuine MNIST with no other change.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::{Corpus, Dataset, IMG_PIXELS};
+use crate::tensor::Matf;
+
+const IMAGES_MAGIC: u32 = 2051;
+const LABELS_MAGIC: u32 = 2049;
+
+fn be_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX image file (magic 2051) into an n×784 matrix in [0,1].
+pub fn parse_images(bytes: &[u8]) -> anyhow::Result<Matf> {
+    anyhow::ensure!(bytes.len() >= 16, "image file too short");
+    let magic = be_u32(bytes, 0);
+    anyhow::ensure!(magic == IMAGES_MAGIC, "bad image magic {magic}");
+    let n = be_u32(bytes, 4) as usize;
+    let rows = be_u32(bytes, 8) as usize;
+    let cols = be_u32(bytes, 12) as usize;
+    anyhow::ensure!(
+        rows * cols == IMG_PIXELS,
+        "expected 28x28 images, got {rows}x{cols}"
+    );
+    anyhow::ensure!(
+        bytes.len() == 16 + n * IMG_PIXELS,
+        "image payload size mismatch"
+    );
+    let mut m = Matf::zeros(n, IMG_PIXELS);
+    for (v, &b) in m.data.iter_mut().zip(&bytes[16..]) {
+        *v = b as f32 / 255.0;
+    }
+    Ok(m)
+}
+
+/// Parse an IDX label file (magic 2049).
+pub fn parse_labels(bytes: &[u8]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(bytes.len() >= 8, "label file too short");
+    let magic = be_u32(bytes, 0);
+    anyhow::ensure!(magic == LABELS_MAGIC, "bad label magic {magic}");
+    let n = be_u32(bytes, 4) as usize;
+    anyhow::ensure!(bytes.len() == 8 + n, "label payload size mismatch");
+    let labels = bytes[8..].to_vec();
+    anyhow::ensure!(labels.iter().all(|&l| l < 10), "label out of range");
+    Ok(labels)
+}
+
+fn find_file(dir: &Path, stems: &[&str]) -> Option<PathBuf> {
+    for stem in stems {
+        for suffix in ["", ".idx3-ubyte", ".idx1-ubyte", "-idx3-ubyte", "-idx1-ubyte"] {
+            let p = dir.join(format!("{stem}{suffix}"));
+            if p.is_file() {
+                return Some(p);
+            }
+        }
+    }
+    None
+}
+
+/// True if the directory looks like it holds the MNIST IDX files.
+pub fn available(dir: &str) -> bool {
+    let d = Path::new(dir);
+    find_file(d, &["train-images-ubyte", "train-images.idx3-ubyte", "train-images"]).is_some()
+}
+
+/// Load the four canonical files from `dir`.
+pub fn load_dir(dir: &str) -> anyhow::Result<Corpus> {
+    let d = Path::new(dir);
+    let paths = [
+        find_file(d, &["train-images-ubyte", "train-images"]),
+        find_file(d, &["train-labels-ubyte", "train-labels"]),
+        find_file(d, &["t10k-images-ubyte", "t10k-images", "test-images"]),
+        find_file(d, &["t10k-labels-ubyte", "t10k-labels", "test-labels"]),
+    ];
+    let [ti, tl, vi, vl] = paths;
+    let (ti, tl, vi, vl) = match (ti, tl, vi, vl) {
+        (Some(a), Some(b), Some(c), Some(d)) => (a, b, c, d),
+        _ => anyhow::bail!("MNIST IDX files not found under {dir}"),
+    };
+    let train = Dataset {
+        images: parse_images(&fs::read(ti)?)?,
+        labels: parse_labels(&fs::read(tl)?)?,
+    };
+    let test = Dataset {
+        images: parse_images(&fs::read(vi)?)?,
+        labels: parse_labels(&fs::read(vl)?)?,
+    };
+    train.validate().map_err(anyhow::Error::msg)?;
+    test.validate().map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(train.images.rows == train.labels.len());
+    anyhow::ensure!(test.images.rows == test.labels.len());
+    Ok(Corpus { train, test })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_images(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&IMAGES_MAGIC.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&28u32.to_be_bytes());
+        b.extend_from_slice(&28u32.to_be_bytes());
+        b.extend((0..n * IMG_PIXELS).map(|i| (i % 256) as u8));
+        b
+    }
+
+    fn fake_labels(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&LABELS_MAGIC.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend((0..n).map(|i| (i % 10) as u8));
+        b
+    }
+
+    #[test]
+    fn parses_synthetic_idx_bytes() {
+        let imgs = parse_images(&fake_images(5)).unwrap();
+        assert_eq!(imgs.rows, 5);
+        assert_eq!(imgs.cols, IMG_PIXELS);
+        assert!((imgs.at(0, 255) - 255.0 / 255.0).abs() < 1e-6);
+        let labels = parse_labels(&fake_labels(5)).unwrap();
+        assert_eq!(labels, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_sizes() {
+        let mut b = fake_images(2);
+        b[0] = 9;
+        assert!(parse_images(&b).is_err());
+        let mut b = fake_images(2);
+        b.pop();
+        assert!(parse_images(&b).is_err());
+        let mut l = fake_labels(3);
+        l[8] = 11;
+        assert!(parse_labels(&l).is_err());
+    }
+
+    #[test]
+    fn load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join("ota_mnist_idx_test");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("train-images-ubyte"), fake_images(6)).unwrap();
+        fs::write(dir.join("train-labels-ubyte"), fake_labels(6)).unwrap();
+        fs::write(dir.join("t10k-images-ubyte"), fake_images(4)).unwrap();
+        fs::write(dir.join("t10k-labels-ubyte"), fake_labels(4)).unwrap();
+        let corpus = load_dir(dir.to_str().unwrap()).unwrap();
+        assert_eq!(corpus.train.len(), 6);
+        assert_eq!(corpus.test.len(), 4);
+        assert!(available(dir.to_str().unwrap()));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_fails_cleanly() {
+        assert!(load_dir("/nonexistent/mnist").is_err());
+        assert!(!available("/nonexistent/mnist"));
+    }
+}

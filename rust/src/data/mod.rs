@@ -1,0 +1,115 @@
+//! Datasets and device partitioning.
+//!
+//! The paper trains on MNIST. This environment has no network access, so the
+//! default corpus is a deterministic **synthetic MNIST-like** generator
+//! ([`synthetic`]) with identical shapes (28×28 grayscale, 10 classes); if
+//! real MNIST IDX files are present under `data/mnist/`, [`mnist_idx`] loads
+//! them instead (see DESIGN.md §3 for the substitution rationale).
+
+pub mod mnist_idx;
+pub mod partition;
+pub mod synthetic;
+
+use crate::tensor::Matf;
+
+/// Image side length and derived sizes (MNIST geometry).
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const NUM_CLASSES: usize = 10;
+
+/// An in-memory labeled image dataset. `images` is n×784 row-major with
+/// pixel values in [0, 1]; `labels` holds class ids in 0..10.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Matf,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        self.images.row(i)
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    /// Select a subset by indices (copies rows).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut images = Matf::zeros(idx.len(), self.images.cols);
+        let mut labels = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            images.row_mut(r).copy_from_slice(self.images.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { images, labels }
+    }
+
+    /// Sanity checks used by tests and loaders.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.images.rows != self.labels.len() {
+            return Err(format!(
+                "image rows {} != labels {}",
+                self.images.rows,
+                self.labels.len()
+            ));
+        }
+        if self.images.cols != IMG_PIXELS {
+            return Err(format!("expected {IMG_PIXELS} pixels, got {}", self.images.cols));
+        }
+        for (i, &l) in self.labels.iter().enumerate() {
+            if l as usize >= NUM_CLASSES {
+                return Err(format!("label {l} out of range at row {i}"));
+            }
+        }
+        if self
+            .images
+            .data
+            .iter()
+            .any(|&p| !(0.0..=1.0).contains(&p) || p.is_nan())
+        {
+            return Err("pixel outside [0,1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// Train/test pair.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Load the corpus described by a config: real MNIST when IDX files exist
+/// at the configured directory, the synthetic generator otherwise.
+pub fn load_corpus(spec: &crate::config::DatasetSpec, seed: u64) -> anyhow::Result<Corpus> {
+    match spec {
+        crate::config::DatasetSpec::Synthetic { train, test } => {
+            Ok(synthetic::generate_corpus(*train, *test, seed))
+        }
+        crate::config::DatasetSpec::MnistIdx { dir } => mnist_idx::load_dir(dir),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_copies_right_rows() {
+        let corpus = synthetic::generate_corpus(50, 10, 3);
+        let sub = corpus.train.subset(&[0, 7, 4]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.image(1), corpus.train.image(7));
+        assert_eq!(sub.label(2), corpus.train.label(4));
+    }
+}

@@ -1,0 +1,146 @@
+//! Device data partitioning: IID and the paper's non-IID split.
+//!
+//! §VI: *IID* assigns each device B random training samples; *non-IID*
+//! assigns each device B/2 samples from each of two randomly-selected
+//! classes — the biased distribution Fig. 2b stresses.
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// IID split: each device receives `local` samples drawn without
+/// replacement from the corpus (devices are disjoint).
+pub fn iid(train: &Dataset, devices: usize, local: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    assert!(
+        devices * local <= train.len(),
+        "M*B = {} exceeds corpus {}",
+        devices * local,
+        train.len()
+    );
+    let order = rng.sample_indices(train.len(), devices * local);
+    order.chunks(local).map(|c| c.to_vec()).collect()
+}
+
+/// Non-IID split: per device, pick two classes at random and take B/2
+/// samples of each (sampling within a class without replacement while
+/// supplies last; falls back to other samples of the same class already
+/// used elsewhere only if a class pool is exhausted).
+pub fn non_iid(
+    train: &Dataset,
+    devices: usize,
+    local: usize,
+    rng: &mut Pcg64,
+) -> Vec<Vec<usize>> {
+    let n_classes = super::NUM_CLASSES;
+    // Index pool per class, shuffled.
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for i in 0..train.len() {
+        pools[train.label(i)].push(i);
+    }
+    for pool in pools.iter_mut() {
+        rng.shuffle(pool);
+    }
+    let mut cursors = vec![0usize; n_classes];
+    let half = local / 2;
+    // Only classes actually present in the corpus are assignable.
+    let present: Vec<usize> = (0..n_classes).filter(|&c| !pools[c].is_empty()).collect();
+    assert!(!present.is_empty(), "corpus has no labeled samples");
+    let mut out = Vec::with_capacity(devices);
+    for _ in 0..devices {
+        // Two distinct random classes (or the same one twice if only one
+        // class exists in the corpus).
+        let c1 = present[rng.below(present.len() as u64) as usize];
+        let c2 = if present.len() == 1 {
+            c1
+        } else {
+            loop {
+                let c = present[rng.below(present.len() as u64) as usize];
+                if c != c1 {
+                    break c;
+                }
+            }
+        };
+        let mut idx = Vec::with_capacity(local);
+        for (c, want) in [(c1, half), (c2, local - half)] {
+            let pool = &pools[c];
+            let cur = &mut cursors[c];
+            for _ in 0..want {
+                if *cur >= pool.len() {
+                    // Pool exhausted: wrap (sample reuse across devices is
+                    // acceptable — the paper keeps MB = N so this triggers
+                    // only in reduced smoke configs).
+                    *cur = 0;
+                }
+                idx.push(pool[*cur]);
+                *cur += 1;
+            }
+        }
+        out.push(idx);
+    }
+    out
+}
+
+/// Count distinct labels present in a device's shard (test helper / metric).
+pub fn distinct_labels(train: &Dataset, shard: &[usize]) -> usize {
+    let mut seen = [false; super::NUM_CLASSES];
+    for &i in shard {
+        seen[train.label(i)] = true;
+    }
+    seen.iter().filter(|&&s| s).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn iid_shards_disjoint_and_sized() {
+        let ds = synthetic::generate(1000, 1, 0);
+        let mut rng = Pcg64::new(2);
+        let shards = iid(&ds, 8, 100, &mut rng);
+        assert_eq!(shards.len(), 8);
+        let mut seen = std::collections::HashSet::new();
+        for s in &shards {
+            assert_eq!(s.len(), 100);
+            for &i in s {
+                assert!(seen.insert(i), "index {i} duplicated across shards");
+            }
+        }
+    }
+
+    #[test]
+    fn noniid_two_classes_per_device() {
+        let ds = synthetic::generate(4000, 1, 0);
+        let mut rng = Pcg64::new(3);
+        let shards = non_iid(&ds, 10, 200, &mut rng);
+        for s in &shards {
+            assert_eq!(s.len(), 200);
+            let k = distinct_labels(&ds, s);
+            assert!(k <= 2, "device shard has {k} classes");
+        }
+    }
+
+    #[test]
+    fn noniid_half_and_half() {
+        let ds = synthetic::generate(4000, 7, 0);
+        let mut rng = Pcg64::new(4);
+        let shards = non_iid(&ds, 5, 100, &mut rng);
+        for s in &shards {
+            let mut counts = std::collections::HashMap::new();
+            for &i in s {
+                *counts.entry(ds.label(i)).or_insert(0usize) += 1;
+            }
+            let mut vals: Vec<usize> = counts.values().cloned().collect();
+            vals.sort_unstable();
+            assert_eq!(vals, vec![50, 50], "split should be B/2 + B/2");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds corpus")]
+    fn iid_overflow_panics() {
+        let ds = synthetic::generate(100, 1, 0);
+        let mut rng = Pcg64::new(5);
+        let _ = iid(&ds, 10, 100, &mut rng);
+    }
+}

@@ -1,0 +1,163 @@
+//! Ablation studies over A-DSGD's design choices (DESIGN.md §5), run via
+//! `repro ablate`:
+//!
+//! * **mean removal** (§IV-A) on/off — does spending two side channel uses
+//!   on the projected mean help early convergence?
+//! * **sparsity level k** — Remark 5's trade-off: small k → reliable AMP
+//!   recovery of an inaccurate average; large k → accurate average that
+//!   AMP recovers unreliably.
+//! * **AMP denoiser threshold α** — the decoder's only free parameter.
+//! * **power schedule under A-DSGD** — Remark 3: is constant power really
+//!   the robust choice for the analog scheme?
+
+use crate::config::{PowerSchedule, RunConfig, Scheme};
+
+use super::runner::ExperimentSpec;
+
+fn base(full: bool) -> RunConfig {
+    let mut cfg = crate::config::presets::fig2(Scheme::ADsgd, false, full);
+    if !full {
+        // Ablations sweep many runs; shrink the corpus (not the channel).
+        cfg.devices = 15;
+        cfg.local_samples = 400;
+        cfg.dataset = crate::config::DatasetSpec::Synthetic {
+            train: 8_000,
+            test: 2_000,
+        };
+        cfg.iterations = 40;
+        cfg.eval_every = 4;
+    }
+    cfg
+}
+
+/// Mean-removal ablation (§IV-A).
+pub fn mean_removal(full: bool) -> ExperimentSpec {
+    let runs = [0usize, 5, 20, usize::MAX]
+        .iter()
+        .map(|&rounds| {
+            let mut cfg = base(full);
+            cfg.mean_removal_rounds = if rounds == usize::MAX {
+                cfg.iterations
+            } else {
+                rounds
+            };
+            let label = match rounds {
+                0 => "no mean removal".to_string(),
+                usize::MAX => "mean removal always".to_string(),
+                r => format!("mean removal first {r}"),
+            };
+            (label, cfg)
+        })
+        .collect();
+    ExperimentSpec {
+        id: "ablate_mean_removal".into(),
+        title: "Ablation: §IV-A mean removal".into(),
+        runs,
+    }
+}
+
+/// Sparsity-level ablation (Remark 5).
+pub fn sparsity(full: bool) -> ExperimentSpec {
+    let cfg0 = base(full);
+    let s = cfg0.channel_uses;
+    let runs = [s / 8, s / 4, s / 2, 4 * s / 5]
+        .iter()
+        .map(|&k| {
+            let mut cfg = cfg0.clone();
+            cfg.sparsity = k;
+            (format!("k = {k} (s/{:.0})", s as f64 / k as f64), cfg)
+        })
+        .collect();
+    ExperimentSpec {
+        id: "ablate_sparsity".into(),
+        title: "Ablation: sparsification level k (Remark 5)".into(),
+        runs,
+    }
+}
+
+/// AMP threshold ablation.
+pub fn amp_threshold(full: bool) -> ExperimentSpec {
+    let runs = [0.8f64, 1.0, 1.1, 1.4, 2.0]
+        .iter()
+        .map(|&alpha| {
+            let mut cfg = base(full);
+            cfg.amp_threshold_mult = alpha;
+            (format!("alpha = {alpha}"), cfg)
+        })
+        .collect();
+    ExperimentSpec {
+        id: "ablate_amp_threshold".into(),
+        title: "Ablation: AMP soft-threshold multiplier".into(),
+        runs,
+    }
+}
+
+/// Power schedule under the analog scheme (Remark 3).
+pub fn analog_power(full: bool) -> ExperimentSpec {
+    let runs = [
+        PowerSchedule::Constant,
+        PowerSchedule::LhStair,
+        PowerSchedule::Lh,
+        PowerSchedule::Hl,
+    ]
+    .iter()
+    .map(|&p| {
+        let mut cfg = base(full);
+        cfg.power = p;
+        (format!("A-DSGD {}", p.name()), cfg)
+    })
+    .collect();
+    ExperimentSpec {
+        id: "ablate_analog_power".into(),
+        title: "Ablation: power schedule under A-DSGD (Remark 3)".into(),
+        runs,
+    }
+}
+
+/// All ablations, in the order they are reported.
+pub fn all(full: bool) -> Vec<ExperimentSpec> {
+    vec![
+        mean_removal(full),
+        sparsity(full),
+        amp_threshold(full),
+        analog_power(full),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PARAM_DIM;
+
+    #[test]
+    fn all_ablations_validate() {
+        for spec in all(false) {
+            assert!(spec.runs.len() >= 4, "{}", spec.id);
+            for (label, cfg) in &spec.runs {
+                cfg.validate(PARAM_DIM)
+                    .unwrap_or_else(|e| panic!("{}::{label}: {e}", spec.id));
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_ablation_spans_remark5_range() {
+        let spec = sparsity(false);
+        let ks: Vec<usize> = spec.runs.iter().map(|(_, c)| c.sparsity).collect();
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+        let s = spec.runs[0].1.channel_uses;
+        assert!(*ks.last().unwrap() < s, "k must stay below s");
+    }
+
+    #[test]
+    fn mean_removal_covers_never_and_always() {
+        let spec = mean_removal(false);
+        let rounds: Vec<usize> = spec
+            .runs
+            .iter()
+            .map(|(_, c)| c.mean_removal_rounds)
+            .collect();
+        assert_eq!(rounds[0], 0);
+        assert_eq!(*rounds.last().unwrap(), spec.runs[0].1.iterations);
+    }
+}

@@ -1,0 +1,225 @@
+//! Experiment drivers — one per figure of the paper's §VI evaluation.
+//!
+//! Each returns an [`ExperimentSpec`] whose runs reproduce the figure's
+//! series; `full` switches between the paper's exact horizon and the
+//! reduced default (see `config::presets`). The bench targets under
+//! `rust/benches/` time one round of each spec; the CLI (`repro fig N`)
+//! runs them to completion and writes `results/figN*/`.
+
+use crate::config::presets::{self, MODEL_DIM};
+use crate::config::{PowerSchedule, RunConfig, Scheme};
+
+use super::runner::ExperimentSpec;
+
+/// All schemes compared in Fig. 2 (both panels).
+const FIG2_SCHEMES: [Scheme; 5] = [
+    Scheme::ErrorFree,
+    Scheme::ADsgd,
+    Scheme::DDsgd,
+    Scheme::SignSgd,
+    Scheme::Qsgd,
+];
+
+/// Fig. 2a (IID) / 2b (non-IID): scheme shoot-out at M=25, B=1000, P̄=500.
+pub fn fig2(noniid: bool, full: bool) -> ExperimentSpec {
+    let runs = FIG2_SCHEMES
+        .iter()
+        .map(|&s| (s.name().to_string(), presets::fig2(s, noniid, full)))
+        .collect();
+    ExperimentSpec {
+        id: if noniid { "fig2b".into() } else { "fig2a".into() },
+        title: format!(
+            "Fig. 2{}: schemes under {} data distribution",
+            if noniid { "b" } else { "a" },
+            if noniid { "non-IID" } else { "IID" }
+        ),
+        runs,
+    }
+}
+
+/// Fig. 3: D-DSGD power-allocation schedules at P̄=200 (+ A-DSGD + error-free).
+pub fn fig3(full: bool) -> ExperimentSpec {
+    let mut runs: Vec<(String, RunConfig)> = vec![
+        (
+            "error-free".into(),
+            presets::fig3(Scheme::ErrorFree, PowerSchedule::Constant, full),
+        ),
+        (
+            "A-DSGD Pt=Pbar".into(),
+            presets::fig3(Scheme::ADsgd, PowerSchedule::Constant, full),
+        ),
+    ];
+    for sched in [
+        PowerSchedule::Constant,
+        PowerSchedule::LhStair,
+        PowerSchedule::Lh,
+        PowerSchedule::Hl,
+    ] {
+        runs.push((
+            format!("D-DSGD {}", sched.name()),
+            presets::fig3(Scheme::DDsgd, sched, full),
+        ));
+    }
+    ExperimentSpec {
+        id: "fig3".into(),
+        title: "Fig. 3: power allocation schedules (P̄=200)".into(),
+        runs,
+    }
+}
+
+/// Fig. 4: P̄ ∈ {200, 1000} for A-DSGD and D-DSGD.
+pub fn fig4(full: bool) -> ExperimentSpec {
+    let mut runs = vec![(
+        "error-free".into(),
+        presets::fig4(Scheme::ErrorFree, 1000.0, full),
+    )];
+    for pbar in [200.0, 1000.0] {
+        runs.push((
+            format!("A-DSGD Pbar={pbar}"),
+            presets::fig4(Scheme::ADsgd, pbar, full),
+        ));
+        runs.push((
+            format!("D-DSGD Pbar={pbar}"),
+            presets::fig4(Scheme::DDsgd, pbar, full),
+        ));
+    }
+    ExperimentSpec {
+        id: "fig4".into(),
+        title: "Fig. 4: average-power sweep".into(),
+        runs,
+    }
+}
+
+/// Fig. 5: bandwidth s ∈ {d/2, 3d/10} at M=20, P̄=500.
+pub fn fig5(full: bool) -> ExperimentSpec {
+    let mut runs = vec![(
+        "error-free".into(),
+        presets::fig5(Scheme::ErrorFree, MODEL_DIM / 2, full),
+    )];
+    for s in [MODEL_DIM / 2, 3 * MODEL_DIM / 10] {
+        runs.push((
+            format!("A-DSGD s={s}"),
+            presets::fig5(Scheme::ADsgd, s, full),
+        ));
+        runs.push((
+            format!("D-DSGD s={s}"),
+            presets::fig5(Scheme::DDsgd, s, full),
+        ));
+    }
+    ExperimentSpec {
+        id: "fig5".into(),
+        title: "Fig. 5: channel-bandwidth sweep".into(),
+        runs,
+    }
+}
+
+/// Fig. 6: device scaling (M,B) ∈ {(10,2000),(20,1000)} × P̄ ∈ {1,500},
+/// MB fixed; D-DSGD at P̄=1 sends zero bits and fails (paper's point).
+pub fn fig6(full: bool) -> ExperimentSpec {
+    let mut runs = vec![(
+        "error-free M=20".into(),
+        presets::fig6(Scheme::ErrorFree, 20, 1000, 500.0, full),
+    )];
+    for (m, b) in [(10usize, 2000usize), (20, 1000)] {
+        for pbar in [1.0, 500.0] {
+            runs.push((
+                format!("A-DSGD M={m} Pbar={pbar}"),
+                presets::fig6(Scheme::ADsgd, m, b, pbar, full),
+            ));
+        }
+        runs.push((
+            format!("D-DSGD M={m} Pbar=500"),
+            presets::fig6(Scheme::DDsgd, m, b, 500.0, full),
+        ));
+        // D-DSGD at P̄=1: included to demonstrate the zero-bit failure.
+        runs.push((
+            format!("D-DSGD M={m} Pbar=1"),
+            presets::fig6(Scheme::DDsgd, m, b, 1.0, full),
+        ));
+    }
+    ExperimentSpec {
+        id: "fig6".into(),
+        title: "Fig. 6: device scaling with MB fixed".into(),
+        runs,
+    }
+}
+
+/// Fig. 7: A-DSGD s ∈ {d/10, d/5, d/2}, k=⌊4s/5⌋, P̄=50. The driver prints
+/// both the per-iteration axis (7a) and the total-symbols axis (7b).
+pub fn fig7(full: bool) -> ExperimentSpec {
+    let runs = [MODEL_DIM / 10, MODEL_DIM / 5, MODEL_DIM / 2]
+        .iter()
+        .map(|&s| (format!("A-DSGD s={s}"), presets::fig7(s, full)))
+        .collect();
+    ExperimentSpec {
+        id: "fig7".into(),
+        title: "Fig. 7: bandwidth vs iteration-count trade-off (P̄=50)".into(),
+        runs,
+    }
+}
+
+/// Fig. 7b view: accuracy against transmitted symbols t·s.
+pub fn print_fig7b(logs: &[crate::coordinator::TrainLog], specs: &[(String, RunConfig)]) {
+    println!("\nFig. 7b — test accuracy vs total transmitted symbols (t·s)");
+    println!("{:>14} {:>18} {:>10}", "symbols", "run", "accuracy");
+    for (log, (label, cfg)) in logs.iter().zip(specs) {
+        for (t, acc) in log.accuracy_series() {
+            println!(
+                "{:>14} {:>18} {:>10.4}",
+                (t + 1) * cfg.channel_uses,
+                label,
+                acc
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PARAM_DIM;
+
+    #[test]
+    fn all_specs_validate() {
+        for full in [false, true] {
+            for spec in [
+                fig2(false, full),
+                fig2(true, full),
+                fig3(full),
+                fig4(full),
+                fig5(full),
+                fig6(full),
+                fig7(full),
+            ] {
+                assert!(!spec.runs.is_empty(), "{}", spec.id);
+                for (label, cfg) in &spec.runs {
+                    cfg.validate(PARAM_DIM)
+                        .unwrap_or_else(|e| panic!("{}::{label}: {e}", spec.id));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig2_has_five_schemes() {
+        assert_eq!(fig2(false, false).runs.len(), 5);
+    }
+
+    #[test]
+    fn fig3_schedule_labels_unique() {
+        let spec = fig3(false);
+        let mut labels: Vec<&str> = spec.runs.iter().map(|(l, _)| l.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), spec.runs.len());
+    }
+
+    #[test]
+    fn fig6_includes_pbar1_ddsgd_failure_case() {
+        let spec = fig6(false);
+        assert!(spec
+            .runs
+            .iter()
+            .any(|(l, c)| l.contains("D-DSGD") && c.pbar == 1.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Reproductions of every table/figure in the paper's evaluation (§VI) plus
+//! the Theorem-1 analytics (§V). See DESIGN.md §5 for the experiment index.
+
+pub mod ablations;
+pub mod figures;
+pub mod runner;
+pub mod theory;
+
+pub use runner::{run_experiment, ExperimentSpec};

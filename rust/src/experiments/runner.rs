@@ -1,0 +1,154 @@
+//! Shared experiment runner: execute a set of labeled runs, write one CSV
+//! per run plus a combined summary, and print the paper-style series.
+
+use crate::config::RunConfig;
+use crate::coordinator::{TrainLog, Trainer};
+use crate::model::PARAM_DIM;
+use crate::util::csv::CsvWriter;
+
+/// One experiment = one figure: several labeled runs over the same axis.
+pub struct ExperimentSpec {
+    /// Short id, e.g. "fig2a" (becomes the results directory name).
+    pub id: String,
+    /// Human title printed above the series.
+    pub title: String,
+    pub runs: Vec<(String, RunConfig)>,
+}
+
+/// Execute every run sequentially, writing `results/<id>/<label>.csv`.
+pub fn run_experiment(spec: &ExperimentSpec, out_dir: &str, verbose: bool) -> Vec<TrainLog> {
+    println!("\n### {} — {}", spec.id, spec.title);
+    let mut logs = Vec::with_capacity(spec.runs.len());
+    for (label, cfg) in &spec.runs {
+        cfg.validate(PARAM_DIM).expect("invalid experiment config");
+        println!("--- run `{label}`: {}", cfg.summary());
+        let mut trainer = Trainer::new(cfg.clone()).expect("trainer construction");
+        trainer.verbose = verbose;
+        let mut log = trainer.run();
+        log.label = label.clone();
+        let path = format!("{out_dir}/{}/{}.csv", spec.id, sanitize(label));
+        log.write_csv(&path).expect("write csv");
+        println!(
+            "    final acc {:.4} (best {:.4}) in {:.1}s → {path}",
+            log.final_accuracy,
+            log.best_accuracy(),
+            log.total_secs
+        );
+        assert!(
+            log.power_constraint_ok(1e-6),
+            "power constraint violated in `{label}`"
+        );
+        logs.push(log);
+    }
+    write_summary(spec, &logs, out_dir);
+    print_series(spec, &logs);
+    logs
+}
+
+fn sanitize(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// Combined summary CSV: one row per (run, evaluated iteration).
+fn write_summary(spec: &ExperimentSpec, logs: &[TrainLog], out_dir: &str) {
+    let path = format!("{out_dir}/{}/summary.csv", spec.id);
+    let mut w = CsvWriter::create(
+        &path,
+        &["run", "iter", "test_accuracy", "channel_uses", "pbar", "devices"],
+    )
+    .expect("create summary csv");
+    for ((label, cfg), log) in spec.runs.iter().zip(logs) {
+        for (iter, acc) in log.accuracy_series() {
+            w.write_row_str(&[
+                label,
+                &iter.to_string(),
+                &format!("{acc}"),
+                &cfg.channel_uses.to_string(),
+                &format!("{}", cfg.pbar),
+                &cfg.devices.to_string(),
+            ])
+            .expect("summary row");
+        }
+    }
+    w.flush().ok();
+}
+
+/// Paper-style printout: accuracy series side by side.
+fn print_series(spec: &ExperimentSpec, logs: &[TrainLog]) {
+    println!("\n{} — test accuracy vs iteration", spec.title);
+    let mut header = format!("{:>6}", "t");
+    for log in logs {
+        header.push_str(&format!("  {:>18}", truncate(&log.label, 18)));
+    }
+    println!("{header}");
+    // Union of evaluated iterations (assume aligned cadence; take first log).
+    let iters: Vec<usize> = logs
+        .first()
+        .map(|l| l.accuracy_series().iter().map(|&(t, _)| t).collect())
+        .unwrap_or_default();
+    for t in iters {
+        let mut line = format!("{t:>6}");
+        for log in logs {
+            let v = log
+                .accuracy_series()
+                .iter()
+                .find(|&&(it, _)| it == t)
+                .map(|&(_, a)| a);
+            match v {
+                Some(a) => line.push_str(&format!("  {a:>18.4}")),
+                None => line.push_str(&format!("  {:>18}", "--")),
+            }
+        }
+        println!("{line}");
+    }
+    // Final standings, best-first (the paper's qualitative ordering).
+    let mut order: Vec<(&str, f64)> = logs
+        .iter()
+        .map(|l| (l.label.as_str(), l.final_accuracy))
+        .collect();
+    order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\nfinal ranking:");
+    for (label, acc) in order {
+        println!("  {acc:.4}  {label}");
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Scheme};
+
+    #[test]
+    fn runner_executes_and_writes_csv() {
+        let dir = std::env::temp_dir().join("ota_runner_test");
+        let out = dir.to_str().unwrap();
+        let mut cfg = presets::smoke();
+        cfg.iterations = 4;
+        cfg.eval_every = 2;
+        let spec = ExperimentSpec {
+            id: "t0".into(),
+            title: "smoke".into(),
+            runs: vec![
+                ("error-free".into(), RunConfig { scheme: Scheme::ErrorFree, ..cfg.clone() }),
+                ("adsgd".into(), cfg),
+            ],
+        };
+        let logs = run_experiment(&spec, out, false);
+        assert_eq!(logs.len(), 2);
+        assert!(dir.join("t0/error-free.csv").exists());
+        assert!(dir.join("t0/adsgd.csv").exists());
+        assert!(dir.join("t0/summary.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

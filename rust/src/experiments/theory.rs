@@ -1,0 +1,247 @@
+//! Theorem 1 convergence-bound curves (§V).
+//!
+//! Evaluates the paper's analytical machinery numerically: λ (Corollary 1),
+//! σ_max (Lemma 3), ρ(δ) (Lemma 2), the per-iteration error budget v(t)
+//! (Lemma 4, Eq. 37b) and its closed-form sum for P_t = P̄ (Eq. 42), the
+//! step-size cap (Eq. 40), and the failure-probability bound Pr{E_T}
+//! (Eq. 41) — demonstrating Pr{E_T} → 0 as T → ∞.
+
+use crate::util::csv::CsvWriter;
+use crate::util::stats::rho_delta;
+
+/// Parameters of the Theorem-1 setting.
+#[derive(Clone, Debug)]
+pub struct TheoryParams {
+    pub d: usize,
+    pub s: usize,
+    pub k: usize,
+    pub devices: usize,
+    pub pbar: f64,
+    pub noise_sd: f64,
+    /// Gradient first-moment bound G (Assumption 1).
+    pub grad_bound: f64,
+    /// Strong-convexity constant c.
+    pub convexity: f64,
+    /// Success-region radius ε.
+    pub epsilon: f64,
+    /// ‖θ*‖² for the log term in Eq. 41.
+    pub theta_star_sq: f64,
+    /// Tail probability δ for ρ(δ).
+    pub delta: f64,
+}
+
+impl Default for TheoryParams {
+    fn default() -> Self {
+        TheoryParams {
+            d: 7850,
+            s: 3925,
+            k: 1962,
+            devices: 25,
+            pbar: 500.0,
+            noise_sd: 1.0,
+            grad_bound: 1.0,
+            convexity: 40.0,
+            epsilon: 1.0,
+            theta_star_sq: 25.0,
+            delta: 0.01,
+        }
+    }
+}
+
+/// Derived constants + series.
+#[derive(Clone, Debug)]
+pub struct TheoryCurve {
+    pub lambda: f64,
+    pub sigma_max: f64,
+    pub rho: f64,
+    /// v(t) for t = 0..T−1 (Eq. 37b).
+    pub v: Vec<f64>,
+    /// (T, η_max(T), Pr{E_T} bound) rows for the horizon sweep.
+    pub rows: Vec<(usize, f64, f64)>,
+}
+
+impl TheoryParams {
+    /// Corollary 1's sparsification constant λ = √((d−k)/d).
+    pub fn lambda(&self) -> f64 {
+        (((self.d - self.k) as f64) / self.d as f64).sqrt()
+    }
+
+    /// Lemma 3's σ_max = √(d/(s−1)) + 1 (asymptotic largest singular value).
+    pub fn sigma_max(&self) -> f64 {
+        (self.d as f64 / (self.s as f64 - 1.0)).sqrt() + 1.0
+    }
+
+    /// Eq. 37b: v(t) with P_t = P̄.
+    pub fn v_t(&self, t: usize, rho: f64) -> f64 {
+        let lam = self.lambda();
+        let g = self.grad_bound;
+        let m = self.devices as f64;
+        let sig = self.noise_sd;
+        let lam_t = lam.powi(t as i32);
+        let lam_t1 = lam.powi(t as i32 + 1);
+        let first = lam * ((1.0 + lam) * (1.0 - lam_t) / (1.0 - lam) + 1.0) * g;
+        let second = rho * sig / (m * self.pbar.sqrt())
+            * (self.sigma_max() * (1.0 - lam_t1) / (1.0 - lam) * g + 1.0);
+        first + second
+    }
+
+    /// Closed-form Σ_{t=0}^{T−1} v(t) (Eq. 42) — cross-checked against the
+    /// direct sum in tests.
+    ///
+    /// Note: the paper's printed Eq. 42 has `(1 − λ^{T+1})` in the second
+    /// subtracted term; summing Eq. 37b exactly gives `λ(1 − λ^T)`
+    /// (Σ_{t=0}^{T−1} λ^{t+1} = λ(1−λ^T)/(1−λ)) — a typo we correct here so
+    /// the closed form matches the direct sum to machine precision.
+    pub fn sum_v_closed_form(&self, t_horizon: usize, rho: f64) -> f64 {
+        let lam = self.lambda();
+        let g = self.grad_bound;
+        let m = self.devices as f64;
+        let sig = self.noise_sd;
+        let t = t_horizon as f64;
+        let a = 2.0 * lam * g / (1.0 - lam)
+            + sig * rho / (m * self.pbar.sqrt()) * (self.sigma_max() * g / (1.0 - lam) + 1.0);
+        let b = lam * (1.0 + lam) * (1.0 - lam.powi(t_horizon as i32)) * g / (1.0 - lam).powi(2)
+            + sig * rho * self.sigma_max() * lam * (1.0 - lam.powi(t_horizon as i32)) * g
+                / (m * self.pbar.sqrt() * (1.0 - lam).powi(2));
+        a * t - b
+    }
+
+    /// Eq. 40: the step-size cap η_max(T).
+    pub fn eta_max(&self, t_horizon: usize, sum_v: f64) -> f64 {
+        let t = t_horizon as f64;
+        2.0 * (self.convexity * self.epsilon * t - self.epsilon.sqrt() * sum_v)
+            / (t * self.grad_bound * self.grad_bound)
+    }
+
+    /// Eq. 41 with η = η_max/2 (a feasible step size).
+    pub fn failure_bound(&self, t_horizon: usize, rho: f64) -> (f64, f64) {
+        let sum_v = self.sum_v_closed_form(t_horizon, rho);
+        let eta_cap = self.eta_max(t_horizon, sum_v);
+        if eta_cap <= 0.0 {
+            return (eta_cap, 1.0); // infeasible horizon: vacuous bound
+        }
+        let eta = eta_cap / 2.0;
+        let g2 = self.grad_bound * self.grad_bound;
+        let denom_opt = 2.0 * eta * self.convexity * self.epsilon - eta * eta * g2;
+        let l = 2.0 * self.epsilon.sqrt() / denom_opt;
+        let t = t_horizon as f64;
+        let effective_t = t - eta * l * sum_v;
+        if effective_t <= 0.0 {
+            return (eta, 1.0);
+        }
+        let log_term = (std::f64::consts::E * self.theta_star_sq / self.epsilon).ln();
+        let bound = self.epsilon / (denom_opt * effective_t) * log_term;
+        (eta, bound.min(1.0))
+    }
+
+    /// Full curve over a horizon sweep.
+    pub fn curve(&self, horizons: &[usize]) -> TheoryCurve {
+        let rho = rho_delta(self.d, self.delta);
+        let t_max = horizons.iter().copied().max().unwrap_or(0);
+        let v = (0..t_max).map(|t| self.v_t(t, rho)).collect();
+        let rows = horizons
+            .iter()
+            .map(|&t| {
+                let (eta, bound) = self.failure_bound(t, rho);
+                (t, eta, bound)
+            })
+            .collect();
+        TheoryCurve {
+            lambda: self.lambda(),
+            sigma_max: self.sigma_max(),
+            rho,
+            v,
+            rows,
+        }
+    }
+}
+
+/// CLI driver: print + CSV the Theorem-1 curves.
+pub fn run(params: &TheoryParams, out_dir: &str) -> TheoryCurve {
+    let horizons: Vec<usize> = (1..=20).map(|i| i * 500).collect();
+    let curve = params.curve(&horizons);
+    println!("\n### Theorem 1 — convergence bound (strongly convex case)");
+    println!(
+        "λ = {:.4}, σ_max = {:.4}, ρ(δ={}) = {:.2}",
+        curve.lambda, curve.sigma_max, params.delta, curve.rho
+    );
+    println!("{:>8} {:>14} {:>16}", "T", "eta_max/2", "Pr{E_T} bound");
+    for &(t, eta, bound) in &curve.rows {
+        println!("{t:>8} {eta:>14.6} {bound:>16.6}");
+    }
+    let path = format!("{out_dir}/theory/theorem1.csv");
+    let mut w = CsvWriter::create(&path, &["T", "eta", "bound"]).expect("csv");
+    for &(t, eta, bound) in &curve.rows {
+        w.write_row(&[t as f64, eta, bound]).ok();
+    }
+    println!("→ {path}");
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_direct_sum() {
+        let p = TheoryParams::default();
+        let rho = rho_delta(p.d, p.delta);
+        for t_h in [1usize, 5, 50, 200] {
+            let direct: f64 = (0..t_h).map(|t| p.v_t(t, rho)).sum();
+            let closed = p.sum_v_closed_form(t_h, rho);
+            assert!(
+                (direct - closed).abs() < 1e-6 * direct.abs().max(1.0),
+                "T={t_h}: direct {direct} vs closed {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn v_t_increases_then_saturates() {
+        let p = TheoryParams::default();
+        let rho = rho_delta(p.d, p.delta);
+        let v0 = p.v_t(0, rho);
+        let v10 = p.v_t(10, rho);
+        let v100 = p.v_t(100, rho);
+        let v200 = p.v_t(200, rho);
+        assert!(v10 > v0);
+        assert!(v200 >= v100 * 0.999);
+        // Saturation: geometric terms vanish.
+        assert!((v200 - v100).abs() < 0.01 * v100);
+    }
+
+    #[test]
+    fn bound_vanishes_as_t_grows() {
+        let p = TheoryParams::default();
+        let curve = p.curve(&[500, 2000, 10_000]);
+        let bounds: Vec<f64> = curve.rows.iter().map(|r| r.2).collect();
+        assert!(bounds[0] > bounds[1] && bounds[1] > bounds[2], "{bounds:?}");
+        assert!(bounds[2] < 0.1, "Pr bound should approach 0: {bounds:?}");
+    }
+
+    #[test]
+    fn more_power_tightens_noise_term() {
+        let lo = TheoryParams {
+            pbar: 1.0,
+            ..TheoryParams::default()
+        };
+        let hi = TheoryParams {
+            pbar: 1000.0,
+            ..TheoryParams::default()
+        };
+        let rho = rho_delta(lo.d, lo.delta);
+        assert!(hi.v_t(50, rho) < lo.v_t(50, rho));
+    }
+
+    #[test]
+    fn lambda_and_sigma_max_formulas() {
+        let p = TheoryParams {
+            d: 100,
+            k: 36,
+            s: 26,
+            ..TheoryParams::default()
+        };
+        assert!((p.lambda() - 0.8).abs() < 1e-12);
+        assert!((p.sigma_max() - 3.0).abs() < 1e-12);
+    }
+}

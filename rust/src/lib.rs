@@ -1,0 +1,47 @@
+//! # ota-dsgd — Over-the-Air Distributed SGD at the Wireless Edge
+//!
+//! Production-quality reproduction of Amiri & Gündüz, *"Machine Learning at
+//! the Wireless Edge: Distributed Stochastic Gradient Descent Over-the-Air"*
+//! (IEEE TSP 2020): federated SGD where `M` power/bandwidth-limited devices
+//! send gradient information to a parameter server over `s` uses of a
+//! Gaussian multiple-access channel.
+//!
+//! The crate implements:
+//!
+//! * **A-DSGD** (analog over-the-air, Algorithm 1): error accumulation →
+//!   top-k sparsification → shared pseudo-random projection → power-scaled
+//!   uncoded superposition → AMP recovery at the PS ([`analog`], [`amp`]).
+//! * **D-DSGD** (digital, Section III): per-iteration MAC capacity budget,
+//!   SBC-style quantization with error accumulation, enumerative position
+//!   coding ([`digital`], [`compress`]).
+//! * Digital baselines **SignSGD** and **QSGD** through the same capacity
+//!   pipe, and the noiseless **error-free shared link** benchmark.
+//! * The **Gaussian MAC** simulator with per-device power metering
+//!   ([`channel`]) and the paper's power-allocation schedules (Eq. 45a–c).
+//! * A synchronous **coordinator** (leader/worker over std threads) driving
+//!   rounds end-to-end ([`coordinator`]), with gradients computed either by
+//!   the pure-rust model ([`model`]) or by AOT-compiled JAX/Pallas graphs
+//!   executed through PJRT ([`runtime`]).
+//! * Every figure of the paper's evaluation as a runnable experiment
+//!   ([`experiments`]), plus the Theorem-1 convergence bound.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod amp;
+pub mod analog;
+pub mod channel;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod digital;
+pub mod experiments;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate version string (matches Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

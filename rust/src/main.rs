@@ -1,0 +1,237 @@
+//! `repro` — the launcher for the over-the-air DSGD reproduction.
+//!
+//! Subcommands:
+//!   train     one training job from a preset/TOML/CLI overrides
+//!   fig N     regenerate the series of paper figure N (2..=7)
+//!   all       every figure back to back
+//!   theory    Theorem-1 convergence-bound curves
+//!   info      environment + artifact status
+
+use ota_dsgd::config::{presets, Backend, PowerSchedule, RunConfig, Scheme};
+use ota_dsgd::coordinator::{RustBackend, Trainer};
+use ota_dsgd::experiments::{figures, runner, theory};
+use ota_dsgd::model::PARAM_DIM;
+use ota_dsgd::runtime::{Manifest, PjrtBackend, PjrtRuntime};
+use ota_dsgd::util::cli::{Args, Usage};
+use ota_dsgd::util::logging;
+
+fn usage() -> Usage {
+    Usage {
+        program: "repro",
+        about: "Over-the-air distributed SGD at the wireless edge (A-DSGD / D-DSGD)",
+        subcommands: &[
+            ("train", "run one training job (see options)"),
+            ("fig <2|3|4|5|6|7>", "regenerate a paper figure's series"),
+            ("all", "regenerate every figure"),
+            ("ablate [name]", "ablations: mean-removal | sparsity | amp-threshold | analog-power"),
+            ("theory", "Theorem-1 convergence-bound curves"),
+            ("info", "platform, artifacts, configuration echo"),
+        ],
+        options: &[
+            ("--scheme <name>", "adsgd|ddsgd|signsgd|qsgd|error-free (train)"),
+            ("--devices <M>", "number of devices"),
+            ("--local-samples <B>", "samples per device"),
+            ("--channel-uses <s>", "channel uses per iteration"),
+            ("--sparsity <k>", "A-DSGD sparsification level"),
+            ("--pbar <P>", "average power constraint"),
+            ("--iterations <T>", "DSGD iterations"),
+            ("--power <sched>", "const|lh-stair|lh|hl"),
+            ("--noniid", "biased (2-class) device data"),
+            ("--seed <u64>", "rng seed"),
+            ("--backend <rust|pjrt>", "gradient backend (train)"),
+            ("--config <file.toml>", "load a TOML run config (train)"),
+            ("--full", "paper-scale horizon (figs; slower)"),
+            ("--out <dir>", "results directory (default results)"),
+            ("--quiet", "suppress per-round progress"),
+        ],
+    }
+}
+
+fn main() {
+    logging::init_from_env();
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "train" => cmd_train(&args),
+        "fig" => cmd_fig(&args),
+        "all" => cmd_all(&args),
+        "ablate" => cmd_ablate(&args),
+        "theory" => cmd_theory(&args),
+        "info" => cmd_info(),
+        _ => {
+            print!("{}", usage().render());
+        }
+    }
+}
+
+/// Build a RunConfig from `--config` + CLI overrides on top of the smoke
+/// preset (train subcommand).
+fn config_from_args(args: &Args) -> RunConfig {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+            RunConfig::from_toml(&text).unwrap_or_else(|e| panic!("{e}"))
+        }
+        None => presets::smoke(),
+    };
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(s).unwrap_or_else(|| panic!("unknown scheme {s}"));
+    }
+    if let Some(p) = args.get("power") {
+        cfg.power = PowerSchedule::parse(p).unwrap_or_else(|| panic!("unknown schedule {p}"));
+    }
+    cfg.devices = args.usize("devices", cfg.devices);
+    cfg.local_samples = args.usize("local-samples", cfg.local_samples);
+    cfg.channel_uses = args.usize("channel-uses", cfg.channel_uses);
+    cfg.sparsity = args.usize("sparsity", cfg.sparsity);
+    cfg.pbar = args.f64("pbar", cfg.pbar);
+    cfg.iterations = args.usize("iterations", cfg.iterations);
+    cfg.seed = args.u64("seed", cfg.seed);
+    cfg.eval_every = args.usize("eval-every", cfg.eval_every);
+    if args.flag("noniid") {
+        cfg.noniid = true;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b).unwrap_or_else(|| panic!("unknown backend {b}"));
+    }
+    cfg
+}
+
+fn cmd_train(args: &Args) {
+    let cfg = config_from_args(args);
+    cfg.validate(PARAM_DIM).unwrap_or_else(|e| panic!("{e}"));
+    println!("training: {}", cfg.summary());
+    let mut trainer = match cfg.backend {
+        Backend::Rust => Trainer::with_backend(cfg.clone(), Box::new(RustBackend::new())),
+        Backend::Pjrt => {
+            let runtime = PjrtRuntime::cpu().expect("PJRT client");
+            let manifest = Manifest::load_default().expect("artifact manifest");
+            let backend =
+                PjrtBackend::from_manifest(&runtime, &manifest, cfg.devices, cfg.local_samples)
+                    .expect("PJRT gradient backend");
+            Trainer::with_backend(cfg.clone(), Box::new(backend))
+        }
+    }
+    .expect("trainer");
+    trainer.verbose = !args.flag("quiet");
+    let log = trainer.run();
+    println!(
+        "done: final accuracy {:.4} (best {:.4}) in {:.1}s; power ok: {}",
+        log.final_accuracy,
+        log.best_accuracy(),
+        log.total_secs,
+        log.power_constraint_ok(1e-6)
+    );
+    let out = args.get_or("out", "results");
+    let path = format!("{out}/train/{}.csv", cfg.scheme.name().replace(' ', "_"));
+    log.write_csv(&path).expect("write csv");
+    println!("series → {path}");
+}
+
+fn cmd_fig(args: &Args) {
+    let n: usize = args
+        .positional
+        .first()
+        .unwrap_or_else(|| panic!("usage: repro fig <2..7>"))
+        .parse()
+        .expect("figure number");
+    let full = args.flag("full");
+    let out = args.get_or("out", "results");
+    let verbose = !args.flag("quiet");
+    match n {
+        2 => {
+            let spec = figures::fig2(args.flag("noniid"), full);
+            runner::run_experiment(&spec, out, verbose);
+            if !args.flag("noniid") {
+                let spec_b = figures::fig2(true, full);
+                runner::run_experiment(&spec_b, out, verbose);
+            }
+        }
+        3 => {
+            runner::run_experiment(&figures::fig3(full), out, verbose);
+        }
+        4 => {
+            runner::run_experiment(&figures::fig4(full), out, verbose);
+        }
+        5 => {
+            runner::run_experiment(&figures::fig5(full), out, verbose);
+        }
+        6 => {
+            runner::run_experiment(&figures::fig6(full), out, verbose);
+        }
+        7 => {
+            let spec = figures::fig7(full);
+            let logs = runner::run_experiment(&spec, out, verbose);
+            figures::print_fig7b(&logs, &spec.runs);
+        }
+        other => panic!("no figure {other}; valid: 2..=7"),
+    }
+}
+
+fn cmd_all(args: &Args) {
+    let full = args.flag("full");
+    let out = args.get_or("out", "results");
+    let verbose = !args.flag("quiet");
+    for spec in [
+        figures::fig2(false, full),
+        figures::fig2(true, full),
+        figures::fig3(full),
+        figures::fig4(full),
+        figures::fig5(full),
+        figures::fig6(full),
+    ] {
+        runner::run_experiment(&spec, out, verbose);
+    }
+    let spec7 = figures::fig7(full);
+    let logs = runner::run_experiment(&spec7, out, verbose);
+    figures::print_fig7b(&logs, &spec7.runs);
+    theory::run(&theory::TheoryParams::default(), out);
+}
+
+fn cmd_ablate(args: &Args) {
+    use ota_dsgd::experiments::ablations;
+    let full = args.flag("full");
+    let out = args.get_or("out", "results");
+    let verbose = !args.flag("quiet");
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let specs = match which {
+        "mean-removal" => vec![ablations::mean_removal(full)],
+        "sparsity" => vec![ablations::sparsity(full)],
+        "amp-threshold" => vec![ablations::amp_threshold(full)],
+        "analog-power" => vec![ablations::analog_power(full)],
+        "all" => ablations::all(full),
+        other => panic!("unknown ablation {other:?}"),
+    };
+    for spec in specs {
+        runner::run_experiment(&spec, out, verbose);
+    }
+}
+
+fn cmd_theory(args: &Args) {
+    let out = args.get_or("out", "results");
+    let mut p = theory::TheoryParams::default();
+    p.pbar = args.f64("pbar", p.pbar);
+    p.devices = args.usize("devices", p.devices);
+    p.grad_bound = args.f64("grad-bound", p.grad_bound);
+    p.convexity = args.f64("convexity", p.convexity);
+    theory::run(&p, out);
+}
+
+fn cmd_info() {
+    println!("ota-dsgd v{}", ota_dsgd::VERSION);
+    println!("model dim d = {PARAM_DIM}");
+    match PjrtRuntime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    match Manifest::load_default() {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {} kind={} file={:?} meta={:?}", a.name, a.kind, a.file, a.meta);
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+}

@@ -1,0 +1,234 @@
+//! The learning model: the paper's single-layer network for 10-class MNIST
+//! classification, d = 784·10 + 10 = 7850 parameters, softmax cross-entropy
+//! loss (§VI trains it with ADAM at the PS).
+//!
+//! This pure-rust implementation is the reference path and the test oracle
+//! for the L2 JAX graph (`python/compile/model.py`); the coordinator can
+//! compute gradients with either backend (`grad` module in `coordinator`).
+
+use crate::data::{Dataset, IMG_PIXELS, NUM_CLASSES};
+use crate::tensor::{softmax, Matf};
+
+/// Total parameter count d = 7850.
+pub const PARAM_DIM: usize = IMG_PIXELS * NUM_CLASSES + NUM_CLASSES;
+
+/// Flat parameter layout: `[W row-major (10×784) | b (10)]`.
+#[inline]
+pub fn w_slice(params: &[f32]) -> &[f32] {
+    &params[..IMG_PIXELS * NUM_CLASSES]
+}
+
+#[inline]
+pub fn b_slice(params: &[f32]) -> &[f32] {
+    &params[IMG_PIXELS * NUM_CLASSES..]
+}
+
+/// Compute logits for one image: logits[c] = W_c · x + b_c.
+pub fn logits(params: &[f32], image: &[f32], out: &mut [f32; NUM_CLASSES]) {
+    debug_assert_eq!(params.len(), PARAM_DIM);
+    debug_assert_eq!(image.len(), IMG_PIXELS);
+    let w = w_slice(params);
+    let b = b_slice(params);
+    for c in 0..NUM_CLASSES {
+        out[c] = crate::tensor::dot(&w[c * IMG_PIXELS..(c + 1) * IMG_PIXELS], image) + b[c];
+    }
+}
+
+/// Average softmax cross-entropy loss over a dataset shard.
+pub fn loss(params: &[f32], data: &Dataset, idx: &[usize]) -> f64 {
+    let mut lg = [0f32; NUM_CLASSES];
+    let mut probs = [0f32; NUM_CLASSES];
+    let mut total = 0f64;
+    for &i in idx {
+        logits(params, data.image(i), &mut lg);
+        softmax(&lg, &mut probs);
+        let p = probs[data.label(i)].max(1e-12);
+        total -= (p as f64).ln();
+    }
+    total / idx.len().max(1) as f64
+}
+
+/// Gradient of the average loss over `idx`, written into `grad` (len d).
+/// Returns the loss as a by-product.
+pub fn gradient(params: &[f32], data: &Dataset, idx: &[usize], grad: &mut [f32]) -> f64 {
+    assert_eq!(params.len(), PARAM_DIM);
+    assert_eq!(grad.len(), PARAM_DIM);
+    grad.fill(0.0);
+    let inv_n = 1.0 / idx.len().max(1) as f32;
+    let mut lg = [0f32; NUM_CLASSES];
+    let mut probs = [0f32; NUM_CLASSES];
+    let mut total_loss = 0f64;
+    let (gw, gb) = grad.split_at_mut(IMG_PIXELS * NUM_CLASSES);
+    for &i in idx {
+        let x = data.image(i);
+        logits(params, x, &mut lg);
+        softmax(&lg, &mut probs);
+        let y = data.label(i);
+        total_loss -= (probs[y].max(1e-12) as f64).ln();
+        for c in 0..NUM_CLASSES {
+            // dL/dlogit_c = p_c − 1{c==y}
+            let err = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
+            if err != 0.0 {
+                crate::tensor::axpy(err, x, &mut gw[c * IMG_PIXELS..(c + 1) * IMG_PIXELS]);
+                gb[c] += err;
+            }
+        }
+    }
+    total_loss / idx.len().max(1) as f64
+}
+
+/// Classification accuracy over a dataset (all rows).
+pub fn accuracy(params: &[f32], data: &Dataset) -> f64 {
+    let mut lg = [0f32; NUM_CLASSES];
+    let mut correct = 0usize;
+    for i in 0..data.len() {
+        logits(params, data.image(i), &mut lg);
+        let pred = lg
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == data.label(i) {
+            correct += 1;
+        }
+    }
+    correct as f64 / data.len().max(1) as f64
+}
+
+/// Finite-difference gradient check helper (tests + python cross-check).
+pub fn numeric_gradient(
+    params: &[f32],
+    data: &Dataset,
+    idx: &[usize],
+    coords: &[usize],
+    eps: f32,
+) -> Vec<f32> {
+    let mut p = params.to_vec();
+    let mut out = Vec::with_capacity(coords.len());
+    for &c in coords {
+        let orig = p[c];
+        p[c] = orig + eps;
+        let lp = loss(&p, data, idx);
+        p[c] = orig - eps;
+        let lm = loss(&p, data, idx);
+        p[c] = orig;
+        out.push(((lp - lm) / (2.0 * eps as f64)) as f32);
+    }
+    out
+}
+
+/// Batched per-device gradients: one row per device shard. This is the
+/// rust mirror of the L2 JAX graph's `[M, B, 784] → [M, d]` signature.
+pub fn per_device_gradients(
+    params: &[f32],
+    data: &Dataset,
+    shards: &[Vec<usize>],
+    workers: usize,
+) -> Matf {
+    let m = shards.len();
+    let rows = crate::util::threadpool::par_map(m, workers, |dev| {
+        let mut g = vec![0f32; PARAM_DIM];
+        gradient(params, data, &shards[dev], &mut g);
+        g
+    });
+    let mut out = Matf::zeros(m, PARAM_DIM);
+    for (r, row) in rows.into_iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    fn random_params(rng: &mut Pcg64) -> Vec<f32> {
+        (0..PARAM_DIM).map(|_| rng.normal() as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let ds = synthetic::generate(20, 1, 0);
+        let idx: Vec<usize> = (0..20).collect();
+        let mut rng = Pcg64::new(2);
+        let params = random_params(&mut rng);
+        let mut grad = vec![0f32; PARAM_DIM];
+        gradient(&params, &ds, &idx, &mut grad);
+        // Check a scatter of coordinates incl. weights and biases.
+        let coords = vec![0, 5, 783, 784, 4000, 7839, 7840, 7845, 7849];
+        let num = numeric_gradient(&params, &ds, &idx, &coords, 1e-3);
+        for (j, &c) in coords.iter().enumerate() {
+            let a = grad[c];
+            let n = num[j];
+            assert!(
+                (a - n).abs() < 2e-3 + 0.05 * n.abs(),
+                "coord {c}: analytic {a} vs numeric {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn loss_decreases_under_gd() {
+        let ds = synthetic::generate(100, 3, 0);
+        let idx: Vec<usize> = (0..100).collect();
+        let mut params = vec![0f32; PARAM_DIM];
+        let mut grad = vec![0f32; PARAM_DIM];
+        let l0 = gradient(&params, &ds, &idx, &mut grad);
+        for _ in 0..20 {
+            let g = grad.clone();
+            for (p, gi) in params.iter_mut().zip(&g) {
+                *p -= 0.5 * gi;
+            }
+            gradient(&params, &ds, &idx, &mut grad);
+        }
+        let l1 = loss(&params, &ds, &idx);
+        assert!(l1 < l0, "loss {l0} -> {l1} should decrease");
+    }
+
+    #[test]
+    fn zero_params_loss_is_ln10() {
+        let ds = synthetic::generate(50, 4, 0);
+        let idx: Vec<usize> = (0..50).collect();
+        let params = vec![0f32; PARAM_DIM];
+        let l = loss(&params, &ds, &idx);
+        assert!((l - (10f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_improves_with_training() {
+        let ds = synthetic::generate(400, 5, 0);
+        let test = synthetic::generate(200, 5, 1);
+        let idx: Vec<usize> = (0..400).collect();
+        let mut params = vec![0f32; PARAM_DIM];
+        let acc0 = accuracy(&params, &test);
+        let mut grad = vec![0f32; PARAM_DIM];
+        for _ in 0..60 {
+            gradient(&params, &ds, &idx, &mut grad);
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= 1.0 * g;
+            }
+        }
+        let acc1 = accuracy(&params, &test);
+        assert!(
+            acc1 > acc0 + 0.3,
+            "training should lift accuracy well above chance: {acc0} -> {acc1}"
+        );
+    }
+
+    #[test]
+    fn per_device_rows_match_sequential() {
+        let ds = synthetic::generate(60, 6, 0);
+        let shards = vec![(0..30).collect::<Vec<_>>(), (30..60).collect::<Vec<_>>()];
+        let mut rng = Pcg64::new(7);
+        let params = random_params(&mut rng);
+        let batched = per_device_gradients(&params, &ds, &shards, 2);
+        for (d, shard) in shards.iter().enumerate() {
+            let mut g = vec![0f32; PARAM_DIM];
+            gradient(&params, &ds, shard, &mut g);
+            assert_eq!(batched.row(d), &g[..]);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! PS-side optimizers operating on the flat parameter vector.
+//!
+//! The paper's experiments use ADAM (§VI, [46]); plain SGD with the paper's
+//! η_t schedule is provided for the convergence-analysis experiments (§V
+//! assumes constant-η SGD).
+
+/// Optimizer trait: consume a (possibly reconstructed/noisy) gradient
+/// estimate and update the parameters in place.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    fn reset(&mut self);
+    fn name(&self) -> &'static str;
+}
+
+/// ADAM (Kingma & Ba) with bias correction.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr_t = self.lr * b2t.sqrt() / b1t;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            params[i] -= lr_t * self.m[i] / (self.v[i].sqrt() + self.eps);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.t = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// Plain SGD with constant learning rate (the §V analysis setting).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        for (p, g) in params.iter_mut().zip(grad) {
+            *p -= self.lr * g;
+        }
+    }
+
+    fn reset(&mut self) {}
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = Σ (x_i − i)² — both optimizers should converge.
+    fn quad_grad(x: &[f32]) -> Vec<f32> {
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| 2.0 * (v - i as f32))
+            .collect()
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut x = vec![10.0f32; 5];
+        let mut opt = Adam::new(5, 0.1);
+        for _ in 0..2000 {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g);
+        }
+        for (i, &v) in x.iter().enumerate() {
+            assert!((v - i as f32).abs() < 0.05, "x[{i}]={v}");
+        }
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut x = vec![-3.0f32; 4];
+        let mut opt = Sgd::new(0.1);
+        for _ in 0..500 {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g);
+        }
+        for (i, &v) in x.iter().enumerate() {
+            assert!((v - i as f32).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn adam_reset_clears_state() {
+        let mut opt = Adam::new(3, 0.1);
+        let mut x = vec![1.0f32; 3];
+        opt.step(&mut x, &[1.0, 1.0, 1.0]);
+        opt.reset();
+        assert_eq!(opt.t, 0);
+        assert!(opt.m.iter().all(|&v| v == 0.0));
+        assert!(opt.v.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn adam_first_step_size_is_lr() {
+        // With bias correction the first step ≈ lr · sign(g).
+        let mut opt = Adam::new(1, 0.01);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[3.0]);
+        assert!((x[0] + 0.01).abs() < 1e-4, "x={}", x[0]);
+    }
+}

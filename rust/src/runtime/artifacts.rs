@@ -1,0 +1,145 @@
+//! Artifact manifest: which HLO graphs `make artifacts` produced, with
+//! their input/output shapes, so the runtime can pick the right executable
+//! for a run configuration (shapes are baked at AOT time).
+//!
+//! `artifacts/manifest.txt` format (one artifact per line):
+//!
+//! ```text
+//! name=grad kind=grad file=grad_m5_b120.hlo.txt devices=5 batch=120 dim=7850
+//! name=projection kind=projection file=projection_s511_d4096.hlo.txt s_tilde=511 dim=4096
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    /// Shape metadata (devices/batch/dim/s_tilde/...).
+    pub meta: BTreeMap<String, usize>,
+}
+
+impl Artifact {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).copied()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Default artifact directory (repo-root `artifacts/`), overridable via
+    /// `OTA_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OTA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut kind = None;
+            let mut file = None;
+            let mut meta = BTreeMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "kind" => kind = Some(v.to_string()),
+                    "file" => file = Some(dir.join(v)),
+                    other => {
+                        let n: usize = v.parse().map_err(|_| {
+                            anyhow::anyhow!("manifest line {}: non-numeric {other}={v}", lineno + 1)
+                        })?;
+                        meta.insert(other.to_string(), n);
+                    }
+                }
+            }
+            artifacts.push(Artifact {
+                name: name.ok_or_else(|| anyhow::anyhow!("line {}: missing name", lineno + 1))?,
+                kind: kind.ok_or_else(|| anyhow::anyhow!("line {}: missing kind", lineno + 1))?,
+                file: file.ok_or_else(|| anyhow::anyhow!("line {}: missing file", lineno + 1))?,
+                meta,
+            });
+        }
+        Ok(Manifest {
+            artifacts,
+            root: dir.to_path_buf(),
+        })
+    }
+
+    /// Find a gradient artifact matching (devices, batch).
+    pub fn find_grad(&self, devices: usize, batch: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == "grad"
+                && a.meta_usize("devices") == Some(devices)
+                && a.meta_usize("batch") == Some(batch)
+        })
+    }
+
+    pub fn find_kind(&self, kind: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "\
+# comment
+name=grad kind=grad file=grad_m5_b120.hlo.txt devices=5 batch=120 dim=7850
+name=proj kind=projection file=proj.hlo.txt s_tilde=511 dim=4096
+";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.find_grad(5, 120).unwrap();
+        assert_eq!(g.meta_usize("dim"), Some(7850));
+        assert_eq!(g.file, Path::new("/tmp/a/grad_m5_b120.hlo.txt"));
+        assert!(m.find_grad(7, 120).is_none());
+        assert!(m.find_kind("projection").is_some());
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        assert!(Manifest::parse("name=x kind=y file=z shape=abc", Path::new(".")).is_err());
+        assert!(Manifest::parse("noequals", Path::new(".")).is_err());
+        assert!(Manifest::parse("kind=y file=z", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn missing_dir_hint() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! The PJRT runtime: load AOT-compiled HLO artifacts (lowered once from the
+//! L2 JAX graphs by `python/compile/aot.py`) and execute them from rust.
+//! Python never runs on this path.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Artifact, Manifest};
+pub use pjrt::{Executable, PjrtBackend, PjrtRuntime};

@@ -1,0 +1,166 @@
+//! PJRT client wrapper: compile HLO **text** (the interchange format — see
+//! DESIGN.md: jax ≥ 0.5 serialized protos use 64-bit ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids) and execute with f32
+//! buffers. All graphs are lowered by `python/compile/aot.py` with
+//! `return_tuple=True`, so outputs are always tuples.
+
+use std::path::Path;
+
+use crate::coordinator::GradientBackend;
+use crate::data::{Dataset, IMG_PIXELS, NUM_CLASSES};
+use crate::tensor::Matf;
+
+use super::artifacts::Manifest;
+
+/// A live PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> anyhow::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file into an executable.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.as_ref())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// One compiled graph.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An f32 input buffer: data + dims.
+pub struct InputF32<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the tuple elements as flat f32
+    /// vectors (aot.py lowers everything with return_tuple=True).
+    pub fn run_f32(&self, inputs: &[InputF32<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let lit = xla::Literal::vec1(inp.data);
+                let expect: i64 = inp.dims.iter().product();
+                anyhow::ensure!(
+                    expect == inp.data.len() as i64,
+                    "dims {:?} do not match data length {}",
+                    inp.dims,
+                    inp.data.len()
+                );
+                Ok(lit.reshape(inp.dims)?)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let elements = out.to_tuple()?;
+        elements
+            .into_iter()
+            .map(|lit| Ok(lit.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// Gradient backend that executes the AOT-lowered JAX gradient graph
+/// (per-device batched: params[d], images[M,B,784], labels[M,B,10] →
+/// grads[M,d]) through PJRT.
+pub struct PjrtBackend {
+    exe: Executable,
+    devices: usize,
+    batch: usize,
+    dim: usize,
+    /// Reused flattened input staging buffers.
+    images_buf: Vec<f32>,
+    labels_buf: Vec<f32>,
+}
+
+impl PjrtBackend {
+    /// Build from the artifact manifest; fails with a clear message when no
+    /// artifact matches the (M, B) of the run config.
+    pub fn from_manifest(
+        runtime: &PjrtRuntime,
+        manifest: &Manifest,
+        devices: usize,
+        batch: usize,
+    ) -> anyhow::Result<PjrtBackend> {
+        let art = manifest.find_grad(devices, batch).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no grad artifact for devices={devices} batch={batch}; \
+                 regenerate with `python -m compile.aot --grad-shapes {devices}x{batch}`"
+            )
+        })?;
+        let dim = art.meta_usize("dim").unwrap_or(crate::model::PARAM_DIM);
+        let exe = runtime.load_hlo(&art.file)?;
+        Ok(PjrtBackend {
+            exe,
+            devices,
+            batch,
+            dim,
+            images_buf: vec![0.0; devices * batch * IMG_PIXELS],
+            labels_buf: vec![0.0; devices * batch * NUM_CLASSES],
+        })
+    }
+}
+
+impl GradientBackend for PjrtBackend {
+    fn per_device_gradients(
+        &mut self,
+        params: &[f32],
+        train: &Dataset,
+        shards: &[Vec<usize>],
+    ) -> Matf {
+        assert_eq!(shards.len(), self.devices, "artifact baked for M={}", self.devices);
+        assert_eq!(params.len(), self.dim);
+        self.labels_buf.fill(0.0);
+        for (m, shard) in shards.iter().enumerate() {
+            assert_eq!(shard.len(), self.batch, "artifact baked for B={}", self.batch);
+            for (b, &i) in shard.iter().enumerate() {
+                let off = (m * self.batch + b) * IMG_PIXELS;
+                self.images_buf[off..off + IMG_PIXELS].copy_from_slice(train.image(i));
+                let loff = (m * self.batch + b) * NUM_CLASSES;
+                self.labels_buf[loff + train.label(i)] = 1.0;
+            }
+        }
+        let outputs = self
+            .exe
+            .run_f32(&[
+                InputF32 {
+                    data: params,
+                    dims: &[self.dim as i64],
+                },
+                InputF32 {
+                    data: &self.images_buf,
+                    dims: &[self.devices as i64, self.batch as i64, IMG_PIXELS as i64],
+                },
+                InputF32 {
+                    data: &self.labels_buf,
+                    dims: &[self.devices as i64, self.batch as i64, NUM_CLASSES as i64],
+                },
+            ])
+            .expect("PJRT gradient execution failed");
+        let grads = &outputs[0];
+        assert_eq!(grads.len(), self.devices * self.dim);
+        Matf::from_vec(self.devices, self.dim, grads.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// Runtime tests that need real artifacts live in rust/tests/runtime_pjrt.rs
+// (they skip with a notice when artifacts/ is absent).

@@ -1,0 +1,246 @@
+//! Vector/matrix primitives (row-major, f32).
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matf {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matf {
+    pub fn zeros(rows: usize, cols: usize) -> Matf {
+        Matf {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matf {
+        assert_eq!(data.len(), rows * cols);
+        Matf { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product with 4-lane unrolling (autovectorizes well at opt-level 3).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let b = i * 8;
+        s0 += x[b] * y[b];
+        s1 += x[b + 1] * y[b + 1];
+        s2 += x[b + 2] * y[b + 2];
+        s3 += x[b + 3] * y[b + 3];
+        s4 += x[b + 4] * y[b + 4];
+        s5 += x[b + 5] * y[b + 5];
+        s6 += x[b + 6] * y[b + 6];
+        s7 += x[b + 7] * y[b + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += x[i] * y[i];
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// ‖x‖₂²
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f64 {
+    // f64 accumulator: d = 7850 partial sums in f32 lose ~3 digits.
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// ‖x‖₂
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out = A · x  (A: m×n row-major, x: n, out: m)
+pub fn gemv(a: &Matf, x: &[f32], out: &mut [f32]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, out.len());
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot(a.row(r), x);
+    }
+}
+
+/// out = Aᵀ · x  (A: m×n row-major, x: m, out: n) — traverses rows to stay
+/// cache-friendly on the row-major layout (axpy per row).
+pub fn gemv_t(a: &Matf, x: &[f32], out: &mut [f32]) {
+    assert_eq!(a.rows, x.len());
+    assert_eq!(a.cols, out.len());
+    out.fill(0.0);
+    for (r, &xr) in x.iter().enumerate() {
+        if xr != 0.0 {
+            axpy(xr, a.row(r), out);
+        }
+    }
+}
+
+/// C = A · B (naive-blocked; only used for small model shapes and tests).
+pub fn gemm(a: &Matf, b: &Matf) -> Matf {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Matf::zeros(a.rows, b.cols);
+    const BK: usize = 64;
+    for k0 in (0..a.cols).step_by(BK) {
+        let kmax = (k0 + BK).min(a.cols);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for k in k0..kmax {
+                let aik = arow[k];
+                if aik != 0.0 {
+                    axpy(aik, b.row(k), crow);
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Numerically-stable softmax over `x`, written into `out`.
+pub fn softmax(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for (o, &v) in out.iter_mut().zip(x) {
+        let e = (v - max).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Elementwise soft-threshold (the AMP denoiser): sign(x)·max(|x|−τ, 0).
+#[inline]
+pub fn soft_threshold(x: &mut [f32], tau: f32) {
+    for v in x.iter_mut() {
+        let a = v.abs() - tau;
+        *v = if a > 0.0 { a * v.signum() } else { 0.0 };
+    }
+}
+
+/// Mean of a slice.
+#[inline]
+pub fn mean(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        let y: Vec<f32> = (0..100).map(|i| (100 - i) as f32 * 0.05).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn gemv_identity() {
+        let mut a = Matf::zeros(3, 3);
+        for i in 0..3 {
+            *a.at_mut(i, i) = 1.0;
+        }
+        let x = [1.0, 2.0, 3.0];
+        let mut out = [0.0; 3];
+        gemv(&a, &x, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn gemv_t_matches_transpose() {
+        let a = Matf::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let x = [10.0, 20.0];
+        let mut out = [0.0; 3];
+        gemv_t(&a, &x, &mut out);
+        // Aᵀ x = [1*10+4*20, 2*10+5*20, 3*10+6*20]
+        assert_eq!(out, [90.0, 120.0, 150.0]);
+    }
+
+    #[test]
+    fn gemm_small() {
+        let a = Matf::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matf::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = gemm(&a, &b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_stable() {
+        let x = [1000.0, 1000.0, 1000.0];
+        let mut out = [0.0; 3];
+        softmax(&x, &mut out);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        for &p in &out {
+            assert!((p - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn soft_threshold_behaviour() {
+        let mut x = [3.0, -3.0, 0.5, -0.5, 0.0];
+        soft_threshold(&mut x, 1.0);
+        assert_eq!(x, [2.0, -2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn norm_accumulates_in_f64() {
+        let x = vec![1e-3f32; 1_000_000];
+        // Σ x² = 1e6 · 1e-6 = 1.0
+        assert!((norm_sq(&x) - 1.0).abs() < 1e-3);
+    }
+}

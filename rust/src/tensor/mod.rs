@@ -1,0 +1,12 @@
+//! Dense f32 linear algebra substrate.
+//!
+//! Small, allocation-conscious routines sized for this paper's shapes
+//! (d = 7850, s up to d/2, M up to 50). The hot paths — `gemv`, the
+//! sparse-aware projection in `analog::projection`, and AMP's `gemv_t` —
+//! are written to autovectorize; see EXPERIMENTS.md §Perf.
+
+mod dense;
+mod select;
+
+pub use dense::*;
+pub use select::*;

@@ -1,0 +1,190 @@
+//! Selection primitives: top-k by magnitude (the paper's `sp_k` operator and
+//! the D-DSGD top-2q selection both reduce to this), via introselect-style
+//! quickselect — O(d) expected, no full sort.
+
+use crate::util::rng::Pcg64;
+
+/// Return the k-th largest magnitude (1-indexed: k=1 → max |x|).
+/// `k` must satisfy 1 <= k <= x.len().
+pub fn kth_largest_magnitude(x: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= x.len(), "k={k} len={}", x.len());
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    let idx = mags.len() - k; // k-th largest == (n-k)-th smallest (0-indexed)
+    quickselect(&mut mags, idx);
+    mags[idx]
+}
+
+/// In-place quickselect: after return, `xs[idx]` holds the idx-th smallest
+/// element and elements left/right of it partition around it.
+fn quickselect(xs: &mut [f32], idx: usize) {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    let mut rng = Pcg64::new(0x5E1E_C7);
+    loop {
+        if hi - lo <= 16 {
+            xs[lo..hi].sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return;
+        }
+        // Median-of-3 with a random middle to defeat adversarial patterns.
+        let mid = lo + rng.below((hi - lo) as u64) as usize;
+        let pivot = median3(xs[lo], xs[mid], xs[hi - 1]);
+        // 3-way partition (Dutch national flag) — robust to duplicates.
+        let (mut i, mut j, mut n) = (lo, lo, hi);
+        while j < n {
+            if xs[j] < pivot {
+                xs.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if xs[j] > pivot {
+                n -= 1;
+                xs.swap(j, n);
+            } else {
+                j += 1;
+            }
+        }
+        if idx < i {
+            hi = i;
+        } else if idx >= n {
+            lo = n;
+        } else {
+            return; // idx lands inside the == pivot band
+        }
+    }
+}
+
+fn median3(a: f32, b: f32, c: f32) -> f32 {
+    a.max(b).min(a.min(b).max(c))
+}
+
+/// Indices of the k largest-magnitude entries (ties broken by lower index).
+/// Returned indices are sorted ascending.
+pub fn topk_indices(x: &[f32], k: usize) -> Vec<usize> {
+    assert!(k <= x.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == x.len() {
+        return (0..x.len()).collect();
+    }
+    let thresh = kth_largest_magnitude(x, k);
+    // First pass: all strictly above the threshold.
+    let mut idx: Vec<usize> = Vec::with_capacity(k);
+    let mut at_thresh: Vec<usize> = Vec::new();
+    for (i, v) in x.iter().enumerate() {
+        let a = v.abs();
+        if a > thresh {
+            idx.push(i);
+        } else if a == thresh {
+            at_thresh.push(i);
+        }
+    }
+    // Fill remaining slots from the threshold band, lowest index first.
+    for i in at_thresh {
+        if idx.len() == k {
+            break;
+        }
+        idx.push(i);
+    }
+    idx.sort_unstable();
+    debug_assert_eq!(idx.len(), k);
+    idx
+}
+
+/// The paper's sp_k operator: keep the k largest-magnitude entries of `x`,
+/// zero the rest. Returns the sparse result (dense representation).
+pub fn sparsify_topk(x: &[f32], k: usize) -> Vec<f32> {
+    let idx = topk_indices(x, k);
+    let mut out = vec![0.0f32; x.len()];
+    for i in idx {
+        out[i] = x[i];
+    }
+    out
+}
+
+/// Apply sp_k in place, returning the support indices.
+pub fn sparsify_topk_inplace(x: &mut [f32], k: usize) -> Vec<usize> {
+    let idx = topk_indices(x, k);
+    let mut keep = vec![false; x.len()];
+    for &i in &idx {
+        keep[i] = true;
+    }
+    for (i, v) in x.iter_mut().enumerate() {
+        if !keep[i] {
+            *v = 0.0;
+        }
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn kth_matches_sort() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..20 {
+            let n = 1 + rng.below(200) as usize;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            assert_eq!(kth_largest_magnitude(&x, k), mags[k - 1]);
+        }
+    }
+
+    #[test]
+    fn topk_picks_largest() {
+        let x = [0.1, -5.0, 3.0, -0.2, 4.0];
+        assert_eq!(topk_indices(&x, 2), vec![1, 4]);
+        assert_eq!(topk_indices(&x, 3), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn topk_handles_duplicates() {
+        let x = [1.0f32; 10];
+        let idx = topk_indices(&x, 4);
+        assert_eq!(idx, vec![0, 1, 2, 3]); // lowest indices win ties
+    }
+
+    #[test]
+    fn sparsify_preserves_selected_and_zeros_rest() {
+        let x = [0.5, -2.0, 1.5, 0.1];
+        let s = sparsify_topk(&x, 2);
+        assert_eq!(s, vec![0.0, -2.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn sparsify_error_bound_corollary1() {
+        // Corollary 1: ‖x − sp_k(x)‖ ≤ sqrt((d−k)/d)·‖x‖
+        let mut rng = Pcg64::new(7);
+        for _ in 0..10 {
+            let d = 500;
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            for &k in &[1usize, 50, 250, 499, 500] {
+                let s = sparsify_topk(&x, k);
+                let err: f64 = x
+                    .iter()
+                    .zip(&s)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                let bound =
+                    (((d - k) as f64) / d as f64).sqrt() * crate::tensor::norm(&x) + 1e-6;
+                assert!(err <= bound, "k={k} err={err} bound={bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_edge_cases() {
+        let x = [1.0, 2.0];
+        assert!(topk_indices(&x, 0).is_empty());
+        assert_eq!(topk_indices(&x, 2), vec![0, 1]);
+        let mut y = [3.0, -1.0, 2.0];
+        let idx = sparsify_topk_inplace(&mut y, 1);
+        assert_eq!(idx, vec![0]);
+        assert_eq!(y, [3.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Micro/meso benchmark harness (criterion is not in the offline vendor
+//! set). Used by every target under `rust/benches/`: warm up, run timed
+//! iterations, report mean / p50 / p95 and optional throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+/// One benchmark's collected timing result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// items/sec if `throughput_items` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>11} mean  {:>11} p50  {:>11} p95  ({} iters){}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Builder-style bench runner.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target_time: Duration,
+    throughput_items: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_millis(800),
+            throughput_items: None,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min.max(1);
+        self.max_iters = max.max(self.min_iters);
+        self
+    }
+
+    pub fn target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Report throughput as items/sec (e.g. elements processed per call).
+    pub fn throughput(mut self, items: u64) -> Self {
+        self.throughput_items = Some(items);
+        self
+    }
+
+    /// Run `f` repeatedly; `f` should perform one full operation and return a
+    /// value (black-boxed to keep the optimizer honest).
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start_all = Instant::now();
+        let mut iters = 0usize;
+        while iters < self.min_iters
+            || (start_all.elapsed() < self.target_time && iters < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: self.name,
+            iters,
+            mean: Duration::from_secs_f64(mean_s),
+            p50: Duration::from_secs_f64(percentile(&samples, 50.0)),
+            p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+            min: Duration::from_secs_f64(samples[0]),
+            throughput: self.throughput_items.map(|n| n as f64 / mean_s),
+        };
+        println!("{}", result.report_line());
+        result
+    }
+}
+
+/// Optimizer barrier (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Group header for bench output.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = Bench::new("noop")
+            .warmup(1)
+            .iters(3, 10)
+            .target_time(Duration::from_millis(5))
+            .throughput(1000)
+            .run(|| 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.mean >= r.min);
+        assert!(r.p95 >= r.p50);
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).contains(" s"));
+    }
+}

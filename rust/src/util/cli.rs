@@ -1,0 +1,182 @@
+//! Hand-rolled command-line parsing (no `clap` in the offline vendor set).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name). The first non-`--` token is
+    /// the subcommand; later bare tokens are positionals.
+    pub fn parse<I, S>(argv: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    // `--key value`: consume the value ONLY if the key is
+                    // conventionally valued; we treat every non-flag-looking
+                    // next token as a value.
+                    let v = it.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        // A bare `--name` OR `--name true`.
+        self.flags.iter().any(|f| f == name)
+            || self
+                .options
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.typed(name, default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.typed(name, default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.typed(name, default)
+    }
+
+    fn typed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(raw) => raw.parse().unwrap_or_else(|_| {
+                panic!("--{name}: cannot parse {raw:?}");
+            }),
+        }
+    }
+
+    /// All `--key value` options, for echoing configuration into logs.
+    pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.options.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+/// Declarative usage/help rendering.
+pub struct Usage {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub subcommands: &'static [(&'static str, &'static str)],
+    pub options: &'static [(&'static str, &'static str)],
+}
+
+impl Usage {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} <subcommand> [options]", self.program);
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "\nSUBCOMMANDS:");
+            for (name, desc) in self.subcommands {
+                let _ = writeln!(s, "  {name:<18} {desc}");
+            }
+        }
+        if !self.options.is_empty() {
+            let _ = writeln!(s, "\nOPTIONS:");
+            for (name, desc) in self.options {
+                let _ = writeln!(s, "  {name:<24} {desc}");
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // Positionals go before flags (a bare token right after `--flag`
+        // is consumed as that flag's value — documented CLI behavior).
+        let a = Args::parse(["fig", "2", "--iters=50", "--full"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig"));
+        assert_eq!(a.usize("iters", 0), 50);
+        assert!(a.flag("full"));
+        assert_eq!(a.positional, vec!["2"]);
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let a = Args::parse(["train", "--scheme", "adsgd", "--pbar", "500"]);
+        assert_eq!(a.get("scheme"), Some("adsgd"));
+        assert_eq!(a.f64("pbar", 0.0), 500.0);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(["x"]);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert!(!a.flag("nope"));
+        assert_eq!(a.get_or("key", "dflt"), "dflt");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_typed_value_panics() {
+        let a = Args::parse(["x", "--n", "abc"]);
+        let _ = a.usize("n", 0);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = Usage {
+            program: "repro",
+            about: "over-the-air DSGD",
+            subcommands: &[("train", "run one training job")],
+            options: &[("--seed <u64>", "rng seed")],
+        };
+        let text = u.render();
+        assert!(text.contains("repro"));
+        assert!(text.contains("train"));
+        assert!(text.contains("--seed"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal CSV writer for experiment metric series.
+//!
+//! Every experiment driver writes its series under `results/<name>.csv` so
+//! figures can be re-plotted outside the binary. No external serde crates in
+//! the offline vendor set, so this is a small hand-rolled writer with proper
+//! quoting.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Streaming CSV writer with header enforcement.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+    path: PathBuf,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path`, writing the header row immediately.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = CsvWriter {
+            out: BufWriter::new(File::create(&path)?),
+            columns: header.len(),
+            path: path.as_ref().to_path_buf(),
+        };
+        w.write_row_str(header)?;
+        Ok(w)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains([',', '"', '\n']) {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    pub fn write_row_str(&mut self, fields: &[&str]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.columns,
+            "row width {} != header width {}",
+            fields.len(),
+            self.columns
+        );
+        let line: Vec<String> = fields.iter().map(|f| Self::escape(f)).collect();
+        writeln!(self.out, "{}", line.join(","))
+    }
+
+    /// Write a row of f64s (common case for metric series).
+    pub fn write_row(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_str(&refs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Parse a simple CSV file back (no embedded newlines), used by tests and
+/// report tooling.
+pub fn read_csv<P: AsRef<Path>>(path: P) -> std::io::Result<Vec<Vec<String>>> {
+    let text = fs::read_to_string(path)?;
+    Ok(text.lines().map(parse_line).collect())
+}
+
+fn parse_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_quoting() {
+        let dir = std::env::temp_dir().join("ota_dsgd_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b,c", "d\"e"]).unwrap();
+            w.write_row_str(&["1", "x,y", "he said \"hi\""]).unwrap();
+            w.write_row(&[1.5, -2.0, 3.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let rows = read_csv(&path).unwrap();
+        assert_eq!(rows[0], vec!["a", "b,c", "d\"e"]);
+        assert_eq!(rows[1], vec!["1", "x,y", "he said \"hi\""]);
+        assert_eq!(rows[2], vec!["1.5", "-2", "3.25"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let dir = std::env::temp_dir().join("ota_dsgd_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.write_row_str(&["only-one"]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny leveled stderr logger. Level is set once (CLI `--log-level` or
+//! `OTA_LOG` env); macros elsewhere call through `log_at`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str_loose(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn init(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+    START.get_or_init(Instant::now);
+}
+
+pub fn init_from_env() {
+    let level = std::env::var("OTA_LOG")
+        .map(|s| Level::from_str_loose(&s))
+        .unwrap_or(Level::Info);
+    init(level);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log_at(level: Level, module: &str, msg: std::fmt::Arguments) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!(
+        "[{:>9.3}s {} {}] {}",
+        t.as_secs_f64(),
+        level.tag(),
+        module,
+        msg
+    );
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str_loose("ERROR"), Level::Error);
+        assert_eq!(Level::from_str_loose("warn"), Level::Warn);
+        assert_eq!(Level::from_str_loose("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn level_gating() {
+        init(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+        init(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate utilities: RNG, statistics, CSV, CLI parsing, thread pool,
+//! property-testing and benchmarking harnesses, logging.
+//!
+//! All of these are hand-rolled because the build environment is fully
+//! offline — see DESIGN.md §3 (Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

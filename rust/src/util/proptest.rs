@@ -1,0 +1,166 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline vendor set has no `proptest`, so this module provides the same
+//! methodology in ~150 lines: generate random cases from the repo RNG, check
+//! an invariant, and on failure shrink the case (via a user-supplied
+//! shrinker) to a minimal reproduction, reporting the seed for replay.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 64,
+            seed: 0xBEEF_CAFE,
+            max_shrink_steps: 256,
+        }
+    }
+}
+
+/// Outcome of checking a single case.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn from_bool(ok: bool, msg: &str) -> Check {
+        if ok {
+            Check::Pass
+        } else {
+            Check::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Run a property: `gen` draws a case from the RNG, `prop` checks it,
+/// `shrink` proposes smaller candidates (return empty to stop shrinking).
+///
+/// Panics with a replayable report on failure.
+pub fn run_property<T, G, P, S>(name: &str, cfg: PropConfig, gen: G, prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: Fn(&mut Pcg64) -> T,
+    P: Fn(&T) -> Check,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Pcg64::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let mut case_rng = rng.split(case_idx as u64);
+        let case = gen(&mut case_rng);
+        if let Check::Fail(first_msg) = prop(&case) {
+            // Shrink to a minimal failing case.
+            let mut best = case.clone();
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Check::Fail(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={:#x}, case #{case_idx})\n  original: {case:?}\n  shrunk:   {best:?}\n  reason:   {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with no shrinking.
+pub fn run_property_noshrink<T, G, P>(name: &str, cfg: PropConfig, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: Fn(&mut Pcg64) -> T,
+    P: Fn(&T) -> Check,
+{
+    run_property(name, cfg, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for f32 vectors: halve the length, zero elements,
+/// halve magnitudes.
+pub fn shrink_vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    if v.iter().any(|&x| x != 0.0) {
+        out.push(v.iter().map(|&x| x / 2.0).collect());
+        let mut zeroed = v.clone();
+        for x in zeroed.iter_mut() {
+            if x.abs() < 0.5 {
+                *x = 0.0;
+            }
+        }
+        if &zeroed != v {
+            out.push(zeroed);
+        }
+    }
+    out
+}
+
+/// Standard shrinker for usize parameters: move toward 1.
+pub fn shrink_usize(n: &usize) -> Vec<usize> {
+    let n = *n;
+    let mut out = Vec::new();
+    if n > 1 {
+        out.push(n / 2);
+        out.push(n - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_property_noshrink(
+            "sum-nonneg",
+            PropConfig::default(),
+            |rng| (0..10).map(|_| rng.f32()).collect::<Vec<f32>>(),
+            |v| Check::from_bool(v.iter().sum::<f32>() >= 0.0, "negative sum"),
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            run_property(
+                "always-small",
+                PropConfig {
+                    cases: 32,
+                    ..Default::default()
+                },
+                |rng| {
+                    (0..8)
+                        .map(|_| rng.range_f64(0.0, 10.0) as f32)
+                        .collect::<Vec<f32>>()
+                },
+                |v| Check::from_bool(v.iter().all(|&x| x < 5.0), "element >= 5"),
+                shrink_vec_f32,
+            );
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().expect("panic message");
+        assert!(msg.contains("shrunk"), "msg={msg}");
+    }
+}

@@ -1,0 +1,267 @@
+//! Statistics helpers: summaries used by metrics/benches, plus the special
+//! functions needed by the paper's convergence analysis (Lemma 2 uses the
+//! inverse lower incomplete gamma function to define `ρ(δ)`).
+
+/// Online mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (0 when fewer than 2 samples).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Percentile of a sample (linear interpolation, p in [0, 100]).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma P(a, x) = γ(a,x)/Γ(a).
+///
+/// Series expansion for x < a+1, continued fraction otherwise
+/// (Numerical Recipes §6.2).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // Series: P(a,x) = e^{-x} x^a / Γ(a) Σ x^n Γ(a)/Γ(a+1+n)
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        // Continued fraction for Q(a,x); P = 1 - Q.
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / 1e-300;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        1.0 - h * (-x + a * x.ln() - ln_gamma(a)).exp()
+    }
+}
+
+/// Inverse of the regularized lower incomplete gamma: x with P(a, x) = p.
+/// Bisection + Newton refinement; accurate to ~1e-10 relative.
+pub fn gamma_p_inv(a: f64, p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p));
+    if p == 0.0 {
+        return 0.0;
+    }
+    // Bracket the root.
+    let (mut lo, mut hi) = (0.0f64, a.max(1.0));
+    while gamma_p(a, hi) < p {
+        hi *= 2.0;
+        if hi > 1e12 {
+            break;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if gamma_p(a, mid) < p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-12 * hi.max(1.0) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// ρ(δ) from Lemma 2 of the paper: the radius such that a d-dimensional
+/// standard normal vector has `Pr{‖u‖ ≥ ρ(δ)} = δ`. With `‖u‖²` chi-square
+/// with d degrees of freedom, `ρ(δ) = sqrt(2 γ^{-1}(Γ(d/2)(1−δ), d/2))` —
+/// equivalently `sqrt(2 · P^{-1}(d/2, 1−δ))` in regularized form.
+pub fn rho_delta(d: usize, delta: f64) -> f64 {
+    assert!(d > 0 && delta > 0.0 && delta < 1.0);
+    (2.0 * gamma_p_inv(d as f64 / 2.0, 1.0 - delta)).sqrt()
+}
+
+/// log2 of the binomial coefficient C(n, k), via lgamma (exact enough for
+/// bit-budget accounting with n up to 10^7).
+pub fn log2_binom(n: usize, k: usize) -> f64 {
+    assert!(k <= n, "C({n},{k}) undefined");
+    if k == 0 || k == n {
+        return 0.0;
+    }
+    let n = n as f64;
+    let k = k as f64;
+    (ln_gamma(n + 1.0) - ln_gamma(k + 1.0) - ln_gamma(n - k + 1.0)) / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-10);
+        assert!(ln_gamma(2.0).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24.0f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gamma_p_basic() {
+        // P(1, x) = 1 - e^{-x}
+        for &x in &[0.1, 0.5, 1.0, 3.0, 10.0] {
+            assert!((gamma_p(1.0, x) - (1.0 - (-x as f64).exp())).abs() < 1e-12);
+        }
+        // Chi-square d=2 median: P(1, x)=0.5 at x=ln 2.
+        assert!((gamma_p_inv(1.0, 0.5) - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gamma_p_inv_roundtrip() {
+        for &a in &[0.5, 1.0, 2.5, 10.0, 3925.0] {
+            for &p in &[0.01, 0.3, 0.5, 0.9, 0.999] {
+                let x = gamma_p_inv(a, p);
+                assert!(
+                    (gamma_p(a, x) - p).abs() < 1e-8,
+                    "a={a} p={p} x={x} P={}",
+                    gamma_p(a, x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rho_delta_monotone_and_sane() {
+        // For d=1, Pr{|u| >= rho} = delta → rho(0.3173) ≈ 1.0
+        let r = rho_delta(1, 0.317_310_5);
+        assert!((r - 1.0).abs() < 1e-3, "r={r}");
+        // Larger d → larger radius; smaller delta → larger radius.
+        assert!(rho_delta(100, 0.05) > rho_delta(10, 0.05));
+        assert!(rho_delta(10, 0.01) > rho_delta(10, 0.5));
+        // d-dim normal norm concentrates near sqrt(d).
+        let d = 7850;
+        let r = rho_delta(d, 0.5);
+        assert!((r - (d as f64).sqrt()).abs() < 2.0, "r={r}");
+    }
+
+    #[test]
+    fn log2_binom_exact_small() {
+        assert!((log2_binom(10, 3) - (120f64).log2()).abs() < 1e-9);
+        assert!((log2_binom(52, 5) - (2_598_960f64).log2()).abs() < 1e-9);
+        assert_eq!(log2_binom(7, 0), 0.0);
+        assert_eq!(log2_binom(7, 7), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+}

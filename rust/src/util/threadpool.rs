@@ -1,0 +1,122 @@
+//! Scoped parallel map over device workloads.
+//!
+//! No tokio/rayon offline; the coordinator fans device work out with
+//! `std::thread::scope`. On the 1-core CI box this degrades gracefully to
+//! near-sequential execution, but the structure mirrors a real deployment
+//! (one worker per edge device) and scales with available cores.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use for `n_items` independent items.
+pub fn default_workers(n_items: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    hw.min(n_items).max(1)
+}
+
+/// Parallel map with work stealing via an atomic cursor. Preserves order of
+/// results. `f` must be `Sync`; items are taken by index.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers >= 1);
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 || n == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker missed an item"))
+        .collect()
+}
+
+/// Parallel for-each over mutable chunks of a slice (used to fill large
+/// buffers like the projection matrix in parallel, deterministically:
+/// the caller derives an independent RNG per chunk index).
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    if workers <= 1 || data.len() <= chunk {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let pending = Mutex::new(chunks);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let item = pending.lock().unwrap().pop();
+                match item {
+                    Some((i, c)) => f(i, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_worker() {
+        let out = par_map(10, 1, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn par_chunks_fill_all() {
+        let mut data = vec![0u32; 1000];
+        par_chunks_mut(&mut data, 64, 4, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 64 + j) as u32;
+            }
+        });
+        assert_eq!(data, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn default_workers_bounded() {
+        assert_eq!(default_workers(0), 1);
+        assert!(default_workers(100) >= 1);
+        assert!(default_workers(2) <= 2);
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-module integration tests: pipelines composed of several modules,
+//! plus failure injection at module boundaries.
+
+use ota_dsgd::amp::AmpConfig;
+use ota_dsgd::analog::{AnalogDevice, AnalogPs, Projection};
+use ota_dsgd::channel::{GaussianMac, PowerAllocator};
+use ota_dsgd::config::{presets, DatasetSpec, PowerSchedule, RunConfig, Scheme};
+use ota_dsgd::coordinator::Trainer;
+use ota_dsgd::data::{load_corpus, partition, synthetic};
+use ota_dsgd::digital::{aggregate, capacity_bits, DigitalDevice};
+use ota_dsgd::model::{self, PARAM_DIM};
+use ota_dsgd::tensor;
+use ota_dsgd::util::rng::Pcg64;
+
+/// Devices computing real model gradients → digital pipe → PS aggregate:
+/// the averaged reconstruction should point "the same way" as the true
+/// average gradient (positive cosine similarity, substantial at good SNR).
+#[test]
+fn digital_pipeline_preserves_gradient_direction() {
+    let corpus = synthetic::generate(600, 3, 0);
+    let mut rng = Pcg64::new(1);
+    let shards = partition::iid(&corpus, 6, 100, &mut rng);
+    let mut params = vec![0f32; PARAM_DIM];
+    let mut prng = Pcg64::new(2);
+    for p in params.iter_mut() {
+        *p = prng.normal_ms(0.0, 0.02) as f32;
+    }
+    let grads = model::per_device_gradients(&params, &corpus, &shards, 1);
+
+    let mut true_avg = vec![0f32; PARAM_DIM];
+    for m in 0..6 {
+        tensor::axpy(1.0 / 6.0, grads.row(m), &mut true_avg);
+    }
+
+    let budget = capacity_bits(PARAM_DIM / 2, 6, 500.0, 1.0);
+    let mut devices: Vec<DigitalDevice> = (0..6)
+        .map(|i| DigitalDevice::new(Scheme::DDsgd, PARAM_DIM, 2, i as u64))
+        .collect();
+    let payloads: Vec<_> = devices
+        .iter_mut()
+        .enumerate()
+        .map(|(m, dev)| dev.transmit(grads.row(m), budget))
+        .collect();
+    let ghat = aggregate(&payloads, PARAM_DIM);
+
+    // SBC keeps ~q entries at the winning-sign mean, so against the *dense*
+    // average the achievable cosine is bounded by the kept energy fraction;
+    // we require the direction to be clearly preserved, not identical.
+    let cos = tensor::dot(&ghat, &true_avg) as f64
+        / (tensor::norm(&ghat) * tensor::norm(&true_avg)).max(1e-12);
+    assert!(cos > 0.15, "cosine similarity {cos}");
+}
+
+/// Same check for the analog pipeline through the actual MAC + AMP.
+#[test]
+fn analog_pipeline_preserves_gradient_direction() {
+    // M = 25 as in the paper: over-the-air superposition needs enough
+    // devices for the coherent sum to dominate the channel noise at
+    // P̄/s per-symbol power (Remark 4).
+    let corpus = synthetic::generate(2500, 5, 0);
+    let mut rng = Pcg64::new(4);
+    let m_devices = 25;
+    let shards = partition::iid(&corpus, m_devices, 100, &mut rng);
+    let mut params = vec![0f32; PARAM_DIM];
+    let mut prng = Pcg64::new(5);
+    for p in params.iter_mut() {
+        *p = prng.normal_ms(0.0, 0.02) as f32;
+    }
+    let grads = model::per_device_gradients(&params, &corpus, &shards, 1);
+
+    let s = PARAM_DIM / 4;
+    // Assumption 3 (paper): the support of Σ_m g_m^sp must stay below
+    // s−1, guaranteed by k ≪ s; staying under the Donoho–Tanner phase
+    // transition (δ = s/d = 0.25 → recoverable support ≈ 0.35·s̃) keeps
+    // AMP in its provable regime even with imperfect support overlap.
+    let k = s / 32;
+    // A-DSGD's decode target is the average of the *sparsified* gradients
+    // (Alg. 1 — the dense remainder lives in the error accumulators).
+    let mut sparse_avg = vec![0f32; PARAM_DIM];
+    for m in 0..m_devices {
+        let sp = tensor::sparsify_topk(grads.row(m), k);
+        tensor::axpy(1.0 / m_devices as f32, &sp, &mut sparse_avg);
+    }
+    let proj = Projection::generate(s - 1, PARAM_DIM, 42);
+    let mut mac = GaussianMac::new(s, m_devices, 1.0, 9);
+    let mut devices: Vec<AnalogDevice> = (0..m_devices)
+        .map(|_| AnalogDevice::new(PARAM_DIM, k))
+        .collect();
+    let frames: Vec<Vec<f32>> = devices
+        .iter_mut()
+        .enumerate()
+        .map(|(m, dev)| dev.transmit(grads.row(m), &proj, 500.0).x)
+        .collect();
+    let y = mac.transmit(&frames);
+    let ps = AnalogPs::new(proj, AmpConfig::default());
+    let (ghat, trace) = ps.decode(&y);
+    assert!(trace.iterations > 0);
+
+    let cos = tensor::dot(&ghat, &sparse_avg) as f64
+        / (tensor::norm(&ghat) * tensor::norm(&sparse_avg)).max(1e-12);
+    assert!(cos > 0.5, "cosine similarity vs sparsified average: {cos}");
+}
+
+/// Power allocator + trainer integration: a non-constant schedule still
+/// meets the measured Eq. 6 audit inside a full run.
+#[test]
+fn trainer_meets_power_constraint_under_hl_schedule() {
+    let cfg = RunConfig {
+        scheme: Scheme::ADsgd,
+        power: PowerSchedule::Hl,
+        iterations: 9,
+        eval_every: 3,
+        ..presets::smoke()
+    };
+    let log = Trainer::new(cfg).unwrap().run();
+    assert!(
+        log.power_constraint_ok(1e-6),
+        "avg powers {:?} vs P̄ {}",
+        log.measured_avg_power,
+        log.pbar
+    );
+    // HL: first-third rounds get more power than last-third.
+    let p_first = log.records[0].p_t;
+    let p_last = log.records[8].p_t;
+    assert!(p_first > p_last);
+}
+
+/// Failure injection: a corrupted artifact manifest fails loudly with a
+/// actionable message, not a panic.
+#[test]
+fn corrupt_manifest_fails_cleanly() {
+    let dir = std::env::temp_dir().join("ota_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "name=x kind=grad file=missing.hlo devices=abc\n")
+        .unwrap();
+    let err = ota_dsgd::runtime::Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("non-numeric"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Failure injection: non-IID partitioning on a corpus with a missing class
+/// still produces full shards (wrap-around path).
+#[test]
+fn noniid_survives_skewed_corpus() {
+    let mut ds = synthetic::generate(300, 8, 0);
+    // Erase class 0 entirely by relabeling to 1.
+    for l in ds.labels.iter_mut() {
+        if *l == 0 {
+            *l = 1;
+        }
+    }
+    let mut rng = Pcg64::new(3);
+    let shards = partition::non_iid(&ds, 8, 40, &mut rng);
+    for s in &shards {
+        assert_eq!(s.len(), 40);
+    }
+}
+
+/// Config → corpus plumbing: MNIST spec falls back with an error when the
+/// directory is absent, synthetic always works.
+#[test]
+fn corpus_loading_paths() {
+    assert!(load_corpus(
+        &DatasetSpec::MnistIdx {
+            dir: "/no/such/dir".into()
+        },
+        1
+    )
+    .is_err());
+    let corpus = load_corpus(
+        &DatasetSpec::Synthetic {
+            train: 100,
+            test: 50,
+        },
+        1,
+    )
+    .unwrap();
+    assert_eq!(corpus.train.len(), 100);
+    assert_eq!(corpus.test.len(), 50);
+}
+
+/// The PowerAllocator paper schedules integrate with capacity: more power
+/// in late iterations buys more bits late (Fig. 3's mechanism).
+#[test]
+fn lh_schedule_shifts_bits_to_late_iterations() {
+    let alloc = PowerAllocator::new(PowerSchedule::Lh, 200.0, 300);
+    let s = PARAM_DIM / 2;
+    let bits_early = capacity_bits(s, 25, alloc.p(10), 1.0);
+    let bits_late = capacity_bits(s, 25, alloc.p(290), 1.0);
+    assert!(bits_late > bits_early * 1.2, "{bits_early} vs {bits_late}");
+}
+
+/// Determinism across the whole stack: same seed → identical accuracy
+/// series; different seed → different series.
+#[test]
+fn full_run_determinism() {
+    let mut cfg = presets::smoke();
+    cfg.iterations = 5;
+    let a = Trainer::new(cfg.clone()).unwrap().run();
+    let b = Trainer::new(cfg.clone()).unwrap().run();
+    let series = |l: &ota_dsgd::coordinator::TrainLog| {
+        l.records.iter().map(|r| r.grad_norm).collect::<Vec<_>>()
+    };
+    assert_eq!(series(&a), series(&b));
+    cfg.seed += 1;
+    let c = Trainer::new(cfg).unwrap().run();
+    assert_ne!(series(&a), series(&c));
+}

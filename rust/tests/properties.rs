@@ -1,0 +1,312 @@
+//! Property-based tests over the paper's invariants, driven by the
+//! hand-rolled harness in `util::proptest` (no proptest crate offline —
+//! same methodology: random generation + shrinking).
+
+use ota_dsgd::amp::{self, AmpConfig};
+use ota_dsgd::analog::{AnalogDevice, Projection};
+use ota_dsgd::channel::PowerAllocator;
+use ota_dsgd::compress::bits::{capacity_bits, max_q_within_budget, position_bits};
+use ota_dsgd::compress::sbc::SbcCompressor;
+use ota_dsgd::compress::signsgd::SignSgdCompressor;
+use ota_dsgd::compress::{DigitalCompressor, ErrorAccumulator};
+use ota_dsgd::config::PowerSchedule;
+use ota_dsgd::tensor;
+use ota_dsgd::util::proptest::{
+    run_property, run_property_noshrink, shrink_vec_f32, Check, PropConfig,
+};
+use ota_dsgd::util::rng::Pcg64;
+
+fn gen_vec(rng: &mut Pcg64, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len as u64) as usize;
+    (0..n).map(|_| rng.normal_ms(0.0, 2.0) as f32).collect()
+}
+
+/// Corollary 1: ‖x − sp_k(x)‖ ≤ √((d−k)/d)·‖x‖ for every x and k.
+#[test]
+fn prop_sparsification_error_bound() {
+    run_property(
+        "corollary1",
+        PropConfig {
+            cases: 128,
+            ..Default::default()
+        },
+        |rng| {
+            let x = gen_vec(rng, 400);
+            let k = 1 + rng.below(x.len() as u64) as usize;
+            (x, k)
+        },
+        |(x, k)| {
+            let k = (*k).min(x.len());
+            let sp = tensor::sparsify_topk(x, k);
+            let err: f64 = x
+                .iter()
+                .zip(&sp)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let d = x.len() as f64;
+            let bound = ((d - k as f64) / d).sqrt() * tensor::norm(x) + 1e-5;
+            Check::from_bool(err <= bound, &format!("err {err} > bound {bound}"))
+        },
+        |(x, k)| {
+            shrink_vec_f32(x)
+                .into_iter()
+                .map(|v| {
+                    let kk = (*k).min(v.len().max(1));
+                    (v, kk)
+                })
+                .collect()
+        },
+    );
+}
+
+/// The A-DSGD frame always has ‖x‖² = P_t exactly (Eq. 12), for any
+/// gradient, any k, any power.
+#[test]
+fn prop_analog_frame_power_exact() {
+    run_property_noshrink(
+        "eq12-frame-power",
+        PropConfig {
+            cases: 64,
+            ..Default::default()
+        },
+        |rng| {
+            let d = 20 + rng.below(300) as usize;
+            let g: Vec<f32> = (0..d).map(|_| rng.normal_ms(0.0, 1.5) as f32).collect();
+            let s_tilde = 4 + rng.below((d / 2) as u64) as usize;
+            let k = 1 + rng.below(s_tilde.min(d) as u64) as usize;
+            let p_t = 0.5 + rng.f64() * 800.0;
+            let seed = rng.next_u64();
+            (g, s_tilde, k, p_t, seed)
+        },
+        |(g, s_tilde, k, p_t, seed)| {
+            let proj = Projection::generate(*s_tilde, g.len(), *seed);
+            let mut dev = AnalogDevice::new(g.len(), *k);
+            let frame = dev.transmit(g, &proj, *p_t);
+            let power = tensor::norm_sq(&frame.x);
+            Check::from_bool(
+                (power - p_t).abs() <= 1e-3 * p_t.max(1.0),
+                &format!("power {power} vs P_t {p_t}"),
+            )
+        },
+    );
+}
+
+/// Error accumulation conserves mass: Δ(t+1) + transmitted = g + Δ(t).
+#[test]
+fn prop_error_accumulator_conservation() {
+    run_property_noshrink(
+        "error-accum-conservation",
+        PropConfig::default(),
+        |rng| {
+            let g = gen_vec(rng, 300);
+            let k = 1 + rng.below(g.len() as u64) as usize;
+            (g, k)
+        },
+        |(g, k)| {
+            let mut acc = ErrorAccumulator::new(g.len());
+            let g_ec = acc.compensate(g);
+            let sent = tensor::sparsify_topk(&g_ec, (*k).min(g.len()));
+            acc.update(&g_ec, &sent);
+            let recon: Vec<f32> = acc
+                .as_slice()
+                .iter()
+                .zip(&sent)
+                .map(|(d, s)| d + s)
+                .collect();
+            let diff: f64 = recon
+                .iter()
+                .zip(g)
+                .map(|(a, b)| ((a - b) as f64).abs())
+                .fold(0.0, f64::max);
+            Check::from_bool(diff < 1e-5, &format!("mass not conserved: {diff}"))
+        },
+    );
+}
+
+/// Capacity (Eq. 8) is monotone in P and s, and the budget search always
+/// returns the maximal feasible q.
+#[test]
+fn prop_capacity_and_budget_search() {
+    run_property_noshrink(
+        "capacity-monotone-budget-max",
+        PropConfig {
+            cases: 96,
+            ..Default::default()
+        },
+        |rng| {
+            let s = 10 + rng.below(4000) as usize;
+            let m = 1 + rng.below(50) as usize;
+            let p = rng.f64() * 1000.0;
+            let d = 100 + rng.below(8000) as usize;
+            (s, m, p, d)
+        },
+        |&(s, m, p, d)| {
+            let r = capacity_bits(s, m, p, 1.0);
+            let r_more_power = capacity_bits(s, m, p + 50.0, 1.0);
+            let r_more_bw = capacity_bits(s + 100, m, p, 1.0);
+            if r_more_power < r || r_more_bw < r {
+                return Check::Fail(format!("capacity not monotone at s={s} m={m} p={p}"));
+            }
+            let q = max_q_within_budget(d / 2, r, |q| position_bits(d, q) + 33.0);
+            if q > 0 && position_bits(d, q) + 33.0 > r {
+                return Check::Fail(format!("q={q} exceeds budget"));
+            }
+            if q < d / 2 && position_bits(d, q + 1) + 33.0 <= r {
+                return Check::Fail(format!("q={q} not maximal"));
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Every power schedule meets Eq. 7 for any (P̄, T).
+#[test]
+fn prop_power_schedules_satisfy_average() {
+    run_property_noshrink(
+        "eq7-average-power",
+        PropConfig::default(),
+        |rng| {
+            let pbar = 0.1 + rng.f64() * 1000.0;
+            let t = 1 + rng.below(600) as usize;
+            let kind = match rng.below(4) {
+                0 => PowerSchedule::Constant,
+                1 => PowerSchedule::LhStair,
+                2 => PowerSchedule::Lh,
+                _ => PowerSchedule::Hl,
+            };
+            (pbar, t, kind)
+        },
+        |&(pbar, t, kind)| {
+            let alloc = PowerAllocator::new(kind, pbar, t);
+            Check::from_bool(
+                alloc.satisfies_average(1e-9) && alloc.schedule.iter().all(|&p| p > 0.0),
+                &format!("{kind:?} T={t} P̄={pbar}"),
+            )
+        },
+    );
+}
+
+/// Digital payloads always fit the budget and reconstruct with the correct
+/// support size.
+#[test]
+fn prop_digital_payloads_fit_budget() {
+    run_property_noshrink(
+        "digital-fits-budget",
+        PropConfig {
+            cases: 48,
+            ..Default::default()
+        },
+        |rng| {
+            let g = gen_vec(rng, 500);
+            let budget = rng.f64() * 500.0;
+            let which = rng.below(2);
+            (g, budget, which)
+        },
+        |(g, budget, which)| {
+            let payload = if *which == 0 {
+                SbcCompressor::new().encode(g, *budget)
+            } else {
+                SignSgdCompressor::new().encode(g, *budget)
+            };
+            if payload.bits > *budget && payload.bits != 0.0 {
+                return Check::Fail(format!("bits {} > budget {budget}", payload.bits));
+            }
+            let nnz = payload.reconstruction.iter().filter(|&&v| v != 0.0).count();
+            Check::from_bool(
+                nnz == payload.nnz,
+                &format!("nnz mismatch: {} vs {}", nnz, payload.nnz),
+            )
+        },
+    );
+}
+
+/// AMP on a noiseless well-conditioned instance recovers the signal
+/// (Lemma 1 regime: k < s/4, s = d/2).
+#[test]
+fn prop_amp_recovery_in_lemma1_regime() {
+    run_property_noshrink(
+        "amp-recovery",
+        PropConfig {
+            cases: 16,
+            ..Default::default()
+        },
+        |rng| {
+            let d = 200 + rng.below(200) as usize;
+            let s = d / 2;
+            let k = 1 + rng.below((s / 4) as u64) as usize;
+            let seed = rng.next_u64();
+            let mut x = vec![0f32; d];
+            let idx = rng.sample_indices(d, k);
+            for i in idx {
+                x[i] = rng.normal_ms(0.0, 1.0) as f32;
+            }
+            (x, s, seed)
+        },
+        |(x, s, seed)| {
+            let a = amp::measurement_matrix(*s, x.len(), *seed);
+            let mut y = vec![0f32; *s];
+            tensor::gemv(&a, x, &mut y);
+            let (xhat, _) = amp::recover(
+                &a,
+                &y,
+                &AmpConfig {
+                    max_iters: 60,
+                    tol: 1e-7,
+                    threshold_mult: 1.1,
+                },
+            );
+            let err: f64 = x
+                .iter()
+                .zip(&xhat)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                / tensor::norm(x).max(1e-9);
+            Check::from_bool(err < 0.1, &format!("relative error {err}"))
+        },
+    );
+}
+
+/// QSGD stochastic quantization is unbiased for any input (statistical
+/// property over repeated encodes).
+#[test]
+fn prop_qsgd_unbiased() {
+    run_property_noshrink(
+        "qsgd-unbiased",
+        PropConfig {
+            cases: 8,
+            ..Default::default()
+        },
+        |rng| {
+            let n = 3 + rng.below(12) as usize;
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let seed = rng.next_u64();
+            (g, seed)
+        },
+        |(g, seed)| {
+            use ota_dsgd::compress::qsgd::QsgdCompressor;
+            let budget = QsgdCompressor::bit_cost(g.len(), g.len(), 2) + 1.0;
+            let mut enc = QsgdCompressor::new(2, *seed);
+            let trials = 4000;
+            let mut sums = vec![0f64; g.len()];
+            for _ in 0..trials {
+                let p = enc.encode(g, budget);
+                for (s, &r) in sums.iter_mut().zip(&p.reconstruction) {
+                    *s += r as f64;
+                }
+            }
+            let norm: f64 = tensor::norm(g);
+            for (i, s) in sums.iter().enumerate() {
+                let mean = s / trials as f64;
+                if (mean - g[i] as f64).abs() > 0.05 * norm.max(0.2) {
+                    return Check::Fail(format!(
+                        "coord {i}: E[Q] = {mean} vs {} (norm {norm})",
+                        g[i]
+                    ));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
