@@ -1,8 +1,9 @@
 //! End-to-end driver (DESIGN.md §6 validation ladder, step 4): a fleet of
 //! wireless edge devices trains the paper's d = 7850 classifier on a real
-//! small workload — the full synthetic MNIST-like corpus — under all three
-//! transmission regimes, logging the loss/accuracy curves side by side and
-//! auditing the Eq. 6 power constraint.
+//! small workload — the full synthetic MNIST-like corpus — under all five
+//! transmission schemes (error-free, A-DSGD, D-DSGD, SignSGD, QSGD),
+//! logging the loss/accuracy curves side by side and auditing the Eq. 6
+//! power constraint.
 //!
 //! This run is recorded in EXPERIMENTS.md §End-to-end.
 //!
@@ -38,9 +39,15 @@ fn main() -> anyhow::Result<()> {
     let iterations = args.usize("iterations", 40);
     let mut results = Vec::new();
 
-    for scheme in [Scheme::ErrorFree, Scheme::ADsgd, Scheme::DDsgd] {
+    for scheme in [
+        Scheme::ErrorFree,
+        Scheme::ADsgd,
+        Scheme::DDsgd,
+        Scheme::SignSgd,
+        Scheme::Qsgd,
+    ] {
         let cfg = fleet_config(scheme, iterations);
-        println!("\n=== {} ===", cfg.summary());
+        println!("\n=== {} [{} link] ===", cfg.summary(), scheme.kind().name());
         let mut trainer = Trainer::new(cfg)?;
         trainer.verbose = true;
         let log = trainer.run();
@@ -75,9 +82,10 @@ fn main() -> anyhow::Result<()> {
     // The paper's qualitative expectation: error-free ≥ A-DSGD ≥ digital.
     let acc: Vec<f64> = results.iter().map(|(_, l)| l.best_accuracy()).collect();
     anyhow::ensure!(acc[1] > 0.5, "A-DSGD should learn (got {})", acc[1]);
-    println!(
-        "\nedge_fleet OK (error-free {:.4}, A-DSGD {:.4}, D-DSGD {:.4})",
-        acc[0], acc[1], acc[2]
-    );
+    let standings: Vec<String> = results
+        .iter()
+        .map(|(s, l)| format!("{} {:.4}", s.name(), l.best_accuracy()))
+        .collect();
+    println!("\nedge_fleet OK ({})", standings.join(", "));
     Ok(())
 }

@@ -15,6 +15,7 @@ fn main() -> anyhow::Result<()> {
     cfg.scheme = Scheme::ADsgd;
     cfg.iterations = 20;
     println!("config: {}", cfg.summary());
+    println!("transmission pipeline: {} link", cfg.scheme.kind().name());
 
     let mut trainer = Trainer::new(cfg)?;
     trainer.verbose = true;

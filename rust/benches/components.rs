@@ -9,7 +9,7 @@ use ota_dsgd::compress::qsgd::QsgdCompressor;
 use ota_dsgd::compress::sbc::SbcCompressor;
 use ota_dsgd::compress::signsgd::SignSgdCompressor;
 use ota_dsgd::compress::DigitalCompressor;
-use ota_dsgd::coordinator::{GradientBackend, RustBackend};
+use ota_dsgd::coordinator::{DeviceSet, GradientBackend, RustBackend};
 use ota_dsgd::data::{partition, synthetic};
 use ota_dsgd::model::PARAM_DIM;
 use ota_dsgd::tensor;
@@ -102,6 +102,21 @@ fn main() {
                     },
                 ))
             });
+    }
+
+    group("device encode fan-out (M=25, DeviceSet::encode)");
+    for workers in [1usize, 4] {
+        let grads25: Vec<Vec<f32>> = {
+            let mut r = Pcg64::new(21);
+            (0..25).map(|_| (0..D).map(|_| r.normal_ms(0.0, 0.02) as f32).collect()).collect()
+        };
+        let states: Vec<AnalogDevice> = (0..25).map(|_| AnalogDevice::new(D, k)).collect();
+        let mut set = DeviceSet::with_workers(states, workers);
+        Bench::new(format!("A-DSGD encode M=25 workers={workers}"))
+            .iters(2, 6)
+            .target_time(Duration::from_secs(4))
+            .throughput(25)
+            .run(|| black_box(set.encode(|dev, st| st.transmit(&grads25[dev], &proj, 500.0).x)));
     }
 
     group("channel");

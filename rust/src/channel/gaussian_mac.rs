@@ -9,6 +9,8 @@
 
 use crate::util::rng::Pcg64;
 
+use super::power::PowerMeter;
+
 /// Per-device power accounting over a run.
 #[derive(Clone, Debug)]
 pub struct PowerReport {
@@ -30,6 +32,11 @@ impl PowerReport {
         }
     }
 
+    /// Average per-round transmit power for every device (Eq. 6 left side).
+    pub fn averages(&self) -> Vec<f64> {
+        (0..self.energy.len()).map(|m| self.avg_power(m)).collect()
+    }
+
     /// Check Eq. 6 for every device (with a small numerical slack).
     pub fn satisfies(&self, pbar: f64, tol: f64) -> bool {
         (0..self.energy.len()).all(|m| self.avg_power(m) <= pbar * (1.0 + tol))
@@ -44,8 +51,7 @@ pub struct GaussianMac {
     pub noise_var: f64,
     devices: usize,
     rng: Pcg64,
-    energy: Vec<f64>,
-    rounds: usize,
+    meter: PowerMeter,
 }
 
 impl GaussianMac {
@@ -56,8 +62,7 @@ impl GaussianMac {
             noise_var,
             devices,
             rng: Pcg64::with_stream(seed, 0x3AC),
-            energy: vec![0.0; devices],
-            rounds: 0,
+            meter: PowerMeter::new(devices),
         }
     }
 
@@ -68,7 +73,7 @@ impl GaussianMac {
         let mut y = vec![0f32; self.s];
         for (m, x) in inputs.iter().enumerate() {
             assert_eq!(x.len(), self.s, "device {m} input must be length s={}", self.s);
-            self.energy[m] += crate::tensor::norm_sq(x);
+            self.meter.add(m, crate::tensor::norm_sq(x));
             for (yi, &xi) in y.iter_mut().zip(x) {
                 *yi += xi;
             }
@@ -77,17 +82,13 @@ impl GaussianMac {
         for yi in y.iter_mut() {
             *yi += (self.rng.normal() * sd) as f32;
         }
-        self.rounds += 1;
+        self.meter.end_round();
         y
     }
 
     /// Energy metered so far (for Eq. 6 verification).
     pub fn power_report(&self) -> PowerReport {
-        PowerReport {
-            energy: self.energy.clone(),
-            uses: self.rounds * self.s,
-            rounds: self.rounds,
-        }
+        self.meter.report(self.s)
     }
 
     pub fn devices(&self) -> usize {

@@ -5,4 +5,4 @@ pub mod gaussian_mac;
 pub mod power;
 
 pub use gaussian_mac::{GaussianMac, PowerReport};
-pub use power::PowerAllocator;
+pub use power::{PowerAllocator, PowerMeter};

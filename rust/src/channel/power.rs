@@ -10,6 +10,65 @@
 
 use crate::config::PowerSchedule;
 
+use super::gaussian_mac::PowerReport;
+
+/// Per-device transmit-energy meter backing the Eq. 6 audit. Shared by the
+/// MAC simulator (analog links meter actual frame energy) and the digital
+/// link (frames never traverse the simulator — capacity-achieving codes are
+/// assumed — but each device still spends ‖x‖² = P_t per round).
+#[derive(Clone, Debug)]
+pub struct PowerMeter {
+    /// Σ_t ‖x_m(t)‖² per device.
+    energy: Vec<f64>,
+    rounds: usize,
+}
+
+impl PowerMeter {
+    pub fn new(devices: usize) -> PowerMeter {
+        assert!(devices > 0);
+        PowerMeter {
+            energy: vec![0.0; devices],
+            rounds: 0,
+        }
+    }
+
+    /// Meter one device's frame energy within the current round.
+    pub fn add(&mut self, device: usize, energy: f64) {
+        self.energy[device] += energy;
+    }
+
+    /// Close the current round (average power divides by rounds, not uses).
+    pub fn end_round(&mut self) {
+        self.rounds += 1;
+    }
+
+    /// Every device spent exactly `energy` this round, and the round ends.
+    pub fn add_uniform_round(&mut self, energy: f64) {
+        for e in self.energy.iter_mut() {
+            *e += energy;
+        }
+        self.rounds += 1;
+    }
+
+    pub fn devices(&self) -> usize {
+        self.energy.len()
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Snapshot as a [`PowerReport`] — the single home of the Eq. 6
+    /// averaging math (`uses_per_round` = s for MAC links).
+    pub fn report(&self, uses_per_round: usize) -> PowerReport {
+        PowerReport {
+            energy: self.energy.clone(),
+            uses: self.rounds * uses_per_round,
+            rounds: self.rounds,
+        }
+    }
+}
+
 /// Resolves P_t for every iteration of a run and proves Eq. 7 holds.
 #[derive(Clone, Debug)]
 pub struct PowerAllocator {
@@ -147,5 +206,23 @@ mod tests {
         let a = PowerAllocator::custom(vec![1.0, 2.0, 3.0], 2.0);
         assert_eq!(a.iterations(), 3);
         assert!(a.satisfies_average(1e-9));
+    }
+
+    #[test]
+    fn meter_averages_per_round() {
+        let mut m = PowerMeter::new(2);
+        assert_eq!(m.report(1).avg_power(0), 0.0);
+        m.add(0, 25.0);
+        m.add(1, 9.0);
+        m.end_round();
+        m.add_uniform_round(5.0);
+        assert_eq!(m.rounds(), 2);
+        let rep = m.report(4);
+        assert_eq!(rep.uses, 8);
+        assert!((rep.avg_power(0) - 15.0).abs() < 1e-12);
+        assert!((rep.avg_power(1) - 7.0).abs() < 1e-12);
+        assert_eq!(rep.averages(), vec![15.0, 7.0]);
+        assert!(rep.satisfies(15.0, 1e-9));
+        assert!(!rep.satisfies(14.0, 1e-9));
     }
 }

@@ -5,4 +5,4 @@ pub mod presets;
 pub mod schema;
 
 pub use presets::MODEL_DIM;
-pub use schema::{Backend, ConfigError, DatasetSpec, PowerSchedule, RunConfig, Scheme};
+pub use schema::{Backend, ConfigError, DatasetSpec, LinkKind, PowerSchedule, RunConfig, Scheme};

@@ -54,11 +54,20 @@ impl Value {
 pub type Section = BTreeMap<String, Value>;
 pub type Document = BTreeMap<String, Section>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ParseError {
-    #[error("line {line}: {msg}")]
     Syntax { line: usize, msg: String },
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Syntax { line, msg } => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a TOML-subset document. Keys before any `[section]` land in the
 /// section named "" (root).

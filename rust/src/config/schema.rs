@@ -43,6 +43,41 @@ impl Scheme {
             Scheme::ErrorFree => "error-free",
         }
     }
+
+    /// Which transmission-pipeline family serves this scheme. The trainer
+    /// never branches on `Scheme` directly — it builds the matching
+    /// [`crate::coordinator::link::LinkScheme`] implementation and drives
+    /// that; this classification is the config-side half of that factory.
+    pub fn kind(&self) -> LinkKind {
+        match self {
+            Scheme::ADsgd => LinkKind::Analog,
+            Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => LinkKind::Digital,
+            Scheme::ErrorFree => LinkKind::Passthrough,
+        }
+    }
+}
+
+/// The three transmission-pipeline families (III/IV of the paper): uncoded
+/// analog superposition, separation-based digital, and the noiseless
+/// benchmark that bypasses the channel entirely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Device gradients bypass the channel (error-free shared link).
+    Passthrough,
+    /// Capacity-budgeted digital payloads (D-DSGD, SignSGD, QSGD).
+    Digital,
+    /// Uncoded analog superposition over the Gaussian MAC (A-DSGD).
+    Analog,
+}
+
+impl LinkKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkKind::Passthrough => "passthrough",
+            LinkKind::Digital => "digital",
+            LinkKind::Analog => "analog",
+        }
+    }
 }
 
 /// Power allocation across iterations (Fig. 3, Eq. 45a–c). The schedule is
@@ -176,12 +211,34 @@ impl Default for RunConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config parse error: {0}")]
-    Parse(#[from] parser::ParseError),
-    #[error("invalid config: {0}")]
+    Parse(parser::ParseError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(e) => write!(f, "config parse error: {e}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Parse(e) => Some(e),
+            ConfigError::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<parser::ParseError> for ConfigError {
+    fn from(e: parser::ParseError) -> ConfigError {
+        ConfigError::Parse(e)
+    }
 }
 
 impl RunConfig {
@@ -466,6 +523,16 @@ test = 1000
             ..cfg
         };
         cfg2.validate(7850).unwrap();
+    }
+
+    #[test]
+    fn scheme_kind_classification() {
+        assert_eq!(Scheme::ADsgd.kind(), LinkKind::Analog);
+        assert_eq!(Scheme::DDsgd.kind(), LinkKind::Digital);
+        assert_eq!(Scheme::SignSgd.kind(), LinkKind::Digital);
+        assert_eq!(Scheme::Qsgd.kind(), LinkKind::Digital);
+        assert_eq!(Scheme::ErrorFree.kind(), LinkKind::Passthrough);
+        assert_eq!(LinkKind::Analog.name(), "analog");
     }
 
     #[test]

@@ -1,75 +1,161 @@
-//! Unified device-side state across schemes.
+//! Device-side fan-out: a set of per-device transmitter states whose
+//! per-round encode runs in parallel across worker threads.
+//!
+//! Every link scheme owns one `DeviceSet` of its concrete device type
+//! (`AnalogDevice`, `DigitalDevice`, …). Encoding is embarrassingly
+//! parallel — device m's frame depends only on device m's state and
+//! gradient row, and every random stream is seeded per device — so the
+//! fan-out through [`par_map`] is bit-identical to a sequential pass,
+//! which `rust/tests/golden_schemes.rs` asserts.
 
-use crate::analog::AnalogDevice;
-use crate::config::Scheme;
-use crate::digital::DigitalDevice;
+use std::sync::Mutex;
 
-/// One edge device's scheme-specific transmitter state.
-pub enum DeviceState {
-    Analog(AnalogDevice),
-    Digital(DigitalDevice),
-    /// Error-free benchmark: the device "sends" its exact gradient.
-    Passthrough,
+use crate::util::threadpool::{default_workers, par_map};
+
+/// A fleet of per-device transmitter states with a parallel encode path.
+pub struct DeviceSet<S> {
+    states: Vec<S>,
+    workers: usize,
 }
 
-impl DeviceState {
-    pub fn new(scheme: Scheme, dim: usize, k: usize, qsgd_levels: u32, seed: u64) -> DeviceState {
-        match scheme {
-            Scheme::ADsgd => DeviceState::Analog(AnalogDevice::new(dim, k)),
-            Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => {
-                DeviceState::Digital(DigitalDevice::new(scheme, dim, qsgd_levels, seed))
-            }
-            Scheme::ErrorFree => DeviceState::Passthrough,
-        }
+impl<S: Send> DeviceSet<S> {
+    /// Build with one worker per available core (capped at the fleet size).
+    pub fn new(states: Vec<S>) -> DeviceSet<S> {
+        let workers = default_workers(states.len());
+        DeviceSet { states, workers }
     }
 
-    /// ‖Δ_m‖ for schemes that carry error accumulation, 0 otherwise.
-    pub fn accumulator_norm(&self) -> f64 {
-        match self {
-            DeviceState::Analog(d) => d.accumulator_norm(),
-            DeviceState::Digital(d) => d.accumulator_norm(),
-            DeviceState::Passthrough => 0.0,
-        }
+    /// Build with an explicit worker count (`1` forces the sequential path;
+    /// tests use this to prove parallel == sequential).
+    pub fn with_workers(states: Vec<S>, workers: usize) -> DeviceSet<S> {
+        assert!(workers >= 1);
+        DeviceSet { states, workers }
     }
 
-    pub fn as_analog_mut(&mut self) -> &mut AnalogDevice {
-        match self {
-            DeviceState::Analog(d) => d,
-            _ => panic!("not an analog device"),
-        }
+    pub fn len(&self) -> usize {
+        self.states.len()
     }
 
-    pub fn as_digital_mut(&mut self) -> &mut DigitalDevice {
-        match self {
-            DeviceState::Digital(d) => d,
-            _ => panic!("not a digital device"),
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Encode one frame per device, fanning the M independent encodes out
+    /// across the worker threads via [`par_map`]. Results come back in
+    /// device order. Each per-device mutex is locked exactly once (by
+    /// whichever worker claims that index), so there is no contention and
+    /// no ordering ambiguity — output is bit-identical to `workers = 1`.
+    pub fn encode<T, F>(&mut self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        let n = self.states.len();
+        if n == 0 {
+            return Vec::new();
         }
+        let cells: Vec<Mutex<&mut S>> = self.states.iter_mut().map(Mutex::new).collect();
+        par_map(n, self.workers, |i| {
+            let mut state = cells[i].lock().unwrap();
+            f(i, &mut **state)
+        })
+    }
+
+    /// Mean of a per-device statistic (e.g. error-accumulator norms).
+    pub fn mean_over<F: Fn(&S) -> f64>(&self, f: F) -> f64 {
+        if self.states.is_empty() {
+            return 0.0;
+        }
+        self.states.iter().map(f).sum::<f64>() / self.states.len() as f64
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, S> {
+        self.states.iter()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analog::{AnalogDevice, Projection};
+    use crate::compress::DigitalPayload;
+    use crate::config::Scheme;
+    use crate::digital::DigitalDevice;
+    use crate::util::rng::Pcg64;
 
+    fn gradient(dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..dim).map(|_| rng.normal_ms(0.0, 0.5) as f32).collect()
+    }
+
+    /// Parallel analog encode must be bit-identical to the sequential path
+    /// for M ∈ {1, 4, 25} devices (frames carry per-device error state, so
+    /// any cross-device interference would show up here).
     #[test]
-    fn constructs_right_variant() {
-        assert!(matches!(
-            DeviceState::new(Scheme::ADsgd, 100, 5, 2, 1),
-            DeviceState::Analog(_)
-        ));
-        assert!(matches!(
-            DeviceState::new(Scheme::DDsgd, 100, 5, 2, 1),
-            DeviceState::Digital(_)
-        ));
-        assert!(matches!(
-            DeviceState::new(Scheme::ErrorFree, 100, 5, 2, 1),
-            DeviceState::Passthrough
-        ));
+    fn analog_encode_parallel_matches_sequential() {
+        let (d, s, k) = (400, 81, 20);
+        let proj = Projection::generate(s - 1, d, 7);
+        for m in [1usize, 4, 25] {
+            let grads: Vec<Vec<f32>> = (0..m).map(|i| gradient(d, 100 + i as u64)).collect();
+            let run = |workers: usize| -> Vec<Vec<f32>> {
+                let states: Vec<AnalogDevice> =
+                    (0..m).map(|_| AnalogDevice::new(d, k)).collect();
+                let mut set = DeviceSet::with_workers(states, workers);
+                // Two rounds so the error accumulators feed round 2.
+                let _ = set.encode(|dev, st| st.transmit(&grads[dev], &proj, 100.0).x);
+                set.encode(|dev, st| st.transmit(&grads[dev], &proj, 100.0).x)
+            };
+            assert_eq!(run(1), run(4), "M={m}");
+        }
+    }
+
+    /// Same bit-identity for the digital pipeline (QSGD draws from a
+    /// per-device RNG stream — the parallel path must not perturb it).
+    #[test]
+    fn digital_encode_parallel_matches_sequential() {
+        let d = 256;
+        for m in [1usize, 4, 25] {
+            let grads: Vec<Vec<f32>> = (0..m).map(|i| gradient(d, 200 + i as u64)).collect();
+            let run = |workers: usize| -> Vec<DigitalPayload> {
+                let states: Vec<DigitalDevice> = (0..m)
+                    .map(|i| DigitalDevice::new(Scheme::Qsgd, d, 2, i as u64))
+                    .collect();
+                let mut set = DeviceSet::with_workers(states, workers);
+                set.encode(|dev, st| st.transmit(&grads[dev], 600.0))
+            };
+            let seq = run(1);
+            let par = run(4);
+            assert_eq!(seq.len(), par.len(), "M={m}");
+            for (a, b) in seq.iter().zip(&par) {
+                assert_eq!(a.reconstruction, b.reconstruction, "M={m}");
+                assert_eq!(a.nnz, b.nnz, "M={m}");
+                assert_eq!(a.bits, b.bits, "M={m}");
+            }
+        }
     }
 
     #[test]
-    fn passthrough_has_no_accumulator() {
-        let d = DeviceState::new(Scheme::ErrorFree, 10, 1, 2, 1);
-        assert_eq!(d.accumulator_norm(), 0.0);
+    fn encode_preserves_device_order() {
+        let states: Vec<u64> = (0..50).collect();
+        let mut set = DeviceSet::with_workers(states, 8);
+        let out = set.encode(|i, s| {
+            *s += 1;
+            (i as u64) * 1000 + *s
+        });
+        let expect: Vec<u64> = (0..50u64).map(|i| i * 1000 + i + 1).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn mean_over_statistics() {
+        let set = DeviceSet::new(vec![1.0f64, 2.0, 3.0]);
+        assert!((set.mean_over(|&v| v) - 2.0).abs() < 1e-12);
+        let empty: DeviceSet<f64> = DeviceSet::new(Vec::new());
+        assert_eq!(empty.mean_over(|&v| v), 0.0);
+        assert!(empty.is_empty());
     }
 }

@@ -1,0 +1,184 @@
+//! A-DSGD over the Gaussian MAC (Algorithm 1): sparsify → project →
+//! power-scale → superpose → AMP. Owns both decoder variants and the §IV-A
+//! mean-removal phase transition that used to leak into the trainer.
+
+use crate::amp::AmpConfig;
+use crate::analog::{AnalogDevice, AnalogPs, Projection};
+use crate::channel::GaussianMac;
+use crate::config::RunConfig;
+use crate::tensor::Matf;
+
+use super::super::device::DeviceSet;
+use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
+
+pub struct AnalogLink {
+    devices: DeviceSet<AnalogDevice>,
+    mac: GaussianMac,
+    /// Standard-framing decoder (s̃ = s − 1), used after the warm-up phase.
+    ps_std: AnalogPs,
+    /// Mean-removal decoder (s̃ = s − 2) for the first
+    /// `mean_removal_rounds` iterations; dropped once past its phase to
+    /// release the projection matrix.
+    ps_mr: Option<AnalogPs>,
+    mean_removal_rounds: usize,
+    channel_uses: usize,
+}
+
+impl AnalogLink {
+    pub fn new(cfg: &RunConfig, dim: usize) -> AnalogLink {
+        let amp_cfg = AmpConfig {
+            max_iters: cfg.amp_iters,
+            tol: cfg.amp_tol,
+            threshold_mult: cfg.amp_threshold_mult as f32,
+        };
+        let states: Vec<AnalogDevice> = (0..cfg.devices)
+            .map(|_| AnalogDevice::new(dim, cfg.sparsity))
+            .collect();
+        let ps_std = AnalogPs::new(
+            Projection::generate(cfg.channel_uses - 1, dim, cfg.seed ^ 0xA57D),
+            amp_cfg,
+        );
+        let ps_mr = (cfg.mean_removal_rounds > 0).then(|| {
+            AnalogPs::new(
+                Projection::generate(cfg.channel_uses - 2, dim, cfg.seed ^ 0xA57E),
+                amp_cfg,
+            )
+        });
+        AnalogLink {
+            devices: DeviceSet::new(states),
+            mac: GaussianMac::new(cfg.channel_uses, cfg.devices, cfg.noise_var, cfg.seed ^ 0xC4A),
+            ps_std,
+            ps_mr,
+            mean_removal_rounds: cfg.mean_removal_rounds,
+            channel_uses: cfg.channel_uses,
+        }
+    }
+}
+
+impl LinkScheme for AnalogLink {
+    fn round(&mut self, ctx: &RoundCtx, grads: &Matf) -> LinkRound {
+        let mean_removal = ctx.t < self.mean_removal_rounds;
+        let s = self.channel_uses;
+        let p_t = ctx.p_t;
+        let frames: Vec<Vec<f32>> = if mean_removal {
+            let proj = self
+                .ps_mr
+                .as_ref()
+                .expect("mean-removal decoder")
+                .projection();
+            self.devices.encode(|dev, state| {
+                state
+                    .transmit_mean_removed(grads.row(dev), proj, p_t, s)
+                    .x
+            })
+        } else {
+            let proj = self.ps_std.projection();
+            self.devices
+                .encode(|dev, state| state.transmit(grads.row(dev), proj, p_t).x)
+        };
+        let y = self.mac.transmit(&frames);
+        let (ghat, trace) = if mean_removal {
+            self.ps_mr
+                .as_ref()
+                .expect("mean-removal decoder")
+                .decode_mean_removed(&y)
+        } else {
+            self.ps_std.decode(&y)
+        };
+        // Free the mean-removal projection once past its phase.
+        if !mean_removal && self.ps_mr.is_some() {
+            self.ps_mr = None;
+        }
+        LinkRound {
+            ghat,
+            telemetry: RoundTelemetry {
+                bits_per_device: 0.0,
+                amp_iterations: trace.iterations,
+            },
+        }
+    }
+
+    fn accumulator_norm(&self) -> f64 {
+        self.devices.mean_over(|d| d.accumulator_norm())
+    }
+
+    fn measured_avg_power(&self) -> Vec<f64> {
+        self.mac.power_report().averages()
+    }
+
+    fn name(&self) -> &'static str {
+        "A-DSGD"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::rng::Pcg64;
+
+    fn small_cfg() -> RunConfig {
+        RunConfig {
+            devices: 6,
+            channel_uses: 101,
+            sparsity: 25,
+            mean_removal_rounds: 2,
+            amp_iters: 30,
+            ..presets::smoke()
+        }
+    }
+
+    fn grads(m: usize, d: usize, seed: u64) -> Matf {
+        let mut rng = Pcg64::new(seed);
+        Matf::from_vec(
+            m,
+            d,
+            (0..m * d).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn mean_removal_phase_then_standard() {
+        let d = 500;
+        let cfg = small_cfg();
+        let mut link = AnalogLink::new(&cfg, d);
+        let g = grads(6, d, 11);
+        let mut amp_iters = Vec::new();
+        for t in 0..4 {
+            let out = link.round(&RoundCtx { t, p_t: 500.0 }, &g);
+            assert_eq!(out.ghat.len(), d);
+            assert_eq!(out.telemetry.bits_per_device, 0.0);
+            amp_iters.push(out.telemetry.amp_iterations);
+        }
+        // Both decoder variants actually ran AMP (t<2 mean-removal, t≥2 std).
+        assert!(amp_iters[..2].iter().any(|&it| it > 0), "{amp_iters:?}");
+        assert!(amp_iters[2..].iter().any(|&it| it > 0), "{amp_iters:?}");
+        // Past the phase the mean-removal decoder is released.
+        assert!(link.ps_mr.is_none());
+    }
+
+    #[test]
+    fn power_metered_through_mac() {
+        let d = 500;
+        let cfg = small_cfg();
+        let mut link = AnalogLink::new(&cfg, d);
+        let g = grads(6, d, 12);
+        for t in 0..3 {
+            link.round(&RoundCtx { t, p_t: cfg.pbar }, &g);
+        }
+        // Eq. 12 framing spends exactly P_t per round per device.
+        for &p in &link.measured_avg_power() {
+            assert!((p - cfg.pbar).abs() < 1e-2 * cfg.pbar, "avg power {p}");
+        }
+    }
+
+    #[test]
+    fn error_accumulators_engage() {
+        let d = 500;
+        let cfg = small_cfg();
+        let mut link = AnalogLink::new(&cfg, d);
+        assert_eq!(link.accumulator_norm(), 0.0);
+        link.round(&RoundCtx { t: 0, p_t: 500.0 }, &grads(6, d, 13));
+        assert!(link.accumulator_norm() > 0.0);
+    }
+}

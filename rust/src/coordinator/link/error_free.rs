@@ -1,0 +1,61 @@
+//! The noiseless shared-link benchmark: the PS receives the exact average
+//! gradient. No channel, no compression, no transmit energy.
+
+use crate::tensor::Matf;
+
+use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
+
+pub struct ErrorFreeLink {
+    devices: usize,
+    dim: usize,
+}
+
+impl ErrorFreeLink {
+    pub fn new(devices: usize, dim: usize) -> ErrorFreeLink {
+        assert!(devices > 0);
+        ErrorFreeLink { devices, dim }
+    }
+}
+
+impl LinkScheme for ErrorFreeLink {
+    fn round(&mut self, _ctx: &RoundCtx, grads: &Matf) -> LinkRound {
+        debug_assert_eq!(grads.rows, self.devices);
+        debug_assert_eq!(grads.cols, self.dim);
+        let mut avg = vec![0f32; self.dim];
+        for dev in 0..self.devices {
+            crate::tensor::axpy(1.0 / self.devices as f32, grads.row(dev), &mut avg);
+        }
+        LinkRound {
+            ghat: avg,
+            telemetry: RoundTelemetry::default(),
+        }
+    }
+
+    fn accumulator_norm(&self) -> f64 {
+        0.0
+    }
+
+    fn measured_avg_power(&self) -> Vec<f64> {
+        vec![0.0; self.devices]
+    }
+
+    fn name(&self) -> &'static str {
+        "error-free"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_exactly() {
+        let grads = Matf::from_vec(2, 3, vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0]);
+        let mut link = ErrorFreeLink::new(2, 3);
+        let out = link.round(&RoundCtx { t: 0, p_t: 100.0 }, &grads);
+        assert_eq!(out.ghat, vec![2.0, 3.0, 4.0]);
+        assert_eq!(out.telemetry.bits_per_device, 0.0);
+        assert_eq!(out.telemetry.amp_iterations, 0);
+        assert_eq!(link.measured_avg_power(), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,126 @@
+//! The pluggable transmission pipeline: everything between "per-device
+//! gradients are ready" and "the PS holds ĝ" lives behind [`LinkScheme`].
+//!
+//! # The encode / aggregate / audit contract
+//!
+//! One training round is one [`LinkScheme::round`] call:
+//!
+//! 1. **Encode** (device side): each device turns its gradient row into a
+//!    channel frame — sparsify/project/power-scale for analog, quantize
+//!    within the capacity budget for digital. Implementations fan this out
+//!    through [`DeviceSet::encode`], which runs the M independent encodes
+//!    on a thread pool ([`crate::util::threadpool::par_map`]); because all
+//!    per-device randomness is seeded per device, the parallel path is
+//!    bit-identical to a sequential one.
+//! 2. **Aggregate** (PS side): the frames traverse the link's channel model
+//!    (the Gaussian MAC for analog superposition; an assumed
+//!    capacity-achieving code for digital) and the PS reconstructs the
+//!    average gradient estimate ĝ.
+//! 3. **Audit**: the link meters every device's transmit energy as it goes;
+//!    [`LinkScheme::measured_avg_power`] exposes the per-device average for
+//!    the Eq. 6 power-constraint check, and per-round telemetry (bits spent,
+//!    AMP iterations) comes back in the [`LinkRound`].
+//!
+//! The trainer ([`crate::coordinator::Trainer`]) is scheme-agnostic: it
+//! builds the link once via [`for_config`] and drives
+//! `gradients → link.round() → optimizer` without ever matching on
+//! [`Scheme`]. New scenarios — fading MACs, blind transmitters, partial
+//! participation, stragglers — plug in as new `LinkScheme` implementations
+//! without touching the trainer loop.
+//!
+//! [`DeviceSet::encode`]: crate::coordinator::device::DeviceSet::encode
+//! [`Scheme`]: crate::config::Scheme
+
+pub mod analog;
+pub mod digital;
+pub mod error_free;
+
+pub use analog::AnalogLink;
+pub use digital::DigitalLink;
+pub use error_free::ErrorFreeLink;
+
+use crate::config::{LinkKind, RunConfig};
+use crate::tensor::Matf;
+
+/// Everything a link may need about the current round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundCtx {
+    /// Iteration index t (0-based).
+    pub t: usize,
+    /// Power allocated to this round, P_t.
+    pub p_t: f64,
+}
+
+/// Per-round link telemetry surfaced into [`crate::coordinator::RoundRecord`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTelemetry {
+    /// Digital links: largest actual per-device payload this round
+    /// (asserted ≤ the capacity budget R_t). 0 for analog/passthrough.
+    pub bits_per_device: f64,
+    /// Analog links: AMP decoder iterations. 0 for digital/passthrough.
+    pub amp_iterations: usize,
+}
+
+/// The PS-side result of one round.
+#[derive(Clone, Debug)]
+pub struct LinkRound {
+    /// Reconstructed average-gradient estimate ĝ (length d).
+    pub ghat: Vec<f32>,
+    pub telemetry: RoundTelemetry,
+}
+
+/// A transmission scheme over the shared medium: device-side encode, the
+/// channel, and PS-side reconstruction, with power/telemetry accounting.
+pub trait LinkScheme {
+    /// Run one synchronous round over the `M × d` gradient matrix.
+    fn round(&mut self, ctx: &RoundCtx, grads: &Matf) -> LinkRound;
+
+    /// Mean ‖Δ_m‖ across devices (0 for schemes without error accumulation).
+    fn accumulator_norm(&self) -> f64;
+
+    /// Eq. 6 audit hook: measured per-device average transmit power over
+    /// the rounds run so far.
+    fn measured_avg_power(&self) -> Vec<f64>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build the link implementation serving `cfg.scheme` (the coordinator-side
+/// half of the factory; [`crate::config::Scheme::kind`] is the config side).
+pub fn for_config(cfg: &RunConfig, dim: usize) -> Box<dyn LinkScheme> {
+    match cfg.scheme.kind() {
+        LinkKind::Passthrough => Box::new(ErrorFreeLink::new(cfg.devices, dim)),
+        LinkKind::Digital => Box::new(DigitalLink::new(cfg, dim)),
+        LinkKind::Analog => Box::new(AnalogLink::new(cfg, dim)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Scheme};
+    use crate::model::PARAM_DIM;
+
+    #[test]
+    fn factory_builds_every_scheme() {
+        for (scheme, name) in [
+            (Scheme::ErrorFree, "error-free"),
+            (Scheme::ADsgd, "A-DSGD"),
+            (Scheme::DDsgd, "digital"),
+            (Scheme::SignSgd, "digital"),
+            (Scheme::Qsgd, "digital"),
+        ] {
+            let cfg = RunConfig {
+                scheme,
+                // Small channel so the analog projections are cheap to build.
+                channel_uses: 64,
+                sparsity: 16,
+                ..presets::smoke()
+            };
+            let link = for_config(&cfg, PARAM_DIM);
+            assert_eq!(link.name(), name, "{scheme:?}");
+            assert_eq!(link.measured_avg_power().len(), cfg.devices);
+            assert_eq!(link.accumulator_norm(), 0.0, "fresh link, no residue");
+        }
+    }
+}

@@ -12,7 +12,9 @@ pub struct RoundRecord {
     pub train_loss: f64,
     /// ‖ĝ‖ of the PS's reconstructed gradient.
     pub grad_norm: f64,
-    /// Digital: bits each device transmitted this round (0 for analog).
+    /// Digital: largest *actual* per-device payload this round — the
+    /// capacity budget R_t bounds it (asserted in `DigitalLink`), but an
+    /// undershooting compressor reports what it really spent. 0 for analog.
     pub bits_per_device: f64,
     /// Power P_t allocated this round.
     pub p_t: f64,

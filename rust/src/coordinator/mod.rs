@@ -1,11 +1,15 @@
 //! The L3 coordinator: synchronous leader/worker rounds of DSGD over the
-//! simulated wireless MAC, scheme-agnostic.
+//! simulated wireless MAC. The round loop ([`Trainer`]) is scheme-agnostic;
+//! each transmission scheme plugs in as a [`link::LinkScheme`].
 
 pub mod device;
 pub mod grad;
+pub mod link;
 pub mod metrics;
 pub mod orchestrator;
 
+pub use device::DeviceSet;
 pub use grad::{GradientBackend, RustBackend};
+pub use link::{AnalogLink, DigitalLink, ErrorFreeLink, LinkRound, LinkScheme, RoundCtx};
 pub use metrics::{RoundRecord, TrainLog};
 pub use orchestrator::Trainer;

@@ -1,23 +1,21 @@
 //! The training orchestrator: the leader loop that drives synchronous DSGD
-//! rounds end-to-end — gradient fan-out, scheme-specific transmission over
-//! the (simulated) Gaussian MAC, PS-side reconstruction, optimizer step,
-//! metrics — for every scheme in the paper.
+//! rounds end-to-end. The loop itself is scheme-agnostic — per-round it asks
+//! the gradient backend for the `M × d` gradient matrix, hands it to the
+//! run's [`LinkScheme`] (which encodes, traverses the channel, and
+//! reconstructs ĝ at the PS), and steps the optimizer. Everything
+//! scheme-specific lives behind [`crate::coordinator::link`].
 
 use std::time::Instant;
 
-use crate::amp::AmpConfig;
-use crate::analog::{AnalogPs, Projection};
-use crate::channel::{GaussianMac, PowerAllocator};
-use crate::compress::DigitalPayload;
-use crate::config::{RunConfig, Scheme};
+use crate::channel::PowerAllocator;
+use crate::config::RunConfig;
 use crate::data::{load_corpus, partition, Corpus};
-use crate::digital::{aggregate, capacity_bits};
 use crate::model::PARAM_DIM;
 use crate::optim::{Adam, Optimizer};
 use crate::util::rng::Pcg64;
 
-use super::device::DeviceState;
 use super::grad::{GradientBackend, RustBackend};
+use super::link::{self, LinkScheme, RoundCtx};
 use super::metrics::{RoundRecord, TrainLog};
 
 /// End-to-end trainer for one `RunConfig`.
@@ -68,66 +66,27 @@ impl Trainer {
 
     /// Run the full T-iteration job.
     pub fn run(&mut self) -> TrainLog {
-        let cfg = self.cfg.clone();
         let t_start = Instant::now();
         let d = PARAM_DIM;
-        let m = cfg.devices;
 
         // PS state: θ_0 = 0 (Alg. 1 line 1), ADAM as in §VI.
         let mut params = vec![0f32; d];
-        let mut optimizer: Box<dyn Optimizer> = Box::new(Adam::new(d, cfg.lr as f32));
-        let power = PowerAllocator::new(cfg.power, cfg.pbar, cfg.iterations);
+        let mut optimizer: Box<dyn Optimizer> = Box::new(Adam::new(d, self.cfg.lr as f32));
+        let power = PowerAllocator::new(self.cfg.power, self.cfg.pbar, self.cfg.iterations);
 
-        // Device state.
-        let mut devices: Vec<DeviceState> = (0..m)
-            .map(|i| {
-                DeviceState::new(
-                    cfg.scheme,
-                    d,
-                    cfg.sparsity,
-                    cfg.qsgd_levels,
-                    cfg.seed.wrapping_add(i as u64),
-                )
-            })
-            .collect();
-
-        // Channel + analog decoders.
-        let mut mac = GaussianMac::new(cfg.channel_uses, m, cfg.noise_var, cfg.seed ^ 0xC4A);
-        let amp_cfg = AmpConfig {
-            max_iters: cfg.amp_iters,
-            tol: cfg.amp_tol,
-            threshold_mult: cfg.amp_threshold_mult as f32,
-        };
-        let (mut ps_std, mut ps_mr): (Option<AnalogPs>, Option<AnalogPs>) = (None, None);
-        if cfg.scheme == Scheme::ADsgd {
-            ps_std = Some(AnalogPs::new(
-                Projection::generate(cfg.channel_uses - 1, d, cfg.seed ^ 0xA57D),
-                amp_cfg,
-            ));
-            if cfg.mean_removal_rounds > 0 {
-                ps_mr = Some(AnalogPs::new(
-                    Projection::generate(cfg.channel_uses - 2, d, cfg.seed ^ 0xA57E),
-                    amp_cfg,
-                ));
-            }
-        }
-
-        // Digital energy meter (digital frames don't traverse the MAC
-        // simulator — capacity-achieving codes are assumed — but devices
-        // still spend ‖x‖² = P_t per round; Eq. 6 must hold regardless).
-        let mut digital_energy = vec![0f64; m];
-        let mut digital_rounds = 0usize;
+        // The transmission pipeline: devices, channel, PS decoder, audit.
+        let mut link = link::for_config(&self.cfg, d);
 
         let mut log = TrainLog {
-            label: cfg.scheme.name().to_string(),
-            records: Vec::with_capacity(cfg.iterations),
-            measured_avg_power: vec![0.0; m],
-            pbar: cfg.pbar,
+            label: self.cfg.scheme.name().to_string(),
+            records: Vec::with_capacity(self.cfg.iterations),
+            measured_avg_power: vec![0.0; self.cfg.devices],
+            pbar: self.cfg.pbar,
             final_accuracy: 0.0,
             total_secs: 0.0,
         };
 
-        for t in 0..cfg.iterations {
+        for t in 0..self.cfg.iterations {
             let round_start = Instant::now();
             let p_t = power.p(t);
 
@@ -137,93 +96,13 @@ impl Trainer {
                 .per_device_gradients(&params, &self.corpus.train, &self.shards);
 
             // 2. Transmission + PS reconstruction.
-            let mut bits_per_device = 0.0;
-            let mut amp_iterations = 0usize;
-            let ghat: Vec<f32> = match cfg.scheme {
-                Scheme::ErrorFree => {
-                    let mut avg = vec![0f32; d];
-                    for dev in 0..m {
-                        crate::tensor::axpy(1.0 / m as f32, grads.row(dev), &mut avg);
-                    }
-                    avg
-                }
-                Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => {
-                    let budget = capacity_bits(cfg.channel_uses, m, p_t, cfg.noise_var);
-                    bits_per_device = budget;
-                    let payloads: Vec<DigitalPayload> = devices
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(dev, state)| {
-                            state.as_digital_mut().transmit(grads.row(dev), budget)
-                        })
-                        .collect();
-                    bits_per_device = payloads
-                        .iter()
-                        .map(|p| p.bits)
-                        .fold(0.0, f64::max)
-                        .min(bits_per_device);
-                    for e in digital_energy.iter_mut() {
-                        *e += p_t;
-                    }
-                    digital_rounds += 1;
-                    aggregate(&payloads, d)
-                }
-                Scheme::ADsgd => {
-                    let mean_removal = t < cfg.mean_removal_rounds;
-                    let (frames, decoder): (Vec<Vec<f32>>, &AnalogPs) = if mean_removal {
-                        let ps = ps_mr.as_ref().expect("mean-removal decoder");
-                        let proj = ps.projection();
-                        let frames = devices
-                            .iter_mut()
-                            .enumerate()
-                            .map(|(dev, state)| {
-                                state
-                                    .as_analog_mut()
-                                    .transmit_mean_removed(
-                                        grads.row(dev),
-                                        proj,
-                                        p_t,
-                                        cfg.channel_uses,
-                                    )
-                                    .x
-                            })
-                            .collect();
-                        (frames, ps)
-                    } else {
-                        let ps = ps_std.as_ref().expect("analog decoder");
-                        let proj = ps.projection();
-                        let frames = devices
-                            .iter_mut()
-                            .enumerate()
-                            .map(|(dev, state)| {
-                                state
-                                    .as_analog_mut()
-                                    .transmit(grads.row(dev), proj, p_t)
-                                    .x
-                            })
-                            .collect();
-                        (frames, ps)
-                    };
-                    let y = mac.transmit(&frames);
-                    let (ghat, trace) = if mean_removal {
-                        decoder.decode_mean_removed(&y)
-                    } else {
-                        decoder.decode(&y)
-                    };
-                    amp_iterations = trace.iterations;
-                    // Free the mean-removal projection once past its phase.
-                    if !mean_removal && ps_mr.is_some() {
-                        ps_mr = None;
-                    }
-                    ghat
-                }
-            };
+            let out = link.round(&RoundCtx { t, p_t }, &grads);
 
             // 3. PS update: θ_{t+1} = θ_t − η·ĝ (through ADAM).
-            optimizer.step(&mut params, &ghat);
+            optimizer.step(&mut params, &out.ghat);
 
             // 4. Metrics.
-            let evaluate = t % cfg.eval_every == 0 || t + 1 == cfg.iterations;
+            let evaluate = t % self.cfg.eval_every == 0 || t + 1 == self.cfg.iterations;
             let (acc, loss) = if evaluate {
                 let acc = crate::model::accuracy(&params, &self.corpus.test);
                 let loss =
@@ -232,20 +111,15 @@ impl Trainer {
             } else {
                 (f64::NAN, f64::NAN)
             };
-            let acc_norm = devices
-                .iter()
-                .map(|s| s.accumulator_norm())
-                .sum::<f64>()
-                / m as f64;
             let record = RoundRecord {
                 iter: t,
                 test_accuracy: acc,
                 train_loss: loss,
-                grad_norm: crate::tensor::norm(&ghat),
-                bits_per_device,
+                grad_norm: crate::tensor::norm(&out.ghat),
+                bits_per_device: out.telemetry.bits_per_device,
                 p_t,
-                amp_iterations,
-                accumulator_norm: acc_norm,
+                amp_iterations: out.telemetry.amp_iterations,
+                accumulator_norm: link.accumulator_norm(),
                 round_secs: round_start.elapsed().as_secs_f64(),
             };
             if self.verbose && evaluate {
@@ -257,18 +131,8 @@ impl Trainer {
             log.records.push(record);
         }
 
-        // Power audit: analog from the MAC meter, digital from P_t spend.
-        log.measured_avg_power = match cfg.scheme {
-            Scheme::ADsgd => {
-                let rep = mac.power_report();
-                (0..m).map(|dev| rep.avg_power(dev)).collect()
-            }
-            Scheme::ErrorFree => vec![0.0; m],
-            _ => digital_energy
-                .iter()
-                .map(|&e| e / digital_rounds.max(1) as f64)
-                .collect(),
-        };
+        // Eq. 6 audit straight from the link's meters.
+        log.measured_avg_power = link.measured_avg_power();
         log.total_secs = t_start.elapsed().as_secs_f64();
         log
     }
@@ -277,7 +141,7 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::presets;
+    use crate::config::{presets, Scheme};
 
     fn smoke_cfg(scheme: Scheme) -> RunConfig {
         RunConfig {
@@ -332,16 +196,27 @@ mod tests {
         }
     }
 
+    /// Same seed → identical grad-norm series, for every link scheme (the
+    /// per-scheme table the golden equivalence test in
+    /// `rust/tests/golden_schemes.rs` builds on).
     #[test]
     fn deterministic_given_seed() {
-        let run = || {
-            let mut tr = Trainer::new(smoke_cfg(Scheme::ADsgd)).unwrap();
-            tr.run()
-                .records
-                .iter()
-                .map(|r| r.grad_norm)
-                .collect::<Vec<_>>()
-        };
-        assert_eq!(run(), run());
+        for scheme in [
+            Scheme::ErrorFree,
+            Scheme::ADsgd,
+            Scheme::DDsgd,
+            Scheme::SignSgd,
+            Scheme::Qsgd,
+        ] {
+            let run = || {
+                let mut tr = Trainer::new(smoke_cfg(scheme)).unwrap();
+                tr.run()
+                    .records
+                    .iter()
+                    .map(|r| r.grad_norm)
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(run(), run(), "{scheme:?}");
+        }
     }
 }

@@ -21,7 +21,11 @@ pub fn run_experiment(spec: &ExperimentSpec, out_dir: &str, verbose: bool) -> Ve
     let mut logs = Vec::with_capacity(spec.runs.len());
     for (label, cfg) in &spec.runs {
         cfg.validate(PARAM_DIM).expect("invalid experiment config");
-        println!("--- run `{label}`: {}", cfg.summary());
+        println!(
+            "--- run `{label}` [{} link]: {}",
+            cfg.scheme.kind().name(),
+            cfg.summary()
+        );
         let mut trainer = Trainer::new(cfg.clone()).expect("trainer construction");
         trainer.verbose = verbose;
         let mut log = trainer.run();

@@ -19,9 +19,12 @@
 //! * The **Gaussian MAC** simulator with per-device power metering
 //!   ([`channel`]) and the paper's power-allocation schedules (Eq. 45a–c).
 //! * A synchronous **coordinator** (leader/worker over std threads) driving
-//!   rounds end-to-end ([`coordinator`]), with gradients computed either by
-//!   the pure-rust model ([`model`]) or by AOT-compiled JAX/Pallas graphs
-//!   executed through PJRT ([`runtime`]).
+//!   rounds end-to-end ([`coordinator`]): a scheme-agnostic trainer loop
+//!   over pluggable transmission pipelines ([`coordinator::link`]), with
+//!   device-side encoding fanned out across worker threads and gradients
+//!   computed either by the pure-rust model ([`model`]) or by AOT-compiled
+//!   JAX/Pallas graphs executed through PJRT ([`runtime`], behind the
+//!   `xla` feature).
 //! * Every figure of the paper's evaluation as a runnable experiment
 //!   ([`experiments`]), plus the Theorem-1 convergence bound.
 //!

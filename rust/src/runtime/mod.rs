@@ -1,8 +1,20 @@
 //! The PJRT runtime: load AOT-compiled HLO artifacts (lowered once from the
 //! L2 JAX graphs by `python/compile/aot.py`) and execute them from rust.
 //! Python never runs on this path.
+//!
+//! The real client wraps the external `xla` crate (an XLA C++ build), which
+//! this repository cannot assume is present. The default build therefore
+//! compiles `pjrt_stub.rs` — same public surface, every entry point reports
+//! PJRT as unavailable — and the real implementation sits behind the `xla`
+//! cargo feature.
 
 pub mod artifacts;
+
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{Artifact, Manifest};

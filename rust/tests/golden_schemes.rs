@@ -1,0 +1,201 @@
+//! Golden scheme-equivalence: the refactored `LinkScheme` pipeline must
+//! reproduce, round for round, the grad-norm trajectory of the seed
+//! trainer's monolithic loop, reimplemented below exactly as the
+//! pre-refactor `Trainer::run` dispatched it. Note the reference is built
+//! from the same live components (compressors, AMP, MAC, Adam) the
+//! pipeline uses — what this freezes is the *orchestration wiring*: scheme
+//! dispatch, RNG stream constants, per-device seeding, encode/aggregate
+//! order, and the mean-removal phase transition. A regression inside a
+//! shared component moves both sides equally and is covered by that
+//! component's own tests, not this file. One table entry per scheme; any
+//! wiring drift fails the corresponding row.
+
+use ota_dsgd::amp::AmpConfig;
+use ota_dsgd::analog::{AnalogDevice, AnalogPs, Projection};
+use ota_dsgd::channel::{GaussianMac, PowerAllocator};
+use ota_dsgd::compress::DigitalPayload;
+use ota_dsgd::config::{presets, LinkKind, RunConfig, Scheme};
+use ota_dsgd::coordinator::{GradientBackend, RustBackend, Trainer};
+use ota_dsgd::digital::{aggregate, capacity_bits, DigitalDevice};
+use ota_dsgd::model::PARAM_DIM;
+use ota_dsgd::optim::{Adam, Optimizer};
+use ota_dsgd::tensor;
+
+fn golden_cfg(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 6,
+        eval_every: 2,
+        ..presets::smoke()
+    }
+}
+
+/// The seed trainer's round loop, scheme dispatch and all, exactly as it
+/// stood before the `LinkScheme` extraction. Returns the per-round ‖ĝ‖.
+fn seed_reference_trajectory(cfg: &RunConfig) -> Vec<f64> {
+    // Same corpus/shard plumbing as the trainer under test.
+    let tr = Trainer::new(cfg.clone()).expect("reference trainer");
+    let corpus = tr.corpus();
+    let shards = tr.shards();
+    let d = PARAM_DIM;
+    let m = cfg.devices;
+
+    let mut params = vec![0f32; d];
+    let mut optimizer = Adam::new(d, cfg.lr as f32);
+    let power = PowerAllocator::new(cfg.power, cfg.pbar, cfg.iterations);
+    let mut backend = RustBackend::new();
+
+    // Device state, seeded per device exactly as the seed did.
+    let mut analog_devices: Vec<AnalogDevice> = Vec::new();
+    let mut digital_devices: Vec<DigitalDevice> = Vec::new();
+    match cfg.scheme.kind() {
+        LinkKind::Analog => {
+            analog_devices = (0..m).map(|_| AnalogDevice::new(d, cfg.sparsity)).collect();
+        }
+        LinkKind::Digital => {
+            digital_devices = (0..m)
+                .map(|i| {
+                    DigitalDevice::new(
+                        cfg.scheme,
+                        d,
+                        cfg.qsgd_levels,
+                        cfg.seed.wrapping_add(i as u64),
+                    )
+                })
+                .collect();
+        }
+        LinkKind::Passthrough => {}
+    }
+
+    // Channel + analog decoders (seed RNG-stream constants).
+    let mut mac = GaussianMac::new(cfg.channel_uses, m, cfg.noise_var, cfg.seed ^ 0xC4A);
+    let amp_cfg = AmpConfig {
+        max_iters: cfg.amp_iters,
+        tol: cfg.amp_tol,
+        threshold_mult: cfg.amp_threshold_mult as f32,
+    };
+    let (mut ps_std, mut ps_mr): (Option<AnalogPs>, Option<AnalogPs>) = (None, None);
+    if cfg.scheme == Scheme::ADsgd {
+        ps_std = Some(AnalogPs::new(
+            Projection::generate(cfg.channel_uses - 1, d, cfg.seed ^ 0xA57D),
+            amp_cfg,
+        ));
+        if cfg.mean_removal_rounds > 0 {
+            ps_mr = Some(AnalogPs::new(
+                Projection::generate(cfg.channel_uses - 2, d, cfg.seed ^ 0xA57E),
+                amp_cfg,
+            ));
+        }
+    }
+
+    let mut trajectory = Vec::with_capacity(cfg.iterations);
+    for t in 0..cfg.iterations {
+        let p_t = power.p(t);
+        let grads = backend.per_device_gradients(&params, &corpus.train, shards);
+
+        let ghat: Vec<f32> = match cfg.scheme {
+            Scheme::ErrorFree => {
+                let mut avg = vec![0f32; d];
+                for dev in 0..m {
+                    tensor::axpy(1.0 / m as f32, grads.row(dev), &mut avg);
+                }
+                avg
+            }
+            Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => {
+                let budget = capacity_bits(cfg.channel_uses, m, p_t, cfg.noise_var);
+                let payloads: Vec<DigitalPayload> = digital_devices
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(dev, state)| state.transmit(grads.row(dev), budget))
+                    .collect();
+                aggregate(&payloads, d)
+            }
+            Scheme::ADsgd => {
+                let mean_removal = t < cfg.mean_removal_rounds;
+                let (frames, decoder): (Vec<Vec<f32>>, &AnalogPs) = if mean_removal {
+                    let ps = ps_mr.as_ref().expect("mean-removal decoder");
+                    let proj = ps.projection();
+                    let frames = analog_devices
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(dev, state)| {
+                            state
+                                .transmit_mean_removed(
+                                    grads.row(dev),
+                                    proj,
+                                    p_t,
+                                    cfg.channel_uses,
+                                )
+                                .x
+                        })
+                        .collect();
+                    (frames, ps)
+                } else {
+                    let ps = ps_std.as_ref().expect("analog decoder");
+                    let proj = ps.projection();
+                    let frames = analog_devices
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(dev, state)| state.transmit(grads.row(dev), proj, p_t).x)
+                        .collect();
+                    (frames, ps)
+                };
+                let y = mac.transmit(&frames);
+                let (ghat, _trace) = if mean_removal {
+                    decoder.decode_mean_removed(&y)
+                } else {
+                    decoder.decode(&y)
+                };
+                if !mean_removal && ps_mr.is_some() {
+                    ps_mr = None;
+                }
+                ghat
+            }
+        };
+
+        optimizer.step(&mut params, &ghat);
+        trajectory.push(tensor::norm(&ghat));
+    }
+    trajectory
+}
+
+/// Per-scheme golden table: refactored pipeline == seed loop, bit for bit.
+#[test]
+fn link_schemes_reproduce_seed_trainer() {
+    for scheme in [
+        Scheme::ErrorFree,
+        Scheme::ADsgd,
+        Scheme::DDsgd,
+        Scheme::SignSgd,
+        Scheme::Qsgd,
+    ] {
+        let cfg = golden_cfg(scheme);
+        let golden = seed_reference_trajectory(&cfg);
+        let got: Vec<f64> = Trainer::new(cfg)
+            .expect("trainer")
+            .run()
+            .records
+            .iter()
+            .map(|r| r.grad_norm)
+            .collect();
+        assert_eq!(got, golden, "{scheme:?} diverged from the seed trainer");
+    }
+}
+
+/// The digital arm's bits telemetry: actual payload bits, within budget.
+#[test]
+fn digital_bits_telemetry_is_actual_and_bounded() {
+    let cfg = golden_cfg(Scheme::DDsgd);
+    let log = Trainer::new(cfg.clone()).expect("trainer").run();
+    for r in &log.records {
+        let budget = capacity_bits(cfg.channel_uses, cfg.devices, r.p_t, cfg.noise_var);
+        assert!(
+            r.bits_per_device <= budget,
+            "t={}: reported {} bits > budget {}",
+            r.iter,
+            r.bits_per_device,
+            budget
+        );
+        assert!(r.bits_per_device > 0.0, "t={}: smoke budget admits bits", r.iter);
+    }
+}

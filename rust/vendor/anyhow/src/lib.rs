@@ -1,0 +1,119 @@
+//! Minimal, dependency-free shim of the `anyhow` API surface this workspace
+//! uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Vendored so the crate builds without registry access; if the real
+//! `anyhow` ever becomes available, swapping the path dependency for the
+//! crates.io version is a drop-in change.
+
+use std::fmt;
+
+/// A string-backed error value. Unlike the real `anyhow::Error` it carries
+/// no backtrace or typed cause chain — the source error's `Display` output
+/// is captured at conversion time, which is all the callers here rely on.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`; that keeps
+// this blanket conversion coherent (the same trick the real anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built as in [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn fails(flag: bool) -> crate::Result<u32> {
+        crate::ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = crate::anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        let io: crate::Result<()> = Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "disk on fire",
+        )
+        .into());
+        assert!(io.unwrap_err().to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn check(v: usize) -> crate::Result<()> {
+            crate::ensure!(v > 1);
+            Ok(())
+        }
+        assert!(check(2).is_ok());
+        assert!(check(0).unwrap_err().to_string().contains("v > 1"));
+    }
+}
