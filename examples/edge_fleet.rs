@@ -1,9 +1,11 @@
 //! End-to-end driver (DESIGN.md §6 validation ladder, step 4): a fleet of
 //! wireless edge devices trains the paper's d = 7850 classifier on a real
-//! small workload — the full synthetic MNIST-like corpus — under all five
-//! transmission schemes (error-free, A-DSGD, D-DSGD, SignSGD, QSGD),
-//! logging the loss/accuracy curves side by side and auditing the Eq. 6
-//! power constraint.
+//! small workload — the full synthetic MNIST-like corpus — under all seven
+//! transmission schemes (error-free, A-DSGD, fading/blind A-DSGD, D-DSGD,
+//! SignSGD, QSGD), logging the loss/accuracy curves side by side and
+//! auditing the Eq. 6 power constraint. The fading runs model the realistic
+//! edge fleet: Rayleigh per-device gains, CSI truncated inversion, and a
+//! round deadline that drops stragglers.
 //!
 //! This run is recorded in EXPERIMENTS.md §End-to-end.
 //!
@@ -11,12 +13,12 @@
 //! cargo run --release --example edge_fleet [-- --iterations 40]
 //! ```
 
-use ota_dsgd::config::{presets, DatasetSpec, RunConfig, Scheme};
+use ota_dsgd::config::{presets, DatasetSpec, FadingDist, LinkKind, RunConfig, Scheme};
 use ota_dsgd::coordinator::Trainer;
 use ota_dsgd::util::cli::Args;
 
 fn fleet_config(scheme: Scheme, iterations: usize) -> RunConfig {
-    RunConfig {
+    let mut cfg = RunConfig {
         scheme,
         devices: 15,
         local_samples: 400,
@@ -31,7 +33,14 @@ fn fleet_config(scheme: Scheme, iterations: usize) -> RunConfig {
             test: 2_000,
         },
         ..RunConfig::default()
+    };
+    if scheme.kind() == LinkKind::Fading {
+        cfg.fading = FadingDist::Rayleigh;
+        cfg.csi_threshold = 0.2;
+        cfg.latency_mean_secs = 0.005;
+        cfg.deadline_secs = 0.02;
     }
+    cfg
 }
 
 fn main() -> anyhow::Result<()> {
@@ -42,6 +51,8 @@ fn main() -> anyhow::Result<()> {
     for scheme in [
         Scheme::ErrorFree,
         Scheme::ADsgd,
+        Scheme::FadingADsgd,
+        Scheme::BlindADsgd,
         Scheme::DDsgd,
         Scheme::SignSgd,
         Scheme::Qsgd,
@@ -56,6 +67,13 @@ fn main() -> anyhow::Result<()> {
             "{} violated the power constraint",
             scheme.name()
         );
+        if scheme.kind() == LinkKind::Fading {
+            let modeled = log
+                .records
+                .iter()
+                .all(|r| r.participation.is_some_and(|p| p.total() == 15));
+            anyhow::ensure!(modeled, "{} lost participation telemetry", scheme.name());
+        }
         let path = format!("results/edge_fleet/{}.csv", scheme.name().replace(' ', "_"));
         log.write_csv(&path)?;
         println!("series → {path}");

@@ -80,6 +80,15 @@ impl AnalogDevice {
         AnalogFrame { x, sqrt_alpha: sa }
     }
 
+    /// A round in which this device stays silent (not scheduled, silenced
+    /// by the CSI gain threshold, or dropped as a straggler): nothing is
+    /// transmitted, so the *whole* error-compensated gradient becomes the
+    /// new residual — Δ(t+1) = g + Δ(t) — and is delivered in a later round
+    /// (the fading companion papers' error-accumulation semantics).
+    pub fn absorb(&mut self, g: &[f32]) {
+        self.accum.bank(g);
+    }
+
     /// Lines 4–7: compensate, sparsify, update Δ. Returns (g_sp, support).
     fn sparsify_step(&mut self, g: &[f32]) -> (Vec<f32>, Vec<usize>) {
         let g_ec = self.accum.compensate(g);
@@ -286,6 +295,22 @@ mod tests {
             hi < lo,
             "recovery should improve with power: hi-P err {hi}, lo-P err {lo}"
         );
+    }
+
+    #[test]
+    fn absorb_banks_the_whole_gradient() {
+        let d = 50;
+        let proj = Projection::generate(9, d, 8);
+        let mut dev = AnalogDevice::new(d, 5);
+        let g: Vec<f32> = (0..d).map(|i| i as f32 * 0.1).collect();
+        dev.absorb(&g);
+        // Δ = g exactly after a silent first round.
+        assert!((dev.accumulator_norm() - crate::tensor::norm(&g)).abs() < 1e-6);
+        // A later transmitting round drains the banked residual as usual.
+        let zero = vec![0.0f32; d];
+        let frame = dev.transmit(&zero, &proj, 10.0);
+        assert_eq!(frame.x.len(), 10);
+        assert!(dev.accumulator_norm() < crate::tensor::norm(&g));
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Time-varying per-device channel gains h_m(t) and the straggler latency
+//! model — the channel-layer half of the fading-MAC scenario subsystem.
+//!
+//! Both generators are **counter-based**: every draw is produced by a fresh
+//! RNG derived from `(seed, device, round)`, so the value of h_m(t) does not
+//! depend on how many other gains were drawn before it, in which order, or
+//! on how the encode fan-out is scheduled across worker threads. Same seed ⇒
+//! identical gain sequences across runs and across thread-pool sizes
+//! (pinned by `rust/tests/fading_determinism.rs`).
+
+use crate::config::FadingDist;
+use crate::util::rng::counter_rng;
+
+/// Seeded i.i.d. per-device, per-round channel-gain process h_m(t).
+#[derive(Clone, Debug)]
+pub struct FadingProcess {
+    dist: FadingDist,
+    seed: u64,
+}
+
+impl FadingProcess {
+    pub fn new(dist: FadingDist, seed: u64) -> FadingProcess {
+        FadingProcess { dist, seed }
+    }
+
+    pub fn dist(&self) -> FadingDist {
+        self.dist
+    }
+
+    /// The gain magnitude h_m(t) for device `device` at round `t`.
+    /// Pure in `(self, device, t)` — calling twice returns the same value.
+    pub fn gain(&self, device: usize, t: usize) -> f64 {
+        match self.dist {
+            FadingDist::Constant(v) => v,
+            FadingDist::Rayleigh => {
+                let mut rng = counter_rng(self.seed, 0xFAD0_0001, device as u64, t as u64);
+                // Rayleigh with E[h²] = 1: h = √(−ln(1 − u)), u ~ U[0,1).
+                let u = rng.f64();
+                (-(1.0 - u).ln()).sqrt()
+            }
+            FadingDist::Uniform(lo, hi) => {
+                let mut rng = counter_rng(self.seed, 0xFAD0_0001, device as u64, t as u64);
+                rng.range_f64(lo, hi)
+            }
+        }
+    }
+
+    /// All M gains for round `t`, in device order.
+    pub fn gains_for_round(&self, devices: usize, t: usize) -> Vec<f64> {
+        (0..devices).map(|m| self.gain(m, t)).collect()
+    }
+}
+
+/// Per-device encode-latency model for straggler simulation.
+///
+/// Latency of device m at round t is `speed_m · mean · E` where `speed_m`
+/// is a persistent per-device heterogeneity factor drawn uniformly from
+/// [0.5, 1.5) (slow and fast devices exist for the whole run) and `E` is a
+/// fresh Exp(1) draw per round (transient load spikes). A non-positive
+/// `mean` disables the model: every latency is exactly 0.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    mean_secs: f64,
+    seed: u64,
+}
+
+impl LatencyModel {
+    pub fn new(mean_secs: f64, seed: u64) -> LatencyModel {
+        LatencyModel { mean_secs, seed }
+    }
+
+    /// The persistent speed factor of device m (uniform in [0.5, 1.5)).
+    pub fn speed_factor(&self, device: usize) -> f64 {
+        let mut rng = counter_rng(self.seed, 0x1A7E_0002, device as u64, 0);
+        rng.range_f64(0.5, 1.5)
+    }
+
+    /// Simulated encode latency of device m at round t, in seconds.
+    /// Pure in `(self, device, t)`.
+    pub fn latency(&self, device: usize, t: usize) -> f64 {
+        if self.mean_secs <= 0.0 {
+            return 0.0;
+        }
+        let mut rng = counter_rng(self.seed, 0x1A7E_0003, device as u64, t as u64);
+        let e = -(1.0 - rng.f64()).ln(); // Exp(1)
+        self.speed_factor(device) * self.mean_secs * e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_gains_any_query_order() {
+        let a = FadingProcess::new(FadingDist::Rayleigh, 42);
+        let b = FadingProcess::new(FadingDist::Rayleigh, 42);
+        // Forward order vs reversed order vs repeated queries.
+        let fwd: Vec<f64> = (0..20).map(|m| a.gain(m, 3)).collect();
+        let rev: Vec<f64> = (0..20).rev().map(|m| b.gain(m, 3)).collect();
+        let rev: Vec<f64> = rev.into_iter().rev().collect();
+        assert_eq!(fwd, rev);
+        assert_eq!(a.gain(7, 11), a.gain(7, 11));
+    }
+
+    #[test]
+    fn different_seeds_decorrelate() {
+        let a = FadingProcess::new(FadingDist::Rayleigh, 1);
+        let b = FadingProcess::new(FadingDist::Rayleigh, 2);
+        let same = (0..64).filter(|&m| a.gain(m, 0) == b.gain(m, 0)).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn rayleigh_is_unit_mean_square() {
+        let p = FadingProcess::new(FadingDist::Rayleigh, 9);
+        let n = 20_000usize;
+        let ms: f64 = (0..n).map(|i| p.gain(i % 50, i / 50).powi(2)).sum::<f64>() / n as f64;
+        assert!((ms - 1.0).abs() < 0.05, "E[h²]={ms}");
+    }
+
+    #[test]
+    fn constant_and_uniform_respect_their_ranges() {
+        let c = FadingProcess::new(FadingDist::Constant(0.7), 5);
+        assert_eq!(c.gain(3, 8), 0.7);
+        let u = FadingProcess::new(FadingDist::Uniform(0.2, 1.8), 5);
+        for t in 0..50 {
+            let h = u.gain(t % 7, t);
+            assert!((0.2..1.8).contains(&h), "h={h}");
+        }
+    }
+
+    #[test]
+    fn gains_vary_across_rounds_and_devices() {
+        let p = FadingProcess::new(FadingDist::Rayleigh, 3);
+        assert_ne!(p.gain(0, 0), p.gain(0, 1));
+        assert_ne!(p.gain(0, 0), p.gain(1, 0));
+        assert_eq!(p.gains_for_round(4, 2).len(), 4);
+    }
+
+    #[test]
+    fn latency_deterministic_and_disabled_at_zero_mean() {
+        let l = LatencyModel::new(0.01, 7);
+        assert_eq!(l.latency(2, 5), l.latency(2, 5));
+        assert!(l.latency(2, 5) >= 0.0);
+        let off = LatencyModel::new(0.0, 7);
+        for m in 0..10 {
+            assert_eq!(off.latency(m, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn latency_mean_scales_with_speed_factor() {
+        let l = LatencyModel::new(0.01, 11);
+        for m in 0..20 {
+            let f = l.speed_factor(m);
+            assert!((0.5..1.5).contains(&f), "speed={f}");
+        }
+        // Empirical mean over many rounds ≈ speed · mean (Exp(1) has mean 1).
+        let m = 4;
+        let n = 8000;
+        let avg: f64 = (0..n).map(|t| l.latency(m, t)).sum::<f64>() / n as f64;
+        let expect = l.speed_factor(m) * 0.01;
+        assert!((avg - expect).abs() < 0.15 * expect, "avg={avg} expect={expect}");
+    }
+}

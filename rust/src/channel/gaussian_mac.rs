@@ -86,6 +86,34 @@ impl GaussianMac {
         y
     }
 
+    /// Fading transmit: `y(t) = Σ_m h_m·x_m(t) + z(t)` with per-device
+    /// gains `h_m` applied by the channel. The meter records the
+    /// *transmitted* energy ‖x_m‖² — the Eq. 6 power constraint binds what
+    /// the device radiates, not what the PS receives — so a silent device
+    /// (all-zero frame) spends nothing regardless of its gain. With
+    /// `h_m ≡ 1` this is bit-identical to [`GaussianMac::transmit`]
+    /// (multiplication by `1.0f32` is exact), which the fading degeneracy
+    /// golden relies on.
+    pub fn transmit_faded(&mut self, inputs: &[Vec<f32>], gains: &[f64]) -> Vec<f32> {
+        assert_eq!(inputs.len(), self.devices, "one input row per device");
+        assert_eq!(gains.len(), self.devices, "one gain per device");
+        let mut y = vec![0f32; self.s];
+        for (m, x) in inputs.iter().enumerate() {
+            assert_eq!(x.len(), self.s, "device {m} input must be length s={}", self.s);
+            self.meter.add(m, crate::tensor::norm_sq(x));
+            let h = gains[m] as f32;
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi += h * xi;
+            }
+        }
+        let sd = self.noise_var.sqrt();
+        for yi in y.iter_mut() {
+            *yi += (self.rng.normal() * sd) as f32;
+        }
+        self.meter.end_round();
+        y
+    }
+
     /// Energy metered so far (for Eq. 6 verification).
     pub fn power_report(&self) -> PowerReport {
         self.meter.report(self.s)
@@ -142,6 +170,31 @@ mod tests {
     fn wrong_length_rejected() {
         let mut mac = GaussianMac::new(3, 1, 1.0, 4);
         mac.transmit(&[vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn faded_superposition_applies_gains_meters_transmit_energy() {
+        let mut mac = GaussianMac::new(2, 2, 0.0, 6);
+        let y = mac.transmit_faded(
+            &[vec![2.0, -1.0], vec![4.0, 0.0]],
+            &[0.5, 2.0],
+        );
+        // y = 0.5·x₀ + 2.0·x₁.
+        assert_eq!(y, vec![9.0, -0.5]);
+        let rep = mac.power_report();
+        // Metered pre-gain: ‖x₀‖² = 5, ‖x₁‖² = 16.
+        assert!((rep.energy[0] - 5.0).abs() < 1e-6);
+        assert!((rep.energy[1] - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_gains_match_static_transmit_bit_for_bit() {
+        let inputs = vec![vec![1.5f32, -0.25, 3.0], vec![0.125, 2.0, -1.0]];
+        let mut a = GaussianMac::new(3, 2, 1.7, 21);
+        let mut b = GaussianMac::new(3, 2, 1.7, 21);
+        let ya = a.transmit(&inputs);
+        let yb = b.transmit_faded(&inputs, &[1.0, 1.0]);
+        assert_eq!(ya, yb);
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! The wireless substrate: Gaussian multiple-access channel simulation and
-//! power allocation across iterations.
+//! The wireless substrate: Gaussian multiple-access channel simulation
+//! (static and fading), per-device gain/latency processes, and power
+//! allocation across iterations.
 
+pub mod fading;
 pub mod gaussian_mac;
 pub mod power;
 
+pub use fading::{FadingProcess, LatencyModel};
 pub use gaussian_mac::{GaussianMac, PowerReport};
 pub use power::{PowerAllocator, PowerMeter};

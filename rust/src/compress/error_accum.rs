@@ -28,6 +28,18 @@ impl ErrorAccumulator {
         g.iter().zip(&self.delta).map(|(a, b)| a + b).collect()
     }
 
+    /// A silent round: nothing was transmitted, so the whole gradient joins
+    /// the residual in place — Δ(t+1) = g + Δ(t). Equivalent to
+    /// `compensate` + `update` against a zero transmission, without the two
+    /// d-length allocations (silent devices are the common case in fading
+    /// runs with aggressive thresholds or deadlines).
+    pub fn bank(&mut self, g: &[f32]) {
+        assert_eq!(g.len(), self.delta.len());
+        for (d, &gi) in self.delta.iter_mut().zip(g) {
+            *d += gi;
+        }
+    }
+
     /// Record the new residual: Δ(t+1) = g_ec − transmitted.
     pub fn update(&mut self, g_ec: &[f32], transmitted: &[f32]) {
         assert_eq!(g_ec.len(), self.delta.len());
@@ -100,6 +112,19 @@ mod tests {
         }
         assert!(acc.norm() < 1e-6, "norm={}", acc.norm());
         assert_eq!(total_sent, g0);
+    }
+
+    #[test]
+    fn bank_matches_silent_update() {
+        // bank(g) ≡ compensate + update against a zero transmission.
+        let g = vec![1.5f32, -2.0, 0.25];
+        let mut via_bank = ErrorAccumulator::new(3);
+        via_bank.update(&[0.5, 0.5, 0.5], &[0.0, 0.0, 0.0]);
+        let mut via_update = via_bank.clone();
+        via_bank.bank(&g);
+        let g_ec = via_update.compensate(&g);
+        via_update.update(&g_ec, &[0.0, 0.0, 0.0]);
+        assert_eq!(via_bank.as_slice(), via_update.as_slice());
     }
 
     #[test]

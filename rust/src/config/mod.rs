@@ -5,4 +5,7 @@ pub mod presets;
 pub mod schema;
 
 pub use presets::MODEL_DIM;
-pub use schema::{Backend, ConfigError, DatasetSpec, LinkKind, PowerSchedule, RunConfig, Scheme};
+pub use schema::{
+    Backend, ConfigError, DatasetSpec, FadingDist, LinkKind, ParticipationPolicy, PowerSchedule,
+    RunConfig, Scheme,
+};

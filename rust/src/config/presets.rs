@@ -6,7 +6,9 @@
 //! regenerate in minutes on the 1-core CI box; `full = true` is the paper's
 //! exact T = 300-ish horizon.
 
-use super::schema::{DatasetSpec, PowerSchedule, RunConfig, Scheme};
+use super::schema::{
+    DatasetSpec, FadingDist, ParticipationPolicy, PowerSchedule, RunConfig, Scheme,
+};
 
 /// Model dimension for the paper's single-layer MNIST network:
 /// d = 784·10 + 10 = 7850.
@@ -138,6 +140,40 @@ pub fn smoke() -> RunConfig {
     }
 }
 
+/// Fading-MAC sweep (companion papers, Amiri & Gündüz 2019): the same fleet
+/// as the figures but over per-device Rayleigh gains, at dimensions chosen
+/// so a sweep run (CSI thresholds × participation × stragglers) stays
+/// tractable. `scheme` picks CSI vs blind vs the static/error-free anchors.
+pub fn fading_sweep(scheme: Scheme, full: bool) -> RunConfig {
+    let s = MODEL_DIM / 4;
+    RunConfig {
+        scheme,
+        devices: 20,
+        local_samples: 1000,
+        channel_uses: s,
+        sparsity: s / 2,
+        pbar: 500.0,
+        fading: FadingDist::Rayleigh,
+        csi_threshold: 0.2,
+        participation: ParticipationPolicy::Full,
+        ..base(full)
+    }
+}
+
+/// The fading analogue of [`smoke`]: the full fading pipeline — Rayleigh
+/// gains, CSI truncation, stragglers — at a scale that runs in seconds.
+pub fn fading_smoke() -> RunConfig {
+    RunConfig {
+        scheme: Scheme::FadingADsgd,
+        fading: FadingDist::Rayleigh,
+        csi_threshold: 0.2,
+        participation: ParticipationPolicy::Full,
+        latency_mean_secs: 0.005,
+        deadline_secs: 0.02,
+        ..smoke()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,8 +194,23 @@ mod tests {
                 .validate(MODEL_DIM)
                 .unwrap();
             fig7(MODEL_DIM / 10, full).validate(MODEL_DIM).unwrap();
+            fading_sweep(Scheme::FadingADsgd, full)
+                .validate(MODEL_DIM)
+                .unwrap();
+            fading_sweep(Scheme::BlindADsgd, full)
+                .validate(MODEL_DIM)
+                .unwrap();
         }
         smoke().validate(MODEL_DIM).unwrap();
+        fading_smoke().validate(MODEL_DIM).unwrap();
+    }
+
+    #[test]
+    fn fading_smoke_models_stragglers() {
+        let c = fading_smoke();
+        assert_eq!(c.scheme, Scheme::FadingADsgd);
+        assert!(c.deadline().is_some());
+        assert!(c.latency_mean_secs > 0.0);
     }
 
     #[test]

@@ -7,11 +7,21 @@
 
 use super::parser::{self, Document, Value};
 
-/// Which transmission scheme the run uses (Section III / IV of the paper).
+/// Which transmission scheme the run uses (Section III / IV of the paper,
+/// plus the fading-MAC extensions of the companion works).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scheme {
     /// Analog over-the-air DSGD (Algorithm 1).
     ADsgd,
+    /// A-DSGD over a fading MAC with CSI at the transmitters: truncated
+    /// channel inversion, devices below the gain threshold stay silent
+    /// (Amiri & Gündüz 2019, "Federated Learning over Wireless Fading
+    /// Channels").
+    FadingADsgd,
+    /// A-DSGD over a fading MAC with *no* CSI at the transmitters: devices
+    /// transmit blindly at full power and the gains average out across the
+    /// fleet (Amiri, Duman & Gündüz 2019).
+    BlindADsgd,
     /// Digital DSGD: SBC-style quantizer + capacity bit budget (Section III).
     DDsgd,
     /// SignSGD baseline through the same capacity pipe (Eq. 43).
@@ -26,6 +36,8 @@ impl Scheme {
     pub fn parse(s: &str) -> Option<Scheme> {
         Some(match s.to_ascii_lowercase().as_str() {
             "adsgd" | "a-dsgd" | "analog" => Scheme::ADsgd,
+            "fading" | "fading-adsgd" | "fading-csi" | "csi" => Scheme::FadingADsgd,
+            "blind" | "blind-adsgd" | "no-csi" => Scheme::BlindADsgd,
             "ddsgd" | "d-dsgd" | "digital" => Scheme::DDsgd,
             "signsgd" | "s-dsgd" | "sign" => Scheme::SignSgd,
             "qsgd" | "q-dsgd" => Scheme::Qsgd,
@@ -37,6 +49,8 @@ impl Scheme {
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::ADsgd => "A-DSGD",
+            Scheme::FadingADsgd => "A-DSGD-fading",
+            Scheme::BlindADsgd => "A-DSGD-blind",
             Scheme::DDsgd => "D-DSGD",
             Scheme::SignSgd => "SignSGD",
             Scheme::Qsgd => "QSGD",
@@ -51,23 +65,27 @@ impl Scheme {
     pub fn kind(&self) -> LinkKind {
         match self {
             Scheme::ADsgd => LinkKind::Analog,
+            Scheme::FadingADsgd | Scheme::BlindADsgd => LinkKind::Fading,
             Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => LinkKind::Digital,
             Scheme::ErrorFree => LinkKind::Passthrough,
         }
     }
 }
 
-/// The three transmission-pipeline families (III/IV of the paper): uncoded
-/// analog superposition, separation-based digital, and the noiseless
-/// benchmark that bypasses the channel entirely.
+/// The transmission-pipeline families: uncoded analog superposition,
+/// analog superposition under per-device fading gains, separation-based
+/// digital, and the noiseless benchmark that bypasses the channel entirely.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LinkKind {
     /// Device gradients bypass the channel (error-free shared link).
     Passthrough,
     /// Capacity-budgeted digital payloads (D-DSGD, SignSGD, QSGD).
     Digital,
-    /// Uncoded analog superposition over the Gaussian MAC (A-DSGD).
+    /// Uncoded analog superposition over the static Gaussian MAC (A-DSGD).
     Analog,
+    /// Analog superposition over a fading MAC with per-device, per-round
+    /// gains h_m(t), partial participation and straggler deadlines.
+    Fading,
 }
 
 impl LinkKind {
@@ -76,6 +94,110 @@ impl LinkKind {
             LinkKind::Passthrough => "passthrough",
             LinkKind::Digital => "digital",
             LinkKind::Analog => "analog",
+            LinkKind::Fading => "fading",
+        }
+    }
+}
+
+/// Distribution of the per-device, per-round channel-gain magnitude h_m(t).
+/// Every variant is normalized so unit-mean-square (`E[h²] = 1`) is the
+/// natural default: a fading run then has the same *average* received power
+/// as the static MAC.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FadingDist {
+    /// Rayleigh magnitude with E[h²] = 1 (i.i.d. complex-Gaussian taps).
+    Rayleigh,
+    /// Fixed gain h ≡ v. `Constant(1.0)` degrades the fading link to the
+    /// static MAC exactly (the degeneracy golden in
+    /// `rust/tests/golden_schemes.rs` pins this bit-for-bit).
+    Constant(f64),
+    /// Uniform magnitude on [lo, hi).
+    Uniform(f64, f64),
+}
+
+impl FadingDist {
+    /// Parse `"rayleigh"`, `"constant:<v>"` or `"uniform:<lo>:<hi>"`.
+    pub fn parse(s: &str) -> Option<FadingDist> {
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let head = parts.next()?;
+        match head {
+            "rayleigh" => Some(FadingDist::Rayleigh),
+            "constant" | "const" => {
+                let v: f64 = parts.next()?.parse().ok()?;
+                Some(FadingDist::Constant(v))
+            }
+            "uniform" => {
+                let lo: f64 = parts.next()?.parse().ok()?;
+                let hi: f64 = parts.next()?.parse().ok()?;
+                Some(FadingDist::Uniform(lo, hi))
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical string form (round-trips through [`FadingDist::parse`]).
+    pub fn describe(&self) -> String {
+        match self {
+            FadingDist::Rayleigh => "rayleigh".into(),
+            FadingDist::Constant(v) => format!("constant:{v}"),
+            FadingDist::Uniform(lo, hi) => format!("uniform:{lo}:{hi}"),
+        }
+    }
+
+    /// Gain values must be non-negative magnitudes.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            FadingDist::Rayleigh => Ok(()),
+            FadingDist::Constant(v) if v > 0.0 && v.is_finite() => Ok(()),
+            FadingDist::Constant(v) => Err(format!("constant gain must be > 0, got {v}")),
+            FadingDist::Uniform(lo, hi) if 0.0 <= lo && lo < hi && hi.is_finite() => Ok(()),
+            FadingDist::Uniform(lo, hi) => {
+                Err(format!("uniform gain needs 0 <= lo < hi, got [{lo}, {hi})"))
+            }
+        }
+    }
+}
+
+/// Round-level device-subset selection applied in front of
+/// `DeviceSet::encode` (partial participation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParticipationPolicy {
+    /// Every device transmits every round.
+    Full,
+    /// A uniformly random K-subset per round (PS-scheduled). `K = M` is
+    /// bit-identical to `Full` (pinned by the degeneracy golden).
+    UniformK(usize),
+    /// Only devices whose current gain h_m(t) clears the threshold are
+    /// scheduled (opportunistic, needs CSI at the scheduler).
+    GainThreshold(f64),
+}
+
+impl ParticipationPolicy {
+    /// Parse `"full"`, `"uniform:<K>"` or `"gain:<threshold>"`.
+    pub fn parse(s: &str) -> Option<ParticipationPolicy> {
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        match parts.next()? {
+            "full" | "all" => Some(ParticipationPolicy::Full),
+            "uniform" | "uniform-k" => {
+                let k: usize = parts.next()?.parse().ok()?;
+                Some(ParticipationPolicy::UniformK(k))
+            }
+            "gain" | "gain-threshold" => {
+                let th: f64 = parts.next()?.parse().ok()?;
+                Some(ParticipationPolicy::GainThreshold(th))
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical string form (round-trips through `parse`).
+    pub fn describe(&self) -> String {
+        match self {
+            ParticipationPolicy::Full => "full".into(),
+            ParticipationPolicy::UniformK(k) => format!("uniform:{k}"),
+            ParticipationPolicy::GainThreshold(th) => format!("gain:{th}"),
         }
     }
 }
@@ -179,6 +301,22 @@ pub struct RunConfig {
     pub amp_iters: usize,
     pub amp_tol: f64,
     pub amp_threshold_mult: f64,
+    /// Channel-gain distribution for the fading schemes (ignored by the
+    /// static-MAC schemes).
+    pub fading: FadingDist,
+    /// Truncated channel inversion: a CSI device with h_m(t) at or below
+    /// this gain stays silent for the round (`<=`, so h = 0 can never be
+    /// inverted). Ignored by the blind variant.
+    pub csi_threshold: f64,
+    /// Round-level device-subset selection (fading schemes).
+    pub participation: ParticipationPolicy,
+    /// Round deadline in (simulated) seconds; devices whose modeled encode
+    /// latency exceeds it are dropped from aggregation. `<= 0` disables
+    /// straggler dropping.
+    pub deadline_secs: f64,
+    /// Mean of the per-device encode-latency model (simulated seconds).
+    /// `<= 0` disables the latency model (no device ever straggles).
+    pub latency_mean_secs: f64,
 }
 
 impl Default for RunConfig {
@@ -207,6 +345,11 @@ impl Default for RunConfig {
             amp_iters: 30,
             amp_tol: 1e-4,
             amp_threshold_mult: 1.1,
+            fading: FadingDist::Rayleigh,
+            csi_threshold: 0.2,
+            participation: ParticipationPolicy::Full,
+            deadline_secs: 0.0,
+            latency_mean_secs: 0.0,
         }
     }
 }
@@ -260,9 +403,10 @@ impl RunConfig {
         if self.noise_var <= 0.0 {
             return fail("noise_var must be > 0".into());
         }
-        if self.scheme == Scheme::ADsgd {
+        if matches!(self.scheme.kind(), LinkKind::Analog | LinkKind::Fading) {
             // A-DSGD needs s >= 2 (s̃ = s−1 plus the scaling channel use);
-            // mean removal needs s >= 3 (§IV-A).
+            // mean removal needs s >= 3 (§IV-A). The fading variants reuse
+            // the same framing, so the same floor applies.
             let min_s = if self.mean_removal_rounds > 0 { 3 } else { 2 };
             if self.channel_uses < min_s {
                 return fail(format!(
@@ -290,6 +434,38 @@ impl RunConfig {
                  not need compression",
                 self.channel_uses
             ));
+        }
+        if self.scheme.kind() == LinkKind::Fading {
+            if let Err(msg) = self.fading.validate() {
+                return fail(format!("fading distribution: {msg}"));
+            }
+            if !(self.csi_threshold >= 0.0 && self.csi_threshold.is_finite()) {
+                return fail(format!(
+                    "csi_threshold must be finite and >= 0, got {}",
+                    self.csi_threshold
+                ));
+            }
+            match self.participation {
+                ParticipationPolicy::UniformK(k) if k == 0 || k > self.devices => {
+                    return fail(format!(
+                        "uniform-K participation needs 1 <= K <= M, got K={k}, M={}",
+                        self.devices
+                    ));
+                }
+                ParticipationPolicy::GainThreshold(th) if !(th >= 0.0 && th.is_finite()) => {
+                    return fail(format!(
+                        "gain-threshold participation needs a finite threshold >= 0, got {th}"
+                    ));
+                }
+                _ => {}
+            }
+            if self.deadline_secs > 0.0 && self.latency_mean_secs <= 0.0 {
+                return fail(
+                    "deadline_secs is set but latency_mean_secs <= 0: no device would \
+                     ever straggle — set a latency model or drop the deadline"
+                        .into(),
+                );
+            }
         }
         match &self.dataset {
             DatasetSpec::Synthetic { train, test } => {
@@ -384,6 +560,27 @@ impl RunConfig {
                 "amp_threshold_mult" => {
                     self.amp_threshold_mult = v.as_f64().ok_or_else(|| bad(k, v))?
                 }
+                "fading" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.fading = FadingDist::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown fading distribution {name:?}"))
+                    })?;
+                }
+                "csi_threshold" => {
+                    self.csi_threshold = v.as_f64().ok_or_else(|| bad(k, v))?
+                }
+                "participation" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.participation = ParticipationPolicy::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown participation policy {name:?}"))
+                    })?;
+                }
+                "deadline_secs" => {
+                    self.deadline_secs = v.as_f64().ok_or_else(|| bad(k, v))?
+                }
+                "latency_mean_secs" => {
+                    self.latency_mean_secs = v.as_f64().ok_or_else(|| bad(k, v))?
+                }
                 other => {
                     return Err(ConfigError::Invalid(format!("unknown key {other:?}")));
                 }
@@ -424,9 +621,17 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Single-line summary, echoed into logs and CSV headers.
+    /// The round deadline as an `Option` (`None` when disabled): the form
+    /// the link layer consumes via `RoundCtx::deadline`.
+    pub fn deadline(&self) -> Option<f64> {
+        (self.deadline_secs > 0.0).then_some(self.deadline_secs)
+    }
+
+    /// Single-line summary, echoed into logs and CSV headers. Fading runs
+    /// append their scenario knobs — without them the fading sweep's runs
+    /// (same M/B/s/k, different thresholds) would echo identical lines.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} M={} B={} s={} k={} P̄={} σ²={} T={} power={} noniid={} seed={}",
             self.scheme.name(),
             self.devices,
@@ -439,7 +644,24 @@ impl RunConfig {
             self.power.name(),
             self.noniid,
             self.seed
-        )
+        );
+        if self.scheme.kind() == LinkKind::Fading {
+            s.push_str(&format!(
+                " h={} part={}",
+                self.fading.describe(),
+                self.participation.describe()
+            ));
+            if self.scheme == Scheme::FadingADsgd {
+                s.push_str(&format!(" h_min={}", self.csi_threshold));
+            }
+            if let Some(dl) = self.deadline() {
+                s.push_str(&format!(
+                    " deadline={dl}s latency_mean={}s",
+                    self.latency_mean_secs
+                ));
+            }
+        }
+        s
     }
 }
 
@@ -528,11 +750,142 @@ test = 1000
     #[test]
     fn scheme_kind_classification() {
         assert_eq!(Scheme::ADsgd.kind(), LinkKind::Analog);
+        assert_eq!(Scheme::FadingADsgd.kind(), LinkKind::Fading);
+        assert_eq!(Scheme::BlindADsgd.kind(), LinkKind::Fading);
         assert_eq!(Scheme::DDsgd.kind(), LinkKind::Digital);
         assert_eq!(Scheme::SignSgd.kind(), LinkKind::Digital);
         assert_eq!(Scheme::Qsgd.kind(), LinkKind::Digital);
         assert_eq!(Scheme::ErrorFree.kind(), LinkKind::Passthrough);
         assert_eq!(LinkKind::Analog.name(), "analog");
+        assert_eq!(LinkKind::Fading.name(), "fading");
+    }
+
+    #[test]
+    fn fading_dist_parse_roundtrip() {
+        for dist in [
+            FadingDist::Rayleigh,
+            FadingDist::Constant(1.0),
+            FadingDist::Constant(0.75),
+            FadingDist::Uniform(0.2, 1.8),
+        ] {
+            assert_eq!(FadingDist::parse(&dist.describe()), Some(dist));
+            dist.validate().unwrap();
+        }
+        assert_eq!(FadingDist::parse("rayleigh"), Some(FadingDist::Rayleigh));
+        assert_eq!(FadingDist::parse("nope"), None);
+        assert_eq!(FadingDist::parse("constant"), None);
+        assert_eq!(FadingDist::parse("uniform:0.5"), None);
+        assert!(FadingDist::Constant(0.0).validate().is_err());
+        assert!(FadingDist::Uniform(1.0, 0.5).validate().is_err());
+    }
+
+    #[test]
+    fn participation_parse_roundtrip() {
+        for p in [
+            ParticipationPolicy::Full,
+            ParticipationPolicy::UniformK(8),
+            ParticipationPolicy::GainThreshold(0.5),
+        ] {
+            assert_eq!(ParticipationPolicy::parse(&p.describe()), Some(p));
+        }
+        assert_eq!(ParticipationPolicy::parse("all"), Some(ParticipationPolicy::Full));
+        assert_eq!(ParticipationPolicy::parse("uniform:x"), None);
+        assert_eq!(ParticipationPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn fading_validation_rules() {
+        let base = RunConfig {
+            scheme: Scheme::FadingADsgd,
+            ..RunConfig::default()
+        };
+        base.validate(7850).unwrap();
+        // K out of range.
+        let cfg = RunConfig {
+            participation: ParticipationPolicy::UniformK(26),
+            ..base.clone()
+        };
+        assert!(cfg.validate(7850).is_err());
+        let cfg = RunConfig {
+            participation: ParticipationPolicy::UniformK(0),
+            ..base.clone()
+        };
+        assert!(cfg.validate(7850).is_err());
+        // Deadline without a latency model is a silent no-op — rejected.
+        let cfg = RunConfig {
+            deadline_secs: 0.1,
+            latency_mean_secs: 0.0,
+            ..base.clone()
+        };
+        assert!(cfg.validate(7850).is_err());
+        let cfg = RunConfig {
+            deadline_secs: 0.1,
+            latency_mean_secs: 0.05,
+            ..base.clone()
+        };
+        cfg.validate(7850).unwrap();
+        // Bad gain distribution.
+        let cfg = RunConfig {
+            fading: FadingDist::Constant(-1.0),
+            ..base
+        };
+        assert!(cfg.validate(7850).is_err());
+        // The same knobs are ignored (not validated) for static schemes.
+        let cfg = RunConfig {
+            scheme: Scheme::ADsgd,
+            fading: FadingDist::Constant(-1.0),
+            ..RunConfig::default()
+        };
+        cfg.validate(7850).unwrap();
+    }
+
+    #[test]
+    fn summary_echoes_fading_knobs() {
+        let cfg = RunConfig {
+            scheme: Scheme::FadingADsgd,
+            csi_threshold: 0.4,
+            participation: ParticipationPolicy::UniformK(5),
+            deadline_secs: 0.02,
+            latency_mean_secs: 0.01,
+            ..RunConfig::default()
+        };
+        let s = cfg.summary();
+        assert!(s.contains("h=rayleigh"), "{s}");
+        assert!(s.contains("part=uniform:5"), "{s}");
+        assert!(s.contains("h_min=0.4"), "{s}");
+        assert!(s.contains("deadline=0.02s"), "{s}");
+        // Two sweep configs differing only in threshold echo differently.
+        let other = RunConfig {
+            csi_threshold: 0.8,
+            ..cfg
+        };
+        assert_ne!(s, other.summary());
+        // Static schemes keep the original line.
+        assert!(!RunConfig::default().summary().contains("h="));
+    }
+
+    #[test]
+    fn fading_toml_knobs() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+scheme = "fading-adsgd"
+fading = "uniform:0.3:1.7"
+csi_threshold = 0.4
+participation = "uniform:5"
+deadline_secs = 0.02
+latency_mean_secs = 0.01
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scheme, Scheme::FadingADsgd);
+        assert_eq!(cfg.fading, FadingDist::Uniform(0.3, 1.7));
+        assert_eq!(cfg.csi_threshold, 0.4);
+        assert_eq!(cfg.participation, ParticipationPolicy::UniformK(5));
+        assert_eq!(cfg.deadline(), Some(0.02));
+        assert_eq!(cfg.latency_mean_secs, 0.01);
+        let off = RunConfig::default();
+        assert_eq!(off.deadline(), None);
     }
 
     #[test]

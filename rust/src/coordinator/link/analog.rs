@@ -24,29 +24,44 @@ pub struct AnalogLink {
     channel_uses: usize,
 }
 
+/// Shared constructor guts for the static *and* fading analog links:
+/// per-device states, the MAC, and both decoders, all seeded from the same
+/// RNG-stream constants (`seed ^ 0xA57D` / `^ 0xA57E` projections,
+/// `^ 0xC4A` MAC noise). The h ≡ 1 degeneracy golden requires
+/// `FadingAnalogLink` to stay in lockstep with `AnalogLink` forever —
+/// building both from this single recipe makes drift impossible.
+pub(super) fn analog_parts(
+    cfg: &RunConfig,
+    dim: usize,
+) -> (Vec<AnalogDevice>, GaussianMac, AnalogPs, Option<AnalogPs>) {
+    let amp_cfg = AmpConfig {
+        max_iters: cfg.amp_iters,
+        tol: cfg.amp_tol,
+        threshold_mult: cfg.amp_threshold_mult as f32,
+    };
+    let states: Vec<AnalogDevice> = (0..cfg.devices)
+        .map(|_| AnalogDevice::new(dim, cfg.sparsity))
+        .collect();
+    let ps_std = AnalogPs::new(
+        Projection::generate(cfg.channel_uses - 1, dim, cfg.seed ^ 0xA57D),
+        amp_cfg,
+    );
+    let ps_mr = (cfg.mean_removal_rounds > 0).then(|| {
+        AnalogPs::new(
+            Projection::generate(cfg.channel_uses - 2, dim, cfg.seed ^ 0xA57E),
+            amp_cfg,
+        )
+    });
+    let mac = GaussianMac::new(cfg.channel_uses, cfg.devices, cfg.noise_var, cfg.seed ^ 0xC4A);
+    (states, mac, ps_std, ps_mr)
+}
+
 impl AnalogLink {
     pub fn new(cfg: &RunConfig, dim: usize) -> AnalogLink {
-        let amp_cfg = AmpConfig {
-            max_iters: cfg.amp_iters,
-            tol: cfg.amp_tol,
-            threshold_mult: cfg.amp_threshold_mult as f32,
-        };
-        let states: Vec<AnalogDevice> = (0..cfg.devices)
-            .map(|_| AnalogDevice::new(dim, cfg.sparsity))
-            .collect();
-        let ps_std = AnalogPs::new(
-            Projection::generate(cfg.channel_uses - 1, dim, cfg.seed ^ 0xA57D),
-            amp_cfg,
-        );
-        let ps_mr = (cfg.mean_removal_rounds > 0).then(|| {
-            AnalogPs::new(
-                Projection::generate(cfg.channel_uses - 2, dim, cfg.seed ^ 0xA57E),
-                amp_cfg,
-            )
-        });
+        let (states, mac, ps_std, ps_mr) = analog_parts(cfg, dim);
         AnalogLink {
             devices: DeviceSet::new(states),
-            mac: GaussianMac::new(cfg.channel_uses, cfg.devices, cfg.noise_var, cfg.seed ^ 0xC4A),
+            mac,
             ps_std,
             ps_mr,
             mean_removal_rounds: cfg.mean_removal_rounds,
@@ -94,6 +109,9 @@ impl LinkScheme for AnalogLink {
             telemetry: RoundTelemetry {
                 bits_per_device: 0.0,
                 amp_iterations: trace.iterations,
+                // All M devices transmit every round on the static MAC;
+                // participation is not modeled (None ≠ "0 participated").
+                participation: None,
             },
         }
     }
@@ -145,7 +163,7 @@ mod tests {
         let g = grads(6, d, 11);
         let mut amp_iters = Vec::new();
         for t in 0..4 {
-            let out = link.round(&RoundCtx { t, p_t: 500.0 }, &g);
+            let out = link.round(&RoundCtx { t, p_t: 500.0, deadline: None }, &g);
             assert_eq!(out.ghat.len(), d);
             assert_eq!(out.telemetry.bits_per_device, 0.0);
             amp_iters.push(out.telemetry.amp_iterations);
@@ -164,7 +182,7 @@ mod tests {
         let mut link = AnalogLink::new(&cfg, d);
         let g = grads(6, d, 12);
         for t in 0..3 {
-            link.round(&RoundCtx { t, p_t: cfg.pbar }, &g);
+            link.round(&RoundCtx { t, p_t: cfg.pbar, deadline: None }, &g);
         }
         // Eq. 12 framing spends exactly P_t per round per device.
         for &p in &link.measured_avg_power() {
@@ -178,7 +196,7 @@ mod tests {
         let cfg = small_cfg();
         let mut link = AnalogLink::new(&cfg, d);
         assert_eq!(link.accumulator_norm(), 0.0);
-        link.round(&RoundCtx { t: 0, p_t: 500.0 }, &grads(6, d, 13));
+        link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(6, d, 13));
         assert!(link.accumulator_norm() > 0.0);
     }
 }

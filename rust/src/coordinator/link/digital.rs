@@ -65,6 +65,7 @@ impl LinkScheme for DigitalLink {
             telemetry: RoundTelemetry {
                 bits_per_device: bits,
                 amp_iterations: 0,
+                participation: None,
             },
         }
     }
@@ -107,7 +108,7 @@ mod tests {
         let d = 256;
         let cfg = link_cfg(Scheme::DDsgd);
         let mut link = DigitalLink::new(&cfg, d);
-        let out = link.round(&RoundCtx { t: 0, p_t: 500.0 }, &grads(4, d));
+        let out = link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(4, d));
         let budget = capacity_bits(128, 4, 500.0, cfg.noise_var);
         assert!(out.telemetry.bits_per_device > 0.0);
         assert!(out.telemetry.bits_per_device <= budget);
@@ -121,7 +122,7 @@ mod tests {
         let d = 256;
         let cfg = link_cfg(Scheme::DDsgd);
         let mut link = DigitalLink::new(&cfg, d);
-        let out = link.round(&RoundCtx { t: 0, p_t: 1.0 }, &grads(4, d));
+        let out = link.round(&RoundCtx { t: 0, p_t: 1.0, deadline: None }, &grads(4, d));
         assert_eq!(out.telemetry.bits_per_device, 0.0);
         assert!(out.ghat.iter().all(|&v| v == 0.0));
         assert_eq!(link.measured_avg_power(), vec![1.0; 4]);
@@ -133,8 +134,8 @@ mod tests {
         let cfg = link_cfg(Scheme::SignSgd);
         let mut link = DigitalLink::new(&cfg, d);
         let g = grads(4, d);
-        link.round(&RoundCtx { t: 0, p_t: 300.0 }, &g);
-        link.round(&RoundCtx { t: 1, p_t: 100.0 }, &g);
+        link.round(&RoundCtx { t: 0, p_t: 300.0, deadline: None }, &g);
+        link.round(&RoundCtx { t: 1, p_t: 100.0, deadline: None }, &g);
         assert_eq!(link.measured_avg_power(), vec![200.0; 4]);
     }
 
@@ -144,7 +145,7 @@ mod tests {
         let cfg = link_cfg(Scheme::DDsgd);
         let mut link = DigitalLink::new(&cfg, d);
         // Tight budget leaves residue in the D-DSGD accumulators.
-        link.round(&RoundCtx { t: 0, p_t: 500.0 }, &grads(4, d));
+        link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(4, d));
         assert!(link.accumulator_norm() > 0.0);
     }
 }

@@ -52,7 +52,7 @@ mod tests {
     fn averages_exactly() {
         let grads = Matf::from_vec(2, 3, vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0]);
         let mut link = ErrorFreeLink::new(2, 3);
-        let out = link.round(&RoundCtx { t: 0, p_t: 100.0 }, &grads);
+        let out = link.round(&RoundCtx { t: 0, p_t: 100.0, deadline: None }, &grads);
         assert_eq!(out.ghat, vec![2.0, 3.0, 4.0]);
         assert_eq!(out.telemetry.bits_per_device, 0.0);
         assert_eq!(out.telemetry.amp_iterations, 0);

@@ -1,0 +1,398 @@
+//! A-DSGD over a *fading* MAC: per-device, per-round channel gains h_m(t),
+//! partial participation, and straggler deadlines on top of the Algorithm-1
+//! analog pipeline.
+//!
+//! Two variants share this implementation:
+//!
+//! * **CSI (truncated channel inversion)** — each scheduled device with
+//!   h_m(t) strictly above the gain threshold pre-scales its frame by
+//!   ρ_t/h_m(t), where
+//!   ρ_t = min over the transmitting set of h_m(t) (the largest common
+//!   received amplitude that keeps every device within the P_t budget; the
+//!   PS knows the CSI and broadcasts ρ_t). The channel multiplies by
+//!   h_m(t), so every surviving frame arrives scaled by the *same* ρ_t and
+//!   the superposition is coherent; the PS-side normalization by the last
+//!   channel use (Σ ρ_t·√α_m) cancels ρ_t, so the static decoder is reused
+//!   unchanged. Devices below the threshold stay silent — deep fades are
+//!   truncated instead of inverted at unbounded power ("Federated Learning
+//!   over Wireless Fading Channels", Amiri & Gündüz 2019).
+//! * **Blind (no CSI)** — devices transmit their frames unscaled at full
+//!   power P_t; the received superposition is the h_m(t)-weighted sum, and
+//!   the last channel use carries Σ h_m·√α_m — exactly the normalizer the
+//!   decoder divides by, so ĝ estimates the gain-weighted average gradient
+//!   (Amiri, Duman & Gündüz 2019).
+//!
+//! With h ≡ 1 and full participation both variants reproduce
+//! [`AnalogLink`](super::AnalogLink) bit for bit: same projection seeds,
+//! same MAC noise stream, and every extra scaling is a multiplication by
+//! `1.0f32` (exact). `rust/tests/golden_schemes.rs` pins this.
+//!
+//! A silent device (not scheduled, below the gain threshold, or past the
+//! deadline) banks its whole error-compensated gradient via
+//! [`AnalogDevice::absorb`] and spends zero transmit energy.
+
+use crate::analog::{AnalogDevice, AnalogPs};
+use crate::channel::{FadingProcess, GaussianMac, LatencyModel};
+use crate::config::RunConfig;
+use crate::tensor::Matf;
+
+use super::super::device::DeviceSet;
+use super::super::participation::ParticipationSelector;
+use super::analog::analog_parts;
+use super::{LinkRound, LinkScheme, ParticipationStats, RoundCtx, RoundTelemetry};
+
+pub struct FadingAnalogLink {
+    /// CSI at the transmitters (truncated inversion) vs blind full-power.
+    csi: bool,
+    devices: DeviceSet<AnalogDevice>,
+    mac: GaussianMac,
+    ps_std: AnalogPs,
+    ps_mr: Option<AnalogPs>,
+    mean_removal_rounds: usize,
+    channel_uses: usize,
+    fading: FadingProcess,
+    selector: ParticipationSelector,
+    latency: LatencyModel,
+    csi_threshold: f64,
+    dim: usize,
+}
+
+impl FadingAnalogLink {
+    pub fn new(cfg: &RunConfig, dim: usize, csi: bool) -> FadingAnalogLink {
+        Self::build(cfg, dim, csi, None)
+    }
+
+    /// Explicit worker count for the encode fan-out (`1` forces the
+    /// sequential path; the determinism tests use this to prove the fading
+    /// pipeline is thread-pool-size invariant).
+    pub fn with_workers(cfg: &RunConfig, dim: usize, csi: bool, workers: usize) -> FadingAnalogLink {
+        Self::build(cfg, dim, csi, Some(workers))
+    }
+
+    fn build(cfg: &RunConfig, dim: usize, csi: bool, workers: Option<usize>) -> FadingAnalogLink {
+        // Shared recipe with `AnalogLink` (same projection / MAC seed
+        // constants) — the h ≡ 1 degeneracy golden depends on lockstep.
+        let (states, mac, ps_std, ps_mr) = analog_parts(cfg, dim);
+        let devices = match workers {
+            Some(w) => DeviceSet::with_workers(states, w),
+            None => DeviceSet::new(states),
+        };
+        FadingAnalogLink {
+            csi,
+            devices,
+            mac,
+            ps_std,
+            ps_mr,
+            mean_removal_rounds: cfg.mean_removal_rounds,
+            channel_uses: cfg.channel_uses,
+            fading: FadingProcess::new(cfg.fading, cfg.seed ^ 0xFAD1),
+            selector: ParticipationSelector::new(cfg.participation, cfg.seed ^ 0x5E1),
+            latency: LatencyModel::new(cfg.latency_mean_secs, cfg.seed ^ 0x1A7),
+            csi_threshold: cfg.csi_threshold,
+            dim,
+        }
+    }
+
+    /// Classify every device for this round. Returns (active mask, stats).
+    fn roll_call(&self, ctx: &RoundCtx, gains: &[f64]) -> (Vec<bool>, ParticipationStats) {
+        let scheduled = self.selector.select(ctx.t, gains);
+        let mut active = vec![false; gains.len()];
+        let mut stats = ParticipationStats::default();
+        for (dev, &h) in gains.iter().enumerate() {
+            if !scheduled[dev] {
+                stats.not_scheduled += 1;
+            } else if self.csi && h <= self.csi_threshold {
+                // `<=` (not `<`): with a zero threshold an exactly-zero
+                // gain must still be silenced, or the inversion scale
+                // ρ_t/h_m would be 0/0 = NaN. Active CSI devices therefore
+                // always have h > threshold ≥ 0, so ρ_t/h_m is finite.
+                stats.silenced_low_gain += 1;
+            } else if ctx
+                .deadline
+                .is_some_and(|dl| self.latency.latency(dev, ctx.t) > dl)
+            {
+                stats.dropped_stragglers += 1;
+            } else {
+                active[dev] = true;
+                stats.transmitting += 1;
+            }
+        }
+        (active, stats)
+    }
+}
+
+impl LinkScheme for FadingAnalogLink {
+    fn round(&mut self, ctx: &RoundCtx, grads: &Matf) -> LinkRound {
+        let m = self.devices.len();
+        debug_assert_eq!(grads.rows, m);
+        let gains = self.fading.gains_for_round(m, ctx.t);
+        let (active, stats) = self.roll_call(ctx, &gains);
+
+        // Truncated inversion: every transmitting device pre-scales by
+        // ρ_t/h_m so the channel delivers a coherent ρ_t-scaled sum; ρ_t is
+        // the minimum transmitting gain, which maxes the common received
+        // amplitude while keeping ‖x_m‖² = (ρ_t/h_m)²·P_t ≤ P_t for all.
+        // Blind devices transmit unscaled (scale 1) at exactly P_t.
+        let rho = if self.csi {
+            gains
+                .iter()
+                .zip(&active)
+                .filter(|&(_, &a)| a)
+                .map(|(&h, _)| h)
+                .fold(f64::INFINITY, f64::min)
+        } else {
+            1.0
+        };
+        let scales: Vec<f32> = gains
+            .iter()
+            .zip(&active)
+            .map(|(&h, &a)| {
+                if a && self.csi {
+                    (rho / h) as f32
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+
+        let mean_removal = ctx.t < self.mean_removal_rounds;
+        let s = self.channel_uses;
+        let p_t = ctx.p_t;
+        let proj = if mean_removal {
+            self.ps_mr
+                .as_ref()
+                .expect("mean-removal decoder")
+                .projection()
+        } else {
+            self.ps_std.projection()
+        };
+        let active_ref = &active;
+        let scales_ref = &scales;
+        let frames: Vec<Option<Vec<f32>>> = self.devices.encode(|dev, state| {
+            if !active_ref[dev] {
+                state.absorb(grads.row(dev));
+                return None;
+            }
+            let mut x = if mean_removal {
+                state
+                    .transmit_mean_removed(grads.row(dev), proj, p_t, s)
+                    .x
+            } else {
+                state.transmit(grads.row(dev), proj, p_t).x
+            };
+            let scale = scales_ref[dev];
+            if scale != 1.0 {
+                for v in x.iter_mut() {
+                    *v *= scale;
+                }
+            }
+            Some(x)
+        });
+        let inputs: Vec<Vec<f32>> = frames
+            .into_iter()
+            .map(|f| f.unwrap_or_else(|| vec![0.0f32; s]))
+            .collect();
+
+        let y = self.mac.transmit_faded(&inputs, &gains);
+
+        // With nobody transmitting, y is pure noise — decoding it would
+        // amplify garbage through the 1/y_s normalization. Return ĝ = 0.
+        let (ghat, amp_iterations) = if stats.transmitting == 0 {
+            (vec![0.0f32; self.dim], 0)
+        } else if mean_removal {
+            let (g, trace) = self
+                .ps_mr
+                .as_ref()
+                .expect("mean-removal decoder")
+                .decode_mean_removed(&y);
+            (g, trace.iterations)
+        } else {
+            let (g, trace) = self.ps_std.decode(&y);
+            (g, trace.iterations)
+        };
+        // Free the mean-removal projection once past its phase.
+        if !mean_removal && self.ps_mr.is_some() {
+            self.ps_mr = None;
+        }
+        LinkRound {
+            ghat,
+            telemetry: RoundTelemetry {
+                bits_per_device: 0.0,
+                amp_iterations,
+                participation: Some(stats),
+            },
+        }
+    }
+
+    fn accumulator_norm(&self) -> f64 {
+        self.devices.mean_over(|d| d.accumulator_norm())
+    }
+
+    fn measured_avg_power(&self) -> Vec<f64> {
+        self.mac.power_report().averages()
+    }
+
+    fn name(&self) -> &'static str {
+        if self.csi {
+            "fading-A-DSGD"
+        } else {
+            "blind-A-DSGD"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::AnalogLink;
+    use super::*;
+    use crate::config::{presets, FadingDist, ParticipationPolicy, Scheme};
+    use crate::util::rng::Pcg64;
+
+    fn small_cfg() -> RunConfig {
+        RunConfig {
+            scheme: Scheme::FadingADsgd,
+            devices: 6,
+            channel_uses: 101,
+            sparsity: 25,
+            mean_removal_rounds: 2,
+            amp_iters: 30,
+            ..presets::smoke()
+        }
+    }
+
+    fn grads(m: usize, d: usize, seed: u64) -> Matf {
+        let mut rng = Pcg64::new(seed);
+        Matf::from_vec(
+            m,
+            d,
+            (0..m * d).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect(),
+        )
+    }
+
+    fn ctx(t: usize, p_t: f64) -> RoundCtx {
+        RoundCtx {
+            t,
+            p_t,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn unit_gain_full_participation_matches_static_link() {
+        let d = 500;
+        let cfg = RunConfig {
+            fading: FadingDist::Constant(1.0),
+            csi_threshold: 0.5,
+            ..small_cfg()
+        };
+        let g = grads(6, d, 11);
+        for csi in [true, false] {
+            let mut stat = AnalogLink::new(&cfg, d);
+            let mut fad = FadingAnalogLink::new(&cfg, d, csi);
+            for t in 0..4 {
+                let a = stat.round(&ctx(t, 500.0), &g);
+                let b = fad.round(&ctx(t, 500.0), &g);
+                assert_eq!(a.ghat, b.ghat, "csi={csi} t={t}");
+                assert_eq!(
+                    b.telemetry.participation,
+                    Some(ParticipationStats {
+                        transmitting: 6,
+                        ..Default::default()
+                    })
+                );
+            }
+            assert_eq!(stat.measured_avg_power(), fad.measured_avg_power());
+        }
+    }
+
+    #[test]
+    fn csi_threshold_silences_deep_fades() {
+        let d = 400;
+        let cfg = RunConfig {
+            // Half the support below the threshold on average.
+            fading: FadingDist::Uniform(0.0, 1.0),
+            csi_threshold: 0.5,
+            ..small_cfg()
+        };
+        let mut link = FadingAnalogLink::new(&cfg, d, true);
+        let g = grads(6, d, 12);
+        let mut silenced_total = 0;
+        for t in 0..6 {
+            let out = link.round(&ctx(t, 500.0), &g);
+            let stats = out.telemetry.participation.expect("fading reports stats");
+            assert_eq!(stats.total(), 6, "counts partition the fleet");
+            silenced_total += stats.silenced_low_gain;
+            assert_eq!(out.ghat.len(), d);
+        }
+        assert!(silenced_total > 0, "uniform gains under 0.5 must silence someone");
+        // Transmit power never exceeds P_t per round (scale ≤ 1; 1e-4
+        // slack for f32 frame rounding).
+        for &p in &link.measured_avg_power() {
+            assert!(p <= 500.0 * (1.0 + 1e-4), "avg power {p}");
+        }
+    }
+
+    #[test]
+    fn blind_ignores_csi_threshold() {
+        let d = 400;
+        let cfg = RunConfig {
+            fading: FadingDist::Uniform(0.0, 1.0),
+            csi_threshold: 0.9,
+            ..small_cfg()
+        };
+        let mut link = FadingAnalogLink::new(&cfg, d, false);
+        let out = link.round(&ctx(0, 500.0), &grads(6, d, 13));
+        let stats = out.telemetry.participation.unwrap();
+        assert_eq!(stats.silenced_low_gain, 0);
+        assert_eq!(stats.transmitting, 6);
+        // Blind devices spend exactly P_t.
+        for &p in &link.measured_avg_power() {
+            assert!((p - 500.0).abs() < 1e-2 * 500.0, "avg power {p}");
+        }
+    }
+
+    #[test]
+    fn impossible_deadline_drops_everyone_and_returns_zero() {
+        let d = 400;
+        let cfg = RunConfig {
+            latency_mean_secs: 1.0,
+            ..small_cfg()
+        };
+        let mut link = FadingAnalogLink::new(&cfg, d, true);
+        let out = link.round(
+            &RoundCtx {
+                t: 0,
+                p_t: 500.0,
+                deadline: Some(1e-12),
+            },
+            &grads(6, d, 14),
+        );
+        let stats = out.telemetry.participation.unwrap();
+        assert_eq!(stats.transmitting, 0);
+        assert_eq!(stats.dropped_stragglers, 6);
+        assert!(out.ghat.iter().all(|&v| v == 0.0));
+        assert_eq!(out.telemetry.amp_iterations, 0);
+        // Nobody transmitted, so nobody spent energy.
+        assert_eq!(link.measured_avg_power(), vec![0.0; 6]);
+        // The silent round still banked gradients in the accumulators.
+        assert!(link.accumulator_norm() > 0.0);
+    }
+
+    #[test]
+    fn uniform_k_schedules_exactly_k() {
+        let d = 400;
+        let cfg = RunConfig {
+            participation: ParticipationPolicy::UniformK(2),
+            fading: FadingDist::Constant(1.0),
+            ..small_cfg()
+        };
+        let mut link = FadingAnalogLink::new(&cfg, d, true);
+        let g = grads(6, d, 15);
+        for t in 0..4 {
+            let out = link.round(&ctx(t, 500.0), &g);
+            let stats = out.telemetry.participation.unwrap();
+            assert_eq!(stats.transmitting, 2, "t={t}");
+            assert_eq!(stats.not_scheduled, 4, "t={t}");
+        }
+    }
+}

@@ -19,14 +19,40 @@
 //! 3. **Audit**: the link meters every device's transmit energy as it goes;
 //!    [`LinkScheme::measured_avg_power`] exposes the per-device average for
 //!    the Eq. 6 power-constraint check, and per-round telemetry (bits spent,
-//!    AMP iterations) comes back in the [`LinkRound`].
+//!    AMP iterations, participation counts) comes back in the [`LinkRound`].
+//!
+//! # Variable participation and fading gains
+//!
+//! The original contract assumed all M devices transmit every round over a
+//! static MAC. The fading links ([`FadingAnalogLink`]) generalize it:
+//!
+//! * **Per-round gains.** A seeded [`crate::channel::FadingProcess`] draws
+//!   h_m(t) for every device each round; the channel applies them
+//!   (`GaussianMac::transmit_faded`) while the power meter keeps recording
+//!   the *transmitted* energy ‖x_m‖², so the Eq. 6 audit is unchanged in
+//!   meaning: it binds what each device radiates.
+//! * **Variable transmitting set.** A device may sit a round out for three
+//!   reasons, counted separately in [`ParticipationStats`]: the
+//!   participation policy did not schedule it, CSI truncated inversion
+//!   silenced it (h_m(t) below the gain threshold), or it missed the round
+//!   deadline ([`RoundCtx::deadline`]) under the straggler latency model. A
+//!   silent device transmits nothing (zero energy) and banks its whole
+//!   error-compensated gradient in its accumulator
+//!   (`AnalogDevice::absorb`), so no information is lost permanently.
+//! * **Aggregation contract.** ĝ is always a length-d estimate of the
+//!   average gradient *of the transmitting set*; when that set is empty the
+//!   link returns ĝ = 0 rather than decoding pure noise. The Eq. 6 audit
+//!   averages over all rounds driven, including silent ones.
+//! * **Telemetry honesty.** Links that do not model participation report
+//!   `telemetry.participation = None` — *not* zero counts — so "0 devices
+//!   transmitted" is never conflated with "this scheme does not track
+//!   participation" (regression-tested in `rust/tests/link_properties.rs`).
 //!
 //! The trainer ([`crate::coordinator::Trainer`]) is scheme-agnostic: it
 //! builds the link once via [`for_config`] and drives
 //! `gradients → link.round() → optimizer` without ever matching on
-//! [`Scheme`]. New scenarios — fading MACs, blind transmitters, partial
-//! participation, stragglers — plug in as new `LinkScheme` implementations
-//! without touching the trainer loop.
+//! [`Scheme`]. New scenarios — D2D topologies, decentralized OTA — plug in
+//! as new `LinkScheme` implementations without touching the trainer loop.
 //!
 //! [`DeviceSet::encode`]: crate::coordinator::device::DeviceSet::encode
 //! [`Scheme`]: crate::config::Scheme
@@ -34,12 +60,14 @@
 pub mod analog;
 pub mod digital;
 pub mod error_free;
+pub mod fading;
 
 pub use analog::AnalogLink;
 pub use digital::DigitalLink;
 pub use error_free::ErrorFreeLink;
+pub use fading::FadingAnalogLink;
 
-use crate::config::{LinkKind, RunConfig};
+use crate::config::{LinkKind, RunConfig, Scheme};
 use crate::tensor::Matf;
 
 /// Everything a link may need about the current round.
@@ -49,9 +77,41 @@ pub struct RoundCtx {
     pub t: usize,
     /// Power allocated to this round, P_t.
     pub p_t: f64,
+    /// Round deadline in simulated seconds; devices whose modeled encode
+    /// latency exceeds it are dropped from aggregation. `None` disables
+    /// straggler dropping (links without a latency model ignore it).
+    pub deadline: Option<f64>,
+}
+
+/// Where the M devices went in one round of a participation-aware link.
+/// The four counts always sum to M.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ParticipationStats {
+    /// Devices whose frames actually hit the channel this round.
+    pub transmitting: usize,
+    /// Devices excluded by the round-level participation policy.
+    pub not_scheduled: usize,
+    /// Devices silenced by the CSI gain threshold (truncated inversion).
+    pub silenced_low_gain: usize,
+    /// Devices dropped for missing the round deadline.
+    pub dropped_stragglers: usize,
+}
+
+impl ParticipationStats {
+    /// Total devices accounted for (must equal M).
+    pub fn total(&self) -> usize {
+        self.transmitting + self.not_scheduled + self.silenced_low_gain + self.dropped_stragglers
+    }
 }
 
 /// Per-round link telemetry surfaced into [`crate::coordinator::RoundRecord`].
+///
+/// Scalar fields default to 0 for schemes that don't produce them, which is
+/// acceptable only because their semantics make 0 an honest value ("0 bits
+/// spent", "0 AMP iterations run"). Participation counts are different — a
+/// static link genuinely has M transmitting devices, not 0 — so they are
+/// `Option`-typed: `None` means "this scheme does not model participation",
+/// never "0 devices participated".
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundTelemetry {
     /// Digital links: largest actual per-device payload this round
@@ -59,6 +119,9 @@ pub struct RoundTelemetry {
     pub bits_per_device: f64,
     /// Analog links: AMP decoder iterations. 0 for digital/passthrough.
     pub amp_iterations: usize,
+    /// Participation-aware links: where the M devices went this round.
+    /// `None` for links that do not model participation.
+    pub participation: Option<ParticipationStats>,
 }
 
 /// The PS-side result of one round.
@@ -92,6 +155,10 @@ pub fn for_config(cfg: &RunConfig, dim: usize) -> Box<dyn LinkScheme> {
         LinkKind::Passthrough => Box::new(ErrorFreeLink::new(cfg.devices, dim)),
         LinkKind::Digital => Box::new(DigitalLink::new(cfg, dim)),
         LinkKind::Analog => Box::new(AnalogLink::new(cfg, dim)),
+        LinkKind::Fading => {
+            let csi = cfg.scheme == Scheme::FadingADsgd;
+            Box::new(FadingAnalogLink::new(cfg, dim, csi))
+        }
     }
 }
 
@@ -106,6 +173,8 @@ mod tests {
         for (scheme, name) in [
             (Scheme::ErrorFree, "error-free"),
             (Scheme::ADsgd, "A-DSGD"),
+            (Scheme::FadingADsgd, "fading-A-DSGD"),
+            (Scheme::BlindADsgd, "blind-A-DSGD"),
             (Scheme::DDsgd, "digital"),
             (Scheme::SignSgd, "digital"),
             (Scheme::Qsgd, "digital"),

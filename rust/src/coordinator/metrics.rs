@@ -2,6 +2,8 @@
 
 use std::io::Write as _;
 
+use super::link::ParticipationStats;
+
 /// One synchronous round's record.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
@@ -24,6 +26,11 @@ pub struct RoundRecord {
     pub accumulator_norm: f64,
     /// Wall-clock seconds for the round.
     pub round_secs: f64,
+    /// Participation counts for links that model a variable transmitting
+    /// set. `None` means "not modeled by this scheme" — deliberately
+    /// distinct from `Some` with zero transmitting devices (an all-silent
+    /// round). CSV serializes `None` as NaN, never 0.
+    pub participation: Option<ParticipationStats>,
 }
 
 /// Full log of a run plus final power audit.
@@ -64,7 +71,9 @@ impl TrainLog {
             .all(|&p| p <= self.pbar * (1.0 + tol))
     }
 
-    /// Write the full per-round series as CSV.
+    /// Write the full per-round series as CSV. The participation columns
+    /// are NaN for schemes that do not model participation — an honest
+    /// "absent", never conflated with a measured 0.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         let mut w = crate::util::csv::CsvWriter::create(
             path,
@@ -78,9 +87,15 @@ impl TrainLog {
                 "amp_iterations",
                 "accumulator_norm",
                 "round_secs",
+                "participating",
+                "dropped_stragglers",
             ],
         )?;
         for r in &self.records {
+            let (participating, stragglers) = match r.participation {
+                Some(p) => (p.transmitting as f64, p.dropped_stragglers as f64),
+                None => (f64::NAN, f64::NAN),
+            };
             w.write_row(&[
                 r.iter as f64,
                 r.test_accuracy,
@@ -91,6 +106,8 @@ impl TrainLog {
                 r.amp_iterations as f64,
                 r.accumulator_norm,
                 r.round_secs,
+                participating,
+                stragglers,
             ])?;
         }
         w.flush()
@@ -113,6 +130,12 @@ impl TrainLog {
         if r.amp_iterations > 0 {
             line.push_str(&format!(" amp={}", r.amp_iterations));
         }
+        if let Some(p) = r.participation {
+            line.push_str(&format!(" tx={}/{}", p.transmitting, p.total()));
+            if p.dropped_stragglers > 0 {
+                line.push_str(&format!(" straggled={}", p.dropped_stragglers));
+            }
+        }
         println!("{line}");
         let _ = std::io::stdout().flush();
     }
@@ -133,6 +156,7 @@ mod tests {
             amp_iterations: 3,
             accumulator_norm: 0.0,
             round_secs: 0.01,
+            participation: None,
         }
     }
 
@@ -162,6 +186,41 @@ mod tests {
             total_secs: 0.0,
         };
         assert!(!log.power_constraint_ok(0.01));
+    }
+
+    /// Absent participation serializes as NaN, never as 0 — the regression
+    /// guard for the "default 0 is indistinguishable from measured 0" gap.
+    #[test]
+    fn csv_distinguishes_absent_participation_from_zero() {
+        let dir = std::env::temp_dir().join("ota_metrics_participation_test");
+        let path = dir.join("log.csv");
+        let mut with_stats = record(0, 0.3);
+        with_stats.participation = Some(ParticipationStats {
+            transmitting: 0,
+            not_scheduled: 1,
+            silenced_low_gain: 2,
+            dropped_stragglers: 3,
+        });
+        let log = TrainLog {
+            label: "t".into(),
+            records: vec![record(0, 0.3), with_stats],
+            measured_avg_power: vec![1.0],
+            pbar: 2.0,
+            final_accuracy: 0.3,
+            total_secs: 0.1,
+        };
+        log.write_csv(path.to_str().unwrap()).unwrap();
+        let rows = crate::util::csv::read_csv(&path).unwrap();
+        let header = &rows[0];
+        let i_part = header.iter().position(|h| h == "participating").unwrap();
+        let i_drop = header.iter().position(|h| h == "dropped_stragglers").unwrap();
+        // Row 1: scheme without participation — NaN, not 0.
+        assert_eq!(rows[1][i_part], "NaN");
+        assert_eq!(rows[1][i_drop], "NaN");
+        // Row 2: all-silent round — a real measured 0 (and 3 stragglers).
+        assert_eq!(rows[2][i_part], "0");
+        assert_eq!(rows[2][i_drop], "3");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

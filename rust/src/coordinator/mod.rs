@@ -7,9 +7,14 @@ pub mod grad;
 pub mod link;
 pub mod metrics;
 pub mod orchestrator;
+pub mod participation;
 
 pub use device::DeviceSet;
 pub use grad::{GradientBackend, RustBackend};
-pub use link::{AnalogLink, DigitalLink, ErrorFreeLink, LinkRound, LinkScheme, RoundCtx};
+pub use link::{
+    AnalogLink, DigitalLink, ErrorFreeLink, FadingAnalogLink, LinkRound, LinkScheme,
+    ParticipationStats, RoundCtx,
+};
 pub use metrics::{RoundRecord, TrainLog};
 pub use orchestrator::Trainer;
+pub use participation::ParticipationSelector;

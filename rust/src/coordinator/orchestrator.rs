@@ -96,7 +96,7 @@ impl Trainer {
                 .per_device_gradients(&params, &self.corpus.train, &self.shards);
 
             // 2. Transmission + PS reconstruction.
-            let out = link.round(&RoundCtx { t, p_t }, &grads);
+            let out = link.round(&RoundCtx { t, p_t, deadline: self.cfg.deadline() }, &grads);
 
             // 3. PS update: θ_{t+1} = θ_t − η·ĝ (through ADAM).
             optimizer.step(&mut params, &out.ghat);
@@ -121,6 +121,7 @@ impl Trainer {
                 amp_iterations: out.telemetry.amp_iterations,
                 accumulator_norm: link.accumulator_norm(),
                 round_secs: round_start.elapsed().as_secs_f64(),
+                participation: out.telemetry.participation,
             };
             if self.verbose && evaluate {
                 log.print_progress(&record);
@@ -178,6 +179,30 @@ mod tests {
         for r in &log.records {
             assert!(r.bits_per_device > 0.0);
         }
+    }
+
+    #[test]
+    fn fading_schemes_execute_and_report_participation() {
+        for scheme in [Scheme::FadingADsgd, Scheme::BlindADsgd] {
+            let mut cfg = smoke_cfg(scheme);
+            cfg.latency_mean_secs = 0.005;
+            cfg.deadline_secs = 0.02;
+            let mut tr = Trainer::new(cfg).unwrap();
+            let log = tr.run();
+            assert_eq!(log.records.len(), 6, "{scheme:?}");
+            assert!(log.power_constraint_ok(1e-6), "{scheme:?}: {:?}", log.measured_avg_power);
+            for r in &log.records {
+                let p = r.participation.expect("fading links report participation");
+                assert_eq!(p.total(), 10, "{scheme:?} t={}", r.iter);
+            }
+        }
+        // The static schemes must keep reporting None (absent ≠ 0).
+        let mut static_tr = Trainer::new(smoke_cfg(Scheme::ErrorFree)).unwrap();
+        assert!(static_tr
+            .run()
+            .records
+            .iter()
+            .all(|r| r.participation.is_none()));
     }
 
     #[test]

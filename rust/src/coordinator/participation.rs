@@ -1,0 +1,97 @@
+//! Round-level partial participation: which devices transmit this round.
+//!
+//! The selector sits in front of `DeviceSet::encode` — a device that is not
+//! selected never encodes a frame (its gradient is banked in its error
+//! accumulator instead). Selection is **counter-based**: the uniform-K draw
+//! derives a fresh RNG from `(seed, round)`, so the subset for round t does
+//! not depend on call order or thread-pool size, and `K = M` selects every
+//! device — bit-identical to [`ParticipationPolicy::Full`] (pinned by the
+//! degeneracy golden in `rust/tests/golden_schemes.rs`).
+
+use crate::config::ParticipationPolicy;
+use crate::util::rng::counter_rng;
+
+/// Seeded per-round device-subset selector.
+#[derive(Clone, Debug)]
+pub struct ParticipationSelector {
+    policy: ParticipationPolicy,
+    seed: u64,
+}
+
+impl ParticipationSelector {
+    pub fn new(policy: ParticipationPolicy, seed: u64) -> ParticipationSelector {
+        ParticipationSelector { policy, seed }
+    }
+
+    pub fn policy(&self) -> ParticipationPolicy {
+        self.policy
+    }
+
+    /// The participation mask for round `t` over `gains.len()` devices
+    /// (device order). Pure in `(self, t, gains)`.
+    pub fn select(&self, t: usize, gains: &[f64]) -> Vec<bool> {
+        let m = gains.len();
+        match self.policy {
+            ParticipationPolicy::Full => vec![true; m],
+            ParticipationPolicy::UniformK(k) => {
+                let k = k.min(m);
+                let mut rng = counter_rng(self.seed, 0x5E1E_C70A, t as u64, 0);
+                let mut mask = vec![false; m];
+                for i in rng.sample_indices(m, k) {
+                    mask[i] = true;
+                }
+                mask
+            }
+            ParticipationPolicy::GainThreshold(th) => gains.iter().map(|&h| h >= th).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_selects_everyone() {
+        let s = ParticipationSelector::new(ParticipationPolicy::Full, 1);
+        assert_eq!(s.select(0, &[1.0; 5]), vec![true; 5]);
+    }
+
+    #[test]
+    fn uniform_k_is_seeded_and_exactly_k() {
+        let a = ParticipationSelector::new(ParticipationPolicy::UniformK(3), 42);
+        let b = ParticipationSelector::new(ParticipationPolicy::UniformK(3), 42);
+        let gains = [1.0; 10];
+        for t in 0..20 {
+            let ma = a.select(t, &gains);
+            assert_eq!(ma, b.select(t, &gains), "t={t}");
+            assert_eq!(ma.iter().filter(|&&x| x).count(), 3, "t={t}");
+            // Pure: the same round queried again gives the same subset.
+            assert_eq!(ma, a.select(t, &gains));
+        }
+        // Subsets vary across rounds.
+        assert_ne!(
+            (0..20).map(|t| a.select(t, &gains)).collect::<Vec<_>>(),
+            vec![a.select(0, &gains); 20]
+        );
+    }
+
+    #[test]
+    fn uniform_m_equals_full() {
+        let full = ParticipationSelector::new(ParticipationPolicy::Full, 7);
+        let k_eq_m = ParticipationSelector::new(ParticipationPolicy::UniformK(8), 7);
+        let gains = [1.0; 8];
+        for t in 0..10 {
+            assert_eq!(full.select(t, &gains), k_eq_m.select(t, &gains));
+        }
+    }
+
+    #[test]
+    fn gain_threshold_compares_per_device() {
+        let s = ParticipationSelector::new(ParticipationPolicy::GainThreshold(0.5), 1);
+        assert_eq!(
+            s.select(3, &[0.1, 0.5, 0.9, 0.49]),
+            vec![false, true, true, false]
+        );
+    }
+}

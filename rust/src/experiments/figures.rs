@@ -158,6 +158,45 @@ pub fn fig7(full: bool) -> ExperimentSpec {
     }
 }
 
+/// Fading-MAC sweep (beyond the source paper; companion works Amiri &
+/// Gündüz 2019 / Amiri, Duman & Gündüz 2019): CSI truncated inversion
+/// across gain thresholds, the blind no-CSI variant, partial participation,
+/// and straggler deadlines, anchored by the static A-DSGD and error-free
+/// runs.
+pub fn fading(full: bool) -> ExperimentSpec {
+    let mut runs: Vec<(String, RunConfig)> = vec![
+        (
+            "error-free".into(),
+            presets::fading_sweep(Scheme::ErrorFree, full),
+        ),
+        (
+            "A-DSGD static".into(),
+            presets::fading_sweep(Scheme::ADsgd, full),
+        ),
+    ];
+    for th in [0.1, 0.5, 1.0] {
+        let mut cfg = presets::fading_sweep(Scheme::FadingADsgd, full);
+        cfg.csi_threshold = th;
+        runs.push((format!("fading CSI th={th}"), cfg));
+    }
+    runs.push((
+        "fading blind".into(),
+        presets::fading_sweep(Scheme::BlindADsgd, full),
+    ));
+    let mut half = presets::fading_sweep(Scheme::FadingADsgd, full);
+    half.participation = crate::config::ParticipationPolicy::UniformK(half.devices / 2);
+    runs.push(("fading CSI K=M/2".into(), half));
+    let mut strag = presets::fading_sweep(Scheme::FadingADsgd, full);
+    strag.latency_mean_secs = 0.01;
+    strag.deadline_secs = 0.025;
+    runs.push(("fading CSI stragglers".into(), strag));
+    ExperimentSpec {
+        id: "fading".into(),
+        title: "Fading MAC: CSI thresholds, blind, participation, stragglers".into(),
+        runs,
+    }
+}
+
 /// Fig. 7b view: accuracy against transmitted symbols t·s.
 pub fn print_fig7b(logs: &[crate::coordinator::TrainLog], specs: &[(String, RunConfig)]) {
     println!("\nFig. 7b — test accuracy vs total transmitted symbols (t·s)");
@@ -190,6 +229,7 @@ mod tests {
                 fig5(full),
                 fig6(full),
                 fig7(full),
+                fading(full),
             ] {
                 assert!(!spec.runs.is_empty(), "{}", spec.id);
                 for (label, cfg) in &spec.runs {

@@ -21,14 +21,14 @@ fn usage() -> Usage {
         about: "Over-the-air distributed SGD at the wireless edge (A-DSGD / D-DSGD)",
         subcommands: &[
             ("train", "run one training job (see options)"),
-            ("fig <2|3|4|5|6|7>", "regenerate a paper figure's series"),
+            ("fig <2|3|4|5|6|7|fading>", "regenerate a paper figure's series"),
             ("all", "regenerate every figure"),
             ("ablate [name]", "ablations: mean-removal | sparsity | amp-threshold | analog-power"),
             ("theory", "Theorem-1 convergence-bound curves"),
             ("info", "platform, artifacts, configuration echo"),
         ],
         options: &[
-            ("--scheme <name>", "adsgd|ddsgd|signsgd|qsgd|error-free (train)"),
+            ("--scheme <name>", "adsgd|fading|blind|ddsgd|signsgd|qsgd|error-free (train)"),
             ("--devices <M>", "number of devices"),
             ("--local-samples <B>", "samples per device"),
             ("--channel-uses <s>", "channel uses per iteration"),
@@ -130,15 +130,19 @@ fn cmd_train(args: &Args) {
 }
 
 fn cmd_fig(args: &Args) {
-    let n: usize = args
+    let which = args
         .positional
         .first()
-        .unwrap_or_else(|| panic!("usage: repro fig <2..7>"))
-        .parse()
-        .expect("figure number");
+        .unwrap_or_else(|| panic!("usage: repro fig <2..7|fading>"))
+        .clone();
     let full = args.flag("full");
     let out = args.get_or("out", "results");
     let verbose = !args.flag("quiet");
+    if which == "fading" {
+        runner::run_experiment(&figures::fading(full), out, verbose);
+        return;
+    }
+    let n: usize = which.parse().expect("figure number or `fading`");
     match n {
         2 => {
             let spec = figures::fig2(args.flag("noniid"), full);
@@ -165,7 +169,7 @@ fn cmd_fig(args: &Args) {
             let logs = runner::run_experiment(&spec, out, verbose);
             figures::print_fig7b(&logs, &spec.runs);
         }
-        other => panic!("no figure {other}; valid: 2..=7"),
+        other => panic!("no figure {other}; valid: 2..=7 or `fading`"),
     }
 }
 
@@ -180,6 +184,7 @@ fn cmd_all(args: &Args) {
         figures::fig4(full),
         figures::fig5(full),
         figures::fig6(full),
+        figures::fading(full),
     ] {
         runner::run_experiment(&spec, out, verbose);
     }

@@ -14,7 +14,7 @@ use ota_dsgd::amp::AmpConfig;
 use ota_dsgd::analog::{AnalogDevice, AnalogPs, Projection};
 use ota_dsgd::channel::{GaussianMac, PowerAllocator};
 use ota_dsgd::compress::DigitalPayload;
-use ota_dsgd::config::{presets, LinkKind, RunConfig, Scheme};
+use ota_dsgd::config::{presets, FadingDist, LinkKind, ParticipationPolicy, RunConfig, Scheme};
 use ota_dsgd::coordinator::{GradientBackend, RustBackend, Trainer};
 use ota_dsgd::digital::{aggregate, capacity_bits, DigitalDevice};
 use ota_dsgd::model::PARAM_DIM;
@@ -65,6 +65,9 @@ fn seed_reference_trajectory(cfg: &RunConfig) -> Vec<f64> {
                 .collect();
         }
         LinkKind::Passthrough => {}
+        // The fading schemes postdate the seed trainer; their golden is the
+        // h ≡ 1 degeneracy against the static A-DSGD trajectory below.
+        LinkKind::Fading => panic!("no seed reference for fading schemes"),
     }
 
     // Channel + analog decoders (seed RNG-stream constants).
@@ -94,6 +97,9 @@ fn seed_reference_trajectory(cfg: &RunConfig) -> Vec<f64> {
         let grads = backend.per_device_gradients(&params, &corpus.train, shards);
 
         let ghat: Vec<f32> = match cfg.scheme {
+            Scheme::FadingADsgd | Scheme::BlindADsgd => {
+                panic!("no seed reference for fading schemes")
+            }
             Scheme::ErrorFree => {
                 let mut avg = vec![0f32; d];
                 for dev in 0..m {
@@ -180,6 +186,107 @@ fn link_schemes_reproduce_seed_trainer() {
             .collect();
         assert_eq!(got, golden, "{scheme:?} diverged from the seed trainer");
     }
+}
+
+fn trajectory(cfg: RunConfig) -> Vec<f64> {
+    Trainer::new(cfg)
+        .expect("trainer")
+        .run()
+        .records
+        .iter()
+        .map(|r| r.grad_norm)
+        .collect()
+}
+
+/// Degeneracy golden: with h_m(t) ≡ 1 and full participation, both fading
+/// variants (CSI truncated inversion and blind) collapse to the static
+/// Gaussian MAC — the grad-norm trajectory must equal `AnalogLink`'s bit
+/// for bit. Every scaling the fading path adds is a multiplication by
+/// `1.0f32` (exact) and the projection/MAC/noise streams share the static
+/// link's seeds, so *any* drift here is a wiring regression.
+#[test]
+fn fading_unit_gain_reproduces_static_adsgd() {
+    let golden = trajectory(golden_cfg(Scheme::ADsgd));
+    for scheme in [Scheme::FadingADsgd, Scheme::BlindADsgd] {
+        let cfg = RunConfig {
+            scheme,
+            fading: FadingDist::Constant(1.0),
+            csi_threshold: 0.5,
+            participation: ParticipationPolicy::Full,
+            ..golden_cfg(Scheme::ADsgd)
+        };
+        assert_eq!(
+            trajectory(cfg),
+            golden,
+            "{scheme:?} with h ≡ 1 diverged from the static A-DSGD trainer"
+        );
+    }
+}
+
+/// Degeneracy golden: uniform-K participation with K = M schedules every
+/// device every round — bit-identical to the no-selector (Full) path, even
+/// under real Rayleigh fading.
+#[test]
+fn uniform_k_equals_m_matches_full_participation() {
+    let base = RunConfig {
+        scheme: Scheme::FadingADsgd,
+        fading: FadingDist::Rayleigh,
+        csi_threshold: 0.2,
+        ..golden_cfg(Scheme::ADsgd)
+    };
+    let m = base.devices;
+    let full = trajectory(RunConfig {
+        participation: ParticipationPolicy::Full,
+        ..base.clone()
+    });
+    let k_eq_m = trajectory(RunConfig {
+        participation: ParticipationPolicy::UniformK(m),
+        ..base
+    });
+    assert_eq!(full, k_eq_m, "K = M must match the no-selector path");
+}
+
+/// The long-horizon variant of the degeneracy goldens for the nightly
+/// `cargo test --release -- --ignored` CI job: more devices, more rounds,
+/// both fading variants, plus the K = M equivalence, all in one pass.
+#[test]
+#[ignore = "slow golden trajectory; run via `cargo test --release -- --ignored`"]
+fn fading_degeneracy_goldens_long() {
+    let base = RunConfig {
+        iterations: 12,
+        eval_every: 4,
+        devices: 12,
+        local_samples: 80,
+        ..presets::smoke()
+    };
+    let golden = trajectory(RunConfig {
+        scheme: Scheme::ADsgd,
+        ..base.clone()
+    });
+    assert_eq!(golden.len(), 12);
+    for scheme in [Scheme::FadingADsgd, Scheme::BlindADsgd] {
+        let cfg = RunConfig {
+            scheme,
+            fading: FadingDist::Constant(1.0),
+            csi_threshold: 0.5,
+            participation: ParticipationPolicy::Full,
+            ..base.clone()
+        };
+        assert_eq!(trajectory(cfg), golden, "{scheme:?} long-horizon degeneracy");
+    }
+    let rayleigh = RunConfig {
+        scheme: Scheme::FadingADsgd,
+        ..base
+    };
+    let full = trajectory(RunConfig {
+        participation: ParticipationPolicy::Full,
+        ..rayleigh.clone()
+    });
+    let k_eq_m = trajectory(RunConfig {
+        participation: ParticipationPolicy::UniformK(12),
+        ..rayleigh
+    });
+    assert_eq!(full, k_eq_m);
 }
 
 /// The digital arm's bits telemetry: actual payload bits, within budget.

@@ -1,0 +1,262 @@
+//! Property layer over the `LinkScheme` contract: every scheme the factory
+//! can build — static analog, fading CSI/blind, the three digital arms, and
+//! the error-free benchmark — must honor the encode/aggregate/audit
+//! invariants across seeded random configurations:
+//!
+//! * **Eq. 6 power audit**: `measured_avg_power()` stays within the P̄
+//!   budget (within tolerance) for every device.
+//! * **Shape**: `ghat.len() == d` every round.
+//! * **Telemetry honesty**: digital ⇒ `bits_per_device ≤ R_t`; analog ⇒
+//!   AMP actually ran on rounds with a non-empty transmitting set; fading ⇒
+//!   participation counts present and partitioning the fleet; everything
+//!   else ⇒ `participation == None` (absent, not zero).
+
+use ota_dsgd::config::{
+    presets, FadingDist, LinkKind, ParticipationPolicy, RunConfig, Scheme,
+};
+use ota_dsgd::coordinator::link::{self, RoundCtx};
+use ota_dsgd::digital::capacity_bits;
+use ota_dsgd::tensor::Matf;
+use ota_dsgd::util::proptest::{run_property_noshrink, Check, PropConfig};
+use ota_dsgd::util::rng::Pcg64;
+
+const ALL_SCHEMES: [Scheme; 7] = [
+    Scheme::ErrorFree,
+    Scheme::ADsgd,
+    Scheme::FadingADsgd,
+    Scheme::BlindADsgd,
+    Scheme::DDsgd,
+    Scheme::SignSgd,
+    Scheme::Qsgd,
+];
+
+/// A random but *valid* link-level configuration, small enough that the
+/// analog projection matrices stay cheap.
+fn random_cfg(rng: &mut Pcg64) -> (RunConfig, usize) {
+    let d = 120 + rng.below(280) as usize;
+    let s = 16 + rng.below((d / 2 - 16) as u64) as usize;
+    let k = 1 + rng.below((s.min(d) - 4) as u64) as usize;
+    let devices = 2 + rng.below(7) as usize;
+    let fading = match rng.below(3) {
+        0 => FadingDist::Rayleigh,
+        1 => FadingDist::Constant(0.4 + rng.f64()),
+        _ => FadingDist::Uniform(0.1, 0.1 + 1.5 * rng.f64() + 1e-3),
+    };
+    let participation = match rng.below(3) {
+        0 => ParticipationPolicy::Full,
+        1 => ParticipationPolicy::UniformK(1 + rng.below(devices as u64) as usize),
+        _ => ParticipationPolicy::GainThreshold(0.1 * rng.f64()),
+    };
+    let cfg = RunConfig {
+        devices,
+        channel_uses: s,
+        sparsity: k,
+        pbar: 50.0 + rng.f64() * 800.0,
+        noise_var: 0.25 + rng.f64() * 2.0,
+        mean_removal_rounds: rng.below(3) as usize,
+        seed: rng.next_u64(),
+        amp_iters: 15,
+        fading,
+        csi_threshold: 0.05 * rng.f64(),
+        participation,
+        latency_mean_secs: 0.0,
+        deadline_secs: 0.0,
+        ..presets::smoke()
+    };
+    (cfg, d)
+}
+
+fn random_grads(rng: &mut Pcg64, m: usize, d: usize) -> Matf {
+    Matf::from_vec(
+        m,
+        d,
+        (0..m * d).map(|_| rng.normal_ms(0.0, 0.5) as f32).collect(),
+    )
+}
+
+/// The cross-scheme contract, one random config per case, all schemes.
+#[test]
+fn prop_every_scheme_honors_link_contract() {
+    run_property_noshrink(
+        "link-contract-all-schemes",
+        PropConfig {
+            cases: 10,
+            ..Default::default()
+        },
+        |rng| {
+            let (cfg, d) = random_cfg(rng);
+            let seed = rng.next_u64();
+            (cfg, d, seed)
+        },
+        |(cfg, d, seed)| {
+            let d = *d;
+            let mut rng = Pcg64::new(*seed);
+            for scheme in ALL_SCHEMES {
+                let cfg = RunConfig {
+                    scheme,
+                    ..cfg.clone()
+                };
+                let mut link = link::for_config(&cfg, d);
+                let grads = random_grads(&mut rng, cfg.devices, d);
+                let rounds = 3usize;
+                let mut amp_ran = false;
+                let mut had_transmitters = false;
+                for t in 0..rounds {
+                    let out = link.round(
+                        &RoundCtx {
+                            t,
+                            p_t: cfg.pbar,
+                            deadline: None,
+                        },
+                        &grads,
+                    );
+                    // Shape invariant.
+                    if out.ghat.len() != d {
+                        return Check::Fail(format!(
+                            "{scheme:?}: ghat.len() {} != d {d}",
+                            out.ghat.len()
+                        ));
+                    }
+                    // Telemetry invariants per family.
+                    match cfg.scheme.kind() {
+                        LinkKind::Digital => {
+                            let budget =
+                                capacity_bits(cfg.channel_uses, cfg.devices, cfg.pbar, cfg.noise_var);
+                            if out.telemetry.bits_per_device > budget + 1e-9 {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: bits {} > budget {budget}",
+                                    out.telemetry.bits_per_device
+                                ));
+                            }
+                            if out.telemetry.participation.is_some() {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: digital link must not report participation"
+                                ));
+                            }
+                        }
+                        LinkKind::Analog | LinkKind::Passthrough => {
+                            if out.telemetry.participation.is_some() {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: static link must not report participation"
+                                ));
+                            }
+                            if cfg.scheme.kind() == LinkKind::Analog {
+                                amp_ran |= out.telemetry.amp_iterations > 0;
+                                had_transmitters = true;
+                            }
+                        }
+                        LinkKind::Fading => {
+                            let Some(stats) = out.telemetry.participation else {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: fading link must report participation"
+                                ));
+                            };
+                            if stats.total() != cfg.devices {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: stats {stats:?} don't partition M={}",
+                                    cfg.devices
+                                ));
+                            }
+                            if stats.transmitting > 0 {
+                                had_transmitters = true;
+                                amp_ran |= out.telemetry.amp_iterations > 0;
+                            } else if out.telemetry.amp_iterations != 0 {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: AMP ran with nobody transmitting"
+                                ));
+                            }
+                        }
+                    }
+                }
+                // Eq. 6 audit across the rounds driven (P_t = P̄ here).
+                let powers = link.measured_avg_power();
+                if powers.len() != cfg.devices {
+                    return Check::Fail(format!(
+                        "{scheme:?}: power report covers {} devices, M={}",
+                        powers.len(),
+                        cfg.devices
+                    ));
+                }
+                // 1e-4 relative slack: the analog frame hits ‖x‖² = P_t up
+                // to f32 rounding of the α scaling.
+                for (m, &p) in powers.iter().enumerate() {
+                    if p > cfg.pbar * (1.0 + 1e-4) {
+                        return Check::Fail(format!(
+                            "{scheme:?}: device {m} avg power {p} > P̄ {}",
+                            cfg.pbar
+                        ));
+                    }
+                }
+                // Analog-family links must have exercised AMP whenever
+                // anyone transmitted.
+                if had_transmitters && !amp_ran {
+                    return Check::Fail(format!(
+                        "{scheme:?}: no AMP iterations across {rounds} rounds"
+                    ));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Satellite regression: the telemetry default is honest — participation
+/// is `None` (absent), never a fake measured zero.
+#[test]
+fn telemetry_default_participation_is_absent_not_zero() {
+    let telemetry = ota_dsgd::coordinator::link::RoundTelemetry::default();
+    assert!(telemetry.participation.is_none());
+    assert_eq!(telemetry.bits_per_device, 0.0);
+    assert_eq!(telemetry.amp_iterations, 0);
+}
+
+/// Straggler invariant under random deadlines: dropped devices spend no
+/// energy, counts stay a partition, and an all-dropped round yields ĝ = 0.
+#[test]
+fn prop_straggler_deadlines_respected() {
+    run_property_noshrink(
+        "straggler-deadlines",
+        PropConfig {
+            cases: 8,
+            ..Default::default()
+        },
+        |rng| {
+            let (mut cfg, d) = random_cfg(rng);
+            cfg.scheme = Scheme::FadingADsgd;
+            cfg.participation = ParticipationPolicy::Full;
+            cfg.latency_mean_secs = 0.002 + 0.02 * rng.f64();
+            let deadline = 0.0005 + 0.03 * rng.f64();
+            let seed = rng.next_u64();
+            (cfg, d, deadline, seed)
+        },
+        |(cfg, d, deadline, seed)| {
+            let d = *d;
+            let mut rng = Pcg64::new(*seed);
+            let mut link = link::for_config(cfg, d);
+            let grads = random_grads(&mut rng, cfg.devices, d);
+            for t in 0..3 {
+                let out = link.round(
+                    &RoundCtx {
+                        t,
+                        p_t: cfg.pbar,
+                        deadline: Some(*deadline),
+                    },
+                    &grads,
+                );
+                let stats = out.telemetry.participation.expect("fading stats");
+                if stats.total() != cfg.devices {
+                    return Check::Fail(format!("stats {stats:?} vs M={}", cfg.devices));
+                }
+                if stats.transmitting == 0 && out.ghat.iter().any(|&v| v != 0.0) {
+                    return Check::Fail("empty round must return ĝ = 0".into());
+                }
+            }
+            for &p in &link.measured_avg_power() {
+                if p > cfg.pbar * (1.0 + 1e-4) {
+                    return Check::Fail(format!("power {p} > P̄ {}", cfg.pbar));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
