@@ -42,3 +42,40 @@ pub fn print_header(fig: &str, what: &str) {
     println!("=== bench {fig}: {what} ===");
     println!("(throughput column = DSGD rounds/sec incl. setup; lower-level component timings live in the `components` bench)");
 }
+
+// Not every bench binary includes a JSON-dumping sweep, so these helpers
+// are dead code in the figure benches (each bench compiles its own copy
+// of this module).
+#[allow(dead_code)]
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Dump a sweep's results as a JSON array (the artifact CI uploads).
+#[allow(dead_code)]
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    use std::io::Write as _;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    for (i, r) in results.iter().enumerate() {
+        let comma = if i + 1 < results.len() { "," } else { "" };
+        writeln!(
+            f,
+            "  {{\"name\": \"{}\", \"iters\": {}, \"mean_secs\": {:.9}, \"p50_secs\": {:.9}, \"p95_secs\": {:.9}, \"min_secs\": {:.9}, \"rounds_per_sec\": {}}}{comma}",
+            json_escape(&r.name),
+            r.iters,
+            r.mean.as_secs_f64(),
+            r.p50.as_secs_f64(),
+            r.p95.as_secs_f64(),
+            r.min.as_secs_f64(),
+            r.throughput
+                .map(|t| format!("{t:.4}"))
+                .unwrap_or_else(|| "null".into()),
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! D2D topology sweep bench: time one round of every run in the D2D
+//! experiment spec (the star anchor plus fully-connected / ring / torus /
+//! Erdős–Rényi consensus) and dump the results as JSON —
+//! `results/d2d_sweep.json` — which CI uploads as an artifact so the
+//! per-round cost of decentralized rounds (one AMP decode per distinct
+//! neighborhood) is tracked across commits.
+
+#[path = "common.rs"]
+mod common;
+
+use ota_dsgd::experiments::figures;
+
+fn main() {
+    common::print_header(
+        "d2d",
+        "D2D over-the-air consensus: graph families vs the star anchor",
+    );
+    let spec = figures::d2d(false);
+    let mut results = Vec::new();
+    for (label, cfg) in spec.runs {
+        results.push(common::bench_rounds(&label, cfg, 2));
+    }
+    let path = "results/d2d_sweep.json";
+    common::write_json(path, &results).expect("write bench json");
+    println!("json → {path}");
+}

@@ -7,40 +7,7 @@
 #[path = "common.rs"]
 mod common;
 
-use std::io::Write as _;
-
 use ota_dsgd::experiments::figures;
-use ota_dsgd::util::bench::BenchResult;
-
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
-
-fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
-    if let Some(dir) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "[")?;
-    for (i, r) in results.iter().enumerate() {
-        let comma = if i + 1 < results.len() { "," } else { "" };
-        writeln!(
-            f,
-            "  {{\"name\": \"{}\", \"iters\": {}, \"mean_secs\": {:.9}, \"p50_secs\": {:.9}, \"p95_secs\": {:.9}, \"min_secs\": {:.9}, \"rounds_per_sec\": {}}}{comma}",
-            json_escape(&r.name),
-            r.iters,
-            r.mean.as_secs_f64(),
-            r.p50.as_secs_f64(),
-            r.p95.as_secs_f64(),
-            r.min.as_secs_f64(),
-            r.throughput
-                .map(|t| format!("{t:.4}"))
-                .unwrap_or_else(|| "null".into()),
-        )?;
-    }
-    writeln!(f, "]")?;
-    Ok(())
-}
 
 fn main() {
     common::print_header("fading", "fading MAC: CSI thresholds, blind, participation, stragglers");
@@ -50,6 +17,6 @@ fn main() {
         results.push(common::bench_rounds(&label, cfg, 2));
     }
     let path = "results/fading_sweep.json";
-    write_json(path, &results).expect("write bench json");
+    common::write_json(path, &results).expect("write bench json");
     println!("json → {path}");
 }

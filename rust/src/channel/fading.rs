@@ -7,29 +7,63 @@
 //! on how the encode fan-out is scheduled across worker threads. Same seed ⇒
 //! identical gain sequences across runs and across thread-pool sizes
 //! (pinned by `rust/tests/fading_determinism.rs`).
+//!
+//! # Time-correlated (Gauss–Markov) gains
+//!
+//! `rho > 0` ([`FadingProcess::with_rho`]) correlates h_m(t) with h_m(t−1)
+//! through an AR(1) chain on the underlying Gaussian state:
+//! `u(t) = ρ·u(t−1) + √(1−ρ²)·w(t)` with every innovation `w(t)` its own
+//! counter-based cell. The chain is *recomputed from t = 0 on each query*
+//! rather than cached, which keeps the draw a pure function of
+//! `(seed, device, t)` — O(t) per query, but order- and
+//! thread-pool-invariant like the i.i.d. path (and T is a few hundred
+//! here). Stationary marginals match the configured distribution:
+//! Rayleigh maps two unit-variance chains through the magnitude,
+//! Uniform maps one chain through the Gaussian CDF. `rho = 0` takes the
+//! original i.i.d. code path bit-for-bit, so all PR 2 goldens are
+//! unaffected.
 
 use crate::config::FadingDist;
 use crate::util::rng::counter_rng;
 
-/// Seeded i.i.d. per-device, per-round channel-gain process h_m(t).
+/// Seeded per-device, per-round channel-gain process h_m(t): i.i.d. across
+/// rounds by default, AR(1)-correlated when built `with_rho`.
 #[derive(Clone, Debug)]
 pub struct FadingProcess {
     dist: FadingDist,
     seed: u64,
+    /// AR(1) coefficient of the underlying Gaussian state; 0 = i.i.d.
+    rho: f64,
 }
 
 impl FadingProcess {
     pub fn new(dist: FadingDist, seed: u64) -> FadingProcess {
-        FadingProcess { dist, seed }
+        Self::with_rho(dist, seed, 0.0)
+    }
+
+    /// Gauss–Markov variant: `rho ∈ [0, 1)` correlates consecutive rounds.
+    pub fn with_rho(dist: FadingDist, seed: u64, rho: f64) -> FadingProcess {
+        assert!(
+            (0.0..1.0).contains(&rho),
+            "AR(1) rho must be in [0, 1), got {rho}"
+        );
+        FadingProcess { dist, seed, rho }
     }
 
     pub fn dist(&self) -> FadingDist {
         self.dist
     }
 
+    pub fn rho(&self) -> f64 {
+        self.rho
+    }
+
     /// The gain magnitude h_m(t) for device `device` at round `t`.
     /// Pure in `(self, device, t)` — calling twice returns the same value.
     pub fn gain(&self, device: usize, t: usize) -> f64 {
+        if self.rho > 0.0 {
+            return self.gain_ar1(device, t);
+        }
         match self.dist {
             FadingDist::Constant(v) => v,
             FadingDist::Rayleigh => {
@@ -45,10 +79,60 @@ impl FadingProcess {
         }
     }
 
+    /// Time-correlated gain: stationary AR(1) Gaussian state(s) mapped to
+    /// the configured marginal.
+    fn gain_ar1(&self, device: usize, t: usize) -> f64 {
+        match self.dist {
+            FadingDist::Constant(v) => v,
+            FadingDist::Rayleigh => {
+                // Two independent unit-variance chains (I/Q taps);
+                // h = √((u_I² + u_Q²)/2) keeps E[h²] = 1.
+                let ui = self.ar1_state(0xFAD0_00A1, device, t);
+                let uq = self.ar1_state(0xFAD0_00A2, device, t);
+                ((ui * ui + uq * uq) / 2.0).sqrt()
+            }
+            FadingDist::Uniform(lo, hi) => {
+                // Gaussian copula: Φ(u) is uniform on [0, 1) at
+                // stationarity, then rescale to [lo, hi).
+                let u = self.ar1_state(0xFAD0_00A3, device, t);
+                lo + (hi - lo) * normal_cdf(u).clamp(1e-12, 1.0 - 1e-12)
+            }
+        }
+    }
+
+    /// `u(t) = ρ·u(t−1) + √(1−ρ²)·w(t)`, `u(0) = w(0)`, every `w(k)` a
+    /// counter-based N(0,1) cell — recomputed from 0 so the value is pure
+    /// in `(seed, salt, device, t)`.
+    fn ar1_state(&self, salt: u64, device: usize, t: usize) -> f64 {
+        let draw = |k: usize| counter_rng(self.seed, salt, device as u64, k as u64).normal();
+        let scale = (1.0 - self.rho * self.rho).sqrt();
+        let mut u = draw(0);
+        for k in 1..=t {
+            u = self.rho * u + scale * draw(k);
+        }
+        u
+    }
+
     /// All M gains for round `t`, in device order.
     pub fn gains_for_round(&self, devices: usize, t: usize) -> Vec<f64> {
         (0..devices).map(|m| self.gain(m, t)).collect()
     }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf polynomial
+/// (|error| < 1.5e-7 — far below the gain tolerances anywhere downstream).
+fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
 }
 
 /// Per-device encode-latency model for straggler simulation.
@@ -136,6 +220,76 @@ mod tests {
         assert_ne!(p.gain(0, 0), p.gain(0, 1));
         assert_ne!(p.gain(0, 0), p.gain(1, 0));
         assert_eq!(p.gains_for_round(4, 2).len(), 4);
+    }
+
+    #[test]
+    fn ar1_rho_zero_is_bitwise_iid_path() {
+        for dist in [
+            FadingDist::Rayleigh,
+            FadingDist::Uniform(0.2, 1.8),
+            FadingDist::Constant(0.7),
+        ] {
+            let iid = FadingProcess::new(dist, 11);
+            let ar0 = FadingProcess::with_rho(dist, 11, 0.0);
+            for m in 0..6 {
+                for t in 0..6 {
+                    assert_eq!(iid.gain(m, t), ar0.gain(m, t), "{dist:?} m={m} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ar1_is_pure_in_its_cell() {
+        let p = FadingProcess::with_rho(FadingDist::Rayleigh, 13, 0.8);
+        assert_eq!(p.gain(3, 7), p.gain(3, 7));
+        assert_ne!(p.gain(3, 7), p.gain(4, 7));
+        assert_ne!(p.gain(3, 7), p.gain(3, 8));
+    }
+
+    #[test]
+    fn ar1_correlates_consecutive_rounds() {
+        // Lag-1 autocorrelation of the squared-gain process grows with rho;
+        // compare empirical correlation of h(t), h(t+1) at rho = 0 vs 0.9.
+        let corr = |rho: f64| {
+            let p = FadingProcess::with_rho(FadingDist::Rayleigh, 17, rho);
+            let n = 400usize;
+            let xs: Vec<f64> = (0..n).map(|t| p.gain(0, t)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+            let cov = xs
+                .windows(2)
+                .map(|w| (w[0] - mean) * (w[1] - mean))
+                .sum::<f64>()
+                / (n - 1) as f64;
+            cov / var
+        };
+        let c_iid = corr(0.0);
+        let c_ar = corr(0.9);
+        assert!(c_iid.abs() < 0.2, "iid lag-1 corr {c_iid}");
+        assert!(c_ar > 0.5, "AR(0.9) lag-1 corr {c_ar}");
+    }
+
+    #[test]
+    fn ar1_preserves_stationary_marginals() {
+        // Rayleigh: E[h²] stays 1 under correlation.
+        let p = FadingProcess::with_rho(FadingDist::Rayleigh, 19, 0.7);
+        let n = 10_000usize;
+        let ms: f64 = (0..n).map(|i| p.gain(i % 40, i / 40).powi(2)).sum::<f64>() / n as f64;
+        assert!((ms - 1.0).abs() < 0.07, "E[h²]={ms}");
+        // Uniform: range respected, mean near the midpoint.
+        let u = FadingProcess::with_rho(FadingDist::Uniform(0.2, 1.8), 19, 0.7);
+        let mut sum = 0.0;
+        for i in 0..4000 {
+            let h = u.gain(i % 20, i / 20);
+            assert!((0.2..1.8).contains(&h), "h={h}");
+            sum += h;
+        }
+        let mean = sum / 4000.0;
+        assert!((mean - 1.0).abs() < 0.08, "uniform AR mean {mean}");
+        // Constant is rho-invariant.
+        let c = FadingProcess::with_rho(FadingDist::Constant(0.6), 19, 0.9);
+        assert_eq!(c.gain(2, 9), 0.6);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! exact T = 300-ish horizon.
 
 use super::schema::{
-    DatasetSpec, FadingDist, ParticipationPolicy, PowerSchedule, RunConfig, Scheme,
+    DatasetSpec, FadingDist, GraphFamily, MixingRule, ParticipationPolicy, PowerSchedule,
+    RunConfig, Scheme, TopologyConfig,
 };
 
 /// Model dimension for the paper's single-layer MNIST network:
@@ -160,6 +161,67 @@ pub fn fading_sweep(scheme: Scheme, full: bool) -> RunConfig {
     }
 }
 
+/// Decentralized D2D sweep: the same fleet over every graph family at
+/// matched power/bandwidth (`repro fig d2d`). Dimensions are chosen so the
+/// per-receiver AMP decodes (one per distinct neighborhood per round) stay
+/// tractable: M = 9 gives a 3×3 torus, and s = d/8 keeps one decode under
+/// half a second. Per-edge gains default to h ≡ 1 so the comparison
+/// isolates the topology (set `fading`/`fading_rho` for fading edges).
+pub fn d2d_sweep(family: GraphFamily, full: bool) -> RunConfig {
+    let s = MODEL_DIM / 8;
+    RunConfig {
+        scheme: Scheme::D2dADsgd,
+        devices: 9,
+        local_samples: 1000,
+        channel_uses: s,
+        sparsity: s / 2,
+        pbar: 500.0,
+        fading: FadingDist::Constant(1.0),
+        amp_iters: 15,
+        topology: TopologyConfig {
+            family,
+            degree: 1,
+            p: 0.45,
+            mixing: MixingRule::Metropolis,
+            seed: 0,
+        },
+        ..base(full)
+    }
+}
+
+/// The matched star anchor for the D2D sweep: classic PS-based A-DSGD at
+/// the d2d_sweep dimensions (same M, s, k, P̄), so the figure isolates
+/// "decentralize the aggregation" as the only change.
+pub fn d2d_star_anchor(full: bool) -> RunConfig {
+    RunConfig {
+        scheme: Scheme::ADsgd,
+        ..d2d_sweep(GraphFamily::Full, full)
+    }
+}
+
+/// The D2D analogue of [`smoke`]: ring consensus at a scale that runs in
+/// seconds (per-receiver decodes make D2D ~M× a star round, so the smoke
+/// preset halves the projection relative to [`smoke`]).
+pub fn d2d_smoke() -> RunConfig {
+    let s = MODEL_DIM / 8;
+    RunConfig {
+        scheme: Scheme::D2dADsgd,
+        devices: 6,
+        channel_uses: s,
+        sparsity: s / 2,
+        amp_iters: 15,
+        fading: FadingDist::Constant(1.0),
+        topology: TopologyConfig {
+            family: GraphFamily::Ring,
+            degree: 1,
+            p: 0.5,
+            mixing: MixingRule::Metropolis,
+            seed: 0,
+        },
+        ..smoke()
+    }
+}
+
 /// The fading analogue of [`smoke`]: the full fading pipeline — Rayleigh
 /// gains, CSI truncation, stragglers — at a scale that runs in seconds.
 pub fn fading_smoke() -> RunConfig {
@@ -200,9 +262,32 @@ mod tests {
             fading_sweep(Scheme::BlindADsgd, full)
                 .validate(MODEL_DIM)
                 .unwrap();
+            for family in [
+                GraphFamily::Full,
+                GraphFamily::Ring,
+                GraphFamily::Torus,
+                GraphFamily::ErdosRenyi,
+                GraphFamily::Star,
+            ] {
+                d2d_sweep(family, full).validate(MODEL_DIM).unwrap();
+            }
+            d2d_star_anchor(full).validate(MODEL_DIM).unwrap();
         }
         smoke().validate(MODEL_DIM).unwrap();
         fading_smoke().validate(MODEL_DIM).unwrap();
+        d2d_smoke().validate(MODEL_DIM).unwrap();
+    }
+
+    #[test]
+    fn d2d_anchor_matches_sweep_dimensions() {
+        let d2d = d2d_sweep(GraphFamily::Ring, false);
+        let star = d2d_star_anchor(false);
+        assert_eq!(star.scheme, Scheme::ADsgd);
+        assert_eq!(d2d.scheme, Scheme::D2dADsgd);
+        assert_eq!(star.devices, d2d.devices);
+        assert_eq!(star.channel_uses, d2d.channel_uses);
+        assert_eq!(star.sparsity, d2d.sparsity);
+        assert_eq!(star.pbar, d2d.pbar);
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub enum Scheme {
     /// transmit blindly at full power and the gains average out across the
     /// fleet (Amiri, Duman & Gündüz 2019).
     BlindADsgd,
+    /// Decentralized over-the-air DSGD: no parameter server — each device
+    /// keeps its own model replica and averages with its graph neighbors
+    /// via analog superposition (Xing, Simeone & Bi 2021, "Federated
+    /// Learning over Wireless Device-to-Device Networks").
+    D2dADsgd,
     /// Digital DSGD: SBC-style quantizer + capacity bit budget (Section III).
     DDsgd,
     /// SignSGD baseline through the same capacity pipe (Eq. 43).
@@ -38,6 +43,7 @@ impl Scheme {
             "adsgd" | "a-dsgd" | "analog" => Scheme::ADsgd,
             "fading" | "fading-adsgd" | "fading-csi" | "csi" => Scheme::FadingADsgd,
             "blind" | "blind-adsgd" | "no-csi" => Scheme::BlindADsgd,
+            "d2d" | "d2d-adsgd" | "decentralized" | "consensus" => Scheme::D2dADsgd,
             "ddsgd" | "d-dsgd" | "digital" => Scheme::DDsgd,
             "signsgd" | "s-dsgd" | "sign" => Scheme::SignSgd,
             "qsgd" | "q-dsgd" => Scheme::Qsgd,
@@ -51,6 +57,7 @@ impl Scheme {
             Scheme::ADsgd => "A-DSGD",
             Scheme::FadingADsgd => "A-DSGD-fading",
             Scheme::BlindADsgd => "A-DSGD-blind",
+            Scheme::D2dADsgd => "D2D-A-DSGD",
             Scheme::DDsgd => "D-DSGD",
             Scheme::SignSgd => "SignSGD",
             Scheme::Qsgd => "QSGD",
@@ -66,6 +73,7 @@ impl Scheme {
         match self {
             Scheme::ADsgd => LinkKind::Analog,
             Scheme::FadingADsgd | Scheme::BlindADsgd => LinkKind::Fading,
+            Scheme::D2dADsgd => LinkKind::D2d,
             Scheme::DDsgd | Scheme::SignSgd | Scheme::Qsgd => LinkKind::Digital,
             Scheme::ErrorFree => LinkKind::Passthrough,
         }
@@ -86,6 +94,10 @@ pub enum LinkKind {
     /// Analog superposition over a fading MAC with per-device, per-round
     /// gains h_m(t), partial participation and straggler deadlines.
     Fading,
+    /// Decentralized device-to-device consensus: no PS, per-device model
+    /// replicas, neighborhood superposition over per-edge Gaussian MACs
+    /// plus a Metropolis mixing step on a [`TopologyConfig`] graph.
+    D2d,
 }
 
 impl LinkKind {
@@ -95,7 +107,138 @@ impl LinkKind {
             LinkKind::Digital => "digital",
             LinkKind::Analog => "analog",
             LinkKind::Fading => "fading",
+            LinkKind::D2d => "d2d",
         }
+    }
+}
+
+/// Graph family for the device-to-device topology (see [`crate::topology`]).
+/// Every family is built deterministically from the `[topology]` seed, so
+/// two runs with the same config see the same graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphFamily {
+    /// Every pair of devices is connected. Metropolis weights degenerate to
+    /// the uniform 1/M matrix, which collapses D2D consensus to the star
+    /// A-DSGD average (pinned bit-for-bit by the degeneracy golden in
+    /// `rust/tests/golden_schemes.rs`).
+    Full,
+    /// Cycle with `degree` neighbors on each side (degree 1 = plain ring).
+    Ring,
+    /// 2-D torus on the most-square `r × c` factorization of M (wrap-around
+    /// grid; degenerates to a ring when M is prime).
+    Torus,
+    /// Erdős–Rényi G(M, p), deterministically resampled (and, as a last
+    /// resort, minimally augmented) until connected.
+    ErdosRenyi,
+    /// Hub-and-spoke: device 0 is the hub. The D2D analogue of the PS star.
+    Star,
+}
+
+impl GraphFamily {
+    pub fn parse(s: &str) -> Option<GraphFamily> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "full" | "complete" | "fully-connected" => GraphFamily::Full,
+            "ring" | "cycle" => GraphFamily::Ring,
+            "torus" | "grid" => GraphFamily::Torus,
+            "er" | "erdos-renyi" | "erdos" => GraphFamily::ErdosRenyi,
+            "star" | "hub" => GraphFamily::Star,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphFamily::Full => "full",
+            GraphFamily::Ring => "ring",
+            GraphFamily::Torus => "torus",
+            GraphFamily::ErdosRenyi => "er",
+            GraphFamily::Star => "star",
+        }
+    }
+}
+
+/// How mixing weights are derived from the graph. Both rules produce a
+/// symmetric doubly-stochastic matrix on any connected graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixingRule {
+    /// Metropolis–Hastings: W_ij = 1/(1 + max(deg_i, deg_j)) on edges,
+    /// diagonal takes the remainder. Needs only local degree knowledge.
+    Metropolis,
+    /// Max-degree weights: W_ij = 1/(1 + Δ) on edges with Δ the global
+    /// maximum degree; slower mixing but a single global constant.
+    MaxDegree,
+}
+
+impl MixingRule {
+    pub fn parse(s: &str) -> Option<MixingRule> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "metropolis" | "metropolis-hastings" | "mh" => MixingRule::Metropolis,
+            "max-degree" | "maxdeg" | "uniform" => MixingRule::MaxDegree,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixingRule::Metropolis => "metropolis",
+            MixingRule::MaxDegree => "max-degree",
+        }
+    }
+}
+
+/// The `[topology]` table: which D2D communication graph the decentralized
+/// schemes run over, and how its mixing weights are built.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopologyConfig {
+    pub family: GraphFamily,
+    /// Ring half-degree (neighbors on each side). Ignored by other families.
+    pub degree: usize,
+    /// Erdős–Rényi edge probability. Ignored by other families.
+    pub p: f64,
+    pub mixing: MixingRule,
+    /// Graph seed; 0 derives one from the run seed.
+    pub seed: u64,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            family: GraphFamily::Ring,
+            degree: 1,
+            p: 0.5,
+            mixing: MixingRule::Metropolis,
+            seed: 0,
+        }
+    }
+}
+
+impl TopologyConfig {
+    /// Single-line summary echoed into run logs.
+    pub fn describe(&self) -> String {
+        let mut s = format!("{}", self.family.name());
+        match self.family {
+            GraphFamily::Ring => s.push_str(&format!(":deg{}", self.degree)),
+            GraphFamily::ErdosRenyi => s.push_str(&format!(":p{}", self.p)),
+            _ => {}
+        }
+        s.push_str(&format!("/{}", self.mixing.name()));
+        s
+    }
+
+    pub fn validate(&self, devices: usize) -> Result<(), String> {
+        if devices < 2 {
+            return Err(format!("D2D topology needs M >= 2 devices, got {devices}"));
+        }
+        if self.family == GraphFamily::Ring && (self.degree == 0 || self.degree >= devices) {
+            return Err(format!(
+                "ring degree must satisfy 1 <= degree < M, got degree={} M={devices}",
+                self.degree
+            ));
+        }
+        if self.family == GraphFamily::ErdosRenyi && !(self.p > 0.0 && self.p <= 1.0) {
+            return Err(format!("Erdős–Rényi p must be in (0, 1], got {}", self.p));
+        }
+        Ok(())
     }
 }
 
@@ -317,6 +460,14 @@ pub struct RunConfig {
     /// Mean of the per-device encode-latency model (simulated seconds).
     /// `<= 0` disables the latency model (no device ever straggles).
     pub latency_mean_secs: f64,
+    /// Gauss–Markov (AR(1)) time correlation of the fading gains: 0 keeps
+    /// the i.i.d. per-round draws bit-for-bit; rho ∈ (0, 1) correlates
+    /// h_m(t) with h_m(t−1) through an AR(1) chain on the underlying
+    /// Gaussian state (see `channel::fading`).
+    pub fading_rho: f64,
+    /// D2D communication graph for the decentralized schemes (ignored by
+    /// the PS-centric schemes).
+    pub topology: TopologyConfig,
 }
 
 impl Default for RunConfig {
@@ -350,6 +501,8 @@ impl Default for RunConfig {
             participation: ParticipationPolicy::Full,
             deadline_secs: 0.0,
             latency_mean_secs: 0.0,
+            fading_rho: 0.0,
+            topology: TopologyConfig::default(),
         }
     }
 }
@@ -403,10 +556,13 @@ impl RunConfig {
         if self.noise_var <= 0.0 {
             return fail("noise_var must be > 0".into());
         }
-        if matches!(self.scheme.kind(), LinkKind::Analog | LinkKind::Fading) {
+        if matches!(
+            self.scheme.kind(),
+            LinkKind::Analog | LinkKind::Fading | LinkKind::D2d
+        ) {
             // A-DSGD needs s >= 2 (s̃ = s−1 plus the scaling channel use);
-            // mean removal needs s >= 3 (§IV-A). The fading variants reuse
-            // the same framing, so the same floor applies.
+            // mean removal needs s >= 3 (§IV-A). The fading and D2D
+            // variants reuse the same framing, so the same floor applies.
             let min_s = if self.mean_removal_rounds > 0 { 3 } else { 2 };
             if self.channel_uses < min_s {
                 return fail(format!(
@@ -435,16 +591,21 @@ impl RunConfig {
                 self.channel_uses
             ));
         }
-        if self.scheme.kind() == LinkKind::Fading {
+        if matches!(self.scheme.kind(), LinkKind::Fading | LinkKind::D2d) {
             if let Err(msg) = self.fading.validate() {
                 return fail(format!("fading distribution: {msg}"));
             }
-            if !(self.csi_threshold >= 0.0 && self.csi_threshold.is_finite()) {
+            if !(self.fading_rho >= 0.0 && self.fading_rho < 1.0) {
                 return fail(format!(
-                    "csi_threshold must be finite and >= 0, got {}",
-                    self.csi_threshold
+                    "fading rho must be in [0, 1), got {}",
+                    self.fading_rho
                 ));
             }
+        }
+        // Partial participation serves the fading analog family and the
+        // digital family (silent digital devices bank via error
+        // accumulation); validate the policy for both.
+        if matches!(self.scheme.kind(), LinkKind::Fading | LinkKind::Digital) {
             match self.participation {
                 ParticipationPolicy::UniformK(k) if k == 0 || k > self.devices => {
                     return fail(format!(
@@ -459,12 +620,25 @@ impl RunConfig {
                 }
                 _ => {}
             }
+        }
+        if self.scheme.kind() == LinkKind::Fading {
+            if !(self.csi_threshold >= 0.0 && self.csi_threshold.is_finite()) {
+                return fail(format!(
+                    "csi_threshold must be finite and >= 0, got {}",
+                    self.csi_threshold
+                ));
+            }
             if self.deadline_secs > 0.0 && self.latency_mean_secs <= 0.0 {
                 return fail(
                     "deadline_secs is set but latency_mean_secs <= 0: no device would \
                      ever straggle — set a latency model or drop the deadline"
                         .into(),
                 );
+            }
+        }
+        if self.scheme.kind() == LinkKind::D2d {
+            if let Err(msg) = self.topology.validate(self.devices) {
+                return fail(format!("topology: {msg}"));
             }
         }
         match &self.dataset {
@@ -502,6 +676,14 @@ impl RunConfig {
         // Allow a separate [dataset] section.
         if let Some(ds) = doc.get("dataset") {
             cfg.apply_dataset(ds)?;
+        }
+        // Optional [fading] table: dist + AR(1) time-correlation knob.
+        if let Some(fd) = doc.get("fading") {
+            cfg.apply_fading(fd)?;
+        }
+        // Optional [topology] table for the D2D schemes.
+        if let Some(topo) = doc.get("topology") {
+            cfg.apply_topology(topo)?;
         }
         Ok(cfg)
     }
@@ -581,6 +763,9 @@ impl RunConfig {
                 "latency_mean_secs" => {
                     self.latency_mean_secs = v.as_f64().ok_or_else(|| bad(k, v))?
                 }
+                "fading_rho" => {
+                    self.fading_rho = v.as_f64().ok_or_else(|| bad(k, v))?
+                }
                 other => {
                     return Err(ConfigError::Invalid(format!("unknown key {other:?}")));
                 }
@@ -621,6 +806,66 @@ impl RunConfig {
         Ok(())
     }
 
+    fn apply_fading(
+        &mut self,
+        s: &std::collections::BTreeMap<String, Value>,
+    ) -> Result<(), ConfigError> {
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("[fading] key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in s {
+            match k.as_str() {
+                "dist" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.fading = FadingDist::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown fading distribution {name:?}"))
+                    })?;
+                }
+                "rho" => self.fading_rho = v.as_f64().ok_or_else(|| bad(k, v))?,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown [fading] key {other:?}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_topology(
+        &mut self,
+        s: &std::collections::BTreeMap<String, Value>,
+    ) -> Result<(), ConfigError> {
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("[topology] key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in s {
+            match k.as_str() {
+                "family" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.topology.family = GraphFamily::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown graph family {name:?}"))
+                    })?;
+                }
+                "degree" => self.topology.degree = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "p" => self.topology.p = v.as_f64().ok_or_else(|| bad(k, v))?,
+                "mixing" => {
+                    let name = v.as_str().ok_or_else(|| bad(k, v))?;
+                    self.topology.mixing = MixingRule::parse(name).ok_or_else(|| {
+                        ConfigError::Invalid(format!("unknown mixing rule {name:?}"))
+                    })?;
+                }
+                "seed" => self.topology.seed = v.as_i64().ok_or_else(|| bad(k, v))? as u64,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown [topology] key {other:?}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// The round deadline as an `Option` (`None` when disabled): the form
     /// the link layer consumes via `RoundCtx::deadline`.
     pub fn deadline(&self) -> Option<f64> {
@@ -645,12 +890,25 @@ impl RunConfig {
             self.noniid,
             self.seed
         );
+        if self.scheme.kind() == LinkKind::D2d {
+            s.push_str(&format!(
+                " topo={} h={}",
+                self.topology.describe(),
+                self.fading.describe()
+            ));
+            if self.fading_rho > 0.0 {
+                s.push_str(&format!(" rho={}", self.fading_rho));
+            }
+        }
         if self.scheme.kind() == LinkKind::Fading {
             s.push_str(&format!(
                 " h={} part={}",
                 self.fading.describe(),
                 self.participation.describe()
             ));
+            if self.fading_rho > 0.0 {
+                s.push_str(&format!(" rho={}", self.fading_rho));
+            }
             if self.scheme == Scheme::FadingADsgd {
                 s.push_str(&format!(" h_min={}", self.csi_threshold));
             }
@@ -886,6 +1144,173 @@ latency_mean_secs = 0.01
         assert_eq!(cfg.latency_mean_secs, 0.01);
         let off = RunConfig::default();
         assert_eq!(off.deadline(), None);
+    }
+
+    #[test]
+    fn d2d_scheme_kind_and_parsing() {
+        assert_eq!(Scheme::D2dADsgd.kind(), LinkKind::D2d);
+        assert_eq!(LinkKind::D2d.name(), "d2d");
+        assert_eq!(Scheme::parse("d2d"), Some(Scheme::D2dADsgd));
+        assert_eq!(Scheme::parse("decentralized"), Some(Scheme::D2dADsgd));
+        assert_eq!(Scheme::D2dADsgd.name(), "D2D-A-DSGD");
+    }
+
+    #[test]
+    fn graph_family_and_mixing_parse() {
+        for family in [
+            GraphFamily::Full,
+            GraphFamily::Ring,
+            GraphFamily::Torus,
+            GraphFamily::ErdosRenyi,
+            GraphFamily::Star,
+        ] {
+            assert_eq!(GraphFamily::parse(family.name()), Some(family));
+        }
+        assert_eq!(GraphFamily::parse("complete"), Some(GraphFamily::Full));
+        assert_eq!(GraphFamily::parse("nope"), None);
+        for rule in [MixingRule::Metropolis, MixingRule::MaxDegree] {
+            assert_eq!(MixingRule::parse(rule.name()), Some(rule));
+        }
+        assert_eq!(MixingRule::parse("mh"), Some(MixingRule::Metropolis));
+        assert_eq!(MixingRule::parse("nope"), None);
+    }
+
+    #[test]
+    fn topology_toml_table() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+scheme = "d2d"
+devices = 12
+[topology]
+family = "er"
+p = 0.35
+mixing = "max-degree"
+seed = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scheme, Scheme::D2dADsgd);
+        assert_eq!(cfg.topology.family, GraphFamily::ErdosRenyi);
+        assert_eq!(cfg.topology.p, 0.35);
+        assert_eq!(cfg.topology.mixing, MixingRule::MaxDegree);
+        assert_eq!(cfg.topology.seed, 99);
+        cfg.validate(7850).unwrap();
+        // Unknown topology keys rejected.
+        assert!(RunConfig::from_toml("[topology]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn fading_toml_table_with_rho() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+scheme = "fading-adsgd"
+[fading]
+dist = "uniform:0.3:1.7"
+rho = 0.85
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fading, FadingDist::Uniform(0.3, 1.7));
+        assert_eq!(cfg.fading_rho, 0.85);
+        cfg.validate(7850).unwrap();
+        // rho outside [0, 1) rejected at validation for fading schemes.
+        let bad = RunConfig {
+            scheme: Scheme::FadingADsgd,
+            fading_rho: 1.0,
+            ..RunConfig::default()
+        };
+        assert!(bad.validate(7850).is_err());
+        // Flat run-section key works too.
+        let flat = RunConfig::from_toml("[run]\nfading_rho = 0.5\n").unwrap();
+        assert_eq!(flat.fading_rho, 0.5);
+    }
+
+    #[test]
+    fn d2d_validation_rules() {
+        let base = RunConfig {
+            scheme: Scheme::D2dADsgd,
+            ..RunConfig::default()
+        };
+        base.validate(7850).unwrap();
+        // One device cannot form a D2D graph.
+        let cfg = RunConfig {
+            devices: 1,
+            local_samples: 100,
+            ..base.clone()
+        };
+        assert!(cfg.validate(7850).is_err());
+        // Ring degree out of range.
+        let cfg = RunConfig {
+            topology: TopologyConfig {
+                degree: 0,
+                ..base.topology
+            },
+            ..base.clone()
+        };
+        assert!(cfg.validate(7850).is_err());
+        // ER probability out of range.
+        let cfg = RunConfig {
+            topology: TopologyConfig {
+                family: GraphFamily::ErdosRenyi,
+                p: 0.0,
+                ..base.topology
+            },
+            ..base.clone()
+        };
+        assert!(cfg.validate(7850).is_err());
+        // The same knobs are ignored for PS-centric schemes.
+        let cfg = RunConfig {
+            scheme: Scheme::ADsgd,
+            topology: TopologyConfig {
+                degree: 0,
+                ..TopologyConfig::default()
+            },
+            ..RunConfig::default()
+        };
+        cfg.validate(7850).unwrap();
+    }
+
+    #[test]
+    fn digital_participation_validated() {
+        // The selector now serves the digital family: K out of range fails.
+        let cfg = RunConfig {
+            scheme: Scheme::DDsgd,
+            participation: ParticipationPolicy::UniformK(26),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate(7850).is_err());
+        let cfg = RunConfig {
+            scheme: Scheme::DDsgd,
+            participation: ParticipationPolicy::UniformK(25),
+            ..RunConfig::default()
+        };
+        cfg.validate(7850).unwrap();
+    }
+
+    #[test]
+    fn summary_echoes_topology() {
+        let cfg = RunConfig {
+            scheme: Scheme::D2dADsgd,
+            topology: TopologyConfig {
+                family: GraphFamily::ErdosRenyi,
+                p: 0.4,
+                ..TopologyConfig::default()
+            },
+            fading_rho: 0.6,
+            ..RunConfig::default()
+        };
+        let s = cfg.summary();
+        assert!(s.contains("topo=er:p0.4/metropolis"), "{s}");
+        assert!(s.contains("rho=0.6"), "{s}");
+        // Ring echoes its degree; static schemes stay silent.
+        let ring = RunConfig {
+            topology: TopologyConfig::default(),
+            ..cfg
+        };
+        assert!(ring.summary().contains("topo=ring:deg1/metropolis"), "{}", ring.summary());
+        assert!(!RunConfig::default().summary().contains("topo="));
     }
 
     #[test]

@@ -25,6 +25,31 @@ pub trait GradientBackend {
         shards: &[Vec<usize>],
     ) -> Matf;
 
+    /// Replica variant for decentralized links: row m of `replicas` is
+    /// device m's own model, and row m of the result is g_m(θ_m). The
+    /// default evaluates each device's shard at its replica through
+    /// [`GradientBackend::per_device_gradients`], which makes the path
+    /// bit-identical to the shared-model call whenever all replicas agree
+    /// (each row is produced by the same per-shard gradient computation).
+    fn per_device_gradients_at(
+        &mut self,
+        replicas: &Matf,
+        train: &Dataset,
+        shards: &[Vec<usize>],
+    ) -> Matf {
+        assert_eq!(replicas.rows, shards.len(), "one replica row per shard");
+        let mut out = Matf::zeros(shards.len(), replicas.cols);
+        for m in 0..shards.len() {
+            let row = self.per_device_gradients(
+                replicas.row(m),
+                train,
+                std::slice::from_ref(&shards[m]),
+            );
+            out.row_mut(m).copy_from_slice(row.row(0));
+        }
+        out
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -62,6 +87,35 @@ impl GradientBackend for RustBackend {
             self.workers
         };
         crate::model::per_device_gradients(params, train, shards, workers)
+    }
+
+    /// Parallel override: fan the M independent (replica, shard) gradient
+    /// evaluations across the worker pool. Row m runs the same
+    /// `model::gradient` call as the default implementation (and as the
+    /// shared-model path), so the result is bit-identical — only faster.
+    fn per_device_gradients_at(
+        &mut self,
+        replicas: &Matf,
+        train: &Dataset,
+        shards: &[Vec<usize>],
+    ) -> Matf {
+        assert_eq!(replicas.rows, shards.len(), "one replica row per shard");
+        let m = shards.len();
+        let workers = if self.workers == 0 {
+            crate::util::threadpool::default_workers(m)
+        } else {
+            self.workers
+        };
+        let rows = crate::util::threadpool::par_map(m, workers, |dev| {
+            let mut g = vec![0f32; replicas.cols];
+            crate::model::gradient(replicas.row(dev), train, &shards[dev], &mut g);
+            g
+        });
+        let mut out = Matf::zeros(m, replicas.cols);
+        for (r, row) in rows.into_iter().enumerate() {
+            out.row_mut(r).copy_from_slice(&row);
+        }
+        out
     }
 
     fn name(&self) -> &'static str {

@@ -110,8 +110,10 @@ impl LinkScheme for AnalogLink {
                 bits_per_device: 0.0,
                 amp_iterations: trace.iterations,
                 // All M devices transmit every round on the static MAC;
-                // participation is not modeled (None ≠ "0 participated").
+                // participation is not modeled (None ≠ "0 participated"),
+                // and one PS model means no consensus distance to measure.
                 participation: None,
+                consensus_distance: None,
             },
         }
     }

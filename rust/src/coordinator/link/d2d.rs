@@ -1,0 +1,480 @@
+//! Decentralized over-the-air DSGD: no parameter server. Every device
+//! keeps its own model replica θ_i and one round is
+//!
+//! 1. **Encode** — device i error-compensates, sparsifies and projects its
+//!    gradient g_i(θ_i) exactly as Algorithm 1 (the [`AnalogDevice`]
+//!    pipeline, same projection seeds as the star link), transmitting
+//!    blind at full power P_t: with one broadcast serving many receivers
+//!    there is no single channel to invert, so D2D is inherently the
+//!    no-CSI variant.
+//! 2. **Neighborhood reception** — receiver i superposes its closed
+//!    neighborhood over per-edge gains: y_i = Σ_{j∈N(i)} h_ij·x_j + x_i +
+//!    z(t) (a device knows its own frame and folds it in digitally — the
+//!    standard half-duplex assumption). The per-edge gains come from a
+//!    counter-based [`FadingProcess`] keyed by the *unordered* pair id, so
+//!    h_ij = h_ji (channel reciprocity), and the ambient noise z(t) is one
+//!    shared per-round draw from the same RNG stream the star MAC uses —
+//!    modeling a common broadcast round. That choice is what makes the
+//!    fully-connected degeneracy *exact*: with h ≡ 1 every receiver hears
+//!    bit-for-bit the star MAC's y(t), so fully-connected D2D collapses to
+//!    star A-DSGD (pinned in `rust/tests/golden_schemes.rs`). The blind
+//!    decode reuses the static [`AnalogPs`]: the last channel use carries
+//!    Σ_j h_ij·√α_j, exactly the normalizer the decoder divides by, so
+//!    ĝ_i estimates the gain-weighted neighborhood-average gradient.
+//! 3. **Consensus + local step** — Metropolis mixing in deviation form,
+//!    θ̃_i = θ_i + Σ_j W_ij (θ_j − θ_i) (exact model exchange at the
+//!    consensus layer; the bandwidth-limited d-dimensional traffic is the
+//!    over-the-air gradient payload above), then the local optimizer step
+//!    θ_i ← θ̃_i − Adam_i(ĝ_i). The deviation form makes "all replicas
+//!    equal ⇒ mixing is a bit-exact no-op", which the degeneracy golden
+//!    depends on.
+//!
+//! Energy accounting: each broadcast is radiated once regardless of how
+//! many neighbors hear it, so the [`PowerMeter`] records ‖x_i‖² = P_t per
+//! device per round and the Eq. 6 audit is unchanged in meaning.
+//!
+//! The trainer stays scheme-agnostic through the replica hooks on
+//! [`LinkScheme`]: [`LinkScheme::replicas`] exposes the per-device models
+//! for gradient evaluation and [`LinkScheme::replica_average`] the
+//! consensus model whose accuracy the log reports; telemetry adds the
+//! root-mean-square consensus distance every round.
+
+use crate::analog::{AnalogDevice, AnalogPs};
+use crate::channel::{FadingProcess, PowerMeter};
+use crate::config::RunConfig;
+use crate::optim::{Adam, Optimizer};
+use crate::tensor::Matf;
+use crate::topology::{Graph, MixingMatrix};
+use crate::util::rng::Pcg64;
+
+use super::super::device::DeviceSet;
+use super::analog::analog_parts;
+use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
+
+pub struct D2dAnalogLink {
+    devices: DeviceSet<AnalogDevice>,
+    graph: Graph,
+    mixing: MixingMatrix,
+    /// Per-device model replicas (row i = θ_i), all starting at θ_0 = 0.
+    replicas: Matf,
+    /// Per-device local optimizers (same Adam the star PS runs).
+    optimizers: Vec<Adam>,
+    ps_std: AnalogPs,
+    ps_mr: Option<AnalogPs>,
+    mean_removal_rounds: usize,
+    channel_uses: usize,
+    /// Per-edge gain process keyed by the canonical unordered pair id.
+    edge_gains: FadingProcess,
+    /// Shared broadcast noise stream — same constants as the star MAC
+    /// (`GaussianMac::new(.., seed ^ 0xC4A)` with stream 0x3AC), which the
+    /// fully-connected degeneracy golden requires.
+    noise_rng: Pcg64,
+    noise_var: f64,
+    meter: PowerMeter,
+    dim: usize,
+}
+
+impl D2dAnalogLink {
+    pub fn new(cfg: &RunConfig, dim: usize) -> D2dAnalogLink {
+        Self::build(cfg, dim, None)
+    }
+
+    /// Explicit worker count for the encode fan-out (`1` forces the
+    /// sequential path; determinism tests prove pool-size invariance).
+    pub fn with_workers(cfg: &RunConfig, dim: usize, workers: usize) -> D2dAnalogLink {
+        Self::build(cfg, dim, Some(workers))
+    }
+
+    fn build(cfg: &RunConfig, dim: usize, workers: Option<usize>) -> D2dAnalogLink {
+        // Same projection/noise seed recipe as the static link — the
+        // degeneracy golden needs lockstep forever.
+        let (states, _mac, ps_std, ps_mr) = analog_parts(cfg, dim);
+        let devices = match workers {
+            Some(w) => DeviceSet::with_workers(states, w),
+            None => DeviceSet::new(states),
+        };
+        let graph = Graph::build(&cfg.topology, cfg.devices, cfg.seed ^ 0xD2D0);
+        let mixing = MixingMatrix::build(&graph, cfg.topology.mixing);
+        D2dAnalogLink {
+            devices,
+            graph,
+            mixing,
+            replicas: Matf::zeros(cfg.devices, dim),
+            optimizers: (0..cfg.devices).map(|_| Adam::new(dim, cfg.lr as f32)).collect(),
+            ps_std,
+            ps_mr,
+            mean_removal_rounds: cfg.mean_removal_rounds,
+            channel_uses: cfg.channel_uses,
+            edge_gains: FadingProcess::with_rho(cfg.fading, cfg.seed ^ 0xD2D1, cfg.fading_rho),
+            noise_rng: Pcg64::with_stream(cfg.seed ^ 0xC4A, 0x3AC),
+            noise_var: cfg.noise_var,
+            meter: PowerMeter::new(cfg.devices),
+            dim,
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn mixing(&self) -> &MixingMatrix {
+        &self.mixing
+    }
+
+    /// √((1/M)Σ_i‖θ_i − θ̄‖²), f64-accumulated.
+    pub fn consensus_distance(&self) -> f64 {
+        let m = self.replicas.rows;
+        let d = self.replicas.cols;
+        let mut mean = vec![0.0f64; d];
+        for i in 0..m {
+            for (acc, &v) in mean.iter_mut().zip(self.replicas.row(i)) {
+                *acc += v as f64;
+            }
+        }
+        for v in mean.iter_mut() {
+            *v /= m as f64;
+        }
+        let mut total = 0.0f64;
+        for i in 0..m {
+            for (&mu, &v) in mean.iter().zip(self.replicas.row(i)) {
+                let diff = v as f64 - mu;
+                total += diff * diff;
+            }
+        }
+        (total / m as f64).sqrt()
+    }
+
+    /// The per-edge gain for transmitter j heard at receiver i (h_ii = 1:
+    /// a device's own frame is folded in digitally, not over the air).
+    fn gain(&self, receiver: usize, transmitter: usize, t: usize) -> f64 {
+        if receiver == transmitter {
+            1.0
+        } else {
+            self.edge_gains
+                .gain(self.graph.pair_id(receiver, transmitter) as usize, t)
+        }
+    }
+}
+
+impl LinkScheme for D2dAnalogLink {
+    fn round(&mut self, ctx: &RoundCtx, grads: &Matf) -> LinkRound {
+        let m = self.devices.len();
+        let d = self.dim;
+        debug_assert_eq!(grads.rows, m);
+        let mean_removal = ctx.t < self.mean_removal_rounds;
+        let s = self.channel_uses;
+        let p_t = ctx.p_t;
+
+        // 1. Encode: identical closure to the static AnalogLink (blind
+        // full-power frames, no per-receiver scaling possible).
+        let frames: Vec<Vec<f32>> = if mean_removal {
+            let proj = self
+                .ps_mr
+                .as_ref()
+                .expect("mean-removal decoder")
+                .projection();
+            self.devices.encode(|dev, state| {
+                state
+                    .transmit_mean_removed(grads.row(dev), proj, p_t, s)
+                    .x
+            })
+        } else {
+            let proj = self.ps_std.projection();
+            self.devices
+                .encode(|dev, state| state.transmit(grads.row(dev), proj, p_t).x)
+        };
+        for (dev, x) in frames.iter().enumerate() {
+            self.meter.add(dev, crate::tensor::norm_sq(x));
+        }
+        self.meter.end_round();
+
+        // 2. Shared broadcast noise draw (star-MAC RNG stream).
+        let sd = self.noise_var.sqrt();
+        let z: Vec<f32> = (0..s).map(|_| (self.noise_rng.normal() * sd) as f32).collect();
+
+        // Per-receiver superposition + blind decode. Only with unit edge
+        // gains does y_i depend solely on the closed neighborhood (the
+        // receiver's own frame always enters at gain 1, so any constant
+        // c ≠ 1 still weights self vs neighbors differently per receiver);
+        // in that case receivers sharing a neighborhood share one decode —
+        // the complete graph decodes exactly once.
+        let unit_gains = matches!(
+            self.edge_gains.dist(),
+            crate::config::FadingDist::Constant(c) if c == 1.0
+        );
+        let decoder = if mean_removal {
+            self.ps_mr.as_ref().expect("mean-removal decoder")
+        } else {
+            &self.ps_std
+        };
+        let mut cache: std::collections::BTreeMap<Vec<usize>, usize> =
+            std::collections::BTreeMap::new();
+        let mut decoded: Vec<(Vec<f32>, usize)> = Vec::new();
+        let mut ghat_index = vec![0usize; m];
+        for i in 0..m {
+            let hood = self.graph.closed_neighborhood(i);
+            if unit_gains {
+                if let Some(&idx) = cache.get(&hood) {
+                    ghat_index[i] = idx;
+                    continue;
+                }
+            }
+            // Frames accumulate in sorted device order into a zero vector
+            // and the noise lands last — the same f32 op order as
+            // `GaussianMac::transmit`, so the full-neighborhood h ≡ 1 case
+            // reproduces the star MAC output bit-for-bit.
+            let mut y = vec![0f32; s];
+            for &j in &hood {
+                let h = self.gain(i, j, ctx.t) as f32;
+                for (yi, &xi) in y.iter_mut().zip(&frames[j]) {
+                    *yi += h * xi;
+                }
+            }
+            for (yi, &zi) in y.iter_mut().zip(&z) {
+                *yi += zi;
+            }
+            let (ghat_i, trace) = if mean_removal {
+                decoder.decode_mean_removed(&y)
+            } else {
+                decoder.decode(&y)
+            };
+            let idx = decoded.len();
+            decoded.push((ghat_i, trace.iterations));
+            if unit_gains {
+                cache.insert(hood, idx);
+            }
+            ghat_index[i] = idx;
+        }
+        let amp_iterations = decoded.iter().map(|&(_, it)| it).max().unwrap_or(0);
+
+        // 3. Consensus mixing in deviation form (bit-exact no-op when all
+        // replicas agree), then the local optimizer step on ĝ_i.
+        let old = self.replicas.clone();
+        for i in 0..m {
+            let row = self.mixing.row(i);
+            let theta_i = old.row(i);
+            let target = self.replicas.row_mut(i);
+            for c in 0..d {
+                let mut acc = 0.0f64;
+                for &j in self.graph.neighbors(i) {
+                    acc += row[j] * (old.at(j, c) - theta_i[c]) as f64;
+                }
+                target[c] = theta_i[c] + acc as f32;
+            }
+            self.optimizers[i].step(target, &decoded[ghat_index[i]].0);
+        }
+
+        // Reported ĝ: the fleet-average decoded gradient (f64-accumulated;
+        // exact when every receiver decodes the same vector, so the
+        // degeneracy golden sees the star ĝ bit-for-bit).
+        let mut ghat_acc = vec![0.0f64; d];
+        for i in 0..m {
+            for (acc, &v) in ghat_acc.iter_mut().zip(&decoded[ghat_index[i]].0) {
+                *acc += v as f64;
+            }
+        }
+        let ghat: Vec<f32> = ghat_acc.iter().map(|&v| (v / m as f64) as f32).collect();
+
+        // Free the mean-removal projection once past its phase.
+        if !mean_removal && self.ps_mr.is_some() {
+            self.ps_mr = None;
+        }
+        LinkRound {
+            ghat,
+            telemetry: RoundTelemetry {
+                bits_per_device: 0.0,
+                amp_iterations,
+                participation: None,
+                consensus_distance: Some(self.consensus_distance()),
+            },
+        }
+    }
+
+    fn accumulator_norm(&self) -> f64 {
+        self.devices.mean_over(|d| d.accumulator_norm())
+    }
+
+    fn measured_avg_power(&self) -> Vec<f64> {
+        self.meter.report(self.channel_uses).averages()
+    }
+
+    fn name(&self) -> &'static str {
+        "d2d-A-DSGD"
+    }
+
+    fn replicas(&self) -> Option<&Matf> {
+        Some(&self.replicas)
+    }
+
+    fn replica_average(&self) -> Option<Vec<f32>> {
+        let m = self.replicas.rows;
+        let mut mean = vec![0.0f64; self.replicas.cols];
+        for i in 0..m {
+            for (acc, &v) in mean.iter_mut().zip(self.replicas.row(i)) {
+                *acc += v as f64;
+            }
+        }
+        Some(mean.iter().map(|&v| (v / m as f64) as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::AnalogLink;
+    use super::*;
+    use crate::config::{presets, FadingDist, GraphFamily, Scheme, TopologyConfig};
+
+    fn small_cfg(family: GraphFamily) -> RunConfig {
+        RunConfig {
+            scheme: Scheme::D2dADsgd,
+            devices: 6,
+            channel_uses: 101,
+            sparsity: 25,
+            mean_removal_rounds: 2,
+            amp_iters: 20,
+            fading: FadingDist::Constant(1.0),
+            topology: TopologyConfig {
+                family,
+                seed: 9,
+                ..TopologyConfig::default()
+            },
+            ..presets::smoke()
+        }
+    }
+
+    fn grads(m: usize, d: usize, seed: u64) -> Matf {
+        let mut rng = Pcg64::new(seed);
+        Matf::from_vec(
+            m,
+            d,
+            (0..m * d).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect(),
+        )
+    }
+
+    fn ctx(t: usize) -> RoundCtx {
+        RoundCtx {
+            t,
+            p_t: 500.0,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn full_graph_round_matches_static_link_bit_for_bit() {
+        let d = 500;
+        let cfg = small_cfg(GraphFamily::Full);
+        let g = grads(6, d, 11);
+        let mut star = AnalogLink::new(&cfg, d);
+        let mut d2d = D2dAnalogLink::new(&cfg, d);
+        for t in 0..4 {
+            let a = star.round(&ctx(t), &g);
+            let b = d2d.round(&ctx(t), &g);
+            assert_eq!(a.ghat, b.ghat, "t={t}");
+            assert_eq!(
+                b.telemetry.consensus_distance,
+                Some(0.0),
+                "lockstep replicas never disagree on the complete graph"
+            );
+        }
+        assert_eq!(star.measured_avg_power(), d2d.measured_avg_power());
+    }
+
+    #[test]
+    fn ring_replicas_diverge_but_stay_close() {
+        let d = 400;
+        let cfg = small_cfg(GraphFamily::Ring);
+        let mut link = D2dAnalogLink::new(&cfg, d);
+        let g = grads(6, d, 12);
+        let mut last = 0.0;
+        for t in 0..4 {
+            let out = link.round(&ctx(t), &g);
+            let dist = out.telemetry.consensus_distance.expect("d2d reports consensus");
+            assert!(dist.is_finite());
+            last = dist;
+        }
+        // Distinct neighborhoods decode distinct noisy averages, so the
+        // replicas genuinely disagree...
+        assert!(last > 0.0, "ring replicas should not be in perfect lockstep");
+        // ...but mixing keeps them within a small multiple of the update
+        // scale (loose sanity bound, not a convergence theorem).
+        let avg = link.replica_average().unwrap();
+        assert_eq!(avg.len(), d);
+        assert!(last < 1.0, "consensus distance {last} exploded");
+    }
+
+    #[test]
+    fn every_device_spends_exactly_pt() {
+        let d = 400;
+        let cfg = small_cfg(GraphFamily::Torus);
+        let mut link = D2dAnalogLink::new(&cfg, d);
+        let g = grads(6, d, 13);
+        for t in 0..3 {
+            link.round(&ctx(t), &g);
+        }
+        for &p in &link.measured_avg_power() {
+            assert!((p - 500.0).abs() < 1e-2 * 500.0, "avg power {p}");
+        }
+    }
+
+    #[test]
+    fn replicas_move_and_average_is_reported() {
+        let d = 300;
+        let cfg = small_cfg(GraphFamily::Ring);
+        let mut link = D2dAnalogLink::new(&cfg, d);
+        assert_eq!(link.replicas().unwrap().rows, 6);
+        assert!(link
+            .replica_average()
+            .unwrap()
+            .iter()
+            .all(|&v| v == 0.0));
+        link.round(&ctx(0), &grads(6, d, 14));
+        let avg = link.replica_average().unwrap();
+        assert!(crate::tensor::norm(&avg) > 0.0, "replicas should move");
+    }
+
+    #[test]
+    fn rayleigh_edges_decode_per_receiver() {
+        // With non-constant per-edge gains the dedupe cache must not
+        // collapse distinct receivers: ring receivers see different h and
+        // decode different ĝ_i, so consensus distance is positive after
+        // one round even though all replicas started equal.
+        let d = 300;
+        let cfg = RunConfig {
+            fading: FadingDist::Rayleigh,
+            ..small_cfg(GraphFamily::Ring)
+        };
+        let mut link = D2dAnalogLink::new(&cfg, d);
+        let out = link.round(&ctx(0), &grads(6, d, 15));
+        assert!(out.telemetry.consensus_distance.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn non_unit_constant_gains_decode_per_receiver() {
+        // With h ≡ c ≠ 1 the receiver's own frame still enters at gain 1,
+        // so even on the complete graph every receiver hears a different
+        // superposition — the decode-dedup cache must not collapse them
+        // (regression: the cache used to key on the neighborhood for any
+        // constant distribution, silently handing receiver 0's ĝ to all).
+        let d = 300;
+        let cfg = RunConfig {
+            fading: FadingDist::Constant(0.7),
+            ..small_cfg(GraphFamily::Full)
+        };
+        let mut link = D2dAnalogLink::new(&cfg, d);
+        let out = link.round(&ctx(0), &grads(6, d, 16));
+        assert!(
+            out.telemetry.consensus_distance.unwrap() > 0.0,
+            "distinct per-receiver decodes must leave the replicas apart"
+        );
+    }
+
+    #[test]
+    fn edge_gains_are_reciprocal() {
+        let cfg = small_cfg(GraphFamily::Full);
+        let link = D2dAnalogLink::new(&cfg, 100);
+        for t in 0..5 {
+            assert_eq!(link.gain(1, 4, t), link.gain(4, 1, t));
+            assert_eq!(link.gain(2, 2, t), 1.0);
+        }
+    }
+}

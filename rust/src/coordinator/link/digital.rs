@@ -1,21 +1,39 @@
 //! The separation-based digital pipeline shared by D-DSGD, SignSGD and QSGD
 //! (§III): per-round capacity budget R_t, per-device compression within it,
 //! error-free transport (capacity-achieving codes assumed), PS averaging.
+//!
+//! # Partial participation
+//!
+//! The same [`ParticipationSelector`] the fading analog family uses sits in
+//! front of the digital encode: an unscheduled device transmits nothing,
+//! spends no energy, and banks its gradient in its error accumulator
+//! ([`DigitalDevice::absorb`]) so the information arrives in a later round
+//! (SignSGD/QSGD keep their source papers' no-accumulation semantics and
+//! genuinely lose silent rounds). Digital devices have no CSI, so the
+//! gain-threshold policy sees unit gains and degenerates to full
+//! participation. The per-device bit budget stays Eq. 8's M-way split —
+//! the scheduler reserves every device's slot whether or not it is used.
+//! With the `Full` policy the original single-path round body runs
+//! unchanged (bit-for-bit, telemetry `participation = None`); a real
+//! policy reports the Option-typed counts the analog family already does.
 
 use crate::channel::PowerMeter;
 use crate::compress::DigitalPayload;
-use crate::config::RunConfig;
+use crate::config::{ParticipationPolicy, RunConfig};
 use crate::digital::{aggregate, capacity_bits, DigitalDevice};
 use crate::tensor::Matf;
 
 use super::super::device::DeviceSet;
-use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
+use super::super::participation::ParticipationSelector;
+use super::{LinkRound, LinkScheme, ParticipationStats, RoundCtx, RoundTelemetry};
 
 pub struct DigitalLink {
     devices: DeviceSet<DigitalDevice>,
-    /// Digital frames skip the MAC simulator, but each device still spends
-    /// ‖x_m(t)‖² = P_t per round; the meter keeps Eq. 6 auditable.
+    /// Digital frames skip the MAC simulator, but each transmitting device
+    /// still spends ‖x_m(t)‖² = P_t per round; the meter keeps Eq. 6
+    /// auditable.
     meter: PowerMeter,
+    selector: ParticipationSelector,
     channel_uses: usize,
     noise_var: f64,
     dim: usize,
@@ -36,6 +54,9 @@ impl DigitalLink {
         DigitalLink {
             devices: DeviceSet::new(states),
             meter: PowerMeter::new(cfg.devices),
+            // Same stream constant as the fading links: the same seed +
+            // policy schedules the same subsets across link families.
+            selector: ParticipationSelector::new(cfg.participation, cfg.seed ^ 0x5E1),
             channel_uses: cfg.channel_uses,
             noise_var: cfg.noise_var,
             dim,
@@ -49,23 +70,66 @@ impl LinkScheme for DigitalLink {
         debug_assert_eq!(grads.rows, m);
         // Eq. 8: this round's per-device bit budget.
         let budget = capacity_bits(self.channel_uses, m, ctx.p_t, self.noise_var);
-        let payloads: Vec<DigitalPayload> = self
-            .devices
-            .encode(|dev, state| state.transmit(grads.row(dev), budget));
-        // Record what the compressors actually spent — the budget is a
-        // bound, not an attainment; undershoot must be visible in the logs.
+
+        if self.selector.policy() == ParticipationPolicy::Full {
+            // The original always-on path, untouched (and untouchable: the
+            // seed golden pins it).
+            let payloads: Vec<DigitalPayload> = self
+                .devices
+                .encode(|dev, state| state.transmit(grads.row(dev), budget));
+            // Record what the compressors actually spent — the budget is a
+            // bound, not an attainment; undershoot must be visible in logs.
+            let bits = payloads.iter().map(|p| p.bits).fold(0.0, f64::max);
+            assert!(
+                bits <= budget * (1.0 + 1e-9) + 1e-9,
+                "compressor overshot the capacity budget: {bits} > {budget} bits"
+            );
+            self.meter.add_uniform_round(ctx.p_t);
+            return LinkRound {
+                ghat: aggregate(&payloads, self.dim),
+                telemetry: RoundTelemetry {
+                    bits_per_device: bits,
+                    amp_iterations: 0,
+                    participation: None,
+                    consensus_distance: None,
+                },
+            };
+        }
+
+        // Partial participation: no CSI in the digital pipe, so selection
+        // sees unit gains (gain-threshold degenerates to full).
+        let scheduled = self.selector.select(ctx.t, &vec![1.0; m]);
+        let frames: Vec<Option<DigitalPayload>> = self.devices.encode(|dev, state| {
+            if scheduled[dev] {
+                Some(state.transmit(grads.row(dev), budget))
+            } else {
+                state.absorb(grads.row(dev));
+                None
+            }
+        });
+        let mut stats = ParticipationStats::default();
+        for (dev, frame) in frames.iter().enumerate() {
+            if frame.is_some() {
+                stats.transmitting += 1;
+                self.meter.add(dev, ctx.p_t);
+            } else {
+                stats.not_scheduled += 1;
+            }
+        }
+        self.meter.end_round();
+        let payloads: Vec<DigitalPayload> = frames.into_iter().flatten().collect();
         let bits = payloads.iter().map(|p| p.bits).fold(0.0, f64::max);
         assert!(
             bits <= budget * (1.0 + 1e-9) + 1e-9,
             "compressor overshot the capacity budget: {bits} > {budget} bits"
         );
-        self.meter.add_uniform_round(ctx.p_t);
         LinkRound {
             ghat: aggregate(&payloads, self.dim),
             telemetry: RoundTelemetry {
                 bits_per_device: bits,
                 amp_iterations: 0,
-                participation: None,
+                participation: Some(stats),
+                consensus_distance: None,
             },
         }
     }
@@ -137,6 +201,67 @@ mod tests {
         link.round(&RoundCtx { t: 0, p_t: 300.0, deadline: None }, &g);
         link.round(&RoundCtx { t: 1, p_t: 100.0, deadline: None }, &g);
         assert_eq!(link.measured_avg_power(), vec![200.0; 4]);
+    }
+
+    #[test]
+    fn uniform_k_schedules_exactly_k_and_banks_silent_gradients() {
+        let d = 256;
+        let cfg = RunConfig {
+            participation: crate::config::ParticipationPolicy::UniformK(2),
+            ..link_cfg(Scheme::DDsgd)
+        };
+        let mut link = DigitalLink::new(&cfg, d);
+        let g = grads(4, d);
+        for t in 0..3 {
+            let out = link.round(&RoundCtx { t, p_t: 500.0, deadline: None }, &g);
+            let stats = out.telemetry.participation.expect("scheduled link reports stats");
+            assert_eq!(stats.transmitting, 2, "t={t}");
+            assert_eq!(stats.not_scheduled, 2, "t={t}");
+            assert_eq!(stats.total(), 4, "t={t}");
+        }
+        // Silent D-DSGD devices banked their gradients (error accumulation
+        // engaged beyond the compression residue alone: a fully-banked
+        // gradient has full norm).
+        assert!(link.accumulator_norm() > 0.0);
+        // Only transmitting devices spent energy: with K = 2 of 4 each
+        // round, the average per-device power is around P_t/2, never P_t
+        // for everyone.
+        let powers = link.measured_avg_power();
+        assert!(powers.iter().sum::<f64>() < 4.0 * 500.0 - 1e-9);
+        for &p in &powers {
+            assert!(p <= 500.0 * (1.0 + 1e-9), "avg power {p}");
+        }
+    }
+
+    #[test]
+    fn gain_threshold_without_csi_degenerates_to_full() {
+        // Digital devices have no channel gains; the selector sees h ≡ 1,
+        // so any threshold ≤ 1 schedules everyone (and reports the counts,
+        // because a policy *is* configured).
+        let d = 128;
+        let cfg = RunConfig {
+            participation: crate::config::ParticipationPolicy::GainThreshold(0.5),
+            ..link_cfg(Scheme::SignSgd)
+        };
+        let mut link = DigitalLink::new(&cfg, d);
+        let out = link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(4, d));
+        let stats = out.telemetry.participation.unwrap();
+        assert_eq!(stats.transmitting, 4);
+        assert_eq!(stats.not_scheduled, 0);
+    }
+
+    #[test]
+    fn signsgd_silent_rounds_do_not_accumulate() {
+        // The baselines keep their papers' no-accumulation semantics: a
+        // silent round genuinely loses the gradient.
+        let d = 128;
+        let cfg = RunConfig {
+            participation: crate::config::ParticipationPolicy::UniformK(1),
+            ..link_cfg(Scheme::SignSgd)
+        };
+        let mut link = DigitalLink::new(&cfg, d);
+        link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(4, d));
+        assert_eq!(link.accumulator_norm(), 0.0);
     }
 
     #[test]

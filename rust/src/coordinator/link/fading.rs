@@ -85,7 +85,8 @@ impl FadingAnalogLink {
             ps_mr,
             mean_removal_rounds: cfg.mean_removal_rounds,
             channel_uses: cfg.channel_uses,
-            fading: FadingProcess::new(cfg.fading, cfg.seed ^ 0xFAD1),
+            // rho = 0 (the default) takes the i.i.d. draw path bit-for-bit.
+            fading: FadingProcess::with_rho(cfg.fading, cfg.seed ^ 0xFAD1, cfg.fading_rho),
             selector: ParticipationSelector::new(cfg.participation, cfg.seed ^ 0x5E1),
             latency: LatencyModel::new(cfg.latency_mean_secs, cfg.seed ^ 0x1A7),
             csi_threshold: cfg.csi_threshold,
@@ -220,6 +221,7 @@ impl LinkScheme for FadingAnalogLink {
                 bits_per_device: 0.0,
                 amp_iterations,
                 participation: Some(stats),
+                consensus_distance: None,
             },
         }
     }

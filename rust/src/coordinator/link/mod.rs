@@ -51,18 +51,33 @@
 //! The trainer ([`crate::coordinator::Trainer`]) is scheme-agnostic: it
 //! builds the link once via [`for_config`] and drives
 //! `gradients → link.round() → optimizer` without ever matching on
-//! [`Scheme`]. New scenarios — D2D topologies, decentralized OTA — plug in
-//! as new `LinkScheme` implementations without touching the trainer loop.
+//! [`Scheme`]. New scenarios plug in as new `LinkScheme` implementations
+//! without touching the trainer loop.
+//!
+//! # Decentralized links (per-device replicas)
+//!
+//! The original contract also assumed one global model at the PS. The D2D
+//! link ([`D2dAnalogLink`]) breaks that: each device holds its own model
+//! replica and the "PS reconstruction" step becomes per-receiver
+//! neighborhood decoding plus a consensus mixing step. Two default-`None`
+//! hooks keep the trainer scheme-agnostic: [`LinkScheme::replicas`] hands
+//! the trainer the M per-device models the round's gradients must be
+//! evaluated at, and [`LinkScheme::replica_average`] hands back the
+//! consensus model the log evaluates — when both return `None` (every
+//! PS-centric link) the trainer's original single-model path runs
+//! bit-for-bit.
 //!
 //! [`DeviceSet::encode`]: crate::coordinator::device::DeviceSet::encode
 //! [`Scheme`]: crate::config::Scheme
 
 pub mod analog;
+pub mod d2d;
 pub mod digital;
 pub mod error_free;
 pub mod fading;
 
 pub use analog::AnalogLink;
+pub use d2d::D2dAnalogLink;
 pub use digital::DigitalLink;
 pub use error_free::ErrorFreeLink;
 pub use fading::FadingAnalogLink;
@@ -122,6 +137,11 @@ pub struct RoundTelemetry {
     /// Participation-aware links: where the M devices went this round.
     /// `None` for links that do not model participation.
     pub participation: Option<ParticipationStats>,
+    /// Decentralized links: root-mean-square replica disagreement
+    /// √((1/M)Σ‖θ_i − θ̄‖²) after the round's mixing + local steps.
+    /// `None` for PS-centric links (one global model — disagreement is not
+    /// a defined quantity, not a measured 0).
+    pub consensus_distance: Option<f64>,
 }
 
 /// The PS-side result of one round.
@@ -146,6 +166,22 @@ pub trait LinkScheme {
     fn measured_avg_power(&self) -> Vec<f64>;
 
     fn name(&self) -> &'static str;
+
+    /// Decentralized links: the M per-device model replicas the round's
+    /// gradients must be evaluated at (row m = device m's θ). `None` for
+    /// PS-centric links, where every device shares the PS model — the
+    /// trainer then keeps its original single-model path bit-for-bit.
+    fn replicas(&self) -> Option<&Matf> {
+        None
+    }
+
+    /// Decentralized links: the replica-average model θ̄ (f64-accumulated),
+    /// which the trainer adopts as the evaluation model after each round —
+    /// replica links apply their own mixing + local optimizer steps inside
+    /// [`LinkScheme::round`], so the PS optimizer must not also step.
+    fn replica_average(&self) -> Option<Vec<f32>> {
+        None
+    }
 }
 
 /// Build the link implementation serving `cfg.scheme` (the coordinator-side
@@ -159,6 +195,7 @@ pub fn for_config(cfg: &RunConfig, dim: usize) -> Box<dyn LinkScheme> {
             let csi = cfg.scheme == Scheme::FadingADsgd;
             Box::new(FadingAnalogLink::new(cfg, dim, csi))
         }
+        LinkKind::D2d => Box::new(D2dAnalogLink::new(cfg, dim)),
     }
 }
 
@@ -175,6 +212,7 @@ mod tests {
             (Scheme::ADsgd, "A-DSGD"),
             (Scheme::FadingADsgd, "fading-A-DSGD"),
             (Scheme::BlindADsgd, "blind-A-DSGD"),
+            (Scheme::D2dADsgd, "d2d-A-DSGD"),
             (Scheme::DDsgd, "digital"),
             (Scheme::SignSgd, "digital"),
             (Scheme::Qsgd, "digital"),

@@ -31,6 +31,12 @@ pub struct RoundRecord {
     /// distinct from `Some` with zero transmitting devices (an all-silent
     /// round). CSV serializes `None` as NaN, never 0.
     pub participation: Option<ParticipationStats>,
+    /// Root-mean-square replica disagreement for decentralized links
+    /// (√((1/M)Σ‖θ_i − θ̄‖²) after the round). `None` for PS-centric
+    /// schemes — one global model has no disagreement to measure, which is
+    /// not the same as a measured 0 (exact consensus). CSV serializes
+    /// `None` as NaN.
+    pub consensus_distance: Option<f64>,
 }
 
 /// Full log of a run plus final power audit.
@@ -89,6 +95,7 @@ impl TrainLog {
                 "round_secs",
                 "participating",
                 "dropped_stragglers",
+                "consensus_distance",
             ],
         )?;
         for r in &self.records {
@@ -108,6 +115,7 @@ impl TrainLog {
                 r.round_secs,
                 participating,
                 stragglers,
+                r.consensus_distance.unwrap_or(f64::NAN),
             ])?;
         }
         w.flush()
@@ -136,6 +144,9 @@ impl TrainLog {
                 line.push_str(&format!(" straggled={}", p.dropped_stragglers));
             }
         }
+        if let Some(c) = r.consensus_distance {
+            line.push_str(&format!(" cons={c:.4}"));
+        }
         println!("{line}");
         let _ = std::io::stdout().flush();
     }
@@ -157,6 +168,7 @@ mod tests {
             accumulator_norm: 0.0,
             round_secs: 0.01,
             participation: None,
+            consensus_distance: None,
         }
     }
 
@@ -201,6 +213,8 @@ mod tests {
             silenced_low_gain: 2,
             dropped_stragglers: 3,
         });
+        // Exact consensus (a real measured 0) vs not-modeled (NaN).
+        with_stats.consensus_distance = Some(0.0);
         let log = TrainLog {
             label: "t".into(),
             records: vec![record(0, 0.3), with_stats],
@@ -214,12 +228,16 @@ mod tests {
         let header = &rows[0];
         let i_part = header.iter().position(|h| h == "participating").unwrap();
         let i_drop = header.iter().position(|h| h == "dropped_stragglers").unwrap();
-        // Row 1: scheme without participation — NaN, not 0.
+        let i_cons = header.iter().position(|h| h == "consensus_distance").unwrap();
+        // Row 1: scheme without participation/consensus — NaN, not 0.
         assert_eq!(rows[1][i_part], "NaN");
         assert_eq!(rows[1][i_drop], "NaN");
-        // Row 2: all-silent round — a real measured 0 (and 3 stragglers).
+        assert_eq!(rows[1][i_cons], "NaN");
+        // Row 2: all-silent round — a real measured 0 (and 3 stragglers),
+        // and an exact-consensus 0 distinct from the absent NaN above.
         assert_eq!(rows[2][i_part], "0");
         assert_eq!(rows[2][i_drop], "3");
+        assert_eq!(rows[2][i_cons], "0");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -12,8 +12,8 @@ pub mod participation;
 pub use device::DeviceSet;
 pub use grad::{GradientBackend, RustBackend};
 pub use link::{
-    AnalogLink, DigitalLink, ErrorFreeLink, FadingAnalogLink, LinkRound, LinkScheme,
-    ParticipationStats, RoundCtx,
+    AnalogLink, D2dAnalogLink, DigitalLink, ErrorFreeLink, FadingAnalogLink, LinkRound,
+    LinkScheme, ParticipationStats, RoundCtx,
 };
 pub use metrics::{RoundRecord, TrainLog};
 pub use orchestrator::Trainer;

@@ -90,16 +90,33 @@ impl Trainer {
             let round_start = Instant::now();
             let p_t = power.p(t);
 
-            // 1. Device gradient computation (parallel fan-out).
-            let grads = self
-                .backend
-                .per_device_gradients(&params, &self.corpus.train, &self.shards);
+            // 1. Device gradient computation (parallel fan-out). A
+            // decentralized link exposes per-device model replicas; each
+            // device's gradient is then taken at its own θ_i. PS-centric
+            // links return None and keep the shared-model path bit-for-bit.
+            let grads = match link.replicas() {
+                Some(replicas) => self.backend.per_device_gradients_at(
+                    replicas,
+                    &self.corpus.train,
+                    &self.shards,
+                ),
+                None => self
+                    .backend
+                    .per_device_gradients(&params, &self.corpus.train, &self.shards),
+            };
 
-            // 2. Transmission + PS reconstruction.
+            // 2. Transmission + reconstruction (for a decentralized link
+            // this includes the consensus mixing and per-replica local
+            // steps).
             let out = link.round(&RoundCtx { t, p_t, deadline: self.cfg.deadline() }, &grads);
 
-            // 3. PS update: θ_{t+1} = θ_t − η·ĝ (through ADAM).
-            optimizer.step(&mut params, &out.ghat);
+            // 3. PS update: θ_{t+1} = θ_t − η·ĝ (through ADAM) — or, for
+            // replica links, adopt the consensus average as the evaluation
+            // model (the link already stepped its per-device optimizers).
+            match link.replica_average() {
+                Some(avg) => params = avg,
+                None => optimizer.step(&mut params, &out.ghat),
+            }
 
             // 4. Metrics.
             let evaluate = t % self.cfg.eval_every == 0 || t + 1 == self.cfg.iterations;
@@ -122,6 +139,7 @@ impl Trainer {
                 accumulator_norm: link.accumulator_norm(),
                 round_secs: round_start.elapsed().as_secs_f64(),
                 participation: out.telemetry.participation,
+                consensus_distance: out.telemetry.consensus_distance,
             };
             if self.verbose && evaluate {
                 log.print_progress(&record);

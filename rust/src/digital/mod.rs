@@ -52,6 +52,18 @@ impl DigitalDevice {
         }
     }
 
+    /// A round in which this device is not scheduled: nothing is
+    /// transmitted, so D-DSGD banks the whole gradient in its error
+    /// accumulator — Δ(t+1) = g + Δ(t) — and delivers it once scheduled
+    /// again. The SignSGD/QSGD baselines carry no accumulator (faithful to
+    /// their source papers), so a silent round genuinely loses their
+    /// gradient.
+    pub fn absorb(&mut self, g: &[f32]) {
+        if let Some(acc) = &mut self.accum {
+            acc.bank(g);
+        }
+    }
+
     pub fn accumulator_norm(&self) -> f64 {
         self.accum.as_ref().map(|a| a.norm()).unwrap_or(0.0)
     }

@@ -7,7 +7,7 @@
 //! runs them to completion and writes `results/figN*/`.
 
 use crate::config::presets::{self, MODEL_DIM};
-use crate::config::{PowerSchedule, RunConfig, Scheme};
+use crate::config::{GraphFamily, PowerSchedule, RunConfig, Scheme};
 
 use super::runner::ExperimentSpec;
 
@@ -197,6 +197,32 @@ pub fn fading(full: bool) -> ExperimentSpec {
     }
 }
 
+/// Decentralized D2D sweep (beyond the source paper; Xing, Simeone & Bi
+/// 2021): star A-DSGD vs over-the-air consensus on every graph family at
+/// matched power/bandwidth. One axis — the communication topology — while
+/// M, s, k, P̄ and the data split stay fixed, so the accuracy/consensus
+/// gap isolates what decentralization costs.
+pub fn d2d(full: bool) -> ExperimentSpec {
+    let mut runs: Vec<(String, RunConfig)> = vec![(
+        "star A-DSGD (PS)".into(),
+        presets::d2d_star_anchor(full),
+    )];
+    for family in [
+        GraphFamily::Full,
+        GraphFamily::Ring,
+        GraphFamily::Torus,
+        GraphFamily::ErdosRenyi,
+    ] {
+        let cfg = presets::d2d_sweep(family, full);
+        runs.push((format!("D2D {}", cfg.topology.describe()), cfg));
+    }
+    ExperimentSpec {
+        id: "d2d".into(),
+        title: "D2D over-the-air consensus: graph families at matched power/bandwidth".into(),
+        runs,
+    }
+}
+
 /// Fig. 7b view: accuracy against transmitted symbols t·s.
 pub fn print_fig7b(logs: &[crate::coordinator::TrainLog], specs: &[(String, RunConfig)]) {
     println!("\nFig. 7b — test accuracy vs total transmitted symbols (t·s)");
@@ -230,6 +256,7 @@ mod tests {
                 fig6(full),
                 fig7(full),
                 fading(full),
+                d2d(full),
             ] {
                 assert!(!spec.runs.is_empty(), "{}", spec.id);
                 for (label, cfg) in &spec.runs {
@@ -243,6 +270,24 @@ mod tests {
     #[test]
     fn fig2_has_five_schemes() {
         assert_eq!(fig2(false, false).runs.len(), 5);
+    }
+
+    #[test]
+    fn d2d_covers_star_and_four_families() {
+        let spec = d2d(false);
+        assert_eq!(spec.runs.len(), 5);
+        assert!(spec.runs[0].1.scheme == crate::config::Scheme::ADsgd);
+        for (label, cfg) in &spec.runs[1..] {
+            assert_eq!(cfg.scheme, crate::config::Scheme::D2dADsgd, "{label}");
+            // Matched power/bandwidth against the anchor.
+            assert_eq!(cfg.channel_uses, spec.runs[0].1.channel_uses);
+            assert_eq!(cfg.pbar, spec.runs[0].1.pbar);
+            assert_eq!(cfg.devices, spec.runs[0].1.devices);
+        }
+        let labels: Vec<&str> = spec.runs.iter().map(|(l, _)| l.as_str()).collect();
+        assert!(labels.iter().any(|l| l.contains("ring")));
+        assert!(labels.iter().any(|l| l.contains("torus")));
+        assert!(labels.iter().any(|l| l.contains("er")));
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! Shared experiment runner: execute a set of labeled runs, write one CSV
 //! per run plus a combined summary, and print the paper-style series.
+//!
+//! Runs within a spec are independent seeded trainers, so quiet
+//! invocations fan them out across the thread pool
+//! ([`crate::util::threadpool::par_map`]); every run's randomness is
+//! derived from its own config, so the parallel path produces CSV and
+//! summary files whose *contents* are identical to the sequential path
+//! (asserted in a test — only the wall-clock `round_secs` column differs,
+//! timing being timing). Verbose runs stay sequential: per-round progress
+//! lines from concurrent trainers would interleave into noise.
 
 use crate::config::RunConfig;
 use crate::coordinator::{TrainLog, Trainer};
 use crate::model::PARAM_DIM;
 use crate::util::csv::CsvWriter;
+use crate::util::threadpool::{default_workers, par_map};
 
 /// One experiment = one figure: several labeled runs over the same axis.
 pub struct ExperimentSpec {
@@ -15,25 +25,52 @@ pub struct ExperimentSpec {
     pub runs: Vec<(String, RunConfig)>,
 }
 
-/// Execute every run sequentially, writing `results/<id>/<label>.csv`.
+/// Execute a spec, writing `results/<id>/<label>.csv`. Quiet runs execute
+/// in parallel across the spec's runs; verbose runs stay sequential so the
+/// per-round progress stream remains readable.
 pub fn run_experiment(spec: &ExperimentSpec, out_dir: &str, verbose: bool) -> Vec<TrainLog> {
+    let workers = if verbose {
+        1
+    } else {
+        default_workers(spec.runs.len())
+    };
+    run_experiment_with_workers(spec, out_dir, verbose, workers)
+}
+
+/// Execute a spec with an explicit run-level worker count (`1` forces the
+/// sequential path; the byte-identity test compares the two).
+pub fn run_experiment_with_workers(
+    spec: &ExperimentSpec,
+    out_dir: &str,
+    verbose: bool,
+    workers: usize,
+) -> Vec<TrainLog> {
     println!("\n### {} — {}", spec.id, spec.title);
-    let mut logs = Vec::with_capacity(spec.runs.len());
-    for (label, cfg) in &spec.runs {
-        cfg.validate(PARAM_DIM).expect("invalid experiment config");
-        println!(
-            "--- run `{label}` [{} link]: {}",
-            cfg.scheme.kind().name(),
-            cfg.summary()
-        );
-        let mut trainer = Trainer::new(cfg.clone()).expect("trainer construction");
-        trainer.verbose = verbose;
-        let mut log = trainer.run();
-        log.label = label.clone();
+    let logs: Vec<TrainLog> = if workers <= 1 {
+        // Sequential: header before each run so verbose progress lines
+        // land under it.
+        spec.runs
+            .iter()
+            .map(|(label, cfg)| {
+                print_run_header(label, cfg);
+                execute_run(label, cfg, verbose)
+            })
+            .collect()
+    } else {
+        let logs = par_map(spec.runs.len(), workers, |i| {
+            let (label, cfg) = &spec.runs[i];
+            execute_run(label, cfg, verbose)
+        });
+        for (label, cfg) in &spec.runs {
+            print_run_header(label, cfg);
+        }
+        logs
+    };
+    for ((label, _), log) in spec.runs.iter().zip(&logs) {
         let path = format!("{out_dir}/{}/{}.csv", spec.id, sanitize(label));
         log.write_csv(&path).expect("write csv");
         println!(
-            "    final acc {:.4} (best {:.4}) in {:.1}s → {path}",
+            "    `{label}`: final acc {:.4} (best {:.4}) in {:.1}s → {path}",
             log.final_accuracy,
             log.best_accuracy(),
             log.total_secs
@@ -42,11 +79,27 @@ pub fn run_experiment(spec: &ExperimentSpec, out_dir: &str, verbose: bool) -> Ve
             log.power_constraint_ok(1e-6),
             "power constraint violated in `{label}`"
         );
-        logs.push(log);
     }
     write_summary(spec, &logs, out_dir);
     print_series(spec, &logs);
     logs
+}
+
+fn print_run_header(label: &str, cfg: &RunConfig) {
+    println!(
+        "--- run `{label}` [{} link]: {}",
+        cfg.scheme.kind().name(),
+        cfg.summary()
+    );
+}
+
+fn execute_run(label: &str, cfg: &RunConfig, verbose: bool) -> TrainLog {
+    cfg.validate(PARAM_DIM).expect("invalid experiment config");
+    let mut trainer = Trainer::new(cfg.clone()).expect("trainer construction");
+    trainer.verbose = verbose;
+    let mut log = trainer.run();
+    log.label = label.to_string();
+    log
 }
 
 fn sanitize(label: &str) -> String {
@@ -154,5 +207,77 @@ mod tests {
         assert!(dir.join("t0/adsgd.csv").exists());
         assert!(dir.join("t0/summary.csv").exists());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The run-parallel path must produce the same files as the sequential
+    /// path: summary.csv byte-for-byte, per-run CSVs identical in every
+    /// column except the wall-clock `round_secs` (timing is timing).
+    #[test]
+    fn parallel_runs_match_sequential_output() {
+        let spec = || {
+            let mut cfg = presets::smoke();
+            cfg.iterations = 4;
+            cfg.eval_every = 2;
+            ExperimentSpec {
+                id: "tpar".into(),
+                title: "parallel-vs-sequential".into(),
+                runs: vec![
+                    (
+                        "error-free".into(),
+                        RunConfig {
+                            scheme: Scheme::ErrorFree,
+                            ..cfg.clone()
+                        },
+                    ),
+                    (
+                        "signsgd".into(),
+                        RunConfig {
+                            scheme: Scheme::SignSgd,
+                            ..cfg.clone()
+                        },
+                    ),
+                    (
+                        "qsgd".into(),
+                        RunConfig {
+                            scheme: Scheme::Qsgd,
+                            ..cfg
+                        },
+                    ),
+                ],
+            }
+        };
+        let seq_dir = std::env::temp_dir().join("ota_runner_seq");
+        let par_dir = std::env::temp_dir().join("ota_runner_par");
+        run_experiment_with_workers(&spec(), seq_dir.to_str().unwrap(), false, 1);
+        run_experiment_with_workers(&spec(), par_dir.to_str().unwrap(), false, 4);
+
+        // summary.csv is fully deterministic → byte identity.
+        let read = |p: &std::path::Path| std::fs::read(p).expect("read csv");
+        assert_eq!(
+            read(&seq_dir.join("tpar/summary.csv")),
+            read(&par_dir.join("tpar/summary.csv")),
+            "summary.csv must be byte-identical"
+        );
+        // Per-run CSVs: identical after masking the timing column.
+        for label in ["error-free", "signsgd", "qsgd"] {
+            let seq = crate::util::csv::read_csv(&seq_dir.join(format!("tpar/{label}.csv")))
+                .expect("seq csv");
+            let par = crate::util::csv::read_csv(&par_dir.join(format!("tpar/{label}.csv")))
+                .expect("par csv");
+            assert_eq!(seq.len(), par.len(), "{label}: row count");
+            let t_col = seq[0]
+                .iter()
+                .position(|h| h == "round_secs")
+                .expect("round_secs column");
+            for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+                for (c, (va, vb)) in a.iter().zip(b).enumerate() {
+                    if c != t_col {
+                        assert_eq!(va, vb, "{label}: row {i} col {c}");
+                    }
+                }
+            }
+        }
+        std::fs::remove_dir_all(&seq_dir).ok();
+        std::fs::remove_dir_all(&par_dir).ok();
     }
 }

@@ -18,6 +18,12 @@
 //!   pipe, and the noiseless **error-free shared link** benchmark.
 //! * The **Gaussian MAC** simulator with per-device power metering
 //!   ([`channel`]) and the paper's power-allocation schedules (Eq. 45a–c).
+//! * **Decentralized D2D consensus** ([`topology`],
+//!   `coordinator::link::d2d`): no parameter server — per-device model
+//!   replicas over seeded graph families (ring/torus/Erdős–Rényi/full/
+//!   star) with Metropolis mixing, over-the-air neighborhood gradient
+//!   averaging, and consensus-distance telemetry (Xing, Simeone & Bi
+//!   2021).
 //! * A synchronous **coordinator** (leader/worker over std threads) driving
 //!   rounds end-to-end ([`coordinator`]): a scheme-agnostic trainer loop
 //!   over pluggable transmission pipelines ([`coordinator::link`]), with
@@ -44,6 +50,7 @@ pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod tensor;
+pub mod topology;
 pub mod util;
 
 /// Crate version string (matches Cargo.toml).

@@ -7,7 +7,7 @@
 //!   theory    Theorem-1 convergence-bound curves
 //!   info      environment + artifact status
 
-use ota_dsgd::config::{presets, Backend, PowerSchedule, RunConfig, Scheme};
+use ota_dsgd::config::{presets, Backend, GraphFamily, PowerSchedule, RunConfig, Scheme};
 use ota_dsgd::coordinator::{RustBackend, Trainer};
 use ota_dsgd::experiments::{figures, runner, theory};
 use ota_dsgd::model::PARAM_DIM;
@@ -21,14 +21,15 @@ fn usage() -> Usage {
         about: "Over-the-air distributed SGD at the wireless edge (A-DSGD / D-DSGD)",
         subcommands: &[
             ("train", "run one training job (see options)"),
-            ("fig <2|3|4|5|6|7|fading>", "regenerate a paper figure's series"),
+            ("fig <2|3|4|5|6|7|fading|d2d>", "regenerate a paper figure's series"),
             ("all", "regenerate every figure"),
             ("ablate [name]", "ablations: mean-removal | sparsity | amp-threshold | analog-power"),
             ("theory", "Theorem-1 convergence-bound curves"),
             ("info", "platform, artifacts, configuration echo"),
         ],
         options: &[
-            ("--scheme <name>", "adsgd|fading|blind|ddsgd|signsgd|qsgd|error-free (train)"),
+            ("--scheme <name>", "adsgd|fading|blind|d2d|ddsgd|signsgd|qsgd|error-free (train)"),
+            ("--topology <family>", "full|ring|torus|er|star D2D graph (train)"),
             ("--devices <M>", "number of devices"),
             ("--local-samples <B>", "samples per device"),
             ("--channel-uses <s>", "channel uses per iteration"),
@@ -80,6 +81,10 @@ fn config_from_args(args: &Args) -> RunConfig {
     }
     if let Some(p) = args.get("power") {
         cfg.power = PowerSchedule::parse(p).unwrap_or_else(|| panic!("unknown schedule {p}"));
+    }
+    if let Some(f) = args.get("topology") {
+        cfg.topology.family =
+            GraphFamily::parse(f).unwrap_or_else(|| panic!("unknown graph family {f}"));
     }
     cfg.devices = args.usize("devices", cfg.devices);
     cfg.local_samples = args.usize("local-samples", cfg.local_samples);
@@ -142,7 +147,11 @@ fn cmd_fig(args: &Args) {
         runner::run_experiment(&figures::fading(full), out, verbose);
         return;
     }
-    let n: usize = which.parse().expect("figure number or `fading`");
+    if which == "d2d" {
+        runner::run_experiment(&figures::d2d(full), out, verbose);
+        return;
+    }
+    let n: usize = which.parse().expect("figure number, `fading` or `d2d`");
     match n {
         2 => {
             let spec = figures::fig2(args.flag("noniid"), full);
@@ -169,7 +178,7 @@ fn cmd_fig(args: &Args) {
             let logs = runner::run_experiment(&spec, out, verbose);
             figures::print_fig7b(&logs, &spec.runs);
         }
-        other => panic!("no figure {other}; valid: 2..=7 or `fading`"),
+        other => panic!("no figure {other}; valid: 2..=7, `fading` or `d2d`"),
     }
 }
 
@@ -185,6 +194,7 @@ fn cmd_all(args: &Args) {
         figures::fig5(full),
         figures::fig6(full),
         figures::fading(full),
+        figures::d2d(full),
     ] {
         runner::run_experiment(&spec, out, verbose);
     }

@@ -1,0 +1,373 @@
+//! Deterministic construction of the D2D communication graphs.
+//!
+//! Every family is built as a pure function of `(TopologyConfig, M, seed)`,
+//! with any randomness (Erdős–Rényi edges) drawn through
+//! [`crate::util::rng::counter_rng`] keyed by the canonical unordered pair
+//! id — the graph does not depend on construction order, and the same seed
+//! always yields the same adjacency.
+
+use crate::config::{GraphFamily, TopologyConfig};
+use crate::util::rng::counter_rng;
+
+/// An undirected, connected device-to-device communication graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    family: GraphFamily,
+    /// Sorted neighbor lists, no self loops.
+    neighbors: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build the configured family over `m` devices. `fallback_seed` is
+    /// used when the topology config leaves its seed at 0 (derive from the
+    /// run seed).
+    pub fn build(topo: &TopologyConfig, m: usize, fallback_seed: u64) -> Graph {
+        assert!(m >= 2, "a D2D graph needs at least two devices");
+        let seed = if topo.seed != 0 {
+            topo.seed
+        } else {
+            fallback_seed
+        };
+        let neighbors = match topo.family {
+            GraphFamily::Full => full(m),
+            GraphFamily::Ring => ring(m, topo.degree),
+            GraphFamily::Torus => torus(m),
+            GraphFamily::ErdosRenyi => erdos_renyi(m, topo.p, seed),
+            GraphFamily::Star => star(m),
+        };
+        let g = Graph {
+            family: topo.family,
+            neighbors,
+        };
+        debug_assert!(g.is_connected(), "{:?} graph must come out connected", topo.family);
+        g
+    }
+
+    pub fn family(&self) -> GraphFamily {
+        self.family
+    }
+
+    /// Number of devices M.
+    pub fn devices(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Sorted open neighborhood of device `i` (excludes `i`).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.neighbors[i]
+    }
+
+    /// Sorted closed neighborhood of device `i` (includes `i`): the set
+    /// whose superposed frames receiver `i` decodes each round.
+    pub fn closed_neighborhood(&self, i: usize) -> Vec<usize> {
+        let mut hood = Vec::with_capacity(self.neighbors[i].len() + 1);
+        let mut inserted = false;
+        for &j in &self.neighbors[i] {
+            if !inserted && j > i {
+                hood.push(i);
+                inserted = true;
+            }
+            hood.push(j);
+        }
+        if !inserted {
+            hood.push(i);
+        }
+        hood
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    /// Canonical id of the unordered pair {i, j}: both directions of an
+    /// edge map to the same id, which keys the reciprocal per-edge gain
+    /// process (h_ij = h_ji).
+    pub fn pair_id(&self, i: usize, j: usize) -> u64 {
+        let m = self.devices() as u64;
+        let (lo, hi) = if i <= j { (i as u64, j as u64) } else { (j as u64, i as u64) };
+        lo * m + hi
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        let m = self.devices();
+        let mut seen = vec![false; m];
+        let mut queue = vec![0usize];
+        seen[0] = true;
+        let mut reached = 1usize;
+        while let Some(i) = queue.pop() {
+            for &j in &self.neighbors[i] {
+                if !seen[j] {
+                    seen[j] = true;
+                    reached += 1;
+                    queue.push(j);
+                }
+            }
+        }
+        reached == m
+    }
+}
+
+/// Turn an edge set into sorted, deduplicated neighbor lists.
+fn to_neighbors(m: usize, edges: &[(usize, usize)]) -> Vec<Vec<usize>> {
+    let mut nb = vec![Vec::new(); m];
+    for &(a, b) in edges {
+        if a != b {
+            nb[a].push(b);
+            nb[b].push(a);
+        }
+    }
+    for list in nb.iter_mut() {
+        list.sort_unstable();
+        list.dedup();
+    }
+    nb
+}
+
+fn full(m: usize) -> Vec<Vec<usize>> {
+    (0..m)
+        .map(|i| (0..m).filter(|&j| j != i).collect())
+        .collect()
+}
+
+/// Cycle with `degree` neighbors on each side (degree 1 = plain ring).
+/// Offsets that wrap past the antipode are deduplicated, so any degree
+/// < M stays valid.
+fn ring(m: usize, degree: usize) -> Vec<Vec<usize>> {
+    let mut edges = Vec::new();
+    for i in 0..m {
+        for d in 1..=degree {
+            edges.push((i, (i + d) % m));
+        }
+    }
+    to_neighbors(m, &edges)
+}
+
+/// 2-D torus on the most-square factorization r × c of M (largest divisor
+/// r <= sqrt(M)). M prime gives r = 1, which degenerates to a ring.
+fn torus(m: usize) -> Vec<Vec<usize>> {
+    let mut r = 1;
+    let mut d = 1;
+    while d * d <= m {
+        if m % d == 0 {
+            r = d;
+        }
+        d += 1;
+    }
+    let c = m / r;
+    let mut edges = Vec::new();
+    for row in 0..r {
+        for col in 0..c {
+            let i = row * c + col;
+            edges.push((i, row * c + (col + 1) % c)); // right
+            edges.push((i, ((row + 1) % r) * c + col)); // down
+        }
+    }
+    to_neighbors(m, &edges)
+}
+
+fn star(m: usize) -> Vec<Vec<usize>> {
+    let edges: Vec<(usize, usize)> = (1..m).map(|i| (0, i)).collect();
+    to_neighbors(m, &edges)
+}
+
+/// G(M, p) with counter-based edge draws; deterministically resampled with
+/// a fresh attempt salt until connected (up to 100 attempts), then — as a
+/// last resort for very sparse p — minimally augmented by linking the
+/// connected components' smallest members in a chain.
+fn erdos_renyi(m: usize, p: f64, seed: u64) -> Vec<Vec<usize>> {
+    let sample = |attempt: u64| -> Vec<Vec<usize>> {
+        let mut edges = Vec::new();
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let pair = (i * m + j) as u64;
+                let mut rng = counter_rng(seed, 0xE2D0_0001, pair, attempt);
+                if rng.f64() < p {
+                    edges.push((i, j));
+                }
+            }
+        }
+        to_neighbors(m, &edges)
+    };
+    let mut last = sample(0);
+    for attempt in 0..100u64 {
+        let nb = if attempt == 0 { last.clone() } else { sample(attempt) };
+        let g = Graph {
+            family: GraphFamily::ErdosRenyi,
+            neighbors: nb.clone(),
+        };
+        if g.is_connected() {
+            return nb;
+        }
+        last = nb;
+    }
+    augment_connected(m, last)
+}
+
+/// Connect the components of a disconnected neighbor structure by chaining
+/// their smallest members (deterministic, adds the minimum number of edges).
+fn augment_connected(m: usize, mut nb: Vec<Vec<usize>>) -> Vec<Vec<usize>> {
+    let mut comp = vec![usize::MAX; m];
+    let mut reps = Vec::new();
+    for start in 0..m {
+        if comp[start] != usize::MAX {
+            continue;
+        }
+        let id = reps.len();
+        reps.push(start);
+        comp[start] = id;
+        let mut queue = vec![start];
+        while let Some(i) = queue.pop() {
+            for &j in &nb[i] {
+                if comp[j] == usize::MAX {
+                    comp[j] = id;
+                    queue.push(j);
+                }
+            }
+        }
+    }
+    for pair in reps.windows(2) {
+        nb[pair[0]].push(pair[1]);
+        nb[pair[1]].push(pair[0]);
+    }
+    for list in nb.iter_mut() {
+        list.sort_unstable();
+        list.dedup();
+    }
+    nb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MixingRule;
+
+    fn topo(family: GraphFamily) -> TopologyConfig {
+        TopologyConfig {
+            family,
+            degree: 1,
+            p: 0.4,
+            mixing: MixingRule::Metropolis,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn full_graph_everyone_adjacent() {
+        let g = Graph::build(&topo(GraphFamily::Full), 6, 1);
+        for i in 0..6 {
+            assert_eq!(g.degree(i), 5);
+            assert_eq!(g.closed_neighborhood(i), (0..6).collect::<Vec<_>>());
+        }
+        assert_eq!(g.edge_count(), 15);
+    }
+
+    #[test]
+    fn ring_degrees_and_wraparound() {
+        let g = Graph::build(&topo(GraphFamily::Ring), 7, 1);
+        for i in 0..7 {
+            assert_eq!(g.degree(i), 2, "cycle degree");
+        }
+        assert_eq!(g.neighbors(0), &[1, 6]);
+        // Wider ring: degree 2 each side.
+        let t = TopologyConfig {
+            degree: 2,
+            ..topo(GraphFamily::Ring)
+        };
+        let g2 = Graph::build(&t, 7, 1);
+        assert_eq!(g2.neighbors(0), &[1, 2, 5, 6]);
+    }
+
+    #[test]
+    fn ring_m2_deduplicates() {
+        let g = Graph::build(&topo(GraphFamily::Ring), 2, 1);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_is_most_square() {
+        // M = 9 → 3×3 torus, degree 4 everywhere.
+        let g = Graph::build(&topo(GraphFamily::Torus), 9, 1);
+        for i in 0..9 {
+            assert_eq!(g.degree(i), 4, "node {i}");
+        }
+        // M = 6 → 2×3; the row dimension 2 dedupes up == down.
+        let g6 = Graph::build(&topo(GraphFamily::Torus), 6, 1);
+        assert!(g6.is_connected());
+        // Prime M degenerates to a ring.
+        let g7 = Graph::build(&topo(GraphFamily::Torus), 7, 1);
+        assert_eq!(g7.max_degree(), 2);
+        assert!(g7.is_connected());
+    }
+
+    #[test]
+    fn star_hub_and_spokes() {
+        let g = Graph::build(&topo(GraphFamily::Star), 8, 1);
+        assert_eq!(g.degree(0), 7);
+        for i in 1..8 {
+            assert_eq!(g.neighbors(i), &[0]);
+        }
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn erdos_renyi_deterministic_and_connected() {
+        let a = Graph::build(&topo(GraphFamily::ErdosRenyi), 12, 1);
+        let b = Graph::build(&topo(GraphFamily::ErdosRenyi), 12, 1);
+        for i in 0..12 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+        assert!(a.is_connected());
+        // Even at very sparse p the builder must hand back something
+        // connected (augmentation fallback).
+        let sparse = TopologyConfig {
+            p: 0.01,
+            ..topo(GraphFamily::ErdosRenyi)
+        };
+        let g = Graph::build(&sparse, 16, 3);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn topology_seed_zero_falls_back_to_run_seed() {
+        let zero_seed = TopologyConfig {
+            seed: 0,
+            ..topo(GraphFamily::ErdosRenyi)
+        };
+        let a = Graph::build(&zero_seed, 10, 42);
+        let b = Graph::build(&zero_seed, 10, 42);
+        let c = Graph::build(&zero_seed, 10, 43);
+        let edges = |g: &Graph| (0..10).map(|i| g.neighbors(i).to_vec()).collect::<Vec<_>>();
+        assert_eq!(edges(&a), edges(&b));
+        // A different run seed draws a different graph (with high
+        // probability at p = 0.4, M = 10; pinned for these seeds).
+        assert_ne!(edges(&a), edges(&c));
+    }
+
+    #[test]
+    fn pair_ids_are_symmetric_and_distinct() {
+        let g = Graph::build(&topo(GraphFamily::Full), 5, 1);
+        assert_eq!(g.pair_id(1, 3), g.pair_id(3, 1));
+        assert_ne!(g.pair_id(0, 1), g.pair_id(0, 2));
+        assert_ne!(g.pair_id(1, 2), g.pair_id(0, 3));
+    }
+
+    #[test]
+    fn closed_neighborhood_sorted_with_self() {
+        let g = Graph::build(&topo(GraphFamily::Ring), 5, 1);
+        assert_eq!(g.closed_neighborhood(2), vec![1, 2, 3]);
+        assert_eq!(g.closed_neighborhood(0), vec![0, 1, 4]);
+        assert_eq!(g.closed_neighborhood(4), vec![0, 3, 4]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Mixing-weight construction over a [`Graph`] and its consensus
+//! diagnostics.
+//!
+//! The decentralized update θ_i ← θ_i + Σ_j W_ij (θ_j − θ_i) needs a
+//! symmetric, doubly-stochastic W supported on the graph for the replica
+//! average to be preserved and for consensus to contract at rate given by
+//! the spectral gap 1 − ρ(W − 11ᵀ/M). Both rules here guarantee those
+//! invariants on any connected graph (asserted at construction, and
+//! property-tested over random families in
+//! `rust/tests/topology_properties.rs`).
+
+use crate::config::MixingRule;
+
+use super::graph::Graph;
+
+/// A dense symmetric doubly-stochastic mixing matrix over M devices.
+#[derive(Clone, Debug)]
+pub struct MixingMatrix {
+    m: usize,
+    /// Row-major M × M weights.
+    w: Vec<f64>,
+}
+
+impl MixingMatrix {
+    /// Build the configured rule's weights for `graph`.
+    pub fn build(graph: &Graph, rule: MixingRule) -> MixingMatrix {
+        let w = match rule {
+            MixingRule::Metropolis => Self::metropolis(graph),
+            MixingRule::MaxDegree => Self::max_degree(graph),
+        };
+        debug_assert!(w.max_symmetry_error() == 0.0);
+        debug_assert!(w.max_row_sum_error() < 1e-12);
+        w
+    }
+
+    /// Metropolis–Hastings: W_ij = 1/(1 + max(deg_i, deg_j)) on edges; the
+    /// diagonal absorbs the remainder. Symmetric by construction (the
+    /// weight depends only on the unordered pair) and rows sum to 1 exactly
+    /// up to f64 rounding. On the complete graph every weight is 1/M — the
+    /// uniform averaging matrix the degeneracy golden relies on.
+    pub fn metropolis(graph: &Graph) -> MixingMatrix {
+        let m = graph.devices();
+        let mut w = vec![0.0f64; m * m];
+        for i in 0..m {
+            let mut off_diag = 0.0f64;
+            for &j in graph.neighbors(i) {
+                let wij = 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64);
+                w[i * m + j] = wij;
+                off_diag += wij;
+            }
+            w[i * m + i] = 1.0 - off_diag;
+        }
+        MixingMatrix { m, w }
+    }
+
+    /// Max-degree weights: W_ij = 1/(1 + Δ) on edges with Δ the global
+    /// maximum degree. One global constant instead of per-edge degrees;
+    /// mixes slower than Metropolis on irregular graphs.
+    pub fn max_degree(graph: &Graph) -> MixingMatrix {
+        let m = graph.devices();
+        let wij = 1.0 / (1.0 + graph.max_degree() as f64);
+        let mut w = vec![0.0f64; m * m];
+        for i in 0..m {
+            for &j in graph.neighbors(i) {
+                w[i * m + j] = wij;
+            }
+            w[i * m + i] = 1.0 - graph.degree(i) as f64 * wij;
+        }
+        MixingMatrix { m, w }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.m
+    }
+
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        self.w[i * self.m + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.w[i * self.m..(i + 1) * self.m]
+    }
+
+    /// max |W_ij − W_ji| (0 for both construction rules).
+    pub fn max_symmetry_error(&self) -> f64 {
+        let mut err = 0.0f64;
+        for i in 0..self.m {
+            for j in (i + 1)..self.m {
+                err = err.max((self.weight(i, j) - self.weight(j, i)).abs());
+            }
+        }
+        err
+    }
+
+    /// max_i |Σ_j W_ij − 1| — doubly stochastic together with symmetry.
+    pub fn max_row_sum_error(&self) -> f64 {
+        (0..self.m)
+            .map(|i| (self.row(i).iter().sum::<f64>() - 1.0).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Smallest entry (diagonal included). Non-negative for both rules on
+    /// any graph, which makes W a lazy random walk and bounds ρ < 1 on
+    /// connected graphs.
+    pub fn min_weight(&self) -> f64 {
+        self.w.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Spectral gap 1 − ρ(W − 11ᵀ/M): the consensus contraction rate per
+    /// mixing step. Estimated by deterministic power iteration on the
+    /// 1⊥-restricted operator (W is symmetric, so the dominant deflated
+    /// eigenvalue magnitude is ρ).
+    pub fn spectral_gap(&self) -> f64 {
+        let m = self.m;
+        if m == 1 {
+            return 1.0;
+        }
+        // Fixed, seed-free start vector with energy on every deflated mode.
+        let mut x: Vec<f64> = (0..m)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 } + 0.1 * (i as f64 + 1.0))
+            .collect();
+        deflate(&mut x);
+        normalize(&mut x);
+        let mut rho = 0.0f64;
+        for _ in 0..400 {
+            let mut y = vec![0.0f64; m];
+            for i in 0..m {
+                let row = self.row(i);
+                y[i] = row.iter().zip(&x).map(|(w, v)| w * v).sum();
+            }
+            deflate(&mut y);
+            let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                // W restricted to 1⊥ is (numerically) zero — exact
+                // one-step consensus, e.g. the complete graph.
+                return 1.0;
+            }
+            rho = norm;
+            x = y;
+            normalize(&mut x);
+        }
+        (1.0 - rho).max(0.0)
+    }
+}
+
+fn deflate(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+}
+
+fn normalize(x: &mut [f64]) {
+    let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for v in x.iter_mut() {
+            *v /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphFamily, TopologyConfig};
+
+    fn graph(family: GraphFamily, m: usize) -> Graph {
+        let topo = TopologyConfig {
+            family,
+            seed: 5,
+            ..TopologyConfig::default()
+        };
+        Graph::build(&topo, m, 1)
+    }
+
+    #[test]
+    fn metropolis_on_complete_graph_is_uniform() {
+        let g = graph(GraphFamily::Full, 8);
+        let w = MixingMatrix::metropolis(&g);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((w.weight(i, j) - 1.0 / 8.0).abs() < 1e-15, "W[{i}][{j}]");
+            }
+        }
+        // Exact one-step consensus.
+        assert!((w.spectral_gap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invariants_hold_on_every_family() {
+        for family in [
+            GraphFamily::Full,
+            GraphFamily::Ring,
+            GraphFamily::Torus,
+            GraphFamily::ErdosRenyi,
+            GraphFamily::Star,
+        ] {
+            for rule in [MixingRule::Metropolis, MixingRule::MaxDegree] {
+                let g = graph(family, 12);
+                let w = MixingMatrix::build(&g, rule);
+                assert_eq!(w.max_symmetry_error(), 0.0, "{family:?}/{rule:?}");
+                assert!(w.max_row_sum_error() < 1e-12, "{family:?}/{rule:?}");
+                assert!(w.min_weight() >= 0.0, "{family:?}/{rule:?}");
+                let gap = w.spectral_gap();
+                assert!(
+                    gap > 0.0 && gap <= 1.0 + 1e-12,
+                    "{family:?}/{rule:?}: gap {gap}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_gap_matches_closed_form() {
+        // Metropolis on a cycle: W = I/3 on the diagonal, 1/3 per edge —
+        // eigenvalues (1 + 2cos(2πk/M))/3; ρ = (1 + 2cos(2π/M))/3.
+        let m = 10;
+        let g = graph(GraphFamily::Ring, m);
+        let w = MixingMatrix::metropolis(&g);
+        let rho = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / m as f64).cos()) / 3.0;
+        assert!(
+            (w.spectral_gap() - (1.0 - rho)).abs() < 1e-6,
+            "gap {} vs closed-form {}",
+            w.spectral_gap(),
+            1.0 - rho
+        );
+    }
+
+    #[test]
+    fn denser_graphs_mix_faster() {
+        let ring = MixingMatrix::metropolis(&graph(GraphFamily::Ring, 16));
+        let torus = MixingMatrix::metropolis(&graph(GraphFamily::Torus, 16));
+        let full = MixingMatrix::metropolis(&graph(GraphFamily::Full, 16));
+        assert!(ring.spectral_gap() < torus.spectral_gap());
+        assert!(torus.spectral_gap() < full.spectral_gap());
+    }
+}

@@ -1,0 +1,53 @@
+//! Device-to-device topology: who can hear whom, and with what mixing
+//! weights — the graph layer under the decentralized (no parameter server)
+//! training path.
+//!
+//! # The graph / mixing / diagnostics contract
+//!
+//! The subsystem splits into two pieces, mirroring the
+//! [`crate::coordinator::link`] contract of "everything between gradients
+//! and ĝ lives behind one interface":
+//!
+//! 1. **[`Graph`]** — the communication topology. Built deterministically
+//!    from the `[topology]` config (family, degree/p, seed) by
+//!    [`Graph::build`]; every family (fully-connected, ring, 2-D torus,
+//!    Erdős–Rényi, star) comes out *connected*, undirected and
+//!    self-loop-free, with any randomness drawn through counter-based RNG
+//!    cells so the adjacency is a pure function of the config. The graph
+//!    answers the per-round questions the D2D link asks: the sorted
+//!    [closed neighborhood](Graph::closed_neighborhood) receiver *i*
+//!    decodes each round, and the canonical [pair id](Graph::pair_id) that
+//!    keys the reciprocal per-edge gain process (h_ij = h_ji).
+//! 2. **[`MixingMatrix`]** — the consensus weights over the graph.
+//!    Metropolis–Hastings (per-edge degrees) or max-degree (one global
+//!    constant) construction; both are **symmetric** and
+//!    **doubly-stochastic** with non-negative entries on any connected
+//!    graph, which is exactly what the decentralized update
+//!    θ_i ← θ_i + Σ_j W_ij (θ_j − θ_i) needs to preserve the replica
+//!    average and contract disagreement. The contraction rate is surfaced
+//!    as [`MixingMatrix::spectral_gap`] (1 − ρ(W − 11ᵀ/M)), so experiment
+//!    logs can relate a topology's connectivity to its convergence.
+//!
+//! # Invariants (property-tested)
+//!
+//! `rust/tests/topology_properties.rs` pins, for random seeds, sizes and
+//! families:
+//!
+//! * connectivity of every built graph;
+//! * exact symmetry of W and row sums within 1e-12 of 1;
+//! * non-negative weights and a strictly positive spectral gap;
+//! * the fully-connected degeneracy: Metropolis weights on the complete
+//!   graph are the uniform 1/M matrix, which collapses D2D consensus to
+//!   the star A-DSGD average (`rust/tests/golden_schemes.rs` pins the full
+//!   training trajectory bit-for-bit).
+//!
+//! The consumer of all of this is
+//! [`crate::coordinator::link::D2dAnalogLink`], which plugs the graph and
+//! weights into the scheme-agnostic trainer loop as one more
+//! [`crate::coordinator::link::LinkScheme`].
+
+pub mod graph;
+pub mod mixing;
+
+pub use graph::Graph;
+pub use mixing::MixingMatrix;

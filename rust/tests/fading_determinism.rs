@@ -37,6 +37,35 @@ fn gain_sequences_identical_across_runs_and_query_orders() {
     }
 }
 
+/// The Gauss–Markov (AR(1)) variant keeps the counter-based purity: any
+/// query order over the (device, round) grid sees identical gains.
+#[test]
+fn ar1_gain_sequences_identical_across_runs_and_query_orders() {
+    for dist in [FadingDist::Rayleigh, FadingDist::Uniform(0.2, 1.8)] {
+        for rho in [0.3, 0.9] {
+            let a = FadingProcess::with_rho(dist, 91, rho);
+            let b = FadingProcess::with_rho(dist, 91, rho);
+            let (m, rounds) = (8usize, 6usize);
+            let mut grid_a = vec![vec![0f64; m]; rounds];
+            for (t, row) in grid_a.iter_mut().enumerate() {
+                for (dev, cell) in row.iter_mut().enumerate() {
+                    *cell = a.gain(dev, t);
+                }
+            }
+            // Query B column-major (a proxy for any thread interleaving).
+            for dev in 0..m {
+                for (t, row) in grid_a.iter().enumerate() {
+                    assert_eq!(
+                        row[dev],
+                        b.gain(dev, t),
+                        "{dist:?} rho={rho} dev={dev} t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn participation_subsets_identical_across_runs() {
     let gains: Vec<f64> = (0..10).map(|i| 0.1 * (i + 1) as f64).collect();
@@ -118,6 +147,51 @@ fn fading_round_invariant_to_thread_pool_size() {
         let seq = run(1);
         for workers in [2usize, 4, 8] {
             assert_eq!(seq, run(workers), "csi={csi} workers={workers}");
+        }
+    }
+}
+
+/// The full fading round under time-correlated (AR(1)) gains is
+/// bit-identical across thread-pool sizes: the Gauss–Markov chain is
+/// recomputed per (device, round) cell, so the encode fan-out schedule
+/// cannot perturb it.
+#[test]
+fn ar1_fading_round_invariant_to_thread_pool_size() {
+    let d = 420;
+    let cfg = RunConfig {
+        fading_rho: 0.7,
+        ..link_cfg()
+    };
+    let grads = {
+        let mut rng = Pcg64::new(37);
+        Matf::from_vec(
+            cfg.devices,
+            d,
+            (0..cfg.devices * d)
+                .map(|_| rng.normal_ms(0.0, 0.2) as f32)
+                .collect(),
+        )
+    };
+    for csi in [true, false] {
+        let run = |workers: usize| {
+            let mut link = FadingAnalogLink::with_workers(&cfg, d, csi, workers);
+            let mut out = Vec::new();
+            for t in 0..4 {
+                let round = link.round(
+                    &RoundCtx {
+                        t,
+                        p_t: cfg.pbar,
+                        deadline: cfg.deadline(),
+                    },
+                    &grads,
+                );
+                out.push((round.ghat, round.telemetry.participation));
+            }
+            (out, link.measured_avg_power())
+        };
+        let seq = run(1);
+        for workers in [2usize, 4, 8] {
+            assert_eq!(seq, run(workers), "rho=0.7 csi={csi} workers={workers}");
         }
     }
 }

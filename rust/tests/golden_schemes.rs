@@ -14,7 +14,10 @@ use ota_dsgd::amp::AmpConfig;
 use ota_dsgd::analog::{AnalogDevice, AnalogPs, Projection};
 use ota_dsgd::channel::{GaussianMac, PowerAllocator};
 use ota_dsgd::compress::DigitalPayload;
-use ota_dsgd::config::{presets, FadingDist, LinkKind, ParticipationPolicy, RunConfig, Scheme};
+use ota_dsgd::config::{
+    presets, FadingDist, GraphFamily, LinkKind, ParticipationPolicy, RunConfig, Scheme,
+    TopologyConfig,
+};
 use ota_dsgd::coordinator::{GradientBackend, RustBackend, Trainer};
 use ota_dsgd::digital::{aggregate, capacity_bits, DigitalDevice};
 use ota_dsgd::model::PARAM_DIM;
@@ -65,9 +68,12 @@ fn seed_reference_trajectory(cfg: &RunConfig) -> Vec<f64> {
                 .collect();
         }
         LinkKind::Passthrough => {}
-        // The fading schemes postdate the seed trainer; their golden is the
-        // h ≡ 1 degeneracy against the static A-DSGD trajectory below.
-        LinkKind::Fading => panic!("no seed reference for fading schemes"),
+        // The fading and D2D schemes postdate the seed trainer; their
+        // goldens are the degeneracies against the static A-DSGD
+        // trajectory below (h ≡ 1, fully-connected graph).
+        LinkKind::Fading | LinkKind::D2d => {
+            panic!("no seed reference for fading/d2d schemes")
+        }
     }
 
     // Channel + analog decoders (seed RNG-stream constants).
@@ -97,8 +103,8 @@ fn seed_reference_trajectory(cfg: &RunConfig) -> Vec<f64> {
         let grads = backend.per_device_gradients(&params, &corpus.train, shards);
 
         let ghat: Vec<f32> = match cfg.scheme {
-            Scheme::FadingADsgd | Scheme::BlindADsgd => {
-                panic!("no seed reference for fading schemes")
+            Scheme::FadingADsgd | Scheme::BlindADsgd | Scheme::D2dADsgd => {
+                panic!("no seed reference for fading/d2d schemes")
             }
             Scheme::ErrorFree => {
                 let mut avg = vec![0f32; d];
@@ -287,6 +293,77 @@ fn fading_degeneracy_goldens_long() {
         ..rayleigh
     });
     assert_eq!(full, k_eq_m);
+}
+
+/// Degeneracy golden: fully-connected uniform-weight D2D collapses to star
+/// A-DSGD bit-for-bit. On the complete graph Metropolis weights are the
+/// uniform 1/M matrix, every receiver's closed neighborhood is the whole
+/// fleet, the shared broadcast noise draw rides the star MAC's RNG stream,
+/// and the deviation-form mixing is a bit-exact no-op on lockstep replicas
+/// — so each replica's Adam trajectory equals the PS's, and the reported
+/// grad-norm series must match exactly. Consensus distance must pin to an
+/// exact 0.0 every round.
+#[test]
+fn d2d_full_graph_reproduces_star_adsgd() {
+    let golden = trajectory(golden_cfg(Scheme::ADsgd));
+    let cfg = RunConfig {
+        scheme: Scheme::D2dADsgd,
+        fading: FadingDist::Constant(1.0),
+        topology: TopologyConfig {
+            family: GraphFamily::Full,
+            ..TopologyConfig::default()
+        },
+        ..golden_cfg(Scheme::ADsgd)
+    };
+    let log = Trainer::new(cfg).expect("trainer").run();
+    let got: Vec<f64> = log.records.iter().map(|r| r.grad_norm).collect();
+    assert_eq!(
+        got, golden,
+        "fully-connected D2D diverged from the star A-DSGD trainer"
+    );
+    for r in &log.records {
+        assert_eq!(
+            r.consensus_distance,
+            Some(0.0),
+            "t={}: complete-graph replicas must stay in exact consensus",
+            r.iter
+        );
+    }
+    assert!(log.power_constraint_ok(1e-6), "{:?}", log.measured_avg_power);
+}
+
+/// Degeneracy golden: uniform-K participation with K = M on the *digital*
+/// link is bit-identical to the always-on path (the selector satellite
+/// must not perturb the scheduled-everyone case), and a real K < M run
+/// reports Option-typed participation counts.
+#[test]
+fn digital_uniform_k_equals_m_matches_full_participation() {
+    let base = golden_cfg(Scheme::DDsgd);
+    let m = base.devices;
+    let full = trajectory(RunConfig {
+        participation: ParticipationPolicy::Full,
+        ..base.clone()
+    });
+    let k_eq_m = trajectory(RunConfig {
+        participation: ParticipationPolicy::UniformK(m),
+        ..base.clone()
+    });
+    assert_eq!(full, k_eq_m, "digital K = M must match the no-selector path");
+    // K < M: counts partition the fleet and the Full path stays None.
+    let log = Trainer::new(RunConfig {
+        participation: ParticipationPolicy::UniformK(m / 2),
+        ..base.clone()
+    })
+    .expect("trainer")
+    .run();
+    for r in &log.records {
+        let p = r.participation.expect("partial digital reports stats");
+        assert_eq!(p.transmitting, m / 2, "t={}", r.iter);
+        assert_eq!(p.total(), m, "t={}", r.iter);
+    }
+    assert!(log.power_constraint_ok(1e-6));
+    let log_full = Trainer::new(base).expect("trainer").run();
+    assert!(log_full.records.iter().all(|r| r.participation.is_none()));
 }
 
 /// The digital arm's bits telemetry: actual payload bits, within budget.

@@ -6,10 +6,13 @@
 //! * **Eq. 6 power audit**: `measured_avg_power()` stays within the P̄
 //!   budget (within tolerance) for every device.
 //! * **Shape**: `ghat.len() == d` every round.
-//! * **Telemetry honesty**: digital ⇒ `bits_per_device ≤ R_t`; analog ⇒
-//!   AMP actually ran on rounds with a non-empty transmitting set; fading ⇒
-//!   participation counts present and partitioning the fleet; everything
-//!   else ⇒ `participation == None` (absent, not zero).
+//! * **Telemetry honesty**: digital ⇒ `bits_per_device ≤ R_t`, with
+//!   participation counts present exactly when a non-Full policy is
+//!   configured; analog ⇒ AMP actually ran on rounds with a non-empty
+//!   transmitting set; fading ⇒ participation counts present and
+//!   partitioning the fleet; D2D ⇒ consensus distance present and finite;
+//!   everything else ⇒ `participation == None` (absent, not zero), and
+//!   `consensus_distance == None` for every PS-centric link.
 
 use ota_dsgd::config::{
     presets, FadingDist, LinkKind, ParticipationPolicy, RunConfig, Scheme,
@@ -20,11 +23,12 @@ use ota_dsgd::tensor::Matf;
 use ota_dsgd::util::proptest::{run_property_noshrink, Check, PropConfig};
 use ota_dsgd::util::rng::Pcg64;
 
-const ALL_SCHEMES: [Scheme; 7] = [
+const ALL_SCHEMES: [Scheme; 8] = [
     Scheme::ErrorFree,
     Scheme::ADsgd,
     Scheme::FadingADsgd,
     Scheme::BlindADsgd,
+    Scheme::D2dADsgd,
     Scheme::DDsgd,
     Scheme::SignSgd,
     Scheme::Qsgd,
@@ -117,6 +121,14 @@ fn prop_every_scheme_honors_link_contract() {
                             out.ghat.len()
                         ));
                     }
+                    // PS-centric links never measure replica disagreement.
+                    if cfg.scheme.kind() != LinkKind::D2d
+                        && out.telemetry.consensus_distance.is_some()
+                    {
+                        return Check::Fail(format!(
+                            "{scheme:?}: PS-centric link must not report consensus distance"
+                        ));
+                    }
                     // Telemetry invariants per family.
                     match cfg.scheme.kind() {
                         LinkKind::Digital => {
@@ -128,10 +140,35 @@ fn prop_every_scheme_honors_link_contract() {
                                     out.telemetry.bits_per_device
                                 ));
                             }
-                            if out.telemetry.participation.is_some() {
-                                return Check::Fail(format!(
-                                    "{scheme:?}: digital link must not report participation"
-                                ));
+                            // Participation is reported exactly when a
+                            // non-Full policy is configured (None ≠ 0).
+                            match out.telemetry.participation {
+                                Some(stats) => {
+                                    if cfg.participation == ParticipationPolicy::Full {
+                                        return Check::Fail(format!(
+                                            "{scheme:?}: always-on digital link must not \
+                                             report participation"
+                                        ));
+                                    }
+                                    if stats.total() != cfg.devices
+                                        || stats.silenced_low_gain != 0
+                                        || stats.dropped_stragglers != 0
+                                    {
+                                        return Check::Fail(format!(
+                                            "{scheme:?}: digital stats {stats:?} vs M={}",
+                                            cfg.devices
+                                        ));
+                                    }
+                                }
+                                None => {
+                                    if cfg.participation != ParticipationPolicy::Full {
+                                        return Check::Fail(format!(
+                                            "{scheme:?}: scheduled digital link must report \
+                                             participation ({:?})",
+                                            cfg.participation
+                                        ));
+                                    }
+                                }
                             }
                         }
                         LinkKind::Analog | LinkKind::Passthrough => {
@@ -144,6 +181,27 @@ fn prop_every_scheme_honors_link_contract() {
                                 amp_ran |= out.telemetry.amp_iterations > 0;
                                 had_transmitters = true;
                             }
+                        }
+                        LinkKind::D2d => {
+                            let Some(dist) = out.telemetry.consensus_distance else {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: D2D link must report consensus distance"
+                                ));
+                            };
+                            if !dist.is_finite() || dist < 0.0 {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: consensus distance {dist} not a finite \
+                                     non-negative number"
+                                ));
+                            }
+                            if out.telemetry.participation.is_some() {
+                                return Check::Fail(format!(
+                                    "{scheme:?}: D2D (all devices broadcast) must not \
+                                     report participation"
+                                ));
+                            }
+                            had_transmitters = true;
+                            amp_ran |= out.telemetry.amp_iterations > 0;
                         }
                         LinkKind::Fading => {
                             let Some(stats) = out.telemetry.participation else {
@@ -206,6 +264,7 @@ fn prop_every_scheme_honors_link_contract() {
 fn telemetry_default_participation_is_absent_not_zero() {
     let telemetry = ota_dsgd::coordinator::link::RoundTelemetry::default();
     assert!(telemetry.participation.is_none());
+    assert!(telemetry.consensus_distance.is_none());
     assert_eq!(telemetry.bits_per_device, 0.0);
     assert_eq!(telemetry.amp_iterations, 0);
 }

@@ -1,0 +1,363 @@
+//! Property layer over the topology subsystem: every graph family, for
+//! random seeds and sizes, must yield a connected graph whose mixing
+//! matrix (either rule) is symmetric, doubly stochastic with rows summing
+//! to 1 ± 1e-12, non-negative, and has a strictly positive spectral gap —
+//! the invariants the decentralized consensus update needs to preserve the
+//! replica average and contract disagreement. Plus the D2D link-level
+//! contract: consensus distance telemetry present every round, the Eq. 6
+//! audit intact, and thread-pool-size invariance of the full D2D round.
+
+use ota_dsgd::config::{
+    presets, FadingDist, GraphFamily, MixingRule, RunConfig, Scheme, TopologyConfig,
+};
+use ota_dsgd::coordinator::link::{D2dAnalogLink, LinkScheme, RoundCtx};
+use ota_dsgd::tensor::Matf;
+use ota_dsgd::topology::{Graph, MixingMatrix};
+use ota_dsgd::util::proptest::{run_property_noshrink, Check, PropConfig};
+use ota_dsgd::util::rng::Pcg64;
+
+const FAMILIES: [GraphFamily; 5] = [
+    GraphFamily::Full,
+    GraphFamily::Ring,
+    GraphFamily::Torus,
+    GraphFamily::ErdosRenyi,
+    GraphFamily::Star,
+];
+
+/// Connected + symmetric + doubly stochastic (1 ± 1e-12) + non-negative +
+/// positive spectral gap, for every family × rule over random seeds/sizes.
+#[test]
+fn prop_every_family_yields_valid_mixing() {
+    run_property_noshrink(
+        "topology-mixing-invariants",
+        PropConfig {
+            cases: 12,
+            ..Default::default()
+        },
+        |rng| {
+            let m = 2 + rng.below(23) as usize;
+            let degree = 1 + rng.below(((m - 1).max(1)) as u64) as usize;
+            let p = 0.15 + 0.8 * rng.f64();
+            let seed = rng.next_u64();
+            (m, degree, p, seed)
+        },
+        |&(m, degree, p, seed)| {
+            for family in FAMILIES {
+                let topo = TopologyConfig {
+                    family,
+                    degree,
+                    p,
+                    mixing: MixingRule::Metropolis,
+                    seed,
+                };
+                let graph = Graph::build(&topo, m, seed ^ 0xABC);
+                if !graph.is_connected() {
+                    return Check::Fail(format!("{family:?} M={m} seed={seed}: disconnected"));
+                }
+                if graph.devices() != m {
+                    return Check::Fail(format!("{family:?}: device count"));
+                }
+                for rule in [MixingRule::Metropolis, MixingRule::MaxDegree] {
+                    let w = MixingMatrix::build(&graph, rule);
+                    if w.max_symmetry_error() != 0.0 {
+                        return Check::Fail(format!(
+                            "{family:?}/{rule:?} M={m}: asymmetry {}",
+                            w.max_symmetry_error()
+                        ));
+                    }
+                    if w.max_row_sum_error() > 1e-12 {
+                        return Check::Fail(format!(
+                            "{family:?}/{rule:?} M={m}: row sum error {}",
+                            w.max_row_sum_error()
+                        ));
+                    }
+                    if w.min_weight() < 0.0 {
+                        return Check::Fail(format!(
+                            "{family:?}/{rule:?} M={m}: negative weight {}",
+                            w.min_weight()
+                        ));
+                    }
+                    let gap = w.spectral_gap();
+                    if !(gap > 0.0 && gap <= 1.0 + 1e-9) {
+                        return Check::Fail(format!(
+                            "{family:?}/{rule:?} M={m}: spectral gap {gap}"
+                        ));
+                    }
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Mixing weights live only on graph edges (plus the diagonal): W must be
+/// implementable by neighbor-local communication.
+#[test]
+fn prop_weights_supported_on_edges() {
+    run_property_noshrink(
+        "topology-weight-support",
+        PropConfig {
+            cases: 8,
+            ..Default::default()
+        },
+        |rng| (3 + rng.below(15) as usize, rng.next_u64()),
+        |&(m, seed)| {
+            for family in FAMILIES {
+                let topo = TopologyConfig {
+                    family,
+                    seed,
+                    ..TopologyConfig::default()
+                };
+                let graph = Graph::build(&topo, m, seed);
+                let w = MixingMatrix::metropolis(&graph);
+                for i in 0..m {
+                    for j in 0..m {
+                        let is_edge = graph.neighbors(i).contains(&j);
+                        let wij = w.weight(i, j);
+                        if i != j && !is_edge && wij != 0.0 {
+                            return Check::Fail(format!(
+                                "{family:?} M={m}: weight {wij} off the edge set at ({i},{j})"
+                            ));
+                        }
+                        if i != j && is_edge && wij <= 0.0 {
+                            return Check::Fail(format!(
+                                "{family:?} M={m}: non-positive edge weight at ({i},{j})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// The consensus operator in deviation form preserves the replica average
+/// (doubly stochastic W) and contracts disagreement by at least the
+/// spectral-gap rate on a random replica matrix.
+#[test]
+fn prop_mixing_preserves_average_and_contracts() {
+    run_property_noshrink(
+        "topology-mixing-contraction",
+        PropConfig {
+            cases: 8,
+            ..Default::default()
+        },
+        |rng| (4 + rng.below(12) as usize, rng.next_u64()),
+        |&(m, seed)| {
+            let topo = TopologyConfig {
+                family: GraphFamily::ErdosRenyi,
+                p: 0.5,
+                seed,
+                ..TopologyConfig::default()
+            };
+            let graph = Graph::build(&topo, m, seed);
+            let w = MixingMatrix::metropolis(&graph);
+            let d = 24usize;
+            let mut rng = Pcg64::new(seed ^ 0x5EED);
+            let theta: Vec<Vec<f64>> = (0..m)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect();
+            // θ̃_i = θ_i + Σ_j W_ij (θ_j − θ_i)
+            let mixed: Vec<Vec<f64>> = (0..m)
+                .map(|i| {
+                    (0..d)
+                        .map(|c| {
+                            let acc: f64 = graph
+                                .neighbors(i)
+                                .iter()
+                                .map(|&j| w.weight(i, j) * (theta[j][c] - theta[i][c]))
+                                .sum();
+                            theta[i][c] + acc
+                        })
+                        .collect()
+                })
+                .collect();
+            let mean = |ths: &[Vec<f64>]| -> Vec<f64> {
+                let mut mu = vec![0.0; d];
+                for th in ths {
+                    for (a, &v) in mu.iter_mut().zip(th) {
+                        *a += v / m as f64;
+                    }
+                }
+                mu
+            };
+            let disagreement = |ths: &[Vec<f64>], mu: &[f64]| -> f64 {
+                ths.iter()
+                    .map(|th| {
+                        th.iter()
+                            .zip(mu)
+                            .map(|(&v, &u)| (v - u) * (v - u))
+                            .sum::<f64>()
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            };
+            let mu_before = mean(&theta);
+            let mu_after = mean(&mixed);
+            for (a, b) in mu_before.iter().zip(&mu_after) {
+                if (a - b).abs() > 1e-9 {
+                    return Check::Fail(format!(
+                        "average not preserved: {a} vs {b} (M={m} seed={seed})"
+                    ));
+                }
+            }
+            let before = disagreement(&theta, &mu_before);
+            let after = disagreement(&mixed, &mu_after);
+            // Small slack: the gap is a power-iteration estimate, so the
+            // implied ρ can sit marginally below the true contraction
+            // factor when trailing eigenvalues are nearly degenerate.
+            let rho = 1.0 - w.spectral_gap();
+            if after > before * (rho + 1e-3) + 1e-9 {
+                return Check::Fail(format!(
+                    "disagreement {before} -> {after} exceeds spectral bound ρ={rho} \
+                     (M={m} seed={seed})"
+                ));
+            }
+            Check::Pass
+        },
+    );
+}
+
+fn d2d_cfg(family: GraphFamily, m: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        scheme: Scheme::D2dADsgd,
+        devices: m,
+        channel_uses: 101,
+        sparsity: 25,
+        mean_removal_rounds: 1,
+        amp_iters: 15,
+        seed,
+        fading: FadingDist::Constant(1.0),
+        topology: TopologyConfig {
+            family,
+            seed: 0,
+            ..TopologyConfig::default()
+        },
+        ..presets::smoke()
+    }
+}
+
+fn grads(m: usize, d: usize, seed: u64) -> Matf {
+    let mut rng = Pcg64::new(seed);
+    Matf::from_vec(
+        m,
+        d,
+        (0..m * d).map(|_| rng.normal_ms(0.0, 0.2) as f32).collect(),
+    )
+}
+
+/// Link-level D2D contract over random families: consensus distance
+/// reported and finite every round, Eq. 6 power audit intact, ĝ shaped.
+#[test]
+fn prop_d2d_link_contract() {
+    run_property_noshrink(
+        "d2d-link-contract",
+        PropConfig {
+            cases: 6,
+            ..Default::default()
+        },
+        |rng| {
+            let family = FAMILIES[rng.below(5) as usize];
+            let m = 4 + rng.below(5) as usize;
+            (family, m, rng.next_u64())
+        },
+        |&(family, m, seed)| {
+            let d = 300;
+            let cfg = d2d_cfg(family, m, seed);
+            let mut link = D2dAnalogLink::new(&cfg, d);
+            let g = grads(m, d, seed ^ 1);
+            for t in 0..3 {
+                let out = link.round(
+                    &RoundCtx {
+                        t,
+                        p_t: cfg.pbar,
+                        deadline: None,
+                    },
+                    &g,
+                );
+                if out.ghat.len() != d {
+                    return Check::Fail(format!("{family:?}: ghat len {}", out.ghat.len()));
+                }
+                let Some(dist) = out.telemetry.consensus_distance else {
+                    return Check::Fail(format!("{family:?}: missing consensus distance"));
+                };
+                if !dist.is_finite() {
+                    return Check::Fail(format!("{family:?}: consensus distance {dist}"));
+                }
+            }
+            let powers = link.measured_avg_power();
+            if powers.len() != m {
+                return Check::Fail(format!("{family:?}: power report len {}", powers.len()));
+            }
+            for (dev, &p) in powers.iter().enumerate() {
+                if p > cfg.pbar * (1.0 + 1e-4) {
+                    return Check::Fail(format!(
+                        "{family:?}: device {dev} avg power {p} > P̄ {}",
+                        cfg.pbar
+                    ));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// The full D2D round — graph, per-edge gains, shared noise, per-receiver
+/// AMP, mixing, local Adam steps — is bit-identical whether the device
+/// encode fan-out runs sequentially or on a multi-worker pool.
+#[test]
+fn d2d_round_invariant_to_thread_pool_size() {
+    let d = 300;
+    let cfg = d2d_cfg(GraphFamily::Torus, 6, 33);
+    let g = grads(6, d, 44);
+    let run = |workers: usize| {
+        let mut link = D2dAnalogLink::with_workers(&cfg, d, workers);
+        let mut out = Vec::new();
+        for t in 0..3 {
+            let round = link.round(
+                &RoundCtx {
+                    t,
+                    p_t: cfg.pbar,
+                    deadline: None,
+                },
+                &g,
+            );
+            out.push((round.ghat, round.telemetry.consensus_distance));
+        }
+        (out, link.measured_avg_power())
+    };
+    let seq = run(1);
+    for workers in [2usize, 4, 8] {
+        assert_eq!(seq, run(workers), "workers={workers}");
+    }
+}
+
+/// End-to-end D2D training through the scheme-agnostic trainer: consensus
+/// distance lands in the round records (monotone coverage: every round
+/// reports), the replica-average model's accuracy is evaluated, and the
+/// same seed reproduces the same trajectory.
+#[test]
+fn d2d_trainer_end_to_end_deterministic() {
+    let mut cfg = presets::d2d_smoke();
+    cfg.iterations = 4;
+    cfg.eval_every = 2;
+    cfg.mean_removal_rounds = 1;
+    let run = || {
+        let log = ota_dsgd::coordinator::Trainer::new(cfg.clone())
+            .expect("trainer")
+            .run();
+        assert_eq!(log.records.len(), 4);
+        for r in &log.records {
+            let dist = r.consensus_distance.expect("every D2D round reports consensus");
+            assert!(dist.is_finite() && dist >= 0.0);
+        }
+        assert!(log.power_constraint_ok(1e-6), "{:?}", log.measured_avg_power);
+        assert!(log.final_accuracy >= 0.0);
+        log.records
+            .iter()
+            .map(|r| (r.grad_norm, r.consensus_distance))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run(), "same seed must reproduce the D2D trajectory");
+}
