@@ -37,6 +37,25 @@ pub fn bench_rounds(name: &str, cfg: RunConfig, rounds: usize) -> BenchResult {
         .run(move || tr.run().records.len())
 }
 
+/// Results directory for bench artifacts: `--out-dir <dir>` (or
+/// `--out-dir=<dir>`) from the bench's argv, then the `OTA_OUT_DIR`
+/// environment variable, then `results` — the same default the `repro`
+/// CLI uses, so campaigns and CI stop hard-coding `results/`.
+#[allow(dead_code)]
+pub fn out_dir() -> String {
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        if arg == "--out-dir" {
+            if let Some(v) = args.next() {
+                return v;
+            }
+        } else if let Some(v) = arg.strip_prefix("--out-dir=") {
+            return v.to_string();
+        }
+    }
+    std::env::var("OTA_OUT_DIR").unwrap_or_else(|_| "results".into())
+}
+
 /// Entry-point boilerplate shared by the per-figure bench mains.
 pub fn print_header(fig: &str, what: &str) {
     println!("=== bench {fig}: {what} ===");

@@ -20,7 +20,7 @@ fn main() {
     for (label, cfg) in spec.runs {
         results.push(common::bench_rounds(&label, cfg, 2));
     }
-    let path = "results/d2d_sweep.json";
-    common::write_json(path, &results).expect("write bench json");
+    let path = format!("{}/d2d_sweep.json", common::out_dir());
+    common::write_json(&path, &results).expect("write bench json");
     println!("json → {path}");
 }

@@ -16,7 +16,7 @@ fn main() {
     for (label, cfg) in spec.runs {
         results.push(common::bench_rounds(&label, cfg, 2));
     }
-    let path = "results/fading_sweep.json";
-    common::write_json(path, &results).expect("write bench json");
+    let path = format!("{}/fading_sweep.json", common::out_dir());
+    common::write_json(&path, &results).expect("write bench json");
     println!("json → {path}");
 }

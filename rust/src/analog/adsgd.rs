@@ -101,6 +101,17 @@ impl AnalogDevice {
     pub fn accumulator_norm(&self) -> f64 {
         self.accum.norm()
     }
+
+    /// The current error residual Δ (checkpointing accessor — the device's
+    /// only mutable state; k and the projection are config-derived).
+    pub fn accumulator(&self) -> &[f32] {
+        self.accum.as_slice()
+    }
+
+    /// Restore a residual captured by [`AnalogDevice::accumulator`].
+    pub fn load_accumulator(&mut self, delta: &[f32]) {
+        self.accum.load(delta);
+    }
 }
 
 /// PS-side decoder.

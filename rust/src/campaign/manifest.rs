@@ -1,0 +1,162 @@
+//! Per-run manifests: the human-readable index entry next to each store
+//! blob, written in the same TOML subset `config::parser` reads back.
+//!
+//! The manifest is advisory metadata for `repro status` and store
+//! inspection — the binary blobs are self-describing (magic + version +
+//! config hash), so a lost or stale manifest can never corrupt a resume;
+//! at worst the entry stops showing up in the status listing.
+
+use std::path::Path;
+
+use crate::config::parser;
+
+/// Where a cached run stands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    /// A snapshot exists but the run has not finished; `repro resume`
+    /// continues it from `snapshot_round`.
+    Partial,
+    /// The finished result is cached; re-running is a pure load.
+    Complete,
+}
+
+impl RunStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunStatus::Partial => "partial",
+            RunStatus::Complete => "complete",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RunStatus> {
+        match s {
+            "partial" => Some(RunStatus::Partial),
+            "complete" => Some(RunStatus::Complete),
+            _ => None,
+        }
+    }
+}
+
+/// One store entry's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunManifest {
+    /// Content-address: hex of the canonical config hash (the entry's
+    /// directory name).
+    pub key: String,
+    /// Last run label this config executed under (labels are display
+    /// metadata; the config hash is the identity).
+    pub label: String,
+    /// `RunConfig::summary()` echo for humans.
+    pub summary: String,
+    pub status: RunStatus,
+    /// Round index the latest snapshot resumes from (== `iterations` once
+    /// complete).
+    pub snapshot_round: usize,
+    /// Total rounds the config runs.
+    pub iterations: usize,
+    /// Snapshot format version of the blobs next to this manifest.
+    pub version: u32,
+}
+
+/// The config parser keeps quoted strings verbatim (no escape sequences),
+/// so embedded double quotes would break the round-trip — swap them out.
+fn clean(s: &str) -> String {
+    s.replace('"', "'").replace('\n', " ")
+}
+
+impl RunManifest {
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[manifest]\nkey = \"{}\"\nlabel = \"{}\"\nsummary = \"{}\"\nstatus = \"{}\"\nsnapshot_round = {}\niterations = {}\nversion = {}\n",
+            clean(&self.key),
+            clean(&self.label),
+            clean(&self.summary),
+            self.status.name(),
+            self.snapshot_round,
+            self.iterations,
+            self.version,
+        )
+    }
+
+    pub fn from_toml(text: &str) -> Result<RunManifest, String> {
+        let doc = parser::parse(text).map_err(|e| e.to_string())?;
+        let s = doc.get("manifest").ok_or("missing [manifest] section")?;
+        let get_str = |k: &str| -> Result<String, String> {
+            s.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing or non-string manifest key {k:?}"))
+        };
+        let get_usize = |k: &str| -> Result<usize, String> {
+            s.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("missing or non-integer manifest key {k:?}"))
+        };
+        let status_name = get_str("status")?;
+        Ok(RunManifest {
+            key: get_str("key")?,
+            label: get_str("label")?,
+            summary: get_str("summary")?,
+            status: RunStatus::parse(&status_name)
+                .ok_or_else(|| format!("unknown status {status_name:?}"))?,
+            snapshot_round: get_usize("snapshot_round")?,
+            iterations: get_usize("iterations")?,
+            version: get_usize("version")? as u32,
+        })
+    }
+
+    pub fn read(path: &Path) -> Result<RunManifest, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        RunManifest::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunManifest {
+        RunManifest {
+            key: "00ff00ff00ff00ff".into(),
+            label: "D-DSGD LH".into(),
+            summary: "D-DSGD M=25 B=1000 s=3925 k=1962 P̄=200 σ²=1 T=300".into(),
+            status: RunStatus::Partial,
+            snapshot_round: 120,
+            iterations: 300,
+            version: 1,
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let m = sample();
+        let back = RunManifest::from_toml(&m.to_toml()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn complete_status_roundtrip() {
+        let m = RunManifest {
+            status: RunStatus::Complete,
+            snapshot_round: 300,
+            ..sample()
+        };
+        assert_eq!(RunManifest::from_toml(&m.to_toml()).unwrap().status, RunStatus::Complete);
+    }
+
+    #[test]
+    fn quotes_in_labels_survive_as_cleaned_text() {
+        let m = RunManifest {
+            label: "odd \"label\"".into(),
+            ..sample()
+        };
+        let back = RunManifest::from_toml(&m.to_toml()).unwrap();
+        assert_eq!(back.label, "odd 'label'");
+    }
+
+    #[test]
+    fn missing_section_rejected() {
+        assert!(RunManifest::from_toml("key = \"x\"\n").is_err());
+        assert!(RunManifest::from_toml("[manifest]\nkey = \"x\"\n").is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Campaign orchestration: deterministic checkpoint/resume and a
+//! content-addressed run cache for large experiment sweeps.
+//!
+//! The paper's figures are sweeps of hundreds of multi-thousand-round DSGD
+//! runs; at production scale a campaign must survive interruption and must
+//! not recompute what it already knows. This subsystem supplies both:
+//!
+//! * [`snapshot`] — versioned binary snapshots of the complete trainer
+//!   state (model weights, Adam moments, per-device error accumulators,
+//!   advancing RNG stream positions, D2D replicas and local optimizers,
+//!   power-meter totals, the partial round log). Every
+//!   [`LinkScheme`](crate::coordinator::link::LinkScheme) implements the
+//!   `snapshot`/`restore` hook pair, and because all scenario randomness is
+//!   either counter-based (pure per `(seed, device, t)`: fading gains,
+//!   AR(1) chains, participation subsets, straggler latencies) or captured
+//!   as an explicit RNG position (MAC noise, QSGD rounding, D2D broadcast
+//!   noise), a resumed run replays **bit-identically** to the
+//!   uninterrupted trajectory — grad norms, weights, telemetry, Eq. 6
+//!   audit and all. Pinned for every factory scheme in
+//!   `rust/tests/campaign_resume.rs`.
+//!
+//! * [`store`] — a content-addressed store keyed by a stable FNV-1a hash
+//!   of the *canonicalized* `RunConfig` (every field, fixed order,
+//!   canonical enum spellings; see `store::canonical_config` for the
+//!   rules). Entries hold the latest snapshot while a run is partial and
+//!   the bit-exact result log once complete; all writes are
+//!   temp-file + rename so interruption never corrupts an entry.
+//!
+//! * [`manifest`] — the human-readable TOML index entry per store record
+//!   (`repro status` reads these; the binary blobs remain the source of
+//!   truth).
+//!
+//! * [`scheduler`] — fronts `experiments::runner`: re-invoking
+//!   `repro fig <x>` loads completed runs from the cache, resumes partial
+//!   ones from their latest snapshot, and executes only the delta, while
+//!   producing byte-identical CSV outputs either way.
+
+pub mod manifest;
+pub mod scheduler;
+pub mod snapshot;
+pub mod store;
+
+pub use manifest::{RunManifest, RunStatus};
+pub use scheduler::{run_experiment_cached, CampaignReport};
+pub use snapshot::{SnapshotError, SnapshotReader, SnapshotWriter, TrainerSnapshot};
+pub use store::{cache_key, config_hash, RunStore};

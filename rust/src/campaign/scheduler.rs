@@ -1,0 +1,216 @@
+//! Cache-aware campaign execution in front of [`crate::experiments::runner`].
+//!
+//! For every run in an [`ExperimentSpec`] the scheduler consults the
+//! content-addressed [`RunStore`] and executes only the delta:
+//!
+//! * **complete** — the cached [`TrainLog`] is loaded; nothing executes.
+//! * **partial** — the latest [`TrainerSnapshot`] is restored and only the
+//!   remaining rounds run (bit-identical to never having stopped).
+//! * **absent** — the run executes from scratch, snapshotting every
+//!   `snapshot_every` rounds so a crash costs at most one interval.
+//!
+//! Output files go through [`runner::write_outputs`], so a fully-cached
+//! invocation regenerates `summary.csv` and the per-run CSVs byte-identical
+//! to the original execution (asserted in `rust/tests/campaign_cache.rs`).
+
+use crate::config::{CampaignConfig, RunConfig};
+use crate::coordinator::{link, LinkScheme, TrainLog, Trainer};
+use crate::experiments::runner::{self, ExperimentSpec};
+use crate::model::PARAM_DIM;
+use crate::util::threadpool::{default_workers, par_map};
+
+use super::snapshot::{SnapshotReader, TrainerSnapshot};
+use super::store::RunStore;
+
+/// What the scheduler did with a spec's runs (the cache test's execution
+/// counter).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CampaignReport {
+    /// Runs executed from round 0.
+    pub executed: usize,
+    /// Runs resumed from a snapshot (counted separately from `executed`).
+    pub resumed: usize,
+    /// Runs served entirely from the cache.
+    pub cached: usize,
+}
+
+enum Plan {
+    Cached(TrainLog),
+    Resume(TrainerSnapshot),
+    Fresh,
+}
+
+/// Execute a spec through the run store. Returns the logs (in spec order,
+/// labels applied) plus the execution report.
+pub fn run_experiment_cached(
+    spec: &ExperimentSpec,
+    out_dir: &str,
+    verbose: bool,
+    campaign: &CampaignConfig,
+) -> (Vec<TrainLog>, CampaignReport) {
+    let store_dir = campaign.store_dir_or(out_dir);
+    let store = RunStore::open(&store_dir).expect("open campaign run store");
+    println!("\n### {} — {} [store: {store_dir}]", spec.id, spec.title);
+
+    let plan: Vec<Plan> = spec
+        .runs
+        .iter()
+        .map(|(label, cfg)| {
+            if let Some(log) = store.load_result(cfg) {
+                return Plan::Cached(log);
+            }
+            if campaign.resume {
+                if let Some(snap) = store.load_snapshot(cfg) {
+                    if snapshot_restorable(cfg, &snap) {
+                        return Plan::Resume(snap);
+                    }
+                    eprintln!(
+                        "warning: stored snapshot for `{}` does not restore cleanly; \
+                         re-running from scratch",
+                        label
+                    );
+                }
+            }
+            Plan::Fresh
+        })
+        .collect();
+
+    let mut report = CampaignReport::default();
+    for (step, (label, cfg)) in plan.iter().zip(&spec.runs) {
+        match step {
+            Plan::Cached(_) => {
+                report.cached += 1;
+                println!("--- run `{label}`: cached ({})", cfg.summary());
+            }
+            Plan::Resume(snap) => {
+                report.resumed += 1;
+                println!(
+                    "--- run `{label}` [{} link]: resuming round {}/{} — {}",
+                    cfg.scheme.kind().name(),
+                    snap.next_round,
+                    cfg.iterations,
+                    cfg.summary()
+                );
+            }
+            Plan::Fresh => {
+                report.executed += 1;
+                runner::print_run_header(label, cfg);
+            }
+        }
+    }
+
+    // Execute the delta — parallel across runs when quiet, like the
+    // plain runner (cached entries are free either way).
+    let workers = if verbose {
+        1
+    } else {
+        default_workers(spec.runs.len())
+    };
+    let logs: Vec<TrainLog> = par_map(spec.runs.len(), workers, |i| {
+        let (label, cfg) = &spec.runs[i];
+        match &plan[i] {
+            Plan::Cached(log) => {
+                let mut log = log.clone();
+                log.label = label.clone();
+                log
+            }
+            Plan::Resume(snap) => execute(&store, label, cfg, Some(snap), campaign, verbose),
+            Plan::Fresh => execute(&store, label, cfg, None, campaign, verbose),
+        }
+    });
+
+    runner::write_outputs(spec, &logs, out_dir);
+    (logs, report)
+}
+
+/// Pre-flight a stored snapshot: the trainer's restore path panics on a
+/// blob it cannot apply (honest for a direct `Trainer::resume`, fatal for
+/// a campaign), so the scheduler proves the link state restores into a
+/// freshly built link first and falls back to a fresh run otherwise. The
+/// extra link construction is paid only on actual resumes — cheap next to
+/// losing the whole campaign to one torn blob.
+fn snapshot_restorable(cfg: &RunConfig, snap: &TrainerSnapshot) -> bool {
+    if snap.params.len() != PARAM_DIM
+        || snap.optim_m.len() != PARAM_DIM
+        || snap.optim_v.len() != PARAM_DIM
+        || snap.next_round > cfg.iterations
+        || snap.records.len() != snap.next_round
+    {
+        return false;
+    }
+    let mut probe = link::for_config(cfg, PARAM_DIM);
+    probe.restore(&mut SnapshotReader::new(&snap.link)).is_ok()
+}
+
+fn execute(
+    store: &RunStore,
+    label: &str,
+    cfg: &RunConfig,
+    resume: Option<&TrainerSnapshot>,
+    campaign: &CampaignConfig,
+    verbose: bool,
+) -> TrainLog {
+    cfg.validate(PARAM_DIM).expect("invalid experiment config");
+    let mut trainer = Trainer::new(cfg.clone()).expect("trainer construction");
+    trainer.verbose = verbose;
+    let mut sink = |snap: &TrainerSnapshot| {
+        // A failed snapshot write must not kill the run it protects.
+        if let Err(e) = store.save_snapshot(cfg, label, snap) {
+            eprintln!("warning: snapshot write failed for `{label}`: {e}");
+        }
+    };
+    let mut log = trainer.run_with_snapshots(resume, campaign.snapshot_every, &mut sink);
+    log.label = label.to_string();
+    if let Err(e) = store.save_result(cfg, label, &log) {
+        eprintln!("warning: result write failed for `{label}`: {e}");
+    }
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Scheme};
+
+    /// End-to-end delta execution: first invocation executes, the second is
+    /// fully cache-served with identical trajectories.
+    #[test]
+    fn second_invocation_is_fully_cached() {
+        let base = std::env::temp_dir().join("ota_scheduler_cache_test");
+        let _ = std::fs::remove_dir_all(&base);
+        let spec = || {
+            let mut cfg = presets::smoke();
+            cfg.iterations = 3;
+            cfg.eval_every = 1;
+            cfg.scheme = Scheme::ErrorFree;
+            ExperimentSpec {
+                id: "tsched".into(),
+                title: "scheduler cache".into(),
+                runs: vec![("error-free".into(), cfg)],
+            }
+        };
+        let campaign = CampaignConfig {
+            snapshot_every: 1,
+            store_dir: base.join("store").to_str().unwrap().to_string(),
+            resume: true,
+            enabled: true,
+        };
+        let out1 = base.join("out1");
+        let out2 = base.join("out2");
+        let (logs1, rep1) =
+            run_experiment_cached(&spec(), out1.to_str().unwrap(), false, &campaign);
+        assert_eq!(rep1, CampaignReport { executed: 1, resumed: 0, cached: 0 });
+        let (logs2, rep2) =
+            run_experiment_cached(&spec(), out2.to_str().unwrap(), false, &campaign);
+        assert_eq!(rep2, CampaignReport { executed: 0, resumed: 0, cached: 1 });
+        let series = |logs: &[TrainLog]| {
+            logs[0]
+                .records
+                .iter()
+                .map(|r| r.grad_norm.to_bits())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(series(&logs1), series(&logs2));
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

@@ -1,0 +1,716 @@
+//! Versioned binary snapshots of the complete trainer state.
+//!
+//! # Format
+//!
+//! Every blob starts with the 8-byte magic `OTACAMP1`, a little-endian
+//! `u32` format version ([`SNAPSHOT_VERSION`]), and a one-byte kind tag
+//! (trainer snapshot vs finished-run result), and ends with a trailing
+//! FNV-1a 64 checksum over everything before it — corruption that happens
+//! to preserve the framing must still fail loudly rather than resume a
+//! silently different trajectory. Everything between header and checksum
+//! is a flat little-endian stream written by [`SnapshotWriter`] and read
+//! back by [`SnapshotReader`]; floats are serialized via `to_bits`, so a
+//! round-trip is bit-exact including NaN payloads (the metrics layer uses
+//! NaN as "not evaluated this round").
+//!
+//! A version bump is required whenever the byte layout changes — readers
+//! reject other versions outright ([`SnapshotError::UnsupportedVersion`])
+//! rather than guessing, because a mis-restored RNG position would produce
+//! a silently *different* trajectory, which is worse than a hard error.
+//!
+//! # What a trainer snapshot contains
+//!
+//! [`TrainerSnapshot`] captures every piece of state that evolves across
+//! rounds: the model weights θ_t, the PS optimizer moments (Adam m/v/t),
+//! the partial [`TrainLog`] records, and an opaque per-link blob written by
+//! [`LinkScheme::snapshot`] — error accumulators (analog and digital),
+//! advancing RNG stream positions (MAC noise, QSGD stochastic rounding,
+//! D2D broadcast noise), power-meter energy totals, and for decentralized
+//! links the per-device model replicas plus their local optimizers.
+//! Counter-based generators (fading gains, AR(1) chains, participation
+//! subsets, straggler latencies) are pure in `(seed, device, t)` and
+//! therefore *not* stored — they resume for free, which is what makes
+//! bit-identical resume tractable at all.
+//!
+//! The snapshot also records [`TrainerSnapshot::config_hash`], the stable
+//! hash of the canonicalized `RunConfig` (see [`super::store`]); restoring
+//! under a different config is refused.
+//!
+//! [`LinkScheme::snapshot`]: crate::coordinator::link::LinkScheme::snapshot
+//! [`TrainLog`]: crate::coordinator::TrainLog
+
+use crate::channel::PowerMeter;
+use crate::coordinator::link::ParticipationStats;
+use crate::coordinator::{RoundRecord, TrainLog};
+
+/// 8-byte magic prefix of every campaign blob.
+pub const MAGIC: &[u8; 8] = b"OTACAMP1";
+
+/// Binary format version; bump on any layout change.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const KIND_SNAPSHOT: u8 = 1;
+const KIND_RESULT: u8 = 2;
+
+/// Raw PCG state for checkpointing: `(state, inc, cached spare normal)`.
+pub type RngState = (u64, u64, Option<f64>);
+
+/// Errors surfaced while decoding a snapshot blob.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The blob ended before the expected field.
+    Truncated,
+    /// The magic prefix is missing — not a campaign blob.
+    BadMagic,
+    /// Written by a different (incompatible) format version.
+    UnsupportedVersion(u32),
+    /// Structurally decodable but semantically wrong (length mismatch,
+    /// wrong kind tag, config-hash mismatch, …).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Truncated => write!(f, "snapshot truncated"),
+            SnapshotError::BadMagic => write!(f, "not a campaign snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion(v) => {
+                write!(f, "unsupported snapshot version {v} (expected {SNAPSHOT_VERSION})")
+            }
+            SnapshotError::Corrupt(msg) => write!(f, "corrupt snapshot: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// Little-endian binary writer backing every snapshot blob.
+#[derive(Default)]
+pub struct SnapshotWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapshotWriter {
+    pub fn new() -> SnapshotWriter {
+        SnapshotWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Raw bytes with no length prefix (header magic only).
+    fn raw(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Length-prefixed byte block.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.raw(b);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+
+    pub fn vec_f32(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Cursor over a snapshot blob; every accessor checks bounds.
+pub struct SnapshotReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapshotReader<'a> {
+    pub fn new(buf: &'a [u8]) -> SnapshotReader<'a> {
+        SnapshotReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, SnapshotError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, SnapshotError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, SnapshotError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, SnapshotError> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// Read a length prefix, sanity-capped against the bytes that could
+    /// possibly back it (each element at least `elem_bytes` wide), so a
+    /// corrupt length cannot trigger a huge allocation.
+    fn checked_len(&mut self, elem_bytes: usize) -> Result<usize, SnapshotError> {
+        let len = self.u64()? as usize;
+        if len.saturating_mul(elem_bytes) > self.remaining() {
+            Err(SnapshotError::Truncated)
+        } else {
+            Ok(len)
+        }
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>, SnapshotError> {
+        let len = self.checked_len(1)?;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    pub fn str(&mut self) -> Result<String, SnapshotError> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|_| SnapshotError::Corrupt("invalid utf-8 string".into()))
+    }
+
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>, SnapshotError> {
+        let len = self.checked_len(4)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn vec_f64(&mut self) -> Result<Vec<f64>, SnapshotError> {
+        let len = self.checked_len(8)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>, SnapshotError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            other => Err(SnapshotError::Corrupt(format!("bad option tag {other}"))),
+        }
+    }
+}
+
+/// Serialize an advancing RNG position (see [`crate::util::rng::Pcg64::raw_state`]).
+pub fn write_rng(w: &mut SnapshotWriter, st: RngState) {
+    w.u64(st.0);
+    w.u64(st.1);
+    w.opt_f64(st.2);
+}
+
+pub fn read_rng(r: &mut SnapshotReader<'_>) -> Result<RngState, SnapshotError> {
+    Ok((r.u64()?, r.u64()?, r.opt_f64()?))
+}
+
+/// Serialize a power meter's accumulated per-device energy + round count.
+pub fn write_meter(w: &mut SnapshotWriter, meter: &PowerMeter) {
+    w.vec_f64(meter.energy());
+    w.u64(meter.rounds() as u64);
+}
+
+pub fn read_meter(r: &mut SnapshotReader<'_>, meter: &mut PowerMeter) -> Result<(), SnapshotError> {
+    let energy = r.vec_f64()?;
+    let rounds = r.u64()? as usize;
+    if energy.len() != meter.devices() {
+        return Err(SnapshotError::Corrupt(format!(
+            "meter device count {} != configured {}",
+            energy.len(),
+            meter.devices()
+        )));
+    }
+    meter.load(&energy, rounds);
+    Ok(())
+}
+
+/// FNV-1a 64 — the checksum/hash primitive shared with the store's
+/// config-addressing.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append the trailing checksum to a finished blob body.
+fn seal(mut bytes: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a64(&bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+/// Verify and strip the trailing checksum, returning the body.
+fn unseal(bytes: &[u8]) -> Result<&[u8], SnapshotError> {
+    if bytes.len() < 8 {
+        return Err(SnapshotError::Truncated);
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+    if fnv1a64(body) != want {
+        return Err(SnapshotError::Corrupt("checksum mismatch".into()));
+    }
+    Ok(body)
+}
+
+fn write_header(w: &mut SnapshotWriter, kind: u8) {
+    w.raw(MAGIC);
+    w.u32(SNAPSHOT_VERSION);
+    w.u8(kind);
+}
+
+fn read_header(r: &mut SnapshotReader<'_>, want_kind: u8) -> Result<(), SnapshotError> {
+    if r.take(MAGIC.len())? != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    let version = r.u32()?;
+    if version != SNAPSHOT_VERSION {
+        return Err(SnapshotError::UnsupportedVersion(version));
+    }
+    let kind = r.u8()?;
+    if kind != want_kind {
+        return Err(SnapshotError::Corrupt(format!(
+            "blob kind {kind} where {want_kind} was expected"
+        )));
+    }
+    Ok(())
+}
+
+fn write_record(w: &mut SnapshotWriter, rec: &RoundRecord) {
+    w.u64(rec.iter as u64);
+    w.f64(rec.test_accuracy);
+    w.f64(rec.train_loss);
+    w.f64(rec.grad_norm);
+    w.f64(rec.bits_per_device);
+    w.f64(rec.p_t);
+    w.u64(rec.amp_iterations as u64);
+    w.f64(rec.accumulator_norm);
+    w.f64(rec.round_secs);
+    match rec.participation {
+        Some(p) => {
+            w.u8(1);
+            w.u64(p.transmitting as u64);
+            w.u64(p.not_scheduled as u64);
+            w.u64(p.silenced_low_gain as u64);
+            w.u64(p.dropped_stragglers as u64);
+        }
+        None => w.u8(0),
+    }
+    w.opt_f64(rec.consensus_distance);
+}
+
+fn read_record(r: &mut SnapshotReader<'_>) -> Result<RoundRecord, SnapshotError> {
+    let iter = r.u64()? as usize;
+    let test_accuracy = r.f64()?;
+    let train_loss = r.f64()?;
+    let grad_norm = r.f64()?;
+    let bits_per_device = r.f64()?;
+    let p_t = r.f64()?;
+    let amp_iterations = r.u64()? as usize;
+    let accumulator_norm = r.f64()?;
+    let round_secs = r.f64()?;
+    let participation = match r.u8()? {
+        0 => None,
+        1 => Some(ParticipationStats {
+            transmitting: r.u64()? as usize,
+            not_scheduled: r.u64()? as usize,
+            silenced_low_gain: r.u64()? as usize,
+            dropped_stragglers: r.u64()? as usize,
+        }),
+        other => return Err(SnapshotError::Corrupt(format!("bad participation tag {other}"))),
+    };
+    let consensus_distance = r.opt_f64()?;
+    Ok(RoundRecord {
+        iter,
+        test_accuracy,
+        train_loss,
+        grad_norm,
+        bits_per_device,
+        p_t,
+        amp_iterations,
+        accumulator_norm,
+        round_secs,
+        participation,
+        consensus_distance,
+    })
+}
+
+fn write_records(w: &mut SnapshotWriter, records: &[RoundRecord]) {
+    w.u64(records.len() as u64);
+    for rec in records {
+        write_record(w, rec);
+    }
+}
+
+fn read_records(r: &mut SnapshotReader<'_>) -> Result<Vec<RoundRecord>, SnapshotError> {
+    let len = r.u64()? as usize;
+    // Each record is at least 9 fixed f64/u64 fields + 2 tag bytes.
+    if len.saturating_mul(74) > r.remaining() {
+        return Err(SnapshotError::Truncated);
+    }
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(read_record(r)?);
+    }
+    Ok(out)
+}
+
+/// The complete mutable state of a [`crate::coordinator::Trainer`] between
+/// two rounds: restore it into a freshly-built trainer for the same
+/// `RunConfig` and the remaining rounds replay bit-identically to the
+/// uninterrupted run.
+#[derive(Clone, Debug)]
+pub struct TrainerSnapshot {
+    /// Stable hash of the canonicalized config this state belongs to
+    /// ([`super::store::config_hash`]); resuming under any other config is
+    /// refused.
+    pub config_hash: u64,
+    /// The next round index to execute (`t` rounds are already inside this
+    /// snapshot; equals `iterations` for a finished run).
+    pub next_round: usize,
+    /// Model weights θ_t (the consensus/evaluation model for replica links).
+    pub params: Vec<f32>,
+    /// PS optimizer first moment (empty for stateless optimizers).
+    pub optim_m: Vec<f32>,
+    /// PS optimizer second moment.
+    pub optim_v: Vec<f32>,
+    /// PS optimizer step count.
+    pub optim_t: u64,
+    /// Opaque link-scheme state written by
+    /// [`crate::coordinator::link::LinkScheme::snapshot`].
+    pub link: Vec<u8>,
+    /// Per-round records of the rounds already run (so a resumed run's log
+    /// is the *complete* series, not a suffix).
+    pub records: Vec<RoundRecord>,
+    /// Last evaluated test accuracy so far.
+    pub final_accuracy: f64,
+}
+
+impl TrainerSnapshot {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SnapshotWriter::new();
+        write_header(&mut w, KIND_SNAPSHOT);
+        w.u64(self.config_hash);
+        w.u64(self.next_round as u64);
+        w.vec_f32(&self.params);
+        w.vec_f32(&self.optim_m);
+        w.vec_f32(&self.optim_v);
+        w.u64(self.optim_t);
+        w.bytes(&self.link);
+        write_records(&mut w, &self.records);
+        w.f64(self.final_accuracy);
+        seal(w.into_bytes())
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<TrainerSnapshot, SnapshotError> {
+        let mut r = SnapshotReader::new(unseal(bytes)?);
+        read_header(&mut r, KIND_SNAPSHOT)?;
+        let config_hash = r.u64()?;
+        let next_round = r.u64()? as usize;
+        let params = r.vec_f32()?;
+        let optim_m = r.vec_f32()?;
+        let optim_v = r.vec_f32()?;
+        let optim_t = r.u64()?;
+        let link = r.bytes()?;
+        let records = read_records(&mut r)?;
+        let final_accuracy = r.f64()?;
+        Ok(TrainerSnapshot {
+            config_hash,
+            next_round,
+            params,
+            optim_m,
+            optim_v,
+            optim_t,
+            link,
+            records,
+            final_accuracy,
+        })
+    }
+}
+
+/// Serialize a finished run's [`TrainLog`] (the run-cache result blob).
+/// Round-trips bit-exactly — `round_secs` included — so CSVs regenerated
+/// from the cache are byte-identical to the originals.
+pub fn encode_log(log: &TrainLog) -> Vec<u8> {
+    let mut w = SnapshotWriter::new();
+    write_header(&mut w, KIND_RESULT);
+    w.str(&log.label);
+    w.f64(log.pbar);
+    w.f64(log.final_accuracy);
+    w.f64(log.total_secs);
+    w.vec_f64(&log.measured_avg_power);
+    write_records(&mut w, &log.records);
+    seal(w.into_bytes())
+}
+
+pub fn decode_log(bytes: &[u8]) -> Result<TrainLog, SnapshotError> {
+    let mut r = SnapshotReader::new(unseal(bytes)?);
+    read_header(&mut r, KIND_RESULT)?;
+    let label = r.str()?;
+    let pbar = r.f64()?;
+    let final_accuracy = r.f64()?;
+    let total_secs = r.f64()?;
+    let measured_avg_power = r.vec_f64()?;
+    let records = read_records(&mut r)?;
+    Ok(TrainLog {
+        label,
+        records,
+        measured_avg_power,
+        pbar,
+        final_accuracy,
+        total_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = SnapshotWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-0.5);
+        w.f64(f64::NAN);
+        w.bool(true);
+        w.str("über-label");
+        w.vec_f32(&[1.0, -2.5]);
+        w.vec_f64(&[3.25]);
+        w.opt_f64(None);
+        w.opt_f64(Some(9.0));
+        let bytes = w.into_bytes();
+        let mut r = SnapshotReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -0.5);
+        // NaN round-trips bit-exactly (to_bits framing).
+        assert!(r.f64().unwrap().is_nan());
+        assert!(r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "über-label");
+        assert_eq!(r.vec_f32().unwrap(), vec![1.0, -2.5]);
+        assert_eq!(r.vec_f64().unwrap(), vec![3.25]);
+        assert_eq!(r.opt_f64().unwrap(), None);
+        assert_eq!(r.opt_f64().unwrap(), Some(9.0));
+        assert_eq!(r.remaining(), 0);
+        assert!(matches!(r.u8(), Err(SnapshotError::Truncated)));
+    }
+
+    fn sample_records() -> Vec<RoundRecord> {
+        vec![
+            RoundRecord {
+                iter: 0,
+                test_accuracy: 0.5,
+                train_loss: 1.25,
+                grad_norm: 0.75,
+                bits_per_device: 128.0,
+                p_t: 500.0,
+                amp_iterations: 4,
+                accumulator_norm: 0.125,
+                round_secs: 0.01,
+                participation: Some(ParticipationStats {
+                    transmitting: 3,
+                    not_scheduled: 1,
+                    silenced_low_gain: 2,
+                    dropped_stragglers: 0,
+                }),
+                consensus_distance: Some(0.0),
+            },
+            RoundRecord {
+                iter: 1,
+                test_accuracy: f64::NAN,
+                train_loss: f64::NAN,
+                grad_norm: 0.5,
+                bits_per_device: 0.0,
+                p_t: 250.0,
+                amp_iterations: 0,
+                accumulator_norm: 0.0,
+                round_secs: 0.02,
+                participation: None,
+                consensus_distance: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn trainer_snapshot_roundtrip() {
+        let snap = TrainerSnapshot {
+            config_hash: 0xABCD_EF01_2345_6789,
+            next_round: 42,
+            params: vec![0.5, -1.0, 3.0],
+            optim_m: vec![0.1; 3],
+            optim_v: vec![0.2; 3],
+            optim_t: 42,
+            link: vec![1, 2, 3, 4],
+            records: sample_records(),
+            final_accuracy: 0.5,
+        };
+        let back = TrainerSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.config_hash, snap.config_hash);
+        assert_eq!(back.next_round, 42);
+        assert_eq!(back.params, snap.params);
+        assert_eq!(back.optim_m, snap.optim_m);
+        assert_eq!(back.optim_v, snap.optim_v);
+        assert_eq!(back.optim_t, 42);
+        assert_eq!(back.link, snap.link);
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(back.records[0].participation, snap.records[0].participation);
+        assert!(back.records[1].test_accuracy.is_nan());
+        assert_eq!(back.final_accuracy, 0.5);
+    }
+
+    #[test]
+    fn log_roundtrip_is_bit_exact() {
+        let log = TrainLog {
+            label: "D-DSGD LH".into(),
+            records: sample_records(),
+            measured_avg_power: vec![499.5, 500.0],
+            pbar: 500.0,
+            final_accuracy: 0.5,
+            total_secs: 1.5,
+        };
+        let back = decode_log(&encode_log(&log)).unwrap();
+        assert_eq!(back.label, log.label);
+        assert_eq!(back.pbar.to_bits(), log.pbar.to_bits());
+        assert_eq!(back.total_secs.to_bits(), log.total_secs.to_bits());
+        assert_eq!(back.measured_avg_power, log.measured_avg_power);
+        assert_eq!(back.records.len(), log.records.len());
+        for (a, b) in back.records.iter().zip(&log.records) {
+            assert_eq!(a.round_secs.to_bits(), b.round_secs.to_bits());
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+        }
+    }
+
+    /// Re-seal a tampered blob so the test reaches the check *behind* the
+    /// checksum (header validation order: checksum → magic → version).
+    fn reseal(bytes: &mut Vec<u8>) {
+        let n = bytes.len();
+        let sum = fnv1a64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    }
+
+    #[test]
+    fn bad_magic_version_and_corruption_rejected() {
+        let log = TrainLog {
+            label: "x".into(),
+            records: sample_records(),
+            measured_avg_power: vec![1.0],
+            pbar: 1.0,
+            final_accuracy: 0.0,
+            total_secs: 0.0,
+        };
+        let mut bytes = encode_log(&log);
+        // Kind mismatch: a result blob is not a trainer snapshot.
+        assert!(matches!(
+            TrainerSnapshot::decode(&bytes),
+            Err(SnapshotError::Corrupt(_))
+        ));
+        // Version bump rejected (checksum fixed up so the version gate is
+        // what fires).
+        bytes[8] = 99;
+        reseal(&mut bytes);
+        assert!(matches!(
+            decode_log(&bytes),
+            Err(SnapshotError::UnsupportedVersion(99))
+        ));
+        // Magic damage rejected.
+        bytes[0] = b'X';
+        reseal(&mut bytes);
+        assert!(matches!(decode_log(&bytes), Err(SnapshotError::BadMagic)));
+        // Truncation trips the checksum.
+        let ok = encode_log(&log);
+        assert!(decode_log(&ok[..ok.len() - 1]).is_err());
+        // Framing-preserving corruption in the middle of the payload is
+        // caught by the trailing checksum — never a silent wrong resume.
+        let mut flipped = encode_log(&log);
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        assert!(matches!(
+            decode_log(&flipped),
+            Err(SnapshotError::Corrupt(_))
+        ));
+    }
+}

@@ -1,0 +1,333 @@
+//! The content-addressed run store: results and snapshots keyed by a
+//! stable hash of the canonicalized `RunConfig`.
+//!
+//! # Cache-key canonicalization
+//!
+//! [`canonical_config`] renders *every* `RunConfig` field as one
+//! `key=value` line in a fixed order, using each enum's canonical string
+//! form (`Scheme::name`, `FadingDist::describe`, …) and `f64` `Display`
+//! (shortest round-trip form, so `500.0` and `500.00` collide as they
+//! should). [`config_hash`] is FNV-1a 64 over those bytes and
+//! [`cache_key`] its 16-hex-digit rendering — the store directory name.
+//!
+//! Two deliberate properties:
+//!
+//! * **Never a false hit.** Fields a scheme happens to ignore (e.g. the
+//!   `[topology]` table under an error-free run) are still hashed, so the
+//!   key is conservatively fine-grained: a config change can only ever
+//!   *miss* the cache, never collide into the wrong entry.
+//! * **Labels are not identity.** The experiment label is display metadata
+//!   recorded in the manifest; renaming a run in a figure spec still hits
+//!   the cache for the identical config.
+//!
+//! # Layout
+//!
+//! ```text
+//! <store_dir>/<cache_key>/manifest.toml   # human-readable index entry
+//! <store_dir>/<cache_key>/snapshot.bin    # latest TrainerSnapshot (partial runs)
+//! <store_dir>/<cache_key>/result.bin      # finished TrainLog (complete runs)
+//! ```
+//!
+//! All writes go through a temp-file + rename, so a crash mid-write leaves
+//! the previous blob intact — the whole point of the subsystem.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::config::{Backend, DatasetSpec, RunConfig};
+use crate::coordinator::TrainLog;
+
+use super::manifest::{RunManifest, RunStatus};
+use super::snapshot::{decode_log, encode_log, fnv1a64, TrainerSnapshot, SNAPSHOT_VERSION};
+
+/// Render every config field in fixed order with canonical value forms.
+/// The exhaustive destructuring (no `..`) is load-bearing: adding a field
+/// to `RunConfig` without deciding its canonical rendering fails to
+/// compile here, which is what keeps "never a false cache hit" true over
+/// time.
+pub fn canonical_config(cfg: &RunConfig) -> String {
+    let RunConfig {
+        scheme,
+        devices,
+        local_samples,
+        channel_uses,
+        sparsity,
+        pbar,
+        noise_var,
+        iterations,
+        power,
+        lr,
+        noniid,
+        seed,
+        mean_removal_rounds,
+        qsgd_levels,
+        backend,
+        dataset,
+        eval_every,
+        amp_iters,
+        amp_tol,
+        amp_threshold_mult,
+        fading,
+        csi_threshold,
+        participation,
+        deadline_secs,
+        latency_mean_secs,
+        fading_rho,
+        topology,
+    } = cfg;
+    let crate::config::TopologyConfig {
+        family,
+        degree,
+        p,
+        mixing,
+        seed: topology_seed,
+    } = topology;
+    let backend = match backend {
+        Backend::Rust => "rust",
+        Backend::Pjrt => "pjrt",
+    };
+    let dataset = match dataset {
+        DatasetSpec::Synthetic { train, test } => format!("synthetic:{train}:{test}"),
+        DatasetSpec::MnistIdx { dir } => format!("mnist:{dir}"),
+    };
+    format!(
+        "scheme={}\ndevices={devices}\nlocal_samples={local_samples}\nchannel_uses={channel_uses}\nsparsity={sparsity}\npbar={pbar}\nnoise_var={noise_var}\niterations={iterations}\npower={}\nlr={lr}\nnoniid={noniid}\nseed={seed}\nmean_removal_rounds={mean_removal_rounds}\nqsgd_levels={qsgd_levels}\nbackend={backend}\ndataset={dataset}\neval_every={eval_every}\namp_iters={amp_iters}\namp_tol={amp_tol}\namp_threshold_mult={amp_threshold_mult}\nfading={}\ncsi_threshold={csi_threshold}\nparticipation={}\ndeadline_secs={deadline_secs}\nlatency_mean_secs={latency_mean_secs}\nfading_rho={fading_rho}\ntopology_family={}\ntopology_degree={degree}\ntopology_p={p}\ntopology_mixing={}\ntopology_seed={topology_seed}\n",
+        scheme.name(),
+        power.name(),
+        fading.describe(),
+        participation.describe(),
+        family.name(),
+        mixing.name(),
+    )
+}
+
+/// FNV-1a 64 over the canonical rendering — the run's stable identity.
+pub fn config_hash(cfg: &RunConfig) -> u64 {
+    fnv1a64(canonical_config(cfg).as_bytes())
+}
+
+/// The store address of a config: `config_hash` as 16 hex digits.
+pub fn cache_key(cfg: &RunConfig) -> String {
+    format!("{:016x}", config_hash(cfg))
+}
+
+/// Crash-safe write: temp file in the same directory, fsync'd before the
+/// rename — without the sync, journaling filesystems may commit the
+/// rename ahead of the data blocks and a power cut would leave a torn
+/// blob where the previous good one used to be. The temp name is unique
+/// per process *and* per write, so two campaigns sharing a store (or two
+/// parallel workers hitting one entry) never interleave into the same
+/// temp file; last rename wins with a complete blob either way.
+fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+}
+
+/// A directory of content-addressed run entries.
+pub struct RunStore {
+    root: PathBuf,
+}
+
+impl RunStore {
+    /// Open (creating if needed) the store rooted at `dir`.
+    pub fn open(dir: &str) -> io::Result<RunStore> {
+        let root = PathBuf::from(dir);
+        fs::create_dir_all(&root)?;
+        Ok(RunStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn entry_dir(&self, cfg: &RunConfig) -> PathBuf {
+        self.root.join(cache_key(cfg))
+    }
+
+    /// The finished result for `cfg`, if cached. Any decode problem
+    /// (truncation, version skew) reads as a miss, never an error — the
+    /// run simply re-executes.
+    pub fn load_result(&self, cfg: &RunConfig) -> Option<TrainLog> {
+        let bytes = fs::read(self.entry_dir(cfg).join("result.bin")).ok()?;
+        decode_log(&bytes).ok()
+    }
+
+    /// The latest snapshot for `cfg`, if one exists and belongs to this
+    /// exact config (the embedded hash is checked on top of the address).
+    pub fn load_snapshot(&self, cfg: &RunConfig) -> Option<TrainerSnapshot> {
+        let bytes = fs::read(self.entry_dir(cfg).join("snapshot.bin")).ok()?;
+        let snap = TrainerSnapshot::decode(&bytes).ok()?;
+        if snap.config_hash != config_hash(cfg) {
+            return None;
+        }
+        Some(snap)
+    }
+
+    /// Persist a mid-run snapshot and mark the entry partial.
+    pub fn save_snapshot(
+        &self,
+        cfg: &RunConfig,
+        label: &str,
+        snap: &TrainerSnapshot,
+    ) -> io::Result<()> {
+        let dir = self.entry_dir(cfg);
+        fs::create_dir_all(&dir)?;
+        write_atomic(&dir.join("snapshot.bin"), &snap.encode())?;
+        let manifest = RunManifest {
+            key: cache_key(cfg),
+            label: label.to_string(),
+            summary: cfg.summary(),
+            status: RunStatus::Partial,
+            snapshot_round: snap.next_round,
+            iterations: cfg.iterations,
+            version: SNAPSHOT_VERSION,
+        };
+        write_atomic(&dir.join("manifest.toml"), manifest.to_toml().as_bytes())
+    }
+
+    /// Persist a finished run's log and mark the entry complete. The
+    /// now-stale snapshot blob is dropped.
+    pub fn save_result(&self, cfg: &RunConfig, label: &str, log: &TrainLog) -> io::Result<()> {
+        let dir = self.entry_dir(cfg);
+        fs::create_dir_all(&dir)?;
+        write_atomic(&dir.join("result.bin"), &encode_log(log))?;
+        let manifest = RunManifest {
+            key: cache_key(cfg),
+            label: label.to_string(),
+            summary: cfg.summary(),
+            status: RunStatus::Complete,
+            snapshot_round: cfg.iterations,
+            iterations: cfg.iterations,
+            version: SNAPSHOT_VERSION,
+        };
+        write_atomic(&dir.join("manifest.toml"), manifest.to_toml().as_bytes())?;
+        let _ = fs::remove_file(dir.join("snapshot.bin"));
+        Ok(())
+    }
+
+    /// All readable manifests, sorted by key (deterministic listing for
+    /// `repro status`). Unreadable entries are skipped, not fatal.
+    pub fn list(&self) -> Vec<RunManifest> {
+        let mut out = Vec::new();
+        let Ok(entries) = fs::read_dir(&self.root) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            let manifest_path = entry.path().join("manifest.toml");
+            if let Ok(m) = RunManifest::read(&manifest_path) {
+                out.push(m);
+            }
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Scheme};
+
+    fn tmp_store(name: &str) -> (RunStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("ota_store_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        let store = RunStore::open(dir.to_str().unwrap()).unwrap();
+        (store, dir)
+    }
+
+    #[test]
+    fn hash_is_stable_and_field_sensitive() {
+        let cfg = presets::smoke();
+        assert_eq!(config_hash(&cfg), config_hash(&cfg.clone()));
+        // Every semantically distinct knob must move the key.
+        let variants = [
+            RunConfig { seed: cfg.seed + 1, ..cfg.clone() },
+            RunConfig { scheme: Scheme::DDsgd, ..cfg.clone() },
+            RunConfig { iterations: cfg.iterations + 1, ..cfg.clone() },
+            RunConfig { pbar: cfg.pbar * 2.0, ..cfg.clone() },
+            RunConfig { fading_rho: 0.5, ..cfg.clone() },
+            RunConfig { eval_every: cfg.eval_every + 1, ..cfg.clone() },
+        ];
+        let base = config_hash(&cfg);
+        for v in &variants {
+            assert_ne!(config_hash(v), base, "{}", canonical_config(v));
+        }
+        assert_eq!(cache_key(&cfg).len(), 16);
+    }
+
+    #[test]
+    fn result_roundtrip_and_miss_semantics() {
+        let (store, dir) = tmp_store("result");
+        let cfg = presets::smoke();
+        assert!(store.load_result(&cfg).is_none());
+        let log = TrainLog {
+            label: "raw".into(),
+            records: vec![],
+            measured_avg_power: vec![1.0, 2.0],
+            pbar: 500.0,
+            final_accuracy: 0.75,
+            total_secs: 3.5,
+        };
+        store.save_result(&cfg, "smoke", &log).unwrap();
+        let back = store.load_result(&cfg).unwrap();
+        assert_eq!(back.final_accuracy, 0.75);
+        assert_eq!(back.measured_avg_power, vec![1.0, 2.0]);
+        // A different config misses even with the store populated.
+        let other = RunConfig { seed: cfg.seed + 9, ..cfg.clone() };
+        assert!(store.load_result(&other).is_none());
+        // Listing shows one complete entry.
+        let listing = store.list();
+        assert_eq!(listing.len(), 1);
+        assert_eq!(listing[0].status, RunStatus::Complete);
+        assert_eq!(listing[0].label, "smoke");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_and_result_supersedes_it() {
+        let (store, dir) = tmp_store("snap");
+        let cfg = presets::smoke();
+        let snap = TrainerSnapshot {
+            config_hash: config_hash(&cfg),
+            next_round: 5,
+            params: vec![1.0; 4],
+            optim_m: vec![0.0; 4],
+            optim_v: vec![0.0; 4],
+            optim_t: 5,
+            link: vec![9, 9],
+            records: vec![],
+            final_accuracy: 0.25,
+        };
+        store.save_snapshot(&cfg, "smoke", &snap).unwrap();
+        let back = store.load_snapshot(&cfg).unwrap();
+        assert_eq!(back.next_round, 5);
+        assert_eq!(store.list()[0].status, RunStatus::Partial);
+        assert_eq!(store.list()[0].snapshot_round, 5);
+        // Wrong-config snapshots are refused even if the file were there.
+        let other = RunConfig { seed: cfg.seed + 1, ..cfg.clone() };
+        assert!(store.load_snapshot(&other).is_none());
+        // Completing the run drops the stale snapshot.
+        let log = TrainLog {
+            label: "raw".into(),
+            records: vec![],
+            measured_avg_power: vec![],
+            pbar: 500.0,
+            final_accuracy: 0.5,
+            total_secs: 1.0,
+        };
+        store.save_result(&cfg, "smoke", &log).unwrap();
+        assert!(store.load_snapshot(&cfg).is_none());
+        assert_eq!(store.list()[0].status, RunStatus::Complete);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

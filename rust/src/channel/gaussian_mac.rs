@@ -119,6 +119,27 @@ impl GaussianMac {
         self.meter.report(self.s)
     }
 
+    /// Noise-stream position for checkpointing (the per-round z(t) draws
+    /// are the MAC's only advancing state besides the meter).
+    pub fn rng_state(&self) -> (u64, u64, Option<f64>) {
+        self.rng.raw_state()
+    }
+
+    /// Restore the noise stream at an exact position captured by
+    /// [`GaussianMac::rng_state`].
+    pub fn restore_rng(&mut self, st: (u64, u64, Option<f64>)) {
+        self.rng = Pcg64::from_raw_state(st.0, st.1, st.2);
+    }
+
+    /// The transmit-energy meter (checkpointing accessor).
+    pub fn meter(&self) -> &PowerMeter {
+        &self.meter
+    }
+
+    pub fn meter_mut(&mut self) -> &mut PowerMeter {
+        &mut self.meter
+    }
+
     pub fn devices(&self) -> usize {
         self.devices
     }

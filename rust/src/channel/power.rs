@@ -58,6 +58,24 @@ impl PowerMeter {
         self.rounds
     }
 
+    /// Accumulated per-device energy (checkpointing accessor).
+    pub fn energy(&self) -> &[f64] {
+        &self.energy
+    }
+
+    /// Restore a position captured by [`PowerMeter::energy`] /
+    /// [`PowerMeter::rounds`]: the Eq. 6 audit of a resumed run then
+    /// averages over the *whole* trajectory, not just the resumed suffix.
+    pub fn load(&mut self, energy: &[f64], rounds: usize) {
+        assert_eq!(
+            energy.len(),
+            self.energy.len(),
+            "meter restore must match the configured device count"
+        );
+        self.energy.copy_from_slice(energy);
+        self.rounds = rounds;
+    }
+
     /// Snapshot as a [`PowerReport`] — the single home of the Eq. 6
     /// averaging math (`uses_per_round` = s for MAC links).
     pub fn report(&self, uses_per_round: usize) -> PowerReport {

@@ -58,6 +58,17 @@ impl ErrorAccumulator {
         &self.delta
     }
 
+    /// Restore a residual captured by [`ErrorAccumulator::as_slice`]
+    /// (checkpoint restore).
+    pub fn load(&mut self, delta: &[f32]) {
+        assert_eq!(
+            delta.len(),
+            self.delta.len(),
+            "accumulator restore must match the model dimension"
+        );
+        self.delta.copy_from_slice(delta);
+    }
+
     pub fn reset(&mut self) {
         self.delta.fill(0.0);
     }

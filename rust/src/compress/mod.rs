@@ -49,6 +49,18 @@ pub trait DigitalCompressor: Send {
     /// encoder-owned RNG stream.
     fn encode(&mut self, g: &[f32], budget_bits: f64) -> DigitalPayload;
     fn name(&self) -> &'static str;
+
+    /// RNG position for checkpointing. Deterministic compressors (SBC,
+    /// SignSGD) have no stream and return `None`; stochastic ones (QSGD)
+    /// return their exact generator position so a resumed run reproduces
+    /// the uninterrupted rounding sequence bit-for-bit.
+    fn rng_state(&self) -> Option<(u64, u64, Option<f64>)> {
+        None
+    }
+
+    /// Restore a position captured by [`DigitalCompressor::rng_state`].
+    /// No-op for deterministic compressors.
+    fn restore_rng(&mut self, _state: (u64, u64, Option<f64>)) {}
 }
 
 #[cfg(test)]

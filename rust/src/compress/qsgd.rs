@@ -84,6 +84,14 @@ impl DigitalCompressor for QsgdCompressor {
     fn name(&self) -> &'static str {
         "qsgd"
     }
+
+    fn rng_state(&self) -> Option<(u64, u64, Option<f64>)> {
+        Some(self.rng.raw_state())
+    }
+
+    fn restore_rng(&mut self, state: (u64, u64, Option<f64>)) {
+        self.rng = Pcg64::from_raw_state(state.0, state.1, state.2);
+    }
 }
 
 #[cfg(test)]

@@ -923,6 +923,83 @@ impl RunConfig {
     }
 }
 
+/// The `[campaign]` table: checkpoint/resume and run-cache policy for
+/// experiment campaigns (`repro fig`, `repro all`, `repro resume`). These
+/// knobs are campaign-level, not per-run — they never enter the
+/// content-address of a run (see `campaign::store`), so changing the
+/// snapshot cadence does not invalidate cached results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignConfig {
+    /// Snapshot the full trainer state every N rounds (plus once after the
+    /// final round). 0 disables periodic snapshots — interrupted runs then
+    /// restart from scratch, but finished results are still cached.
+    pub snapshot_every: usize,
+    /// Run-store directory. Empty (the default) derives `<out>/.campaign`
+    /// from the results directory at launch time.
+    pub store_dir: String,
+    /// Resume partial runs from their latest snapshot instead of
+    /// restarting them.
+    pub resume: bool,
+    /// Master switch; `false` bypasses the store entirely (the CLI's
+    /// `--no-cache`).
+    pub enabled: bool,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            snapshot_every: 20,
+            store_dir: String::new(),
+            resume: true,
+            enabled: true,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// Read the `[campaign]` table from a parsed document (absent table =
+    /// all defaults).
+    pub fn from_doc(doc: &Document) -> Result<CampaignConfig, ConfigError> {
+        let mut cfg = CampaignConfig::default();
+        let Some(section) = doc.get("campaign") else {
+            return Ok(cfg);
+        };
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("[campaign] key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in section {
+            match k.as_str() {
+                "snapshot_every" => cfg.snapshot_every = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "store_dir" => {
+                    cfg.store_dir = v.as_str().ok_or_else(|| bad(k, v))?.to_string()
+                }
+                "resume" => cfg.resume = v.as_bool().ok_or_else(|| bad(k, v))?,
+                "enabled" => cfg.enabled = v.as_bool().ok_or_else(|| bad(k, v))?,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown [campaign] key {other:?}"
+                    )));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_toml(text: &str) -> Result<CampaignConfig, ConfigError> {
+        Self::from_doc(&parser::parse(text)?)
+    }
+
+    /// The store directory with the empty-means-derive default resolved
+    /// against the results directory.
+    pub fn store_dir_or(&self, out_dir: &str) -> String {
+        if self.store_dir.is_empty() {
+            format!("{out_dir}/.campaign")
+        } else {
+            self.store_dir.clone()
+        }
+    }
+}
+
 /// Parse helper used by the launcher: read a whole document and report
 /// unknown sections.
 pub fn load_document(text: &str) -> Result<Document, ConfigError> {
@@ -1311,6 +1388,30 @@ rho = 0.85
         };
         assert!(ring.summary().contains("topo=ring:deg1/metropolis"), "{}", ring.summary());
         assert!(!RunConfig::default().summary().contains("topo="));
+    }
+
+    #[test]
+    fn campaign_table_parses_and_defaults() {
+        let c = CampaignConfig::from_toml(
+            "[campaign]\nsnapshot_every = 50\nstore_dir = \"cache\"\nresume = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.snapshot_every, 50);
+        assert_eq!(c.store_dir, "cache");
+        assert!(!c.resume);
+        assert!(c.enabled);
+        assert_eq!(c.store_dir_or("results"), "cache");
+        // Absent table = defaults; empty store_dir derives from out dir.
+        let d = CampaignConfig::from_toml("[run]\ndevices = 4\n").unwrap();
+        assert_eq!(d, CampaignConfig::default());
+        assert_eq!(d.store_dir_or("artifacts"), "artifacts/.campaign");
+        // Unknown keys rejected.
+        assert!(CampaignConfig::from_toml("[campaign]\nbogus = 1\n").is_err());
+        // A [campaign] table does not disturb RunConfig parsing of the
+        // same document.
+        let rc =
+            RunConfig::from_toml("[run]\ndevices = 4\n[campaign]\nsnapshot_every = 5\n").unwrap();
+        assert_eq!(rc.devices, 4);
     }
 
     #[test]

@@ -76,6 +76,12 @@ impl<S: Send> DeviceSet<S> {
     pub fn iter(&self) -> std::slice::Iter<'_, S> {
         self.states.iter()
     }
+
+    /// Mutable per-device access in device order (checkpoint restore walks
+    /// this to reload each device's error accumulator / RNG position).
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, S> {
+        self.states.iter_mut()
+    }
 }
 
 #[cfg(test)]

@@ -4,6 +4,7 @@
 
 use crate::amp::AmpConfig;
 use crate::analog::{AnalogDevice, AnalogPs, Projection};
+use crate::campaign::snapshot::{self, SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::channel::GaussianMac;
 use crate::config::RunConfig;
 use crate::tensor::Matf;
@@ -54,6 +55,50 @@ pub(super) fn analog_parts(
     });
     let mac = GaussianMac::new(cfg.channel_uses, cfg.devices, cfg.noise_var, cfg.seed ^ 0xC4A);
     (states, mac, ps_std, ps_mr)
+}
+
+/// Checkpoint the round state the static *and* fading analog links share:
+/// per-device error accumulators plus the MAC's noise-stream position and
+/// power meter. Everything else (projections, decoders, the counter-based
+/// scenario generators) is rebuilt from the config.
+pub(super) fn snapshot_analog_state(
+    w: &mut SnapshotWriter,
+    devices: &DeviceSet<AnalogDevice>,
+    mac: &GaussianMac,
+) {
+    w.u64(devices.len() as u64);
+    for dev in devices.iter() {
+        w.vec_f32(dev.accumulator());
+    }
+    snapshot::write_rng(w, mac.rng_state());
+    snapshot::write_meter(w, mac.meter());
+}
+
+pub(super) fn restore_analog_state(
+    r: &mut SnapshotReader<'_>,
+    devices: &mut DeviceSet<AnalogDevice>,
+    mac: &mut GaussianMac,
+) -> Result<(), SnapshotError> {
+    let n = r.u64()? as usize;
+    if n != devices.len() {
+        return Err(SnapshotError::Corrupt(format!(
+            "snapshot has {n} devices, link has {}",
+            devices.len()
+        )));
+    }
+    for dev in devices.iter_mut() {
+        let acc = r.vec_f32()?;
+        if acc.len() != dev.accumulator().len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "accumulator length {} != model dimension {}",
+                acc.len(),
+                dev.accumulator().len()
+            )));
+        }
+        dev.load_accumulator(&acc);
+    }
+    mac.restore_rng(snapshot::read_rng(r)?);
+    snapshot::read_meter(r, mac.meter_mut())
 }
 
 impl AnalogLink {
@@ -128,6 +173,14 @@ impl LinkScheme for AnalogLink {
 
     fn name(&self) -> &'static str {
         "A-DSGD"
+    }
+
+    fn snapshot(&self, w: &mut SnapshotWriter) {
+        snapshot_analog_state(w, &self.devices, &self.mac);
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader<'_>) -> Result<(), SnapshotError> {
+        restore_analog_state(r, &mut self.devices, &mut self.mac)
     }
 }
 

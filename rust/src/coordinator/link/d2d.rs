@@ -40,6 +40,7 @@
 //! root-mean-square consensus distance every round.
 
 use crate::analog::{AnalogDevice, AnalogPs};
+use crate::campaign::snapshot::{self, SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::channel::{FadingProcess, PowerMeter};
 use crate::config::RunConfig;
 use crate::optim::{Adam, Optimizer};
@@ -304,6 +305,70 @@ impl LinkScheme for D2dAnalogLink {
 
     fn replicas(&self) -> Option<&Matf> {
         Some(&self.replicas)
+    }
+
+    /// Decentralized state is per device: error accumulator, model replica
+    /// θ_i, and local Adam moments — plus the shared broadcast-noise RNG
+    /// position and the meter. The graph, mixing matrix and per-edge gain
+    /// process are config-derived (counter-based) and not stored.
+    fn snapshot(&self, w: &mut SnapshotWriter) {
+        let m = self.devices.len();
+        w.u64(m as u64);
+        for dev in self.devices.iter() {
+            w.vec_f32(dev.accumulator());
+        }
+        for i in 0..m {
+            w.vec_f32(self.replicas.row(i));
+        }
+        for opt in &self.optimizers {
+            let (om, ov, ot) = opt.export_state();
+            w.vec_f32(&om);
+            w.vec_f32(&ov);
+            w.u64(ot);
+        }
+        let st = self.noise_rng.raw_state();
+        snapshot::write_rng(w, st);
+        snapshot::write_meter(w, &self.meter);
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader<'_>) -> Result<(), SnapshotError> {
+        let m = r.u64()? as usize;
+        if m != self.devices.len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "snapshot has {m} devices, link has {}",
+                self.devices.len()
+            )));
+        }
+        let dim = self.dim;
+        let bad_len = |what: &str, got: usize| {
+            SnapshotError::Corrupt(format!("{what} length {got} != model dimension {dim}"))
+        };
+        for dev in self.devices.iter_mut() {
+            let acc = r.vec_f32()?;
+            if acc.len() != dim {
+                return Err(bad_len("accumulator", acc.len()));
+            }
+            dev.load_accumulator(&acc);
+        }
+        for i in 0..m {
+            let row = r.vec_f32()?;
+            if row.len() != dim {
+                return Err(bad_len("replica", row.len()));
+            }
+            self.replicas.row_mut(i).copy_from_slice(&row);
+        }
+        for opt in self.optimizers.iter_mut() {
+            let om = r.vec_f32()?;
+            let ov = r.vec_f32()?;
+            let ot = r.u64()?;
+            if om.len() != dim || ov.len() != dim {
+                return Err(bad_len("optimizer moment", om.len()));
+            }
+            opt.import_state(&om, &ov, ot);
+        }
+        let st = snapshot::read_rng(r)?;
+        self.noise_rng = Pcg64::from_raw_state(st.0, st.1, st.2);
+        snapshot::read_meter(r, &mut self.meter)
     }
 
     fn replica_average(&self) -> Option<Vec<f32>> {

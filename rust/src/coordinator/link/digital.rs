@@ -17,6 +17,7 @@
 //! unchanged (bit-for-bit, telemetry `participation = None`); a real
 //! policy reports the Option-typed counts the analog family already does.
 
+use crate::campaign::snapshot::{self, SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::channel::PowerMeter;
 use crate::compress::DigitalPayload;
 use crate::config::{ParticipationPolicy, RunConfig};
@@ -144,6 +145,71 @@ impl LinkScheme for DigitalLink {
 
     fn name(&self) -> &'static str {
         "digital"
+    }
+
+    /// Per device: the D-DSGD error accumulator (absent for the
+    /// no-accumulation baselines) and the QSGD stochastic-rounding RNG
+    /// position (absent for deterministic compressors); plus the Eq. 6
+    /// meter. The participation selector is counter-based and needs no
+    /// storage.
+    fn snapshot(&self, w: &mut SnapshotWriter) {
+        w.u64(self.devices.len() as u64);
+        for dev in self.devices.iter() {
+            match dev.accumulator() {
+                Some(acc) => {
+                    w.u8(1);
+                    w.vec_f32(acc);
+                }
+                None => w.u8(0),
+            }
+            match dev.rng_state() {
+                Some(st) => {
+                    w.u8(1);
+                    snapshot::write_rng(w, st);
+                }
+                None => w.u8(0),
+            }
+        }
+        snapshot::write_meter(w, &self.meter);
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader<'_>) -> Result<(), SnapshotError> {
+        let n = r.u64()? as usize;
+        if n != self.devices.len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "snapshot has {n} devices, link has {}",
+                self.devices.len()
+            )));
+        }
+        let dim = self.dim;
+        for dev in self.devices.iter_mut() {
+            let has_accum = r.u8()? != 0;
+            if has_accum != dev.accumulator().is_some() {
+                return Err(SnapshotError::Corrupt(
+                    "accumulator presence differs from the scheme's".into(),
+                ));
+            }
+            if has_accum {
+                let acc = r.vec_f32()?;
+                if acc.len() != dim {
+                    return Err(SnapshotError::Corrupt(format!(
+                        "accumulator length {} != model dimension {dim}",
+                        acc.len()
+                    )));
+                }
+                dev.load_accumulator(&acc);
+            }
+            let has_rng = r.u8()? != 0;
+            if has_rng != dev.rng_state().is_some() {
+                return Err(SnapshotError::Corrupt(
+                    "compressor RNG presence differs from the scheme's".into(),
+                ));
+            }
+            if has_rng {
+                dev.restore_rng(snapshot::read_rng(r)?);
+            }
+        }
+        snapshot::read_meter(r, &mut self.meter)
     }
 }
 

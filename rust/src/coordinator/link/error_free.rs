@@ -1,6 +1,7 @@
 //! The noiseless shared-link benchmark: the PS receives the exact average
 //! gradient. No channel, no compression, no transmit energy.
 
+use crate::campaign::snapshot::{SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::tensor::Matf;
 
 use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
@@ -41,6 +42,13 @@ impl LinkScheme for ErrorFreeLink {
 
     fn name(&self) -> &'static str {
         "error-free"
+    }
+
+    /// The noiseless link is stateless round to round — nothing to save.
+    fn snapshot(&self, _w: &mut SnapshotWriter) {}
+
+    fn restore(&mut self, _r: &mut SnapshotReader<'_>) -> Result<(), SnapshotError> {
+        Ok(())
     }
 }
 

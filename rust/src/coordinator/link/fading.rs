@@ -32,13 +32,14 @@
 //! [`AnalogDevice::absorb`] and spends zero transmit energy.
 
 use crate::analog::{AnalogDevice, AnalogPs};
+use crate::campaign::snapshot::{SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::channel::{FadingProcess, GaussianMac, LatencyModel};
 use crate::config::RunConfig;
 use crate::tensor::Matf;
 
 use super::super::device::DeviceSet;
 use super::super::participation::ParticipationSelector;
-use super::analog::analog_parts;
+use super::analog::{analog_parts, restore_analog_state, snapshot_analog_state};
 use super::{LinkRound, LinkScheme, ParticipationStats, RoundCtx, RoundTelemetry};
 
 pub struct FadingAnalogLink {
@@ -240,6 +241,18 @@ impl LinkScheme for FadingAnalogLink {
         } else {
             "blind-A-DSGD"
         }
+    }
+
+    /// Same shape as the static analog link: accumulators + MAC state. The
+    /// fading gains, participation subsets, AR(1) chains and straggler
+    /// latencies are all counter-based — pure per `(seed, device, t)` — so
+    /// they need no storage to resume exactly.
+    fn snapshot(&self, w: &mut SnapshotWriter) {
+        snapshot_analog_state(w, &self.devices, &self.mac);
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader<'_>) -> Result<(), SnapshotError> {
+        restore_analog_state(r, &mut self.devices, &mut self.mac)
     }
 }
 

@@ -82,6 +82,7 @@ pub use digital::DigitalLink;
 pub use error_free::ErrorFreeLink;
 pub use fading::FadingAnalogLink;
 
+use crate::campaign::snapshot::{SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::config::{LinkKind, RunConfig, Scheme};
 use crate::tensor::Matf;
 
@@ -182,6 +183,23 @@ pub trait LinkScheme {
     fn replica_average(&self) -> Option<Vec<f32>> {
         None
     }
+
+    /// Checkpoint hook: serialize every piece of state that evolves across
+    /// rounds — error accumulators, advancing RNG positions (MAC noise,
+    /// QSGD rounding, D2D broadcast noise), power-meter totals, model
+    /// replicas and their local optimizers. Anything *not* written here
+    /// must be reconstructible from the `RunConfig` alone (projections,
+    /// graphs, counter-based generators), because restore happens on a
+    /// freshly built link. Deliberately a required method: a new scheme
+    /// that forgets its round state would silently break bit-identical
+    /// resume, so the compiler makes the author decide.
+    fn snapshot(&self, w: &mut SnapshotWriter);
+
+    /// Restore state written by [`LinkScheme::snapshot`] into a freshly
+    /// built link for the same config. After this, driving the remaining
+    /// rounds is bit-identical to never having stopped (pinned by
+    /// `rust/tests/campaign_resume.rs` for every factory scheme).
+    fn restore(&mut self, r: &mut SnapshotReader<'_>) -> Result<(), SnapshotError>;
 }
 
 /// Build the link implementation serving `cfg.scheme` (the coordinator-side

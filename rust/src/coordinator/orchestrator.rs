@@ -7,6 +7,8 @@
 
 use std::time::Instant;
 
+use crate::campaign::snapshot::{SnapshotReader, SnapshotWriter, TrainerSnapshot};
+use crate::campaign::store::config_hash;
 use crate::channel::PowerAllocator;
 use crate::config::RunConfig;
 use crate::data::{load_corpus, partition, Corpus};
@@ -66,6 +68,28 @@ impl Trainer {
 
     /// Run the full T-iteration job.
     pub fn run(&mut self) -> TrainLog {
+        self.run_with_snapshots(None, 0, &mut |_| {})
+    }
+
+    /// Resume a run from a [`TrainerSnapshot`] (taken by an earlier
+    /// [`Trainer::run_with_snapshots`]); the remaining rounds replay
+    /// bit-identically to the uninterrupted trajectory.
+    pub fn resume(&mut self, snap: &TrainerSnapshot) -> TrainLog {
+        self.run_with_snapshots(Some(snap), 0, &mut |_| {})
+    }
+
+    /// The general driver behind [`Trainer::run`] / [`Trainer::resume`]:
+    /// optionally restore a snapshot first, then emit a new snapshot to
+    /// `sink` after every `snapshot_every`-th round and after the final one
+    /// (`snapshot_every = 0` disables emission). Restoring and re-emitting
+    /// are exact inverses, so snapshots compose across any number of
+    /// interruptions.
+    pub fn run_with_snapshots(
+        &mut self,
+        resume: Option<&TrainerSnapshot>,
+        snapshot_every: usize,
+        sink: &mut dyn FnMut(&TrainerSnapshot),
+    ) -> TrainLog {
         let t_start = Instant::now();
         let d = PARAM_DIM;
 
@@ -86,7 +110,30 @@ impl Trainer {
             total_secs: 0.0,
         };
 
-        for t in 0..self.cfg.iterations {
+        let mut start_round = 0;
+        if let Some(snap) = resume {
+            assert_eq!(
+                snap.config_hash,
+                config_hash(&self.cfg),
+                "snapshot belongs to a different RunConfig"
+            );
+            assert_eq!(snap.params.len(), d, "snapshot model dimension mismatch");
+            assert!(
+                snap.next_round <= self.cfg.iterations,
+                "snapshot round {} beyond the configured horizon {}",
+                snap.next_round,
+                self.cfg.iterations
+            );
+            params.copy_from_slice(&snap.params);
+            optimizer.import_state(&snap.optim_m, &snap.optim_v, snap.optim_t);
+            let mut r = SnapshotReader::new(&snap.link);
+            link.restore(&mut r).expect("link state restore");
+            log.records = snap.records.clone();
+            log.final_accuracy = snap.final_accuracy;
+            start_round = snap.next_round;
+        }
+
+        for t in start_round..self.cfg.iterations {
             let round_start = Instant::now();
             let p_t = power.p(t);
 
@@ -148,12 +195,42 @@ impl Trainer {
                 log.final_accuracy = acc;
             }
             log.records.push(record);
+
+            if snapshot_every > 0 && ((t + 1) % snapshot_every == 0 || t + 1 == self.cfg.iterations)
+            {
+                sink(&self.take_snapshot(t + 1, &params, optimizer.as_ref(), link.as_ref(), &log));
+            }
         }
 
         // Eq. 6 audit straight from the link's meters.
         log.measured_avg_power = link.measured_avg_power();
         log.total_secs = t_start.elapsed().as_secs_f64();
         log
+    }
+
+    /// Capture the complete mutable state after `next_round` rounds.
+    fn take_snapshot(
+        &self,
+        next_round: usize,
+        params: &[f32],
+        optimizer: &dyn Optimizer,
+        link: &dyn LinkScheme,
+        log: &TrainLog,
+    ) -> TrainerSnapshot {
+        let (optim_m, optim_v, optim_t) = optimizer.export_state();
+        let mut w = SnapshotWriter::new();
+        link.snapshot(&mut w);
+        TrainerSnapshot {
+            config_hash: config_hash(&self.cfg),
+            next_round,
+            params: params.to_vec(),
+            optim_m,
+            optim_v,
+            optim_t,
+            link: w.into_bytes(),
+            records: log.records.clone(),
+            final_accuracy: log.final_accuracy,
+        }
     }
 }
 

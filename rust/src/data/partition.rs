@@ -143,4 +143,73 @@ mod tests {
         let mut rng = Pcg64::new(5);
         let _ = iid(&ds, 10, 100, &mut rng);
     }
+
+    /// Property sweep over random fleet shapes: IID shards are pairwise
+    /// disjoint, exactly `B`-sized, in-range, and deterministic per seed.
+    #[test]
+    fn prop_iid_disjoint_exact_and_seed_deterministic() {
+        let ds = synthetic::generate(2_000, 9, 0);
+        let mut meta = Pcg64::new(0xBEEF);
+        for trial in 0..25u64 {
+            let devices = 1 + meta.below(12) as usize;
+            let local = 1 + meta.below((ds.len() / devices) as u64) as usize;
+            let shards = iid(&ds, devices, local, &mut Pcg64::new(trial));
+            assert_eq!(shards.len(), devices, "trial {trial}");
+            let mut seen = std::collections::HashSet::new();
+            for (dev, shard) in shards.iter().enumerate() {
+                assert_eq!(shard.len(), local, "trial {trial} device {dev}");
+                for &i in shard {
+                    assert!(i < ds.len(), "trial {trial}: index {i} out of range");
+                    assert!(
+                        seen.insert(i),
+                        "trial {trial}: index {i} appears in two shards"
+                    );
+                }
+            }
+            // Same seed ⇒ identical partition; the driving RNG is the only
+            // randomness source.
+            assert_eq!(
+                shards,
+                iid(&ds, devices, local, &mut Pcg64::new(trial)),
+                "trial {trial}: iid must be deterministic per seed"
+            );
+        }
+    }
+
+    /// Property sweep: every non-IID shard holds at most two classes,
+    /// exact size, deterministic splits per seed, and distinct seeds
+    /// produce distinct assignments.
+    #[test]
+    fn prop_noniid_two_classes_sized_and_seed_deterministic() {
+        let ds = synthetic::generate(3_000, 5, 0);
+        let mut meta = Pcg64::new(0xFACE);
+        let mut all_runs = Vec::new();
+        for trial in 0..20u64 {
+            let devices = 2 + meta.below(10) as usize;
+            let local = 2 + 2 * meta.below(60) as usize;
+            let shards = non_iid(&ds, devices, local, &mut Pcg64::new(trial));
+            assert_eq!(shards.len(), devices, "trial {trial}");
+            for (dev, shard) in shards.iter().enumerate() {
+                assert_eq!(shard.len(), local, "trial {trial} device {dev}");
+                let k = distinct_labels(&ds, shard);
+                assert!(
+                    (1..=2).contains(&k),
+                    "trial {trial} device {dev}: {k} classes in a 2-class shard"
+                );
+            }
+            assert_eq!(
+                shards,
+                non_iid(&ds, devices, local, &mut Pcg64::new(trial)),
+                "trial {trial}: non_iid must be deterministic per seed"
+            );
+            all_runs.push(shards);
+        }
+        // Different seeds almost surely differ somewhere; identical output
+        // across all 20 trials would mean the seed is ignored.
+        let first = &all_runs[0];
+        assert!(
+            all_runs.iter().any(|s| s != first),
+            "every seed produced the identical non-IID split"
+        );
+    }
 }

@@ -68,6 +68,31 @@ impl DigitalDevice {
         self.accum.as_ref().map(|a| a.norm()).unwrap_or(0.0)
     }
 
+    /// Error residual Δ for checkpointing (`None` for the accumulator-free
+    /// baselines — absent state, not an all-zero vector).
+    pub fn accumulator(&self) -> Option<&[f32]> {
+        self.accum.as_ref().map(|a| a.as_slice())
+    }
+
+    /// Restore a residual captured by [`DigitalDevice::accumulator`].
+    /// No-op for baselines without an accumulator.
+    pub fn load_accumulator(&mut self, delta: &[f32]) {
+        if let Some(acc) = &mut self.accum {
+            acc.load(delta);
+        }
+    }
+
+    /// Compressor RNG position for checkpointing (QSGD's stochastic
+    /// rounding stream; `None` for deterministic compressors).
+    pub fn rng_state(&self) -> Option<(u64, u64, Option<f64>)> {
+        self.compressor.rng_state()
+    }
+
+    /// Restore a position captured by [`DigitalDevice::rng_state`].
+    pub fn restore_rng(&mut self, state: (u64, u64, Option<f64>)) {
+        self.compressor.restore_rng(state);
+    }
+
     pub fn compressor_name(&self) -> &'static str {
         self.compressor.name()
     }

@@ -66,8 +66,19 @@ pub fn run_experiment_with_workers(
         }
         logs
     };
-    for ((label, _), log) in spec.runs.iter().zip(&logs) {
-        let path = format!("{out_dir}/{}/{}.csv", spec.id, sanitize(label));
+    write_outputs(spec, &logs, out_dir);
+    logs
+}
+
+/// Write per-run CSVs plus the combined summary, print the paper-style
+/// series, and assert the Eq. 6 power audit — for logs that were just
+/// executed *or* loaded from the campaign run cache (the cache path in
+/// [`crate::campaign::scheduler`] reuses this so cached and fresh
+/// invocations produce byte-identical files).
+pub fn write_outputs(spec: &ExperimentSpec, logs: &[TrainLog], out_dir: &str) {
+    let filenames = unique_filenames(spec.runs.iter().map(|(label, _)| label.as_str()));
+    for (((label, _), log), fname) in spec.runs.iter().zip(logs).zip(&filenames) {
+        let path = format!("{out_dir}/{}/{fname}.csv", spec.id);
         log.write_csv(&path).expect("write csv");
         println!(
             "    `{label}`: final acc {:.4} (best {:.4}) in {:.1}s → {path}",
@@ -80,12 +91,13 @@ pub fn run_experiment_with_workers(
             "power constraint violated in `{label}`"
         );
     }
-    write_summary(spec, &logs, out_dir);
-    print_series(spec, &logs);
-    logs
+    write_summary(spec, logs, out_dir);
+    print_series(spec, logs);
 }
 
-fn print_run_header(label: &str, cfg: &RunConfig) {
+/// The per-run banner line, shared with the campaign scheduler so cached
+/// and uncached invocations stay visually identical.
+pub fn print_run_header(label: &str, cfg: &RunConfig) {
     println!(
         "--- run `{label}` [{} link]: {}",
         cfg.scheme.kind().name(),
@@ -106,6 +118,27 @@ fn sanitize(label: &str) -> String {
     label
         .chars()
         .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// Per-run CSV filenames (without extension), deduplicated in spec order:
+/// sanitizing is lossy (`"a b"` and `"a_b"` both map to `a_b`), and before
+/// deduplication two such runs silently overwrote each other's CSVs. The
+/// first claimant keeps the bare name; later collisions get `_2`, `_3`, …
+/// — including collisions *with* an already-suffixed name.
+pub fn unique_filenames<'a>(labels: impl Iterator<Item = &'a str>) -> Vec<String> {
+    let mut used = std::collections::HashSet::new();
+    labels
+        .map(|label| {
+            let base = sanitize(label);
+            let mut name = base.clone();
+            let mut n = 1usize;
+            while !used.insert(name.clone()) {
+                n += 1;
+                name = format!("{base}_{n}");
+            }
+            name
+        })
         .collect()
 }
 
@@ -206,6 +239,45 @@ mod tests {
         assert!(dir.join("t0/error-free.csv").exists());
         assert!(dir.join("t0/adsgd.csv").exists());
         assert!(dir.join("t0/summary.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Regression: two labels that sanitize to the same filename used to
+    /// silently overwrite each other's per-run CSVs; they must now land in
+    /// distinct suffixed files.
+    #[test]
+    fn colliding_labels_get_unique_filenames() {
+        assert_eq!(
+            unique_filenames(["a b", "a_b", "a b", "c"].into_iter()),
+            vec!["a_b", "a_b_2", "a_b_3", "c"]
+        );
+        // A label that already carries a suffix cannot be clobbered either.
+        assert_eq!(
+            unique_filenames(["x y", "x_y", "x_y_2"].into_iter()),
+            vec!["x_y", "x_y_2", "x_y_2_2"]
+        );
+
+        // End to end: both runs' CSVs exist with full row counts.
+        let dir = std::env::temp_dir().join("ota_runner_collision_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = dir.to_str().unwrap();
+        let mut cfg = presets::smoke();
+        cfg.iterations = 2;
+        cfg.eval_every = 1;
+        cfg.scheme = Scheme::ErrorFree;
+        let spec = ExperimentSpec {
+            id: "tcol".into(),
+            title: "collision".into(),
+            runs: vec![
+                ("run 1".into(), cfg.clone()),
+                ("run_1".into(), RunConfig { seed: cfg.seed + 1, ..cfg }),
+            ],
+        };
+        run_experiment(&spec, out, false);
+        let a = crate::util::csv::read_csv(dir.join("tcol/run_1.csv")).unwrap();
+        let b = crate::util::csv::read_csv(dir.join("tcol/run_1_2.csv")).unwrap();
+        assert_eq!(a.len(), 3, "header + 2 rounds");
+        assert_eq!(b.len(), 3, "the second run must not be clobbered");
         std::fs::remove_dir_all(&dir).ok();
     }
 

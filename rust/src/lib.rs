@@ -33,12 +33,17 @@
 //!   `xla` feature).
 //! * Every figure of the paper's evaluation as a runnable experiment
 //!   ([`experiments`]), plus the Theorem-1 convergence bound.
+//! * **Campaign orchestration** ([`campaign`]): versioned binary snapshots
+//!   of the complete trainer state with bit-identical resume, and a
+//!   content-addressed run cache so re-invoking a figure executes only the
+//!   delta (`repro resume`, `repro status`).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
 pub mod amp;
 pub mod analog;
+pub mod campaign;
 pub mod channel;
 pub mod compress;
 pub mod config;

@@ -4,11 +4,21 @@
 //!   train     one training job from a preset/TOML/CLI overrides
 //!   fig N     regenerate the series of paper figure N (2..=7)
 //!   all       every figure back to back
+//!   resume    re-run a figure campaign through the run cache (forced on)
+//!   status    list the campaign store's cached/partial runs
 //!   theory    Theorem-1 convergence-bound curves
 //!   info      environment + artifact status
+//!
+//! Figure campaigns run through the content-addressed run cache by default
+//! (`campaign::scheduler`): completed runs load from the store, partial
+//! runs resume from their latest snapshot, only the delta executes.
+//! `--no-cache` bypasses the store entirely.
 
-use ota_dsgd::config::{presets, Backend, GraphFamily, PowerSchedule, RunConfig, Scheme};
-use ota_dsgd::coordinator::{RustBackend, Trainer};
+use ota_dsgd::campaign::{scheduler, RunStore};
+use ota_dsgd::config::{
+    presets, Backend, CampaignConfig, GraphFamily, PowerSchedule, RunConfig, Scheme,
+};
+use ota_dsgd::coordinator::{RustBackend, TrainLog, Trainer};
 use ota_dsgd::experiments::{figures, runner, theory};
 use ota_dsgd::model::PARAM_DIM;
 use ota_dsgd::runtime::{Manifest, PjrtBackend, PjrtRuntime};
@@ -23,6 +33,8 @@ fn usage() -> Usage {
             ("train", "run one training job (see options)"),
             ("fig <2|3|4|5|6|7|fading|d2d>", "regenerate a paper figure's series"),
             ("all", "regenerate every figure"),
+            ("resume <fig|all>", "re-run a figure campaign through the run cache"),
+            ("status", "campaign store status (cached/partial runs)"),
             ("ablate [name]", "ablations: mean-removal | sparsity | amp-threshold | analog-power"),
             ("theory", "Theorem-1 convergence-bound curves"),
             ("info", "platform, artifacts, configuration echo"),
@@ -40,9 +52,12 @@ fn usage() -> Usage {
             ("--noniid", "biased (2-class) device data"),
             ("--seed <u64>", "rng seed"),
             ("--backend <rust|pjrt>", "gradient backend (train)"),
-            ("--config <file.toml>", "load a TOML run config (train)"),
+            ("--config <file.toml>", "TOML config: [run] for train, [campaign] for figs"),
             ("--full", "paper-scale horizon (figs; slower)"),
-            ("--out <dir>", "results directory (default results)"),
+            ("--out-dir <dir>", "results directory (default results; --out is an alias)"),
+            ("--no-cache", "bypass the campaign run cache (figs)"),
+            ("--store-dir <dir>", "campaign store (default <out-dir>/.campaign)"),
+            ("--snapshot-every <N>", "trainer snapshot cadence in rounds (default 20)"),
             ("--quiet", "suppress per-round progress"),
         ],
     }
@@ -54,14 +69,67 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "train" => cmd_train(&args),
-        "fig" => cmd_fig(&args),
-        "all" => cmd_all(&args),
+        "fig" => cmd_fig(&args, false),
+        "all" => cmd_all(&args, false),
+        "resume" => cmd_fig(&args, true),
+        "status" => cmd_status(&args),
         "ablate" => cmd_ablate(&args),
         "theory" => cmd_theory(&args),
         "info" => cmd_info(),
         _ => {
             print!("{}", usage().render());
         }
+    }
+}
+
+/// Results directory: `--out-dir` with `--out` kept as the legacy alias.
+fn out_dir(args: &Args) -> String {
+    args.get("out-dir")
+        .or_else(|| args.get("out"))
+        .unwrap_or("results")
+        .to_string()
+}
+
+/// Campaign policy for figure runs: `[campaign]` table from `--config` if
+/// given, CLI overrides on top. `None` = cache bypassed (`--no-cache` or
+/// `enabled = false`), unless `force_resume` pins it on (`repro resume`).
+fn campaign_from_args(args: &Args, force_resume: bool) -> Option<CampaignConfig> {
+    if args.flag("no-cache") && !force_resume {
+        return None;
+    }
+    let mut c = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+            CampaignConfig::from_toml(&text).unwrap_or_else(|e| panic!("{e}"))
+        }
+        None => CampaignConfig::default(),
+    };
+    if let Some(dir) = args.get("store-dir") {
+        c.store_dir = dir.to_string();
+    }
+    c.snapshot_every = args.usize("snapshot-every", c.snapshot_every);
+    if force_resume {
+        c.enabled = true;
+        c.resume = true;
+    }
+    if !c.enabled {
+        return None;
+    }
+    Some(c)
+}
+
+/// Run one spec through the cache-aware scheduler (or the plain runner
+/// when the cache is bypassed).
+fn run_spec(
+    spec: &runner::ExperimentSpec,
+    out: &str,
+    verbose: bool,
+    campaign: Option<&CampaignConfig>,
+) -> Vec<TrainLog> {
+    match campaign {
+        Some(c) => scheduler::run_experiment_cached(spec, out, verbose, c).0,
+        None => runner::run_experiment(spec, out, verbose),
     }
 }
 
@@ -128,64 +196,70 @@ fn cmd_train(args: &Args) {
         log.total_secs,
         log.power_constraint_ok(1e-6)
     );
-    let out = args.get_or("out", "results");
+    let out = out_dir(args);
     let path = format!("{out}/train/{}.csv", cfg.scheme.name().replace(' ', "_"));
     log.write_csv(&path).expect("write csv");
     println!("series → {path}");
 }
 
-fn cmd_fig(args: &Args) {
+/// `repro fig <which>` and (with `force_resume`) `repro resume <which>`.
+fn cmd_fig(args: &Args, force_resume: bool) {
     let which = args
         .positional
         .first()
-        .unwrap_or_else(|| panic!("usage: repro fig <2..7|fading>"))
+        .unwrap_or_else(|| panic!("usage: repro fig <2..7|fading|d2d>"))
         .clone();
+    if force_resume && which == "all" {
+        cmd_all(args, true);
+        return;
+    }
     let full = args.flag("full");
-    let out = args.get_or("out", "results");
+    let out = out_dir(args);
     let verbose = !args.flag("quiet");
+    let campaign = campaign_from_args(args, force_resume);
+    let run = |spec: &runner::ExperimentSpec| run_spec(spec, &out, verbose, campaign.as_ref());
     if which == "fading" {
-        runner::run_experiment(&figures::fading(full), out, verbose);
+        run(&figures::fading(full));
         return;
     }
     if which == "d2d" {
-        runner::run_experiment(&figures::d2d(full), out, verbose);
+        run(&figures::d2d(full));
         return;
     }
     let n: usize = which.parse().expect("figure number, `fading` or `d2d`");
     match n {
         2 => {
-            let spec = figures::fig2(args.flag("noniid"), full);
-            runner::run_experiment(&spec, out, verbose);
+            run(&figures::fig2(args.flag("noniid"), full));
             if !args.flag("noniid") {
-                let spec_b = figures::fig2(true, full);
-                runner::run_experiment(&spec_b, out, verbose);
+                run(&figures::fig2(true, full));
             }
         }
         3 => {
-            runner::run_experiment(&figures::fig3(full), out, verbose);
+            run(&figures::fig3(full));
         }
         4 => {
-            runner::run_experiment(&figures::fig4(full), out, verbose);
+            run(&figures::fig4(full));
         }
         5 => {
-            runner::run_experiment(&figures::fig5(full), out, verbose);
+            run(&figures::fig5(full));
         }
         6 => {
-            runner::run_experiment(&figures::fig6(full), out, verbose);
+            run(&figures::fig6(full));
         }
         7 => {
             let spec = figures::fig7(full);
-            let logs = runner::run_experiment(&spec, out, verbose);
+            let logs = run(&spec);
             figures::print_fig7b(&logs, &spec.runs);
         }
         other => panic!("no figure {other}; valid: 2..=7, `fading` or `d2d`"),
     }
 }
 
-fn cmd_all(args: &Args) {
+fn cmd_all(args: &Args, force_resume: bool) {
     let full = args.flag("full");
-    let out = args.get_or("out", "results");
+    let out = out_dir(args);
     let verbose = !args.flag("quiet");
+    let campaign = campaign_from_args(args, force_resume);
     for spec in [
         figures::fig2(false, full),
         figures::fig2(true, full),
@@ -196,18 +270,54 @@ fn cmd_all(args: &Args) {
         figures::fading(full),
         figures::d2d(full),
     ] {
-        runner::run_experiment(&spec, out, verbose);
+        run_spec(&spec, &out, verbose, campaign.as_ref());
     }
     let spec7 = figures::fig7(full);
-    let logs = runner::run_experiment(&spec7, out, verbose);
+    let logs = run_spec(&spec7, &out, verbose, campaign.as_ref());
     figures::print_fig7b(&logs, &spec7.runs);
-    theory::run(&theory::TheoryParams::default(), out);
+    theory::run(&theory::TheoryParams::default(), &out);
+}
+
+/// `repro status`: list the campaign store's entries.
+fn cmd_status(args: &Args) {
+    let out = out_dir(args);
+    let store_dir = match args.get("store-dir") {
+        Some(dir) => dir.to_string(),
+        None => campaign_from_args(args, true)
+            .expect("resume-forced campaign config is always present")
+            .store_dir_or(&out),
+    };
+    let store = match RunStore::open(&store_dir) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("campaign store {store_dir}: unavailable ({e})");
+            return;
+        }
+    };
+    let entries = store.list();
+    if entries.is_empty() {
+        println!("campaign store {store_dir}: empty");
+        return;
+    }
+    println!("campaign store {store_dir}: {} run(s)", entries.len());
+    println!("{:<16} {:<8} {:>11}  {}", "key", "status", "round", "run");
+    for m in entries {
+        println!(
+            "{:<16} {:<8} {:>5}/{:<5}  `{}` — {}",
+            m.key,
+            m.status.name(),
+            m.snapshot_round,
+            m.iterations,
+            m.label,
+            m.summary
+        );
+    }
 }
 
 fn cmd_ablate(args: &Args) {
     use ota_dsgd::experiments::ablations;
     let full = args.flag("full");
-    let out = args.get_or("out", "results");
+    let out = out_dir(args);
     let verbose = !args.flag("quiet");
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let specs = match which {
@@ -219,18 +329,18 @@ fn cmd_ablate(args: &Args) {
         other => panic!("unknown ablation {other:?}"),
     };
     for spec in specs {
-        runner::run_experiment(&spec, out, verbose);
+        runner::run_experiment(&spec, &out, verbose);
     }
 }
 
 fn cmd_theory(args: &Args) {
-    let out = args.get_or("out", "results");
+    let out = out_dir(args);
     let mut p = theory::TheoryParams::default();
     p.pbar = args.f64("pbar", p.pbar);
     p.devices = args.usize("devices", p.devices);
     p.grad_bound = args.f64("grad-bound", p.grad_bound);
     p.convexity = args.f64("convexity", p.convexity);
-    theory::run(&p, out);
+    theory::run(&p, &out);
 }
 
 fn cmd_info() {

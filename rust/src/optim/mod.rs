@@ -10,6 +10,17 @@ pub trait Optimizer: Send {
     fn step(&mut self, params: &mut [f32], grad: &[f32]);
     fn reset(&mut self);
     fn name(&self) -> &'static str;
+
+    /// Mutable state export for checkpointing: `(first moment, second
+    /// moment, step count)`. Stateless optimizers return empty vectors and
+    /// 0 — restoring those is a no-op by construction.
+    fn export_state(&self) -> (Vec<f32>, Vec<f32>, u64) {
+        (Vec::new(), Vec::new(), 0)
+    }
+
+    /// Restore state captured by [`Optimizer::export_state`] into a
+    /// freshly-built optimizer of the same kind and dimension.
+    fn import_state(&mut self, _m: &[f32], _v: &[f32], _t: u64) {}
 }
 
 /// ADAM (Kingma & Ba) with bias correction.
@@ -62,6 +73,18 @@ impl Optimizer for Adam {
 
     fn name(&self) -> &'static str {
         "adam"
+    }
+
+    fn export_state(&self) -> (Vec<f32>, Vec<f32>, u64) {
+        (self.m.clone(), self.v.clone(), self.t)
+    }
+
+    fn import_state(&mut self, m: &[f32], v: &[f32], t: u64) {
+        assert_eq!(m.len(), self.m.len(), "Adam restore dimension mismatch");
+        assert_eq!(v.len(), self.v.len(), "Adam restore dimension mismatch");
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        self.t = t;
     }
 }
 
@@ -139,6 +162,35 @@ mod tests {
         assert_eq!(opt.t, 0);
         assert!(opt.m.iter().all(|&v| v == 0.0));
         assert!(opt.v.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn adam_state_roundtrip_continues_identically() {
+        let mut a = Adam::new(4, 0.05);
+        let mut xa = vec![1.0f32; 4];
+        for _ in 0..5 {
+            let g = quad_grad(&xa);
+            a.step(&mut xa, &g);
+        }
+        let (m, v, t) = a.export_state();
+        assert_eq!(t, 5);
+        let mut b = Adam::new(4, 0.05);
+        b.import_state(&m, &v, t);
+        let mut xb = xa.clone();
+        for _ in 0..10 {
+            let ga = quad_grad(&xa);
+            a.step(&mut xa, &ga);
+            let gb = quad_grad(&xb);
+            b.step(&mut xb, &gb);
+            assert_eq!(xa, xb, "restored Adam must continue bit-identically");
+        }
+    }
+
+    #[test]
+    fn sgd_state_is_empty() {
+        let opt = Sgd::new(0.1);
+        let (m, v, t) = opt.export_state();
+        assert!(m.is_empty() && v.is_empty() && t == 0);
     }
 
     #[test]

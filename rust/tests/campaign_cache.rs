@@ -1,0 +1,150 @@
+//! Run-cache behavior of the campaign scheduler: completed runs are
+//! skipped (execution counter at zero) while regenerating byte-identical
+//! CSV outputs, and partial runs resume from their stored snapshot and
+//! land exactly where a straight execution would.
+
+use std::path::{Path, PathBuf};
+
+use ota_dsgd::campaign::{scheduler, CampaignReport, RunStore, TrainerSnapshot};
+use ota_dsgd::config::{presets, CampaignConfig, RunConfig, Scheme};
+use ota_dsgd::coordinator::Trainer;
+use ota_dsgd::experiments::{runner, ExperimentSpec};
+use ota_dsgd::model::PARAM_DIM;
+
+fn lean(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 4,
+        eval_every: 2,
+        channel_uses: PARAM_DIM / 8,
+        sparsity: PARAM_DIM / 16,
+        ..presets::smoke()
+    }
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn read(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"))
+}
+
+#[test]
+fn cache_skips_completed_runs_with_byte_identical_outputs() {
+    let base = fresh_dir("ota_campaign_cache_test");
+    let spec = || ExperimentSpec {
+        id: "tcache".into(),
+        title: "cache skip".into(),
+        runs: vec![
+            ("error-free".into(), lean(Scheme::ErrorFree)),
+            ("signsgd".into(), lean(Scheme::SignSgd)),
+        ],
+    };
+    let campaign = CampaignConfig {
+        snapshot_every: 2,
+        store_dir: base.join("store").to_str().unwrap().to_string(),
+        resume: true,
+        enabled: true,
+    };
+    let out1 = base.join("out1");
+    let out2 = base.join("out2");
+
+    let (_, rep1) = scheduler::run_experiment_cached(&spec(), out1.to_str().unwrap(), false, &campaign);
+    assert_eq!(
+        rep1,
+        CampaignReport { executed: 2, resumed: 0, cached: 0 },
+        "first invocation executes everything"
+    );
+    let (_, rep2) = scheduler::run_experiment_cached(&spec(), out2.to_str().unwrap(), false, &campaign);
+    assert_eq!(
+        rep2,
+        CampaignReport { executed: 0, resumed: 0, cached: 2 },
+        "second invocation is served entirely from the cache"
+    );
+
+    // summary.csv byte-identical; cached per-run CSVs byte-identical too
+    // (the stored log carries the original wall-clock values verbatim).
+    assert_eq!(
+        read(&out1.join("tcache/summary.csv")),
+        read(&out2.join("tcache/summary.csv")),
+        "summary.csv must be byte-identical from cache"
+    );
+    for label in ["error-free", "signsgd"] {
+        assert_eq!(
+            read(&out1.join(format!("tcache/{label}.csv"))),
+            read(&out2.join(format!("tcache/{label}.csv"))),
+            "{label}.csv must be byte-identical from cache"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn partial_runs_resume_and_match_straight_execution() {
+    let base = fresh_dir("ota_campaign_partial_test");
+    // QSGD exercises the stochastic-rounding RNG through the whole
+    // store → scheduler → trainer restore path.
+    let cfg = RunConfig {
+        iterations: 6,
+        ..lean(Scheme::Qsgd)
+    };
+    let spec = || ExperimentSpec {
+        id: "tpartial".into(),
+        title: "partial resume".into(),
+        runs: vec![("qsgd".into(), cfg.clone())],
+    };
+
+    // Straight no-cache reference.
+    let out_ref = base.join("ref");
+    let straight = runner::run_experiment(&spec(), out_ref.to_str().unwrap(), false);
+
+    // Simulate an interrupted campaign: snapshot at round 3 lands in the
+    // store, no result blob.
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    let mut snaps: Vec<TrainerSnapshot> = Vec::new();
+    Trainer::new(cfg.clone())
+        .unwrap()
+        .run_with_snapshots(None, 3, &mut |s| {
+            if s.next_round == 3 {
+                snaps.push(s.clone());
+            }
+        });
+    store.save_snapshot(&cfg, "qsgd", &snaps[0]).unwrap();
+
+    // The scheduler resumes rather than restarting…
+    let campaign = CampaignConfig {
+        snapshot_every: 3,
+        store_dir,
+        resume: true,
+        enabled: true,
+    };
+    let out = base.join("out");
+    let (logs, rep) =
+        scheduler::run_experiment_cached(&spec(), out.to_str().unwrap(), false, &campaign);
+    assert_eq!(
+        rep,
+        CampaignReport { executed: 0, resumed: 1, cached: 0 },
+        "a stored snapshot must be resumed, not recomputed"
+    );
+    // …and the resumed trajectory is the straight one, bit for bit.
+    let bits = |log: &ota_dsgd::coordinator::TrainLog| {
+        log.records.iter().map(|r| r.grad_norm.to_bits()).collect::<Vec<_>>()
+    };
+    assert_eq!(bits(&straight[0]), bits(&logs[0]));
+    assert_eq!(
+        read(&out_ref.join("tpartial/summary.csv")),
+        read(&out.join("tpartial/summary.csv")),
+        "summary.csv of a resumed campaign must match the straight run"
+    );
+
+    // The finished run is now cached: a third invocation executes nothing.
+    let out3 = base.join("out3");
+    let (_, rep3) =
+        scheduler::run_experiment_cached(&spec(), out3.to_str().unwrap(), false, &campaign);
+    assert_eq!(rep3, CampaignReport { executed: 0, resumed: 0, cached: 1 });
+    std::fs::remove_dir_all(&base).ok();
+}

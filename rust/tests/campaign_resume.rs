@@ -1,0 +1,299 @@
+//! Golden resume equivalence: snapshot-at-round-t → restore → run the
+//! rest must be **bit-identical** to the uninterrupted run, for every
+//! factory scheme — grad-norm trajectory, evaluated accuracies, telemetry,
+//! final weights, and the Eq. 6 power audit. The scenario table includes
+//! the fading CSI/blind variants with Rayleigh gains and stragglers, the
+//! AR(1) time-correlated gains, and D2D consensus with per-edge Rayleigh
+//! gains (per-receiver decodes + the shared broadcast-noise RNG).
+//!
+//! Snapshots round-trip through their binary encoding on the way back in,
+//! so the codec is part of what these tests pin. A second test proves the
+//! link-level state blob is thread-pool-size invariant: a snapshot taken
+//! from a sequential link restores into a 4-worker link (and vice versa)
+//! without perturbing a single bit.
+
+use ota_dsgd::campaign::snapshot::{SnapshotReader, SnapshotWriter, TrainerSnapshot};
+use ota_dsgd::config::{presets, FadingDist, ParticipationPolicy, RunConfig, Scheme};
+use ota_dsgd::coordinator::{
+    D2dAnalogLink, FadingAnalogLink, LinkScheme, RoundCtx, TrainLog, Trainer,
+};
+use ota_dsgd::model::PARAM_DIM;
+use ota_dsgd::tensor::Matf;
+use ota_dsgd::util::rng::Pcg64;
+
+/// A fast config: smoke fleet at a quarter of the smoke projection.
+fn lean(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 6,
+        eval_every: 2,
+        channel_uses: PARAM_DIM / 8,
+        sparsity: PARAM_DIM / 16,
+        ..presets::smoke()
+    }
+}
+
+/// Every factory scheme, plus the scenario variants the acceptance
+/// criteria call out (AR(1) fading, D2D, stragglers, participation).
+fn scenario_table() -> Vec<(&'static str, RunConfig)> {
+    let fading = RunConfig {
+        fading: FadingDist::Rayleigh,
+        csi_threshold: 0.2,
+        latency_mean_secs: 0.005,
+        deadline_secs: 0.02,
+        ..lean(Scheme::FadingADsgd)
+    };
+    vec![
+        ("error-free", lean(Scheme::ErrorFree)),
+        ("adsgd", lean(Scheme::ADsgd)),
+        ("ddsgd", lean(Scheme::DDsgd)),
+        (
+            "ddsgd-uniform2",
+            RunConfig {
+                participation: ParticipationPolicy::UniformK(2),
+                ..lean(Scheme::DDsgd)
+            },
+        ),
+        ("signsgd", lean(Scheme::SignSgd)),
+        ("qsgd", lean(Scheme::Qsgd)),
+        ("fading-csi", fading.clone()),
+        (
+            "fading-blind",
+            RunConfig {
+                scheme: Scheme::BlindADsgd,
+                ..fading.clone()
+            },
+        ),
+        (
+            "fading-ar1",
+            RunConfig {
+                fading_rho: 0.6,
+                ..fading
+            },
+        ),
+        (
+            "d2d-ring-rayleigh",
+            RunConfig {
+                iterations: 6,
+                eval_every: 2,
+                fading: FadingDist::Rayleigh,
+                ..presets::d2d_smoke()
+            },
+        ),
+    ]
+}
+
+/// Everything in a record except the wall clock must match bit-for-bit.
+fn assert_records_identical(a: &TrainLog, b: &TrainLog, name: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{name}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.iter, rb.iter, "{name} t={}", ra.iter);
+        assert_eq!(
+            ra.grad_norm.to_bits(),
+            rb.grad_norm.to_bits(),
+            "{name} t={}: grad norm",
+            ra.iter
+        );
+        assert_eq!(
+            ra.test_accuracy.to_bits(),
+            rb.test_accuracy.to_bits(),
+            "{name} t={}: accuracy",
+            ra.iter
+        );
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{name} t={}: loss",
+            ra.iter
+        );
+        assert_eq!(
+            ra.accumulator_norm.to_bits(),
+            rb.accumulator_norm.to_bits(),
+            "{name} t={}: accumulator norm",
+            ra.iter
+        );
+        assert_eq!(
+            ra.bits_per_device.to_bits(),
+            rb.bits_per_device.to_bits(),
+            "{name} t={}: bits",
+            ra.iter
+        );
+        assert_eq!(ra.amp_iterations, rb.amp_iterations, "{name} t={}: amp", ra.iter);
+        assert_eq!(
+            ra.participation, rb.participation,
+            "{name} t={}: participation",
+            ra.iter
+        );
+        assert_eq!(
+            ra.consensus_distance.map(f64::to_bits),
+            rb.consensus_distance.map(f64::to_bits),
+            "{name} t={}: consensus",
+            ra.iter
+        );
+    }
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{name}: final accuracy"
+    );
+    assert_eq!(a.measured_avg_power, b.measured_avg_power, "{name}: Eq. 6 audit");
+}
+
+/// The CI resume-smoke gate: snapshot at round 2 (inside the mean-removal
+/// phase for the analog family) → resume ≡ six straight rounds, for every
+/// scheme in the table.
+#[test]
+fn resume_equals_uninterrupted() {
+    for (name, cfg) in scenario_table() {
+        // Uninterrupted run, snapshotting every 2 rounds (snapshots land
+        // after rounds 2, 4 and the final 6).
+        let mut full_snaps: Vec<TrainerSnapshot> = Vec::new();
+        let full_log = Trainer::new(cfg.clone())
+            .unwrap()
+            .run_with_snapshots(None, 2, &mut |s| full_snaps.push(s.clone()));
+        assert_eq!(full_snaps.len(), 3, "{name}: snapshot cadence");
+        assert_eq!(full_snaps[0].next_round, 2, "{name}");
+        assert_eq!(full_snaps[2].next_round, cfg.iterations, "{name}");
+
+        // Resume from the *encoded* round-2 snapshot (codec under test).
+        let restored =
+            TrainerSnapshot::decode(&full_snaps[0].encode()).expect("snapshot decode");
+        let mut resumed_snaps: Vec<TrainerSnapshot> = Vec::new();
+        let resumed_log = Trainer::new(cfg.clone())
+            .unwrap()
+            .run_with_snapshots(Some(&restored), 2, &mut |s| resumed_snaps.push(s.clone()));
+
+        assert_records_identical(&full_log, &resumed_log, name);
+        // Final weights bit-for-bit (via the end-of-run snapshots).
+        let final_resumed = resumed_snaps.last().expect("final snapshot");
+        assert_eq!(
+            full_snaps[2].params, final_resumed.params,
+            "{name}: final weights must be bit-identical"
+        );
+        assert_eq!(full_snaps[2].optim_t, final_resumed.optim_t, "{name}");
+        assert_eq!(full_snaps[2].link, final_resumed.link, "{name}: link state");
+    }
+}
+
+fn grads(m: usize, d: usize, seed: u64) -> Matf {
+    let mut rng = Pcg64::new(seed);
+    Matf::from_vec(
+        m,
+        d,
+        (0..m * d).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect(),
+    )
+}
+
+fn ctx(t: usize) -> RoundCtx {
+    RoundCtx {
+        t,
+        p_t: 500.0,
+        deadline: None,
+    }
+}
+
+/// The link-state blob must not depend on the encode fan-out's worker
+/// count, and restoring across different pool sizes must stay bit-exact —
+/// a snapshot from a laptop resumes on a 64-core box unchanged.
+#[test]
+fn link_snapshots_are_thread_pool_invariant() {
+    let d = 600;
+    let m = 6;
+    let g = grads(m, d, 11);
+
+    // Fading CSI link over Rayleigh gains.
+    let fad_cfg = RunConfig {
+        scheme: Scheme::FadingADsgd,
+        devices: m,
+        channel_uses: 101,
+        sparsity: 25,
+        mean_removal_rounds: 2,
+        amp_iters: 20,
+        fading: FadingDist::Rayleigh,
+        csi_threshold: 0.2,
+        ..presets::smoke()
+    };
+    let reference: Vec<Vec<f32>> = {
+        let mut link = FadingAnalogLink::with_workers(&fad_cfg, d, true, 1);
+        (0..6).map(|t| link.round(&ctx(t), &g).ghat).collect()
+    };
+    for (w_before, w_after) in [(1usize, 4usize), (4, 1)] {
+        let mut first = FadingAnalogLink::with_workers(&fad_cfg, d, true, w_before);
+        for t in 0..3 {
+            assert_eq!(first.round(&ctx(t), &g).ghat, reference[t], "pre t={t}");
+        }
+        let mut w = SnapshotWriter::new();
+        LinkScheme::snapshot(&first, &mut w);
+        let blob = w.into_bytes();
+        let mut second = FadingAnalogLink::with_workers(&fad_cfg, d, true, w_after);
+        second
+            .restore(&mut SnapshotReader::new(&blob))
+            .expect("fading link restore");
+        for t in 3..6 {
+            assert_eq!(
+                second.round(&ctx(t), &g).ghat,
+                reference[t],
+                "fading {w_before}→{w_after} t={t}"
+            );
+        }
+    }
+
+    // D2D ring with Rayleigh edge gains (per-replica optimizers + shared
+    // broadcast-noise stream ride along in the blob).
+    let d2d_cfg = RunConfig {
+        scheme: Scheme::D2dADsgd,
+        devices: m,
+        channel_uses: 101,
+        sparsity: 25,
+        mean_removal_rounds: 2,
+        amp_iters: 15,
+        fading: FadingDist::Rayleigh,
+        ..presets::smoke()
+    };
+    let reference: Vec<Vec<f32>> = {
+        let mut link = D2dAnalogLink::with_workers(&d2d_cfg, d, 1);
+        (0..6).map(|t| link.round(&ctx(t), &g).ghat).collect()
+    };
+    let mut first = D2dAnalogLink::with_workers(&d2d_cfg, d, 1);
+    for t in 0..3 {
+        first.round(&ctx(t), &g);
+    }
+    let mut w = SnapshotWriter::new();
+    LinkScheme::snapshot(&first, &mut w);
+    let blob = w.into_bytes();
+    let mut second = D2dAnalogLink::with_workers(&d2d_cfg, d, 4);
+    second
+        .restore(&mut SnapshotReader::new(&blob))
+        .expect("d2d link restore");
+    for t in 3..6 {
+        assert_eq!(second.round(&ctx(t), &g).ghat, reference[t], "d2d t={t}");
+    }
+    // The restored link carries the replicas too, not just ĝ.
+    assert_eq!(
+        second.replica_average(),
+        {
+            let mut straight = D2dAnalogLink::with_workers(&d2d_cfg, d, 1);
+            for t in 0..6 {
+                straight.round(&ctx(t), &g);
+            }
+            straight.replica_average()
+        },
+        "replica average after resume"
+    );
+}
+
+/// Restoring under the wrong config must refuse loudly, not corrupt.
+#[test]
+#[should_panic(expected = "different RunConfig")]
+fn resume_under_a_different_config_is_refused() {
+    let cfg = lean(Scheme::ErrorFree);
+    let mut snaps = Vec::new();
+    Trainer::new(cfg.clone())
+        .unwrap()
+        .run_with_snapshots(None, 3, &mut |s| snaps.push(s.clone()));
+    let other = RunConfig {
+        seed: cfg.seed + 1,
+        ..cfg
+    };
+    let _ = Trainer::new(other).unwrap().resume(&snaps[0]);
+}
