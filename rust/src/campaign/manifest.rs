@@ -58,10 +58,10 @@ pub struct RunManifest {
     pub version: u32,
 }
 
-/// The config parser keeps quoted strings verbatim (no escape sequences),
-/// so embedded double quotes would break the round-trip — swap them out.
+/// Manifest fields are display metadata, sanitized lossily for the
+/// escape-free TOML subset (shared rule: [`parser::sanitize_display`]).
 fn clean(s: &str) -> String {
-    s.replace('"', "'").replace('\n', " ")
+    parser::sanitize_display(s)
 }
 
 impl RunManifest {

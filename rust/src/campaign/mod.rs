@@ -34,6 +34,15 @@
 //!   `repro fig <x>` loads completed runs from the cache, resumes partial
 //!   ones from their latest snapshot, and executes only the delta, while
 //!   producing byte-identical CSV outputs either way.
+//!
+//! # Store hygiene
+//!
+//! Blobs are checksummed; a truncated or bit-flipped blob is quarantined
+//! on load and the run recomputed — one bad disk sector never aborts a
+//! campaign. Partial entries retain the newest `keep_last_n` snapshot
+//! rounds (`[campaign] keep_last_n`) so a torn latest snapshot falls back
+//! a round instead of restarting, and `repro gc` prunes stores back to
+//! that policy (complete entries drop all snapshot blobs outright).
 
 pub mod manifest;
 pub mod scheduler;
@@ -41,6 +50,6 @@ pub mod snapshot;
 pub mod store;
 
 pub use manifest::{RunManifest, RunStatus};
-pub use scheduler::{run_experiment_cached, CampaignReport};
+pub use scheduler::{run_experiment_cached, run_single_cached, CampaignReport, RunDisposition};
 pub use snapshot::{SnapshotError, SnapshotReader, SnapshotWriter, TrainerSnapshot};
-pub use store::{cache_key, config_hash, RunStore};
+pub use store::{cache_key, config_hash, GcReport, RunStore};

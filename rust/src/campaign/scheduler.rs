@@ -40,6 +40,38 @@ enum Plan {
     Fresh,
 }
 
+/// What happened to a single cached run (`repro train` reports this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunDisposition {
+    /// Served entirely from the cache; nothing executed.
+    Cached,
+    /// Resumed from a stored snapshot at this round.
+    Resumed(usize),
+    /// Executed from round 0.
+    Executed,
+}
+
+/// Decide how to serve one run from the store: cached result, snapshot
+/// resume (through the retained history if the latest blob is corrupt), or
+/// fresh execution.
+fn plan_run(store: &RunStore, label: &str, cfg: &RunConfig, campaign: &CampaignConfig) -> Plan {
+    if let Some(log) = store.load_result(cfg) {
+        return Plan::Cached(log);
+    }
+    if campaign.resume {
+        if let Some(snap) = store.load_best_snapshot(cfg) {
+            if snapshot_restorable(cfg, &snap) {
+                return Plan::Resume(snap);
+            }
+            eprintln!(
+                "warning: stored snapshot for `{label}` does not restore cleanly; \
+                 re-running from scratch"
+            );
+        }
+    }
+    Plan::Fresh
+}
+
 /// Execute a spec through the run store. Returns the logs (in spec order,
 /// labels applied) plus the execution report.
 pub fn run_experiment_cached(
@@ -55,24 +87,7 @@ pub fn run_experiment_cached(
     let plan: Vec<Plan> = spec
         .runs
         .iter()
-        .map(|(label, cfg)| {
-            if let Some(log) = store.load_result(cfg) {
-                return Plan::Cached(log);
-            }
-            if campaign.resume {
-                if let Some(snap) = store.load_snapshot(cfg) {
-                    if snapshot_restorable(cfg, &snap) {
-                        return Plan::Resume(snap);
-                    }
-                    eprintln!(
-                        "warning: stored snapshot for `{}` does not restore cleanly; \
-                         re-running from scratch",
-                        label
-                    );
-                }
-            }
-            Plan::Fresh
-        })
+        .map(|(label, cfg)| plan_run(&store, label, cfg, campaign))
         .collect();
 
     let mut report = CampaignReport::default();
@@ -114,13 +129,43 @@ pub fn run_experiment_cached(
                 log.label = label.clone();
                 log
             }
-            Plan::Resume(snap) => execute(&store, label, cfg, Some(snap), campaign, verbose),
-            Plan::Fresh => execute(&store, label, cfg, None, campaign, verbose),
+            Plan::Resume(snap) => execute_run(&store, label, cfg, Some(snap), campaign, verbose),
+            Plan::Fresh => execute_run(&store, label, cfg, None, campaign, verbose),
         }
     });
 
     runner::write_outputs(spec, &logs, out_dir);
     (logs, report)
+}
+
+/// Serve one standalone run through the store (`repro train`'s
+/// checkpointing path): cached results load, partial runs resume from
+/// their latest restorable snapshot, and fresh runs snapshot as they go —
+/// the exact machinery the figure campaigns use, at fleet size one.
+pub fn run_single_cached(
+    label: &str,
+    cfg: &RunConfig,
+    out_dir: &str,
+    verbose: bool,
+    campaign: &CampaignConfig,
+) -> (TrainLog, RunDisposition) {
+    let store_dir = campaign.store_dir_or(out_dir);
+    let store = RunStore::open(&store_dir).expect("open campaign run store");
+    match plan_run(&store, label, cfg, campaign) {
+        Plan::Cached(mut log) => {
+            log.label = label.to_string();
+            (log, RunDisposition::Cached)
+        }
+        Plan::Resume(snap) => {
+            let round = snap.next_round;
+            let log = execute_run(&store, label, cfg, Some(&snap), campaign, verbose);
+            (log, RunDisposition::Resumed(round))
+        }
+        Plan::Fresh => {
+            let log = execute_run(&store, label, cfg, None, campaign, verbose);
+            (log, RunDisposition::Executed)
+        }
+    }
 }
 
 /// Pre-flight a stored snapshot: the trainer's restore path panics on a
@@ -129,7 +174,7 @@ pub fn run_experiment_cached(
 /// freshly built link first and falls back to a fresh run otherwise. The
 /// extra link construction is paid only on actual resumes — cheap next to
 /// losing the whole campaign to one torn blob.
-fn snapshot_restorable(cfg: &RunConfig, snap: &TrainerSnapshot) -> bool {
+pub(crate) fn snapshot_restorable(cfg: &RunConfig, snap: &TrainerSnapshot) -> bool {
     if snap.params.len() != PARAM_DIM
         || snap.optim_m.len() != PARAM_DIM
         || snap.optim_v.len() != PARAM_DIM
@@ -142,7 +187,11 @@ fn snapshot_restorable(cfg: &RunConfig, snap: &TrainerSnapshot) -> bool {
     probe.restore(&mut SnapshotReader::new(&snap.link)).is_ok()
 }
 
-fn execute(
+/// Execute (or resume) one run, snapshotting into the store with the
+/// campaign's retention policy along the way. Shared with the fleet
+/// worker loop (`crate::fleet::worker`), which adds lease heartbeating
+/// around it.
+pub(crate) fn execute_run(
     store: &RunStore,
     label: &str,
     cfg: &RunConfig,
@@ -155,7 +204,7 @@ fn execute(
     trainer.verbose = verbose;
     let mut sink = |snap: &TrainerSnapshot| {
         // A failed snapshot write must not kill the run it protects.
-        if let Err(e) = store.save_snapshot(cfg, label, snap) {
+        if let Err(e) = store.save_snapshot_retained(cfg, label, snap, campaign.keep_last_n) {
             eprintln!("warning: snapshot write failed for `{label}`: {e}");
         }
     };
@@ -192,8 +241,7 @@ mod tests {
         let campaign = CampaignConfig {
             snapshot_every: 1,
             store_dir: base.join("store").to_str().unwrap().to_string(),
-            resume: true,
-            enabled: true,
+            ..CampaignConfig::default()
         };
         let out1 = base.join("out1");
         let out2 = base.join("out2");
@@ -211,6 +259,48 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(series(&logs1), series(&logs2));
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// The `repro train` checkpointing path: first call executes and
+    /// caches, the second is served from the store, and a corrupted result
+    /// blob triggers a quiet recompute with the identical trajectory.
+    #[test]
+    fn single_run_caches_and_survives_corruption() {
+        let base = std::env::temp_dir().join("ota_scheduler_single_test");
+        let _ = std::fs::remove_dir_all(&base);
+        let mut cfg = presets::smoke();
+        cfg.iterations = 3;
+        cfg.eval_every = 1;
+        cfg.scheme = Scheme::ErrorFree;
+        let campaign = CampaignConfig {
+            snapshot_every: 1,
+            store_dir: base.join("store").to_str().unwrap().to_string(),
+            ..CampaignConfig::default()
+        };
+        let out = base.join("out").to_str().unwrap().to_string();
+        let (log1, d1) = run_single_cached("solo", &cfg, &out, false, &campaign);
+        assert_eq!(d1, RunDisposition::Executed);
+        let (log2, d2) = run_single_cached("solo", &cfg, &out, false, &campaign);
+        assert_eq!(d2, RunDisposition::Cached);
+        let series = |log: &TrainLog| {
+            log.records.iter().map(|r| r.grad_norm.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(series(&log1), series(&log2));
+
+        // Flip a bit in the cached result: the next invocation must
+        // quarantine it, recompute, and land on the same trajectory.
+        let entry = base
+            .join("store")
+            .join(crate::campaign::store::cache_key(&cfg))
+            .join("result.bin");
+        let mut bytes = std::fs::read(&entry).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&entry, &bytes).unwrap();
+        let (log3, d3) = run_single_cached("solo", &cfg, &out, false, &campaign);
+        assert_ne!(d3, RunDisposition::Cached, "corrupt result must not serve");
+        assert_eq!(series(&log1), series(&log3));
         std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -23,13 +23,27 @@
 //! # Layout
 //!
 //! ```text
-//! <store_dir>/<cache_key>/manifest.toml   # human-readable index entry
-//! <store_dir>/<cache_key>/snapshot.bin    # latest TrainerSnapshot (partial runs)
-//! <store_dir>/<cache_key>/result.bin      # finished TrainLog (complete runs)
+//! <store_dir>/<cache_key>/manifest.toml     # human-readable index entry
+//! <store_dir>/<cache_key>/snapshot.bin      # latest TrainerSnapshot (partial runs)
+//! <store_dir>/<cache_key>/snap_<round>.bin  # retained history (keep_last_n > 1)
+//! <store_dir>/<cache_key>/result.bin        # finished TrainLog (complete runs)
+//! <store_dir>/<cache_key>/*.corrupt         # quarantined blobs (kept for forensics)
+//! <store_dir>/fleet/                        # worker-fleet queue + leases (see `crate::fleet`)
 //! ```
 //!
 //! All writes go through a temp-file + rename, so a crash mid-write leaves
 //! the previous blob intact — the whole point of the subsystem.
+//!
+//! # Corruption policy
+//!
+//! Every blob carries a trailing checksum (see [`super::snapshot`]). A blob
+//! that fails to decode — truncated by a dying writer, bit-flipped by a bad
+//! disk — is **quarantined** (renamed to `<name>.corrupt`) rather than left
+//! in place, and the load reports a miss: the campaign recomputes that one
+//! run instead of aborting, and the next write lands on the clean path. For
+//! snapshots, [`RunStore::load_best_snapshot`] falls back through the
+//! retained history before giving up, so a torn latest snapshot costs only
+//! the rounds since the previous one.
 
 use std::fs;
 use std::io;
@@ -119,7 +133,7 @@ pub fn cache_key(cfg: &RunConfig) -> String {
 /// per process *and* per write, so two campaigns sharing a store (or two
 /// parallel workers hitting one entry) never interleave into the same
 /// temp file; last rename wins with a complete blob either way.
-fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
     use std::io::Write as _;
     use std::sync::atomic::{AtomicU64, Ordering};
     static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -131,6 +145,98 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
         f.sync_all()?;
     }
     fs::rename(&tmp, path)
+}
+
+/// History-blob filename for a snapshot taken after `round` rounds;
+/// zero-padded so lexicographic filename order is round order.
+fn history_name(round: usize) -> String {
+    format!("snap_{round:08}.bin")
+}
+
+/// The entry's retained history snapshots, newest round first.
+fn history_snapshots(dir: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out: Vec<(usize, PathBuf)> = Vec::new();
+    let Ok(entries) = fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(round) = name
+            .strip_prefix("snap_")
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            out.push((round, entry.path()));
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
+}
+
+/// Move a blob that failed its checksum/decode out of the load path
+/// (best-effort; a failed rename just leaves it to fail the same way next
+/// time). The `.corrupt` file is kept for forensics until `repro gc`.
+fn quarantine(path: &Path, why: &str) {
+    let target = path.with_extension("bin.corrupt");
+    eprintln!(
+        "warning: quarantining corrupt campaign blob {} ({why}); the run will be recomputed",
+        path.display()
+    );
+    let _ = fs::rename(path, &target);
+}
+
+/// Remove one file, crediting the reclaim report on success.
+fn remove_counted(path: PathBuf, report: &mut GcReport) {
+    if let Ok(meta) = fs::metadata(&path) {
+        if fs::remove_file(&path).is_ok() {
+            report.files_removed += 1;
+            report.bytes_reclaimed += meta.len();
+        }
+    }
+}
+
+/// Whether a directory entry's mtime is older than `secs` (unreadable
+/// mtimes count as fresh — never destroy on bad evidence).
+fn older_than(entry: &fs::DirEntry, secs: u64) -> bool {
+    entry
+        .metadata()
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|m| std::time::SystemTime::now().duration_since(m).ok())
+        .map(|age| age.as_secs() > secs)
+        .unwrap_or(false)
+}
+
+/// Age gate for gc's stray sweeps: a `*.tmp.*` file younger than this may
+/// be an in-flight atomic write racing the gc on a live store.
+const GC_STRAY_MIN_AGE_SECS: u64 = 3600;
+
+/// Sweep one entry directory's true garbage: quarantined blobs (their
+/// forensic purpose is served) and aged-out write temps. Fresh temps are
+/// left alone — they may be an in-flight atomic write racing this gc.
+fn sweep_entry_strays(dir: &Path, report: &mut GcReport) {
+    let Ok(files) = fs::read_dir(dir) else {
+        return;
+    };
+    for f in files.flatten() {
+        let name = f.file_name().to_string_lossy().into_owned();
+        let stray = name.ends_with(".corrupt")
+            || (name.contains(".tmp.") && older_than(&f, GC_STRAY_MIN_AGE_SECS));
+        if stray {
+            remove_counted(f.path(), report);
+        }
+    }
+}
+
+/// What [`RunStore::gc`] reclaimed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Store entries scanned (directories with a readable manifest).
+    pub entries: usize,
+    /// Files removed (snapshots, strays, quarantined blobs).
+    pub files_removed: usize,
+    /// Total bytes those files occupied.
+    pub bytes_reclaimed: u64,
 }
 
 /// A directory of content-addressed run entries.
@@ -154,35 +260,107 @@ impl RunStore {
         self.root.join(cache_key(cfg))
     }
 
-    /// The finished result for `cfg`, if cached. Any decode problem
-    /// (truncation, version skew) reads as a miss, never an error — the
-    /// run simply re-executes.
+    /// Whether a result blob is present for `cfg` — a single `stat`, no
+    /// read or decode. The fleet worker's claim scan runs this per item
+    /// per pass; [`RunStore::load_result`] (which decodes and verifies
+    /// the checksum) stays the authority wherever the bytes are used.
+    pub fn has_result(&self, cfg: &RunConfig) -> bool {
+        self.entry_dir(cfg).join("result.bin").exists()
+    }
+
+    /// The finished result for `cfg`, if cached. A missing blob is a plain
+    /// miss; a blob that fails its checksum or decode is **quarantined**
+    /// (renamed `result.bin.corrupt`) and also reads as a miss — the run
+    /// re-executes instead of the campaign aborting.
     pub fn load_result(&self, cfg: &RunConfig) -> Option<TrainLog> {
-        let bytes = fs::read(self.entry_dir(cfg).join("result.bin")).ok()?;
-        decode_log(&bytes).ok()
+        let path = self.entry_dir(cfg).join("result.bin");
+        let bytes = fs::read(&path).ok()?;
+        match decode_log(&bytes) {
+            Ok(log) => Some(log),
+            Err(e) => {
+                quarantine(&path, &e.to_string());
+                None
+            }
+        }
     }
 
     /// The latest snapshot for `cfg`, if one exists and belongs to this
     /// exact config (the embedded hash is checked on top of the address).
+    /// Corrupt blobs are quarantined and read as a miss; use
+    /// [`RunStore::load_best_snapshot`] to fall back through the retained
+    /// history as well.
     pub fn load_snapshot(&self, cfg: &RunConfig) -> Option<TrainerSnapshot> {
-        let bytes = fs::read(self.entry_dir(cfg).join("snapshot.bin")).ok()?;
-        let snap = TrainerSnapshot::decode(&bytes).ok()?;
+        self.load_snapshot_at(cfg, &self.entry_dir(cfg).join("snapshot.bin"))
+    }
+
+    fn load_snapshot_at(&self, cfg: &RunConfig, path: &Path) -> Option<TrainerSnapshot> {
+        let bytes = fs::read(path).ok()?;
+        let snap = match TrainerSnapshot::decode(&bytes) {
+            Ok(snap) => snap,
+            Err(e) => {
+                quarantine(path, &e.to_string());
+                return None;
+            }
+        };
         if snap.config_hash != config_hash(cfg) {
             return None;
         }
         Some(snap)
     }
 
-    /// Persist a mid-run snapshot and mark the entry partial.
+    /// The newest restorable snapshot for `cfg`: the latest blob if it
+    /// decodes, otherwise the retained history newest-first. Each corrupt
+    /// blob encountered on the way is quarantined, so one torn write costs
+    /// at most the rounds since the previous retained snapshot — never the
+    /// whole run.
+    pub fn load_best_snapshot(&self, cfg: &RunConfig) -> Option<TrainerSnapshot> {
+        if let Some(snap) = self.load_snapshot(cfg) {
+            return Some(snap);
+        }
+        for (_, path) in history_snapshots(&self.entry_dir(cfg)) {
+            if let Some(snap) = self.load_snapshot_at(cfg, &path) {
+                return Some(snap);
+            }
+        }
+        None
+    }
+
+    /// Persist a mid-run snapshot and mark the entry partial (no retained
+    /// history — the latest blob only).
     pub fn save_snapshot(
         &self,
         cfg: &RunConfig,
         label: &str,
         snap: &TrainerSnapshot,
     ) -> io::Result<()> {
+        self.save_snapshot_retained(cfg, label, snap, 1)
+    }
+
+    /// Persist a mid-run snapshot, keep the newest `keep_last_n` distinct
+    /// snapshot rounds for this entry, and mark the entry partial. With
+    /// `keep_last_n <= 1` only `snapshot.bin` is written (the original
+    /// layout); beyond that, history blobs `snap_<round>.bin` accumulate
+    /// and older ones are pruned as new rounds land.
+    pub fn save_snapshot_retained(
+        &self,
+        cfg: &RunConfig,
+        label: &str,
+        snap: &TrainerSnapshot,
+        keep_last_n: usize,
+    ) -> io::Result<()> {
         let dir = self.entry_dir(cfg);
         fs::create_dir_all(&dir)?;
-        write_atomic(&dir.join("snapshot.bin"), &snap.encode())?;
+        let encoded = snap.encode();
+        write_atomic(&dir.join("snapshot.bin"), &encoded)?;
+        if keep_last_n > 1 {
+            write_atomic(&dir.join(history_name(snap.next_round)), &encoded)?;
+            // The latest round lives in snapshot.bin *and* its history
+            // blob (so a torn snapshot.bin still has a same-round twin);
+            // prune history beyond the newest `keep_last_n` rounds.
+            for (_, path) in history_snapshots(&dir).into_iter().skip(keep_last_n) {
+                let _ = fs::remove_file(path);
+            }
+        }
         let manifest = RunManifest {
             key: cache_key(cfg),
             label: label.to_string(),
@@ -212,7 +390,71 @@ impl RunStore {
         };
         write_atomic(&dir.join("manifest.toml"), manifest.to_toml().as_bytes())?;
         let _ = fs::remove_file(dir.join("snapshot.bin"));
+        for (_, path) in history_snapshots(&dir) {
+            let _ = fs::remove_file(path);
+        }
         Ok(())
+    }
+
+    /// Prune the store to the retention policy: complete entries drop all
+    /// snapshot blobs (the result supersedes them), partial entries keep
+    /// only the newest `keep_last_n` history rounds, stray temp files
+    /// plus quarantined blobs are removed everywhere, and aged-out
+    /// temp/grave strays left in the fleet coordination dirs by killed
+    /// workers are swept. Returns what was reclaimed.
+    pub fn gc(&self, keep_last_n: usize) -> io::Result<GcReport> {
+        let mut report = GcReport::default();
+        let entries = fs::read_dir(&self.root)?;
+        for entry in entries.flatten() {
+            let dir = entry.path();
+            if !dir.is_dir() {
+                continue;
+            }
+            let Ok(manifest) = RunManifest::read(&dir.join("manifest.toml")) else {
+                // No readable manifest: the blobs here may still be LIVE
+                // cache state (blob writes land before the manifest write,
+                // and loads never consult the manifest), so only true
+                // garbage is swept — quarantined blobs and aged temps.
+                sweep_entry_strays(&dir, &mut report);
+                continue;
+            };
+            report.entries += 1;
+            match manifest.status {
+                RunStatus::Complete => {
+                    remove_counted(dir.join("snapshot.bin"), &mut report);
+                    for (_, path) in history_snapshots(&dir) {
+                        remove_counted(path, &mut report);
+                    }
+                }
+                RunStatus::Partial => {
+                    for (_, path) in
+                        history_snapshots(&dir).into_iter().skip(keep_last_n.max(1))
+                    {
+                        remove_counted(path, &mut report);
+                    }
+                }
+            }
+            sweep_entry_strays(&dir, &mut report);
+        }
+        // Fleet coordination strays: a worker SIGKILL'd mid-acquire leaves
+        // `*.tmp.*` (pre-link record) or `*.stale.*` (stolen-lease grave)
+        // files in the lease dir, and an interrupted enqueue leaves write
+        // temps in the queue dir. Only visibly old ones are swept — a
+        // fresh temp may be an in-flight acquire racing this very gc.
+        for sub in ["leases", "queue"] {
+            let dir = self.root.join("fleet").join(sub);
+            let Ok(files) = fs::read_dir(&dir) else {
+                continue;
+            };
+            for f in files.flatten() {
+                let name = f.file_name().to_string_lossy().into_owned();
+                let stray = name.contains(".tmp.") || name.contains(".stale.");
+                if stray && older_than(&f, GC_STRAY_MIN_AGE_SECS) {
+                    remove_counted(f.path(), &mut report);
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// All readable manifests, sorted by key (deterministic listing for
@@ -328,6 +570,130 @@ mod tests {
         store.save_result(&cfg, "smoke", &log).unwrap();
         assert!(store.load_snapshot(&cfg).is_none());
         assert_eq!(store.list()[0].status, RunStatus::Complete);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn snap_at(cfg: &RunConfig, round: usize) -> TrainerSnapshot {
+        TrainerSnapshot {
+            config_hash: config_hash(cfg),
+            next_round: round,
+            params: vec![round as f32; 4],
+            optim_m: vec![0.0; 4],
+            optim_v: vec![0.0; 4],
+            optim_t: round as u64,
+            link: vec![7; 3],
+            records: vec![],
+            final_accuracy: 0.1 * round as f64,
+        }
+    }
+
+    #[test]
+    fn retention_keeps_last_n_rounds_and_gc_prunes() {
+        let (store, dir) = tmp_store("retain");
+        let cfg = presets::smoke();
+        for round in 1..=5 {
+            store
+                .save_snapshot_retained(&cfg, "smoke", &snap_at(&cfg, round), 3)
+                .unwrap();
+        }
+        let entry = dir.join(cache_key(&cfg));
+        let rounds: Vec<usize> = history_snapshots(&entry).iter().map(|&(r, _)| r).collect();
+        assert_eq!(rounds, vec![5, 4, 3], "newest three rounds retained");
+        assert_eq!(store.load_best_snapshot(&cfg).unwrap().next_round, 5);
+
+        // gc with a tighter policy prunes further; the latest blob stays.
+        let report = store.gc(1).unwrap();
+        assert_eq!(report.entries, 1);
+        assert!(report.files_removed >= 2, "{report:?}");
+        assert!(report.bytes_reclaimed > 0);
+        let rounds: Vec<usize> = history_snapshots(&entry).iter().map(|&(r, _)| r).collect();
+        assert_eq!(rounds, vec![5]);
+        assert_eq!(store.load_snapshot(&cfg).unwrap().next_round, 5);
+
+        // Completing the run lets gc drop every snapshot blob.
+        let log = TrainLog {
+            label: "raw".into(),
+            records: vec![],
+            measured_avg_power: vec![],
+            pbar: 500.0,
+            final_accuracy: 0.5,
+            total_secs: 1.0,
+        };
+        store.save_result(&cfg, "smoke", &log).unwrap();
+        store.gc(3).unwrap();
+        assert!(history_snapshots(&entry).is_empty());
+        assert!(!entry.join("snapshot.bin").exists());
+        assert!(store.load_result(&cfg).is_some(), "gc must never touch results");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A bit-flipped result blob must be quarantined and read as a miss —
+    /// the checksum catches it, the campaign recomputes, nothing aborts.
+    #[test]
+    fn corrupt_result_is_quarantined_not_fatal() {
+        let (store, dir) = tmp_store("corrupt_result");
+        let cfg = presets::smoke();
+        let log = TrainLog {
+            label: "raw".into(),
+            records: vec![],
+            measured_avg_power: vec![1.0],
+            pbar: 500.0,
+            final_accuracy: 0.75,
+            total_secs: 3.5,
+        };
+        store.save_result(&cfg, "smoke", &log).unwrap();
+        let path = dir.join(cache_key(&cfg)).join("result.bin");
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        fs::write(&path, &bytes).unwrap();
+
+        assert!(store.load_result(&cfg).is_none(), "corrupt blob must read as a miss");
+        assert!(!path.exists(), "corrupt blob must leave the load path");
+        assert!(
+            path.with_extension("bin.corrupt").exists(),
+            "corrupt blob must be kept for forensics"
+        );
+        // The entry is writable again: a recompute lands cleanly.
+        store.save_result(&cfg, "smoke", &log).unwrap();
+        assert!(store.load_result(&cfg).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A bit-flipped latest snapshot falls back to the newest retained
+    /// history round instead of restarting the run from scratch.
+    #[test]
+    fn corrupt_snapshot_falls_back_to_history() {
+        let (store, dir) = tmp_store("corrupt_snap");
+        let cfg = presets::smoke();
+        for round in 1..=4 {
+            store
+                .save_snapshot_retained(&cfg, "smoke", &snap_at(&cfg, round), 3)
+                .unwrap();
+        }
+        let entry = dir.join(cache_key(&cfg));
+        // Corrupt both copies of round 4 (snapshot.bin and its history
+        // twin) so the fall-back has to reach round 3.
+        for name in ["snapshot.bin".to_string(), history_name(4)] {
+            let path = entry.join(name);
+            let mut bytes = fs::read(&path).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x04;
+            fs::write(&path, &bytes).unwrap();
+        }
+        let best = store.load_best_snapshot(&cfg).expect("history fall-back");
+        assert_eq!(best.next_round, 3);
+        assert!(entry.join("snapshot.bin.corrupt").exists());
+        // And with *every* blob corrupt, the answer is an honest None.
+        let path = entry.join(history_name(3));
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[10] ^= 0x80;
+        fs::write(&path, &bytes).unwrap();
+        let path = entry.join(history_name(2));
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[10] ^= 0x80;
+        fs::write(&path, &bytes).unwrap();
+        assert!(store.load_best_snapshot(&cfg).is_none());
         let _ = fs::remove_dir_all(&dir);
     }
 }

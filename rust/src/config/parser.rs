@@ -104,6 +104,17 @@ pub fn parse(text: &str) -> Result<Document, ParseError> {
     Ok(doc)
 }
 
+/// Sanitize display metadata for embedding in this TOML subset: quoted
+/// strings are kept verbatim (no escape sequences), so embedded double
+/// quotes and newlines cannot round-trip — swap them for near-lookalikes.
+/// Only for display-only fields (run labels, summaries, spec ids);
+/// identity-bearing strings must be *rejected* instead of rewritten (see
+/// `RunConfig::to_toml`), because a silent rewrite changes the content
+/// address on the reader's side.
+pub fn sanitize_display(s: &str) -> String {
+    s.replace('"', "'").replace('\n', " ")
+}
+
 fn strip_comment(line: &str) -> &str {
     // A '#' outside quotes starts a comment.
     let mut in_quotes = false;

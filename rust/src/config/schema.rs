@@ -65,6 +65,24 @@ impl Scheme {
         }
     }
 
+    /// Canonical lower-case spelling accepted by [`Scheme::parse`] — the
+    /// form [`RunConfig::to_toml`] emits. [`Scheme::name`] is display
+    /// metadata and not always parseable (`"A-DSGD-fading"` has no parse
+    /// alias), so round-tripping configs through TOML must go through this
+    /// spelling instead.
+    pub fn config_name(&self) -> &'static str {
+        match self {
+            Scheme::ADsgd => "adsgd",
+            Scheme::FadingADsgd => "fading-adsgd",
+            Scheme::BlindADsgd => "blind-adsgd",
+            Scheme::D2dADsgd => "d2d",
+            Scheme::DDsgd => "ddsgd",
+            Scheme::SignSgd => "signsgd",
+            Scheme::Qsgd => "qsgd",
+            Scheme::ErrorFree => "error-free",
+        }
+    }
+
     /// Which transmission-pipeline family serves this scheme. The trainer
     /// never branches on `Scheme` directly — it builds the matching
     /// [`crate::coordinator::link::LinkScheme`] implementation and drives
@@ -921,6 +939,112 @@ impl RunConfig {
         }
         s
     }
+
+    /// Render this config as a TOML document [`RunConfig::from_toml`] reads
+    /// back to an *equal* config (`PartialEq`, hence an identical cache
+    /// key). This is how the fleet queue persists work items on disk so
+    /// workers attached from other processes can reconstruct each run.
+    ///
+    /// Every field is emitted explicitly — like `canonical_config`, the
+    /// exhaustive destructuring makes adding a `RunConfig` field without a
+    /// TOML rendering a compile error rather than a silently lossy queue.
+    pub fn to_toml(&self) -> String {
+        // The TOML-subset parser reads integers through i64 (parser.rs
+        // demotes larger literals to lossy floats), so a seed with the
+        // top bit set cannot round-trip — and a silently altered seed
+        // would address the wrong store entry. Fail loudly, like the
+        // unescapable-string guard below.
+        assert!(
+            self.seed <= i64::MAX as u64 && self.topology.seed <= i64::MAX as u64,
+            "seeds >= 2^63 cannot round-trip through the TOML subset (seed={}, topology.seed={})",
+            self.seed,
+            self.topology.seed
+        );
+        let RunConfig {
+            scheme,
+            devices,
+            local_samples,
+            channel_uses,
+            sparsity,
+            pbar,
+            noise_var,
+            iterations,
+            power,
+            lr,
+            noniid,
+            seed,
+            mean_removal_rounds,
+            qsgd_levels,
+            backend,
+            dataset,
+            eval_every,
+            amp_iters,
+            amp_tol,
+            amp_threshold_mult,
+            fading,
+            csi_threshold,
+            participation,
+            deadline_secs,
+            latency_mean_secs,
+            fading_rho,
+            topology,
+        } = self;
+        let backend = match backend {
+            Backend::Rust => "rust",
+            Backend::Pjrt => "pjrt",
+        };
+        let mut out = format!(
+            "[run]\nscheme = \"{}\"\ndevices = {devices}\nlocal_samples = {local_samples}\n\
+             channel_uses = {channel_uses}\nsparsity = {sparsity}\npbar = {pbar}\n\
+             noise_var = {noise_var}\niterations = {iterations}\npower = \"{}\"\nlr = {lr}\n\
+             noniid = {noniid}\nseed = {seed}\nmean_removal_rounds = {mean_removal_rounds}\n\
+             qsgd_levels = {qsgd_levels}\nbackend = \"{backend}\"\neval_every = {eval_every}\n\
+             amp_iters = {amp_iters}\namp_tol = {amp_tol}\n\
+             amp_threshold_mult = {amp_threshold_mult}\nfading = \"{}\"\n\
+             csi_threshold = {csi_threshold}\nparticipation = \"{}\"\n\
+             deadline_secs = {deadline_secs}\nlatency_mean_secs = {latency_mean_secs}\n\
+             fading_rho = {fading_rho}\n",
+            scheme.config_name(),
+            power.name(),
+            fading.describe(),
+            participation.describe(),
+        );
+        match dataset {
+            DatasetSpec::Synthetic { train, test } => {
+                out.push_str(&format!(
+                    "\n[dataset]\nkind = \"synthetic\"\ntrain = {train}\ntest = {test}\n"
+                ));
+            }
+            DatasetSpec::MnistIdx { dir } => {
+                // The config parser has no string escapes, so a dir with an
+                // embedded quote or newline cannot be represented — and
+                // silently rewriting it would change the config's cache key
+                // on the far side of the queue (a worker would execute into
+                // the wrong store entry). Identity-bearing strings fail
+                // loudly; display metadata is sanitized lossily instead
+                // (`parser::sanitize_display`).
+                assert!(
+                    !dir.contains('"') && !dir.contains('\n'),
+                    "mnist dir {dir:?} contains characters the TOML subset cannot round-trip"
+                );
+                out.push_str(&format!("\n[dataset]\nkind = \"mnist\"\ndir = \"{dir}\"\n"));
+            }
+        }
+        let TopologyConfig {
+            family,
+            degree,
+            p,
+            mixing,
+            seed: topology_seed,
+        } = topology;
+        out.push_str(&format!(
+            "\n[topology]\nfamily = \"{}\"\ndegree = {degree}\np = {p}\nmixing = \"{}\"\n\
+             seed = {topology_seed}\n",
+            family.name(),
+            mixing.name(),
+        ));
+        out
+    }
 }
 
 /// The `[campaign]` table: checkpoint/resume and run-cache policy for
@@ -943,6 +1067,13 @@ pub struct CampaignConfig {
     /// Master switch; `false` bypasses the store entirely (the CLI's
     /// `--no-cache`).
     pub enabled: bool,
+    /// Snapshot retention per store entry: how many distinct snapshot
+    /// rounds to keep (latest + history). `<= 1` keeps only the latest
+    /// blob (the pre-retention layout); larger values let a corrupted
+    /// latest snapshot fall back to an earlier round instead of restarting
+    /// the run, at the cost of `keep_last_n` blobs per partial entry.
+    /// `repro gc` prunes stores down to this policy.
+    pub keep_last_n: usize,
 }
 
 impl Default for CampaignConfig {
@@ -952,6 +1083,7 @@ impl Default for CampaignConfig {
             store_dir: String::new(),
             resume: true,
             enabled: true,
+            keep_last_n: 2,
         }
     }
 }
@@ -975,6 +1107,7 @@ impl CampaignConfig {
                 }
                 "resume" => cfg.resume = v.as_bool().ok_or_else(|| bad(k, v))?,
                 "enabled" => cfg.enabled = v.as_bool().ok_or_else(|| bad(k, v))?,
+                "keep_last_n" => cfg.keep_last_n = v.as_usize().ok_or_else(|| bad(k, v))?,
                 other => {
                     return Err(ConfigError::Invalid(format!(
                         "unknown [campaign] key {other:?}"
@@ -997,6 +1130,89 @@ impl CampaignConfig {
         } else {
             self.store_dir.clone()
         }
+    }
+}
+
+/// The `[fleet]` table: multi-process worker execution policy for campaign
+/// stores (`repro fleet`, `repro worker`). Like `[campaign]`, these knobs
+/// are execution policy, not run identity — they never enter a run's
+/// content-address, so the same store serves any fleet shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Worker processes `repro fleet` spawns.
+    pub workers: usize,
+    /// Lease time-to-live: a run lease whose heartbeat is older than this
+    /// is considered abandoned and may be reclaimed by another worker.
+    pub lease_secs: f64,
+    /// How often an executing worker refreshes its lease. Must be well
+    /// under `lease_secs` or healthy workers would lose their runs.
+    pub heartbeat_secs: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            workers: 4,
+            lease_secs: 30.0,
+            heartbeat_secs: 5.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Read the `[fleet]` table from a parsed document (absent table = all
+    /// defaults).
+    pub fn from_doc(doc: &Document) -> Result<FleetConfig, ConfigError> {
+        let mut cfg = FleetConfig::default();
+        let Some(section) = doc.get("fleet") else {
+            return Ok(cfg);
+        };
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("[fleet] key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in section {
+            match k.as_str() {
+                "workers" => cfg.workers = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "lease_secs" => cfg.lease_secs = v.as_f64().ok_or_else(|| bad(k, v))?,
+                "heartbeat_secs" => {
+                    cfg.heartbeat_secs = v.as_f64().ok_or_else(|| bad(k, v))?
+                }
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown [fleet] key {other:?}"
+                    )));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_toml(text: &str) -> Result<FleetConfig, ConfigError> {
+        Self::from_doc(&parser::parse(text)?)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let fail = |msg: String| Err(ConfigError::Invalid(msg));
+        if self.workers == 0 {
+            return fail("fleet workers must be >= 1".into());
+        }
+        if !(self.lease_secs > 0.0 && self.lease_secs.is_finite()) {
+            return fail(format!("lease_secs must be finite and > 0, got {}", self.lease_secs));
+        }
+        if !(self.heartbeat_secs > 0.0 && self.heartbeat_secs.is_finite()) {
+            return fail(format!(
+                "heartbeat_secs must be finite and > 0, got {}",
+                self.heartbeat_secs
+            ));
+        }
+        if self.heartbeat_secs * 2.0 > self.lease_secs {
+            return fail(format!(
+                "heartbeat_secs = {} must be at most half of lease_secs = {} — a healthy \
+                 worker must refresh its lease well before rivals may reclaim it",
+                self.heartbeat_secs, self.lease_secs
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -1393,13 +1609,14 @@ rho = 0.85
     #[test]
     fn campaign_table_parses_and_defaults() {
         let c = CampaignConfig::from_toml(
-            "[campaign]\nsnapshot_every = 50\nstore_dir = \"cache\"\nresume = false\n",
+            "[campaign]\nsnapshot_every = 50\nstore_dir = \"cache\"\nresume = false\nkeep_last_n = 5\n",
         )
         .unwrap();
         assert_eq!(c.snapshot_every, 50);
         assert_eq!(c.store_dir, "cache");
         assert!(!c.resume);
         assert!(c.enabled);
+        assert_eq!(c.keep_last_n, 5);
         assert_eq!(c.store_dir_or("results"), "cache");
         // Absent table = defaults; empty store_dir derives from out dir.
         let d = CampaignConfig::from_toml("[run]\ndevices = 4\n").unwrap();
@@ -1412,6 +1629,108 @@ rho = 0.85
         let rc =
             RunConfig::from_toml("[run]\ndevices = 4\n[campaign]\nsnapshot_every = 5\n").unwrap();
         assert_eq!(rc.devices, 4);
+    }
+
+    #[test]
+    fn fleet_table_parses_validates_and_defaults() {
+        let f = FleetConfig::from_toml(
+            "[fleet]\nworkers = 8\nlease_secs = 12.5\nheartbeat_secs = 2\n",
+        )
+        .unwrap();
+        assert_eq!(f.workers, 8);
+        assert_eq!(f.lease_secs, 12.5);
+        assert_eq!(f.heartbeat_secs, 2.0);
+        f.validate().unwrap();
+        // Absent table = defaults, and the defaults validate.
+        let d = FleetConfig::from_toml("[run]\ndevices = 4\n").unwrap();
+        assert_eq!(d, FleetConfig::default());
+        d.validate().unwrap();
+        // Unknown keys rejected.
+        assert!(FleetConfig::from_toml("[fleet]\nbogus = 1\n").is_err());
+        // Validation: zero workers, non-positive times, heartbeat too close
+        // to the lease TTL.
+        assert!(FleetConfig { workers: 0, ..d.clone() }.validate().is_err());
+        assert!(FleetConfig { lease_secs: 0.0, ..d.clone() }.validate().is_err());
+        assert!(FleetConfig { heartbeat_secs: -1.0, ..d.clone() }.validate().is_err());
+        assert!(FleetConfig { lease_secs: 10.0, heartbeat_secs: 6.0, ..d }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn scheme_config_name_round_trips_through_parse() {
+        for scheme in [
+            Scheme::ADsgd,
+            Scheme::FadingADsgd,
+            Scheme::BlindADsgd,
+            Scheme::D2dADsgd,
+            Scheme::DDsgd,
+            Scheme::SignSgd,
+            Scheme::Qsgd,
+            Scheme::ErrorFree,
+        ] {
+            assert_eq!(Scheme::parse(scheme.config_name()), Some(scheme), "{scheme:?}");
+        }
+    }
+
+    /// The queue-persistence contract: every config the repo can express
+    /// must survive `to_toml` → `from_toml` exactly (equal config ⇒ equal
+    /// cache key, which is what lets an attached worker address the same
+    /// store entry as the coordinator that enqueued the run).
+    #[test]
+    fn run_config_toml_round_trip_is_exact() {
+        let mut configs = vec![RunConfig::default()];
+        for scheme in [
+            Scheme::ADsgd,
+            Scheme::FadingADsgd,
+            Scheme::BlindADsgd,
+            Scheme::D2dADsgd,
+            Scheme::DDsgd,
+            Scheme::SignSgd,
+            Scheme::Qsgd,
+            Scheme::ErrorFree,
+        ] {
+            configs.push(RunConfig { scheme, ..RunConfig::default() });
+        }
+        configs.push(RunConfig {
+            scheme: Scheme::FadingADsgd,
+            fading: FadingDist::Uniform(0.3, 1.7),
+            csi_threshold: 0.45,
+            participation: ParticipationPolicy::UniformK(7),
+            deadline_secs: 0.025,
+            latency_mean_secs: 0.0125,
+            fading_rho: 0.875,
+            power: PowerSchedule::LhStair,
+            noniid: true,
+            seed: 424242,
+            lr: 0.00075,
+            amp_tol: 0.0001,
+            ..RunConfig::default()
+        });
+        configs.push(RunConfig {
+            scheme: Scheme::D2dADsgd,
+            topology: TopologyConfig {
+                family: GraphFamily::ErdosRenyi,
+                degree: 2,
+                p: 0.35,
+                mixing: MixingRule::MaxDegree,
+                seed: 99,
+            },
+            fading: FadingDist::Constant(0.75),
+            ..RunConfig::default()
+        });
+        configs.push(RunConfig {
+            dataset: DatasetSpec::MnistIdx { dir: "data/mnist".into() },
+            power: PowerSchedule::Hl,
+            qsgd_levels: 4,
+            ..RunConfig::default()
+        });
+        for cfg in &configs {
+            let text = cfg.to_toml();
+            let back = RunConfig::from_toml(&text)
+                .unwrap_or_else(|e| panic!("round-trip parse failed: {e}\n{text}"));
+            assert_eq!(&back, cfg, "lossy TOML round-trip:\n{text}");
+        }
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Crash-safe filesystem run leases — the mutual-exclusion primitive that
+//! lets many worker processes share one campaign store.
+//!
+//! # Protocol
+//!
+//! One lease file per run key under `<store>/fleet/leases/<key>.lease`.
+//!
+//! * **Acquire** — the claimant writes its record to a private temp file
+//!   in the same directory, then `hard_link`s it to the lease path.
+//!   `link(2)` fails atomically when the target exists, which is exactly
+//!   the test-and-set a lock needs (a plain `rename` would silently
+//!   replace a rival's live lease). The temp file is removed either way.
+//! * **Heartbeat** — the holder verifies the record is still its own,
+//!   then refreshes the file's mtime on the open handle. Lease content is
+//!   never rewritten after acquire, so a heartbeat can never clobber a
+//!   rival's record; the file never disappears during a refresh, so a
+//!   concurrent observer always sees a complete record with either the
+//!   old or the new mtime.
+//! * **Expiry / reclaim** — a lease whose mtime is older than the TTL
+//!   belongs to a worker that died (SIGKILL leaves no chance to clean
+//!   up). A claimant *steals* it by renaming it to a unique grave name:
+//!   the rename succeeds for exactly one stealer, the losers fall through
+//!   to a normal acquire attempt. The reclaimed run then resumes from its
+//!   latest store snapshot — never from scratch.
+//! * **Release** — the holder removes the file, but only after verifying
+//!   the record is still its own: if the lease was stolen while the
+//!   holder stalled past the TTL, removing it would free a *rival's*
+//!   lease.
+//!
+//! # Failure model
+//!
+//! The lease is an efficiency device, not a correctness boundary. If a
+//! stalled worker loses its lease and both it and the thief finish the
+//! run, both write the *same bytes* (runs are deterministic) through
+//! atomic temp-file + rename writes — last writer wins with an identical
+//! blob. Heartbeat cadence is validated well under the TTL
+//! ([`crate::config::FleetConfig::validate`]) precisely so that duplicated
+//! work stays a freak event rather than a steady state.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+/// Per-process sequence for unique temp/grave names (shared-store safe:
+/// names also embed the pid).
+fn seq() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The lease directory for a store root.
+pub fn lease_dir(store_root: &Path) -> PathBuf {
+    store_root.join("fleet").join("leases")
+}
+
+/// A held run lease. Dropping it without [`Lease::release`] performs a
+/// best-effort conditional release (a crash between acquire and drop is
+/// what expiry-based reclaim is for).
+pub struct Lease {
+    path: PathBuf,
+    record: String,
+    released: bool,
+}
+
+fn is_stale(meta: &fs::Metadata, ttl: Duration) -> bool {
+    match meta.modified().map(|m| SystemTime::now().duration_since(m)) {
+        // An unreadable or future mtime counts as fresh — reclaiming on
+        // bad evidence risks a live double-claim, waiting risks nothing.
+        Ok(Ok(age)) => age > ttl,
+        _ => false,
+    }
+}
+
+/// Observed state of a key's lease — for status displays; advisory only
+/// (the state can change the instant after it is read).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LeaseState {
+    /// No lease file.
+    Free,
+    /// Held and fresh; carries the record's owner id when readable.
+    Held(String),
+    /// Present but older than the TTL — reclaimable.
+    Stale,
+}
+
+/// Inspect the lease for `key` without touching it.
+pub fn lease_state(dir: &Path, key: &str, ttl: Duration) -> LeaseState {
+    let path = dir.join(format!("{key}.lease"));
+    let Ok(meta) = fs::metadata(&path) else {
+        return LeaseState::Free;
+    };
+    if is_stale(&meta, ttl) {
+        return LeaseState::Stale;
+    }
+    let owner = fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .next()
+                .and_then(|l| l.strip_prefix("owner = "))
+                .map(|o| o.trim_matches('"').to_string())
+        })
+        .unwrap_or_else(|| "?".into());
+    LeaseState::Held(owner)
+}
+
+/// Try to claim the lease for `key`. Returns `Ok(None)` when another
+/// worker holds a fresh lease. A stale lease (mtime older than `ttl`) is
+/// stolen first, then acquired through the normal path — exactly one of
+/// any number of concurrent claimants wins.
+pub fn try_acquire(
+    dir: &Path,
+    key: &str,
+    owner: &str,
+    ttl: Duration,
+) -> io::Result<Option<Lease>> {
+    fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{key}.lease"));
+    if let Ok(meta) = fs::metadata(&path) {
+        if !is_stale(&meta, ttl) {
+            return Ok(None);
+        }
+        // Steal the stale lease: one rename wins, losers fall through and
+        // contend on the hard_link below like everyone else.
+        let grave = dir.join(format!("{key}.stale.{}.{}", std::process::id(), seq()));
+        if fs::rename(&path, &grave).is_ok() {
+            // TOCTOU guard: between our staleness read and the rename, the
+            // slot may have been reclaimed and re-leased by a rival (or
+            // refreshed by a holder that woke up) — in which case we just
+            // renamed away a LIVE lease. rename preserves mtime, so
+            // re-check on the grave and put a live lease back (the
+            // hard_link only lands if nobody re-acquired meanwhile).
+            let still_stale = fs::metadata(&grave)
+                .map(|m| is_stale(&m, ttl))
+                .unwrap_or(true);
+            if !still_stale {
+                let relinked = fs::hard_link(&grave, &path);
+                let _ = fs::remove_file(&grave);
+                if relinked.is_ok() {
+                    return Ok(None);
+                }
+                // A third claimant took the slot inside the window; the
+                // displaced live holder will observe the loss on its next
+                // heartbeat (results stay correct — see the failure
+                // model). Fall through and contend normally.
+            } else {
+                let _ = fs::remove_file(&grave);
+            }
+        }
+    }
+    // The record doubles as an ownership token: pid + per-process seq +
+    // wall-clock nanos make it unique across the fleet.
+    let nonce = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let record = format!(
+        "owner = \"{owner}\"\npid = {}\nnonce = {}.{nonce}\n",
+        std::process::id(),
+        seq(),
+    );
+    let tmp = dir.join(format!("{key}.tmp.{}.{}", std::process::id(), seq()));
+    fs::write(&tmp, &record)?;
+    let linked = fs::hard_link(&tmp, &path);
+    let _ = fs::remove_file(&tmp);
+    match linked {
+        Ok(()) => Ok(Some(Lease {
+            path,
+            record,
+            released: false,
+        })),
+        Err(e) if e.kind() == io::ErrorKind::AlreadyExists => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+impl Lease {
+    /// Refresh the lease mtime. Returns `Ok(false)` when the lease no
+    /// longer belongs to this holder (it expired and was stolen) — the
+    /// holder should finish its current run (results are deterministic
+    /// and writes atomic, so a duplicate finish is harmless) but must not
+    /// claim further work on this lease.
+    ///
+    /// The refresh touches the mtime of the *open handle* after verifying
+    /// the record is still ours; lease content is never rewritten after
+    /// acquire, so a rival's freshly installed record can never be
+    /// clobbered. The residual race (the lease is stolen between the
+    /// verify and the touch) at worst refreshes the *thief's* mtime —
+    /// which only extends a live rival's lease slightly, never corrupts
+    /// ownership.
+    pub fn heartbeat(&self) -> io::Result<bool> {
+        use std::io::Read as _;
+        let mut f = match fs::OpenOptions::new().read(true).write(true).open(&self.path) {
+            Ok(f) => f,
+            Err(_) => return Ok(false),
+        };
+        let mut cur = String::new();
+        if f.read_to_string(&mut cur).is_err() || cur != self.record {
+            return Ok(false);
+        }
+        f.set_modified(SystemTime::now())?;
+        Ok(true)
+    }
+
+    /// Release the lease if it is still ours.
+    pub fn release(mut self) {
+        self.release_inner();
+    }
+
+    fn release_inner(&mut self) {
+        if self.released {
+            return;
+        }
+        self.released = true;
+        if let Ok(cur) = fs::read_to_string(&self.path) {
+            if cur == self.record {
+                let _ = fs::remove_file(&self.path);
+            }
+        }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        self.release_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ota_lease_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn acquire_is_exclusive_and_release_frees() {
+        let dir = tmp_dir("excl");
+        let ttl = Duration::from_secs(60);
+        let a = try_acquire(&dir, "k1", "a", ttl).unwrap();
+        assert!(a.is_some());
+        assert!(try_acquire(&dir, "k1", "b", ttl).unwrap().is_none());
+        // A different key is independent.
+        assert!(try_acquire(&dir, "k2", "b", ttl).unwrap().is_some());
+        a.unwrap().release();
+        assert!(try_acquire(&dir, "k1", "b", ttl).unwrap().is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// The race the fleet depends on: any number of concurrent claimants,
+    /// exactly one winner, every round.
+    #[test]
+    fn concurrent_claimants_one_winner() {
+        let dir = tmp_dir("race");
+        let ttl = Duration::from_secs(60);
+        for round in 0..25 {
+            let key = format!("key{round}");
+            let winners: Vec<Option<Lease>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..8)
+                    .map(|i| {
+                        let dir = &dir;
+                        let key = &key;
+                        scope.spawn(move || {
+                            try_acquire(dir, key, &format!("w{i}"), ttl).unwrap()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let won = winners.iter().filter(|w| w.is_some()).count();
+            assert_eq!(won, 1, "round {round}: exactly one claimant must win");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A killed worker's lease goes stale and is reclaimed; a heartbeating
+    /// worker's is not.
+    #[test]
+    fn stale_lease_reclaimed_fresh_lease_respected() {
+        let dir = tmp_dir("stale");
+        let ttl = Duration::from_millis(400);
+        let held = try_acquire(&dir, "k", "dead", ttl).unwrap().unwrap();
+        // Forget instead of releasing — the SIGKILL'd-worker shape.
+        std::mem::forget(held);
+        assert!(try_acquire(&dir, "k", "b", ttl).unwrap().is_none());
+        std::thread::sleep(Duration::from_millis(900));
+        let reclaimed = try_acquire(&dir, "k", "b", ttl).unwrap();
+        assert!(reclaimed.is_some(), "stale lease must be reclaimable");
+
+        // A live holder heartbeats and survives a wait past the original
+        // acquire time (TTL sized generously against coarse-mtime
+        // filesystems — staleness only ever *overestimates* there).
+        let ttl_live = Duration::from_secs(2);
+        let live = try_acquire(&dir, "k2", "alive", ttl_live).unwrap().unwrap();
+        // Total wait (2.5s) exceeds the TTL, so only the heartbeats keep
+        // the lease alive.
+        for _ in 0..10 {
+            std::thread::sleep(Duration::from_millis(250));
+            assert!(live.heartbeat().unwrap(), "holder must keep its own lease");
+        }
+        assert!(
+            try_acquire(&dir, "k2", "b", ttl_live).unwrap().is_none(),
+            "heartbeats must keep the lease fresh"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// After a steal, the original holder's heartbeat reports the loss and
+    /// its release leaves the thief's lease intact.
+    #[test]
+    fn stolen_lease_is_not_clobbered_by_old_holder() {
+        let dir = tmp_dir("steal");
+        let ttl = Duration::from_millis(300);
+        let old = try_acquire(&dir, "k", "old", ttl).unwrap().unwrap();
+        std::thread::sleep(Duration::from_millis(800));
+        let thief = try_acquire(&dir, "k", "thief", ttl).unwrap().unwrap();
+        assert!(!old.heartbeat().unwrap(), "old holder must observe the loss");
+        old.release();
+        // The thief's lease survives the old holder's release.
+        assert!(try_acquire(&dir, "k", "c", ttl).unwrap().is_none());
+        assert!(thief.heartbeat().unwrap());
+        thief.release();
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,52 @@
+//! Worker-fleet execution: lease-based distributed campaigns over the
+//! content-addressed [`campaign`](crate::campaign) store.
+//!
+//! The paper's headline figures are sweeps of schemes × power × bandwidth
+//! × fleet sizes — hundreds of independent multi-thousand-round runs. The
+//! campaign subsystem (PR 4) made each run cacheable and resumable; this
+//! subsystem turns the store into a **shared work queue** so any number
+//! of unreliable worker processes can execute a campaign together, the
+//! same way production OTA-FL systems coordinate many faulty trainers
+//! with round deadlines and checkpoint hand-off.
+//!
+//! * [`queue`] — the coordinator enumerates every run of every figure
+//!   spec into one persisted item per run (`RunConfig::to_toml` is an
+//!   exact round-trip, so a worker attached from another process — e.g.
+//!   `repro worker --store-dir …` on a second machine sharing the
+//!   filesystem — reconstructs the identical content-address). Claim
+//!   order is budget-aware: **shortest remaining work first**, measured
+//!   in manifest `snapshot_round`s, ties broken by enqueue order.
+//! * [`lease`] — crash-safe filesystem leases: temp-file + `hard_link`
+//!   acquire (atomic test-and-set), mtime-refresh heartbeats, and
+//!   expiry-based reclaim where exactly one rival steals a dead worker's
+//!   lease via rename. See the module docs for the full protocol and
+//!   failure model.
+//! * [`worker`] — the claim-execute loop (`repro worker`, and what
+//!   `repro fleet --workers N` spawns N of): claim the first available
+//!   incomplete run, heartbeat while the trainer executes, snapshot every
+//!   `snapshot_every` rounds, write the result, release, repeat; exit
+//!   when the queue is drained.
+//!
+//! # Why a fleet changes nothing about the numbers
+//!
+//! Every run's trajectory is a pure function of its `RunConfig` (all
+//! randomness is seeded, counter-based, or an explicitly checkpointed RNG
+//! position), and snapshot resume is bit-identical to never having
+//! stopped. So *who* executes a run, in *how many* pieces, after *how
+//! many* crashes — none of it can change a byte of the result, and a
+//! 4-worker fleet's `summary.csv` is byte-identical to the single-process
+//! path (`rust/tests/fleet.rs` pins this, and the kill-a-worker smoke in
+//! CI pins the reclaim path). Duplicated execution after a lease expires
+//! is likewise harmless: both writers produce identical blobs through
+//! atomic renames.
+
+pub mod lease;
+pub mod queue;
+pub mod worker;
+
+pub use lease::{lease_dir, lease_state, try_acquire, Lease, LeaseState};
+pub use queue::{
+    claim_order, collect_outputs, enqueue_specs, list_item_names, load_queue,
+    order_by_remaining, queue_dir, remaining_rounds, WorkItem,
+};
+pub use worker::{run_worker, WorkerReport};

@@ -1,0 +1,399 @@
+//! The fleet's persistent global work queue over a campaign store.
+//!
+//! The coordinator enumerates every run of every figure spec into one
+//! item file per run under `<store>/fleet/queue/`; workers — including
+//! ones attached later from other processes, knowing nothing but the
+//! store directory — read the queue back and reconstruct each
+//! [`RunConfig`] from its TOML rendering ([`RunConfig::to_toml`] is
+//! exact, so the worker addresses the same content-addressed store entry
+//! the coordinator did).
+//!
+//! # Ordering policy
+//!
+//! Claim order is **shortest-remaining-work-first**: remaining rounds per
+//! item come from the store manifest's `snapshot_round` (complete → 0,
+//! partial → `iterations − snapshot_round`, absent → `iterations`), ties
+//! broken by enqueue sequence, so every worker derives the same order
+//! from the same store state. Budget-wise this drains near-finished
+//! (e.g. reclaimed) runs first and converts partial work into cacheable
+//! results as early as possible.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::campaign::manifest::{RunManifest, RunStatus};
+use crate::campaign::store::{self, RunStore};
+use crate::config::RunConfig;
+use crate::coordinator::TrainLog;
+use crate::experiments::runner::{self, ExperimentSpec};
+
+/// One enqueued run.
+#[derive(Clone, Debug)]
+pub struct WorkItem {
+    /// Enqueue sequence — the deterministic tie-breaker.
+    pub seq: usize,
+    /// Figure spec the run belongs to (results directory name).
+    pub spec_id: String,
+    /// Run label inside the spec (display metadata).
+    pub label: String,
+    /// Content-address of the run in the store.
+    pub key: String,
+    pub cfg: RunConfig,
+}
+
+/// The queue directory for a store root.
+pub fn queue_dir(store_root: &Path) -> PathBuf {
+    store_root.join("fleet").join("queue")
+}
+
+/// Item `spec_id`/`label` are display metadata (the coordinator keeps the
+/// originals for output files), sanitized lossily via the shared rule.
+/// The embedded `RunConfig` — the identity-bearing part — goes through
+/// `RunConfig::to_toml`, which rejects unescapable strings instead.
+fn clean(s: &str) -> String {
+    crate::config::parser::sanitize_display(s)
+}
+
+/// Enumerate every run of every spec into the store's queue, **replacing**
+/// whatever campaign was queued before: the queue always describes the
+/// most recent `repro fleet` invocation, so leftover items from an
+/// abandoned earlier campaign cannot silently block or pollute a new one
+/// (their store entries stay cached/resumable — only the queue view is
+/// replaced). Re-enqueueing the same specs is idempotent. A worker that
+/// loaded the old queue mid-pass finishes its current claim into the
+/// store harmlessly and picks up the new view on its next pass. Returns
+/// the enqueued items in sequence order.
+pub fn enqueue_specs(
+    store: &RunStore,
+    specs: &[ExperimentSpec],
+) -> io::Result<Vec<WorkItem>> {
+    let dir = queue_dir(store.root());
+    fs::create_dir_all(&dir)?;
+    if let Ok(old) = fs::read_dir(&dir) {
+        for entry in old.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".toml") {
+                let _ = fs::remove_file(entry.path());
+            }
+        }
+    }
+    let mut items = Vec::new();
+    let mut seq = 0usize;
+    for spec in specs {
+        for (label, cfg) in &spec.runs {
+            let key = store::cache_key(cfg);
+            let body = format!(
+                "[item]\nseq = {seq}\nspec_id = \"{}\"\nlabel = \"{}\"\nkey = \"{key}\"\n\n{}",
+                clean(&spec.id),
+                clean(label),
+                cfg.to_toml(),
+            );
+            store::write_atomic(&dir.join(format!("{seq:06}_{key}.toml")), body.as_bytes())?;
+            items.push(WorkItem {
+                seq,
+                spec_id: spec.id.clone(),
+                label: label.clone(),
+                key,
+                cfg: cfg.clone(),
+            });
+            seq += 1;
+        }
+    }
+    Ok(items)
+}
+
+/// The sorted item filenames currently in the queue — one `read_dir`, no
+/// file contents. Workers poll this per pass to detect a queue
+/// replacement cheaply and re-parse item files only when the name set
+/// changes (names embed `seq` and the content-address, so a different
+/// campaign always changes the set; an in-place edit of an item file
+/// without renaming it is not detected until the set changes).
+pub fn list_item_names(store: &RunStore) -> io::Result<Vec<String>> {
+    let dir = queue_dir(store.root());
+    let mut names = Vec::new();
+    let entries = match fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(names),
+        Err(e) => return Err(e),
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".toml") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Read the queue back, sequence order. Unparseable item files are
+/// reported and skipped — one hand-mangled file must not take the fleet
+/// down.
+pub fn load_queue(store: &RunStore) -> io::Result<Vec<WorkItem>> {
+    let dir = queue_dir(store.root());
+    let mut items = Vec::new();
+    let entries = match fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(items),
+        Err(e) => return Err(e),
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.ends_with(".toml") {
+            continue;
+        }
+        match parse_item(&path) {
+            Ok(item) => items.push(item),
+            Err(e) => eprintln!("warning: skipping queue item {}: {e}", path.display()),
+        }
+    }
+    items.sort_by_key(|i| (i.seq, i.key.clone()));
+    Ok(items)
+}
+
+fn parse_item(path: &Path) -> Result<WorkItem, String> {
+    let text = fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let doc = crate::config::schema::load_document(&text).map_err(|e| e.to_string())?;
+    let section = doc.get("item").ok_or("missing [item] section")?;
+    let get_str = |k: &str| -> Result<String, String> {
+        section
+            .get(k)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing or non-string [item] key {k:?}"))
+    };
+    let seq = section
+        .get("seq")
+        .and_then(|v| v.as_usize())
+        .ok_or("missing or non-integer [item] key \"seq\"")?;
+    let cfg = RunConfig::from_toml(&text).map_err(|e| e.to_string())?;
+    // A parseable but semantically invalid config (e.g. a hand-edited
+    // `devices = 0`) would otherwise panic inside every worker's
+    // `execute_run` — validate here so the item is skipped with a
+    // warning like any other unreadable file.
+    cfg.validate(crate::model::PARAM_DIM)
+        .map_err(|e| format!("invalid run config: {e}"))?;
+    // The config is authoritative for the address; a recorded key that
+    // disagrees (hand-edited file) is corrected, not trusted.
+    let key = store::cache_key(&cfg);
+    if get_str("key")? != key {
+        eprintln!(
+            "warning: queue item {} records a stale key; using {key} derived from its config",
+            path.display()
+        );
+    }
+    Ok(WorkItem {
+        seq,
+        spec_id: get_str("spec_id")?,
+        label: get_str("label")?,
+        key,
+        cfg,
+    })
+}
+
+/// Rounds still to execute for an item, per the store's manifest.
+pub fn remaining_rounds(store: &RunStore, item: &WorkItem) -> usize {
+    let path = store.root().join(&item.key).join("manifest.toml");
+    match RunManifest::read(&path) {
+        Ok(m) if m.status == RunStatus::Complete => 0,
+        Ok(m) => item.cfg.iterations.saturating_sub(m.snapshot_round),
+        Err(_) => item.cfg.iterations,
+    }
+}
+
+/// Order `subset` (indices into `items`) by the claim policy: shortest
+/// remaining work first, enqueue sequence as the tie-breaker. The worker
+/// loop passes only its pending tail so manifest reads scale with what is
+/// left, not with the whole campaign.
+pub fn order_by_remaining(
+    items: &[WorkItem],
+    subset: Vec<usize>,
+    store: &RunStore,
+) -> Vec<usize> {
+    let mut order: Vec<(usize, usize)> = subset
+        .into_iter()
+        .map(|i| (remaining_rounds(store, &items[i]), i))
+        .collect();
+    order.sort_by_key(|&(remaining, i)| (remaining, items[i].seq, i));
+    order.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Indices of all of `items` in claim order (see [`order_by_remaining`]).
+pub fn claim_order(items: &[WorkItem], store: &RunStore) -> Vec<usize> {
+    order_by_remaining(items, (0..items.len()).collect(), store)
+}
+
+/// Regenerate every spec's output files from the store once the fleet has
+/// drained the queue. Goes through [`runner::write_outputs`], the same
+/// code path as single-process campaigns — which is what makes a fleet's
+/// `summary.csv` and per-run CSVs byte-identical to them.
+pub fn collect_outputs(
+    store: &RunStore,
+    specs: &[ExperimentSpec],
+    out_dir: &str,
+) -> Result<Vec<Vec<TrainLog>>, String> {
+    let mut all = Vec::new();
+    for spec in specs {
+        let logs: Vec<TrainLog> = spec
+            .runs
+            .iter()
+            .map(|(label, cfg)| {
+                store
+                    .load_result(cfg)
+                    .map(|mut log| {
+                        log.label = label.clone();
+                        log
+                    })
+                    .ok_or_else(|| {
+                        format!("run `{label}` of spec `{}` has no cached result", spec.id)
+                    })
+            })
+            .collect::<Result<_, String>>()?;
+        runner::write_outputs(spec, &logs, out_dir);
+        all.push(logs);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::TrainerSnapshot;
+    use crate::config::{presets, CampaignConfig, Scheme};
+
+    fn tmp_store(name: &str) -> (RunStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("ota_queue_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        let store = RunStore::open(dir.to_str().unwrap()).unwrap();
+        (store, dir)
+    }
+
+    fn spec() -> ExperimentSpec {
+        let mut cfg = presets::smoke();
+        cfg.iterations = 8;
+        ExperimentSpec {
+            id: "tq".into(),
+            title: "queue".into(),
+            runs: vec![
+                ("error-free".into(), RunConfig { scheme: Scheme::ErrorFree, ..cfg.clone() }),
+                ("signsgd".into(), RunConfig { scheme: Scheme::SignSgd, ..cfg.clone() }),
+                ("qsgd".into(), RunConfig { scheme: Scheme::Qsgd, ..cfg }),
+            ],
+        }
+    }
+
+    #[test]
+    fn enqueue_load_round_trip() {
+        let (store, dir) = tmp_store("roundtrip");
+        let enqueued = enqueue_specs(&store, &[spec()]).unwrap();
+        assert_eq!(enqueued.len(), 3);
+        let loaded = load_queue(&store).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for (a, b) in enqueued.iter().zip(&loaded) {
+            assert_eq!(a.seq, b.seq);
+            assert_eq!(a.spec_id, b.spec_id);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.cfg, b.cfg, "config must round-trip exactly through the queue");
+        }
+        // Idempotent: re-enqueueing the same specs changes nothing — the
+        // name set (the workers' cheap replacement probe) included.
+        let names = list_item_names(&store).unwrap();
+        assert_eq!(names.len(), 3);
+        enqueue_specs(&store, &[spec()]).unwrap();
+        assert_eq!(load_queue(&store).unwrap().len(), 3);
+        assert_eq!(list_item_names(&store).unwrap(), names);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Enqueueing a new campaign replaces the previous queue view — stale
+    /// items from an abandoned campaign must not block the new one.
+    #[test]
+    fn enqueue_replaces_previous_campaign() {
+        let (store, dir) = tmp_store("replace");
+        enqueue_specs(&store, &[spec()]).unwrap();
+        assert_eq!(load_queue(&store).unwrap().len(), 3);
+        let mut cfg = presets::smoke();
+        cfg.iterations = 5;
+        let next = ExperimentSpec {
+            id: "tq2".into(),
+            title: "second campaign".into(),
+            runs: vec![("error-free".into(), RunConfig { scheme: Scheme::ErrorFree, ..cfg })],
+        };
+        let before = list_item_names(&store).unwrap();
+        enqueue_specs(&store, &[next]).unwrap();
+        let items = load_queue(&store).unwrap();
+        assert_eq!(items.len(), 1, "old campaign's items must be gone");
+        assert_eq!(items[0].spec_id, "tq2");
+        assert_ne!(
+            list_item_names(&store).unwrap(),
+            before,
+            "a replacement must change the name set workers poll"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn claim_order_is_shortest_remaining_first() {
+        let (store, dir) = tmp_store("order");
+        let items = enqueue_specs(&store, &[spec()]).unwrap();
+        // No store state: everything ties at full horizon → enqueue order.
+        assert_eq!(claim_order(&items, &store), vec![0, 1, 2]);
+        assert_eq!(remaining_rounds(&store, &items[0]), 8);
+
+        // A partial snapshot at round 5 pulls item 1 to the front…
+        let snap = TrainerSnapshot {
+            config_hash: store::config_hash(&items[1].cfg),
+            next_round: 5,
+            params: vec![0.0; 4],
+            optim_m: vec![0.0; 4],
+            optim_v: vec![0.0; 4],
+            optim_t: 5,
+            link: vec![],
+            records: vec![],
+            final_accuracy: 0.0,
+        };
+        store.save_snapshot(&items[1].cfg, "signsgd", &snap).unwrap();
+        assert_eq!(remaining_rounds(&store, &items[1]), 3);
+        assert_eq!(claim_order(&items, &store), vec![1, 0, 2]);
+
+        // …and a complete result sorts first of all (remaining 0).
+        let log = TrainLog {
+            label: "raw".into(),
+            records: vec![],
+            measured_avg_power: vec![],
+            pbar: 500.0,
+            final_accuracy: 0.5,
+            total_secs: 1.0,
+        };
+        store.save_result(&items[2].cfg, "qsgd", &log).unwrap();
+        assert_eq!(remaining_rounds(&store, &items[2]), 0);
+        assert_eq!(claim_order(&items, &store), vec![2, 1, 0]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// `collect_outputs` refuses to write figures from an undrained queue.
+    #[test]
+    fn collect_outputs_requires_complete_runs() {
+        let (store, dir) = tmp_store("collect");
+        let s = spec();
+        enqueue_specs(&store, &[s]).unwrap();
+        let out = dir.join("out");
+        let err = collect_outputs(&store, &[spec()], out.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("no cached result"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_defaults_still_apply() {
+        // The queue lives inside the store dir the campaign config names;
+        // nothing here invents a second location.
+        let c = CampaignConfig::default();
+        assert_eq!(
+            queue_dir(Path::new(&c.store_dir_or("results"))),
+            Path::new("results/.campaign/fleet/queue")
+        );
+    }
+}

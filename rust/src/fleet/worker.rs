@@ -1,0 +1,283 @@
+//! The worker claim-execute loop: what `repro worker` runs, and what
+//! `repro fleet` spawns N of.
+//!
+//! A worker knows nothing but the store directory. Each pass it loads the
+//! queue, walks it in shortest-remaining-work-first order, and claims the
+//! first incomplete run whose lease it can take. While a claimed run
+//! executes, a sidecar thread heartbeats the lease every
+//! `heartbeat_secs`, and the trainer's snapshot sink persists progress
+//! every `snapshot_every` rounds — so when a worker is SIGKILL'd, its
+//! lease goes stale, a surviving worker reclaims the run, and execution
+//! resumes from the latest snapshot (bit-identical to never having
+//! stopped; see `rust/tests/campaign_resume.rs`). The worker exits when
+//! every queued run has a cached result.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::campaign::scheduler;
+use crate::campaign::RunStore;
+use crate::config::{CampaignConfig, FleetConfig};
+
+use super::lease::{self, Lease};
+use super::queue::{self, WorkItem};
+
+/// What one worker did over its lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerReport {
+    /// Runs executed from round 0.
+    pub executed: usize,
+    /// Runs resumed from a snapshot (its own earlier progress or a dead
+    /// worker's reclaimed run).
+    pub resumed: usize,
+    /// Claims that turned out to be already complete (a rival finished
+    /// between the scan and the lease).
+    pub already_done: usize,
+}
+
+/// Drain the store's queue. Returns when every item has a cached result.
+/// `worker_id` appears in lease records and progress lines.
+pub fn run_worker(
+    store_dir: &str,
+    fleet: &FleetConfig,
+    campaign: &CampaignConfig,
+    worker_id: &str,
+    verbose: bool,
+) -> io::Result<WorkerReport> {
+    fleet
+        .validate()
+        .unwrap_or_else(|e| panic!("invalid fleet config: {e}"));
+    let store = RunStore::open(store_dir)?;
+    let mut report = WorkerReport::default();
+    let ttl = Duration::from_secs_f64(fleet.lease_secs);
+    let ldir = lease::lease_dir(store.root());
+    // Poll cadence while every pending run is leased elsewhere: fast
+    // enough to pick freed work up promptly, slow enough not to churn
+    // the store.
+    let poll = Duration::from_secs_f64(fleet.heartbeat_secs.clamp(0.05, 0.5));
+    // Consecutive drained-but-unverifiable passes (a corrupt result blob
+    // that cannot be quarantined); bounded so a read-only store cannot
+    // spin the worker forever.
+    let mut bad_drains = 0u32;
+    // Consecutive passes that saw an empty queue: a single empty read may
+    // be the delete-then-write window of a queue replacement in progress,
+    // so only a *stable* empty queue ends the worker.
+    let mut empty_passes = 0u32;
+    // Parsed queue, cached on the item-name set: detecting a replacement
+    // costs one read_dir per pass; item files are re-parsed only when the
+    // set actually changes.
+    let mut cached_names: Vec<String> = Vec::new();
+    let mut items: Vec<queue::WorkItem> = Vec::new();
+    loop {
+        // `repro fleet` may *replace* the queue with a new campaign while
+        // this worker is attached (`enqueue_specs` semantics) — an
+        // attached worker must not keep grinding an abandoned campaign's
+        // items, so re-check the name set every pass.
+        let names = queue::list_item_names(&store)?;
+        if names != cached_names {
+            items = queue::load_queue(&store)?;
+            cached_names = names;
+        }
+        if items.is_empty() {
+            empty_passes += 1;
+            if empty_passes > 3 {
+                println!("[{worker_id}] queue at {store_dir} is empty — nothing to do");
+                break;
+            }
+            std::thread::sleep(poll);
+            continue;
+        }
+        empty_passes = 0;
+        // Cheap scan: one stat per item. Manifests are read only for the
+        // pending tail below, and result blobs are never decoded here —
+        // this runs on every pass including 0.5s idle polls.
+        let pending: Vec<usize> = (0..items.len())
+            .filter(|&i| !store.has_result(&items[i].cfg))
+            .collect();
+        if pending.is_empty() {
+            // A stat cannot see corruption. Before declaring the queue
+            // drained, verify every result decodes: a corrupt blob is
+            // quarantined by `load_result` (reads as a miss), the next
+            // pass recomputes it, and the campaign completes — instead of
+            // aborting downstream in `collect_outputs`.
+            if items.iter().all(|item| store.load_result(&item.cfg).is_some()) {
+                break;
+            }
+            bad_drains += 1;
+            if bad_drains > 5 {
+                return Err(io::Error::new(
+                    io::ErrorKind::Other,
+                    "a corrupt result blob could not be quarantined for recompute \
+                     (store read-only?) — aborting",
+                ));
+            }
+            std::thread::sleep(poll);
+            continue;
+        }
+        bad_drains = 0;
+        // Shortest-remaining-work-first over the pending tail (manifest
+        // reads scale with what is left, not with the whole campaign).
+        let mut claimed: Option<(usize, Lease)> = None;
+        for idx in queue::order_by_remaining(&items, pending, &store) {
+            if let Some(l) = lease::try_acquire(&ldir, &items[idx].key, worker_id, ttl)? {
+                claimed = Some((idx, l));
+                break;
+            }
+        }
+        match claimed {
+            Some((idx, l)) => {
+                let outcome = execute_item(
+                    &store, &items[idx], fleet, campaign, &l, worker_id, verbose, &mut report,
+                );
+                l.release();
+                outcome?;
+            }
+            // Everything pending is leased by live rivals — wait for
+            // either a result to land or a lease to expire.
+            None => std::thread::sleep(poll),
+        }
+    }
+    Ok(report)
+}
+
+/// Execute one claimed run under a heartbeating lease. Errors when the
+/// run executed but its result did not land in the store — retrying would
+/// re-execute the identical run forever (disk full, store unwritable), so
+/// the worker aborts loudly instead.
+#[allow(clippy::too_many_arguments)]
+fn execute_item(
+    store: &RunStore,
+    item: &WorkItem,
+    fleet: &FleetConfig,
+    campaign: &CampaignConfig,
+    l: &Lease,
+    worker_id: &str,
+    verbose: bool,
+    report: &mut WorkerReport,
+) -> io::Result<()> {
+    // Between the scan and the lease a rival may have finished the run.
+    if store.load_result(&item.cfg).is_some() {
+        report.already_done += 1;
+        return Ok(());
+    }
+    let resume = store
+        .load_best_snapshot(&item.cfg)
+        .filter(|snap| scheduler::snapshot_restorable(&item.cfg, snap));
+    match &resume {
+        Some(snap) => {
+            report.resumed += 1;
+            println!(
+                "[{worker_id}] resuming `{}` ({}/{}) at round {}/{}",
+                item.label, item.spec_id, item.key, snap.next_round, item.cfg.iterations
+            );
+        }
+        None => {
+            report.executed += 1;
+            println!(
+                "[{worker_id}] executing `{}` ({}/{}) from round 0",
+                item.label, item.spec_id, item.key
+            );
+        }
+    }
+    let stop = AtomicBool::new(false);
+    // Set the stop flag even if the trainer panics: without this the
+    // heartbeat thread would spin forever and `thread::scope` would never
+    // join — a deadlocked worker whose *still-refreshing* lease blocks the
+    // whole fleet from ever reclaiming the run.
+    struct StopGuard<'a>(&'a AtomicBool);
+    impl Drop for StopGuard<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let tick = Duration::from_millis(25);
+            let interval = Duration::from_secs_f64(fleet.heartbeat_secs);
+            let mut since_beat = Duration::ZERO;
+            let mut lost_logged = false;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                since_beat += tick;
+                if since_beat >= interval {
+                    since_beat = Duration::ZERO;
+                    match l.heartbeat() {
+                        Ok(true) => {}
+                        // Lease lost (we stalled past the TTL) or the
+                        // refresh failed: finish the run anyway — the
+                        // result is deterministic and its write atomic,
+                        // so a duplicated finish is byte-identical.
+                        Ok(false) | Err(_) => {
+                            if !lost_logged {
+                                lost_logged = true;
+                                eprintln!(
+                                    "[{worker_id}] warning: lease for `{}` was reclaimed; \
+                                     finishing the run anyway (writes are idempotent)",
+                                    item.label
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        let _stop_on_exit = StopGuard(&stop);
+        scheduler::execute_run(store, &item.label, &item.cfg, resume.as_ref(), campaign, verbose);
+    });
+    // execute_run only warns when the result write fails; for the worker
+    // loop that would mean claim → execute → miss → claim again, forever.
+    if store.load_result(&item.cfg).is_none() {
+        return Err(io::Error::new(
+            io::ErrorKind::Other,
+            format!(
+                "run `{}` executed but its result did not land in store entry {} \
+                 (disk full or store unwritable?) — aborting instead of re-executing forever",
+                item.label, item.key
+            ),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, RunConfig, Scheme};
+    use crate::experiments::runner::ExperimentSpec;
+
+    /// One in-process worker drains a three-run queue; a second worker
+    /// finds nothing to do.
+    #[test]
+    fn worker_drains_queue_then_idles() {
+        let base = std::env::temp_dir().join("ota_worker_drain_test");
+        let _ = std::fs::remove_dir_all(&base);
+        let store_dir = base.join("store").to_str().unwrap().to_string();
+        let store = RunStore::open(&store_dir).unwrap();
+        let mut cfg = presets::smoke();
+        cfg.iterations = 3;
+        cfg.eval_every = 1;
+        let spec = ExperimentSpec {
+            id: "tw".into(),
+            title: "worker drain".into(),
+            runs: vec![
+                ("error-free".into(), RunConfig { scheme: Scheme::ErrorFree, ..cfg.clone() }),
+                ("signsgd".into(), RunConfig { scheme: Scheme::SignSgd, ..cfg }),
+            ],
+        };
+        queue::enqueue_specs(&store, &[spec]).unwrap();
+        let fleet = FleetConfig::default();
+        let campaign = CampaignConfig {
+            snapshot_every: 1,
+            store_dir: store_dir.clone(),
+            ..CampaignConfig::default()
+        };
+        let report = run_worker(&store_dir, &fleet, &campaign, "w0", false).unwrap();
+        assert_eq!(report.executed, 2);
+        assert_eq!(report.resumed, 0);
+        // Every item now has a result; a late-attached worker exits clean.
+        let report2 = run_worker(&store_dir, &fleet, &campaign, "w1", false).unwrap();
+        assert_eq!(report2, WorkerReport::default());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -37,6 +37,12 @@
 //!   of the complete trainer state with bit-identical resume, and a
 //!   content-addressed run cache so re-invoking a figure executes only the
 //!   delta (`repro resume`, `repro status`).
+//! * **Worker-fleet execution** ([`fleet`]): the campaign store as a
+//!   shared work queue — crash-safe filesystem leases with heartbeats and
+//!   expiry-based reclaim, shortest-remaining-work-first ordering, and
+//!   multi-process workers (`repro fleet --workers N`, `repro worker`)
+//!   whose collective output is byte-identical to the single-process
+//!   path.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -51,6 +57,7 @@ pub mod coordinator;
 pub mod data;
 pub mod digital;
 pub mod experiments;
+pub mod fleet;
 pub mod model;
 pub mod optim;
 pub mod runtime;

@@ -1,25 +1,32 @@
 //! `repro` — the launcher for the over-the-air DSGD reproduction.
 //!
 //! Subcommands:
-//!   train     one training job from a preset/TOML/CLI overrides
-//!   fig N     regenerate the series of paper figure N (2..=7)
-//!   all       every figure back to back
-//!   resume    re-run a figure campaign through the run cache (forced on)
-//!   status    list the campaign store's cached/partial runs
-//!   theory    Theorem-1 convergence-bound curves
-//!   info      environment + artifact status
+//!   train        one training job from a preset/TOML/CLI overrides
+//!                (checkpointed through the campaign store by default)
+//!   fig N        regenerate the series of paper figure N (2..=7)
+//!   all          every figure back to back
+//!   fleet        run a figure campaign with N worker processes over the
+//!                shared store (lease-based claims, crash reclaim)
+//!   worker       attach one worker to a store's fleet queue
+//!   fleet-status live queue/lease/progress view of a fleet store
+//!   resume       re-run a figure campaign through the run cache (forced on)
+//!   status       list the campaign store's cached/partial runs
+//!   gc           prune snapshot history + strays per the retention policy
+//!   theory       Theorem-1 convergence-bound curves
+//!   info         environment + artifact status
 //!
 //! Figure campaigns run through the content-addressed run cache by default
 //! (`campaign::scheduler`): completed runs load from the store, partial
 //! runs resume from their latest snapshot, only the delta executes.
 //! `--no-cache` bypasses the store entirely.
 
-use ota_dsgd::campaign::{scheduler, RunStore};
+use ota_dsgd::campaign::{scheduler, RunDisposition, RunStore};
 use ota_dsgd::config::{
-    presets, Backend, CampaignConfig, GraphFamily, PowerSchedule, RunConfig, Scheme,
+    presets, Backend, CampaignConfig, FleetConfig, GraphFamily, PowerSchedule, RunConfig, Scheme,
 };
 use ota_dsgd::coordinator::{RustBackend, TrainLog, Trainer};
 use ota_dsgd::experiments::{figures, runner, theory};
+use ota_dsgd::fleet;
 use ota_dsgd::model::PARAM_DIM;
 use ota_dsgd::runtime::{Manifest, PjrtBackend, PjrtRuntime};
 use ota_dsgd::util::cli::{Args, Usage};
@@ -33,8 +40,12 @@ fn usage() -> Usage {
             ("train", "run one training job (see options)"),
             ("fig <2|3|4|5|6|7|fading|d2d>", "regenerate a paper figure's series"),
             ("all", "regenerate every figure"),
+            ("fleet <fig|all>", "run a figure campaign with a worker fleet over the store"),
+            ("worker", "attach one worker to a store's fleet queue"),
+            ("fleet-status", "live fleet queue/lease/progress view"),
             ("resume <fig|all>", "re-run a figure campaign through the run cache"),
             ("status", "campaign store status (cached/partial runs)"),
+            ("gc", "prune snapshot history and stray files from the store"),
             ("ablate [name]", "ablations: mean-removal | sparsity | amp-threshold | analog-power"),
             ("theory", "Theorem-1 convergence-bound curves"),
             ("info", "platform, artifacts, configuration echo"),
@@ -58,6 +69,11 @@ fn usage() -> Usage {
             ("--no-cache", "bypass the campaign run cache (figs)"),
             ("--store-dir <dir>", "campaign store (default <out-dir>/.campaign)"),
             ("--snapshot-every <N>", "trainer snapshot cadence in rounds (default 20)"),
+            ("--keep-last-n <N>", "snapshot rounds retained per store entry (default 2)"),
+            ("--workers <N>", "worker processes for `fleet` (default 4)"),
+            ("--lease-secs <s>", "fleet lease TTL before reclaim (default 30)"),
+            ("--heartbeat-secs <s>", "fleet lease refresh cadence (default 5)"),
+            ("--worker-id <id>", "worker identity in lease records (worker)"),
             ("--quiet", "suppress per-round progress"),
         ],
     }
@@ -71,8 +87,12 @@ fn main() {
         "train" => cmd_train(&args),
         "fig" => cmd_fig(&args, false),
         "all" => cmd_all(&args, false),
+        "fleet" => cmd_fleet(&args),
+        "worker" => cmd_worker(&args),
+        "fleet-status" => cmd_fleet_status(&args),
         "resume" => cmd_fig(&args, true),
         "status" => cmd_status(&args),
+        "gc" => cmd_gc(&args),
         "ablate" => cmd_ablate(&args),
         "theory" => cmd_theory(&args),
         "info" => cmd_info(),
@@ -109,6 +129,7 @@ fn campaign_from_args(args: &Args, force_resume: bool) -> Option<CampaignConfig>
         c.store_dir = dir.to_string();
     }
     c.snapshot_every = args.usize("snapshot-every", c.snapshot_every);
+    c.keep_last_n = args.usize("keep-last-n", c.keep_last_n);
     if force_resume {
         c.enabled = true;
         c.resume = true;
@@ -117,6 +138,61 @@ fn campaign_from_args(args: &Args, force_resume: bool) -> Option<CampaignConfig>
         return None;
     }
     Some(c)
+}
+
+/// Fleet policy: `[fleet]` table from `--config` if given, CLI overrides
+/// on top, validated.
+fn fleet_from_args(args: &Args) -> FleetConfig {
+    let mut f = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+            FleetConfig::from_toml(&text).unwrap_or_else(|e| panic!("{e}"))
+        }
+        None => FleetConfig::default(),
+    };
+    f.workers = args.usize("workers", f.workers);
+    f.lease_secs = args.f64("lease-secs", f.lease_secs);
+    f.heartbeat_secs = args.f64("heartbeat-secs", f.heartbeat_secs);
+    f.validate().unwrap_or_else(|e| panic!("{e}"));
+    f
+}
+
+/// The figure specs a selector names: `2..7`, `fading`, `d2d`, or `all`
+/// (shared by `fig`, `resume` and `fleet`). `fig 2` without `--noniid`
+/// runs both panels, as the paper does.
+fn specs_for(which: &str, args: &Args) -> Vec<runner::ExperimentSpec> {
+    let full = args.flag("full");
+    match which {
+        "fading" => vec![figures::fading(full)],
+        "d2d" => vec![figures::d2d(full)],
+        "all" => vec![
+            figures::fig2(false, full),
+            figures::fig2(true, full),
+            figures::fig3(full),
+            figures::fig4(full),
+            figures::fig5(full),
+            figures::fig6(full),
+            figures::fading(full),
+            figures::d2d(full),
+            figures::fig7(full),
+        ],
+        n => match n.parse::<usize>() {
+            Ok(2) => {
+                if args.flag("noniid") {
+                    vec![figures::fig2(true, full)]
+                } else {
+                    vec![figures::fig2(false, full), figures::fig2(true, full)]
+                }
+            }
+            Ok(3) => vec![figures::fig3(full)],
+            Ok(4) => vec![figures::fig4(full)],
+            Ok(5) => vec![figures::fig5(full)],
+            Ok(6) => vec![figures::fig6(full)],
+            Ok(7) => vec![figures::fig7(full)],
+            _ => panic!("no figure {n:?}; valid: 2..=7, `fading`, `d2d` or `all`"),
+        },
+    }
 }
 
 /// Run one spec through the cache-aware scheduler (or the plain runner
@@ -175,20 +251,53 @@ fn cmd_train(args: &Args) {
     let cfg = config_from_args(args);
     cfg.validate(PARAM_DIM).unwrap_or_else(|e| panic!("{e}"));
     println!("training: {}", cfg.summary());
-    let mut trainer = match cfg.backend {
-        Backend::Rust => Trainer::with_backend(cfg.clone(), Box::new(RustBackend::new())),
-        Backend::Pjrt => {
-            let runtime = PjrtRuntime::cpu().expect("PJRT client");
-            let manifest = Manifest::load_default().expect("artifact manifest");
-            let backend =
-                PjrtBackend::from_manifest(&runtime, &manifest, cfg.devices, cfg.local_samples)
-                    .expect("PJRT gradient backend");
-            Trainer::with_backend(cfg.clone(), Box::new(backend))
+    let out = out_dir(args);
+    let verbose = !args.flag("quiet");
+    let campaign = campaign_from_args(args, false);
+    // Single runs checkpoint through the same campaign store the figure
+    // sweeps use: an interrupted `repro train` resumes from its latest
+    // snapshot, and re-running a finished config is a pure cache load
+    // (`--no-cache` opts out). The PJRT backend stays on the direct path —
+    // its gradient executor is built per-invocation, not per-config.
+    let log = match (cfg.backend, &campaign) {
+        (Backend::Rust, Some(campaign)) => {
+            let (log, disposition) =
+                scheduler::run_single_cached(cfg.scheme.name(), &cfg, &out, verbose, campaign);
+            match disposition {
+                RunDisposition::Cached => println!(
+                    "served from campaign store {} (use --no-cache to re-execute)",
+                    campaign.store_dir_or(&out)
+                ),
+                RunDisposition::Resumed(round) => {
+                    println!("resumed from snapshot at round {round}/{}", cfg.iterations)
+                }
+                RunDisposition::Executed => {}
+            }
+            log
         }
-    }
-    .expect("trainer");
-    trainer.verbose = !args.flag("quiet");
-    let log = trainer.run();
+        _ => {
+            let mut trainer = match cfg.backend {
+                Backend::Rust => {
+                    Trainer::with_backend(cfg.clone(), Box::new(RustBackend::new()))
+                }
+                Backend::Pjrt => {
+                    let runtime = PjrtRuntime::cpu().expect("PJRT client");
+                    let manifest = Manifest::load_default().expect("artifact manifest");
+                    let backend = PjrtBackend::from_manifest(
+                        &runtime,
+                        &manifest,
+                        cfg.devices,
+                        cfg.local_samples,
+                    )
+                    .expect("PJRT gradient backend");
+                    Trainer::with_backend(cfg.clone(), Box::new(backend))
+                }
+            }
+            .expect("trainer");
+            trainer.verbose = verbose;
+            trainer.run()
+        }
+    };
     println!(
         "done: final accuracy {:.4} (best {:.4}) in {:.1}s; power ok: {}",
         log.final_accuracy,
@@ -196,7 +305,6 @@ fn cmd_train(args: &Args) {
         log.total_secs,
         log.power_constraint_ok(1e-6)
     );
-    let out = out_dir(args);
     let path = format!("{out}/train/{}.csv", cfg.scheme.name().replace(' ', "_"));
     log.write_csv(&path).expect("write csv");
     println!("series → {path}");
@@ -209,73 +317,215 @@ fn cmd_fig(args: &Args, force_resume: bool) {
         .first()
         .unwrap_or_else(|| panic!("usage: repro fig <2..7|fading|d2d>"))
         .clone();
-    if force_resume && which == "all" {
-        cmd_all(args, true);
+    if which == "all" {
+        cmd_all(args, force_resume);
         return;
     }
-    let full = args.flag("full");
     let out = out_dir(args);
     let verbose = !args.flag("quiet");
     let campaign = campaign_from_args(args, force_resume);
-    let run = |spec: &runner::ExperimentSpec| run_spec(spec, &out, verbose, campaign.as_ref());
-    if which == "fading" {
-        run(&figures::fading(full));
-        return;
-    }
-    if which == "d2d" {
-        run(&figures::d2d(full));
-        return;
-    }
-    let n: usize = which.parse().expect("figure number, `fading` or `d2d`");
-    match n {
-        2 => {
-            run(&figures::fig2(args.flag("noniid"), full));
-            if !args.flag("noniid") {
-                run(&figures::fig2(true, full));
-            }
-        }
-        3 => {
-            run(&figures::fig3(full));
-        }
-        4 => {
-            run(&figures::fig4(full));
-        }
-        5 => {
-            run(&figures::fig5(full));
-        }
-        6 => {
-            run(&figures::fig6(full));
-        }
-        7 => {
-            let spec = figures::fig7(full);
-            let logs = run(&spec);
+    for spec in specs_for(&which, args) {
+        let logs = run_spec(&spec, &out, verbose, campaign.as_ref());
+        if spec.id == "fig7" {
             figures::print_fig7b(&logs, &spec.runs);
         }
-        other => panic!("no figure {other}; valid: 2..=7, `fading` or `d2d`"),
     }
 }
 
 fn cmd_all(args: &Args, force_resume: bool) {
-    let full = args.flag("full");
     let out = out_dir(args);
     let verbose = !args.flag("quiet");
     let campaign = campaign_from_args(args, force_resume);
-    for spec in [
-        figures::fig2(false, full),
-        figures::fig2(true, full),
-        figures::fig3(full),
-        figures::fig4(full),
-        figures::fig5(full),
-        figures::fig6(full),
-        figures::fading(full),
-        figures::d2d(full),
-    ] {
-        run_spec(&spec, &out, verbose, campaign.as_ref());
+    for spec in specs_for("all", args) {
+        let logs = run_spec(&spec, &out, verbose, campaign.as_ref());
+        if spec.id == "fig7" {
+            figures::print_fig7b(&logs, &spec.runs);
+        }
     }
-    let spec7 = figures::fig7(full);
-    let logs = run_spec(&spec7, &out, verbose, campaign.as_ref());
-    figures::print_fig7b(&logs, &spec7.runs);
     theory::run(&theory::TheoryParams::default(), &out);
+}
+
+/// `repro fleet <which>`: enumerate the campaign into the store's queue,
+/// spawn the worker processes, wait for the queue to drain, then
+/// regenerate the figure outputs from the store — byte-identical to the
+/// single-process path, whoever executed what.
+fn cmd_fleet(args: &Args) {
+    let which = args
+        .positional
+        .first()
+        .unwrap_or_else(|| panic!("usage: repro fleet <2..7|fading|d2d|all> [--workers N]"))
+        .clone();
+    let out = out_dir(args);
+    // The fleet *is* the campaign store — `--no-cache` has nothing to
+    // bypass here, so the store is forced on like `repro resume`.
+    let campaign = campaign_from_args(args, true)
+        .expect("resume-forced campaign config is always present");
+    let fleet_cfg = fleet_from_args(args);
+    let specs = specs_for(&which, args);
+    let store_dir = campaign.store_dir_or(&out);
+    let store = RunStore::open(&store_dir).expect("open campaign run store");
+    let items = fleet::enqueue_specs(&store, &specs).expect("enqueue fleet work items");
+    let total_rounds: usize = items.iter().map(|i| i.cfg.iterations).sum();
+    println!(
+        "fleet: {} spec(s), {} run(s), {total_rounds} total rounds → store {store_dir}",
+        specs.len(),
+        items.len()
+    );
+    println!(
+        "spawning {} worker(s) [lease {}s, heartbeat {}s, snapshot every {}]",
+        fleet_cfg.workers, fleet_cfg.lease_secs, fleet_cfg.heartbeat_secs, campaign.snapshot_every
+    );
+    let exe = std::env::current_exe().expect("current executable path");
+    let mut children = Vec::new();
+    for i in 0..fleet_cfg.workers {
+        let child = std::process::Command::new(&exe)
+            .arg("worker")
+            .args(["--store-dir", store_dir.as_str()])
+            .args(["--lease-secs", fleet_cfg.lease_secs.to_string().as_str()])
+            .args(["--heartbeat-secs", fleet_cfg.heartbeat_secs.to_string().as_str()])
+            .args(["--snapshot-every", campaign.snapshot_every.to_string().as_str()])
+            .args(["--keep-last-n", campaign.keep_last_n.to_string().as_str()])
+            .args(["--worker-id", format!("w{i}").as_str()])
+            .arg("--quiet")
+            .spawn()
+            .unwrap_or_else(|e| panic!("spawn worker {i}: {e}"));
+        children.push(child);
+    }
+    for (i, mut child) in children.into_iter().enumerate() {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => eprintln!("warning: worker w{i} exited with {status}"),
+            Err(e) => eprintln!("warning: waiting on worker w{i}: {e}"),
+        }
+    }
+    // Belt and braces: if workers died (OOM kill, …) the queue may not be
+    // drained — finish the remainder here rather than leaving the
+    // campaign hanging (their leases have expired by now or will).
+    let report = fleet::run_worker(&store_dir, &fleet_cfg, &campaign, "coordinator", false)
+        .expect("final in-process drain");
+    if report.executed + report.resumed > 0 {
+        println!(
+            "coordinator finished {} leftover run(s)",
+            report.executed + report.resumed
+        );
+    }
+    let all_logs = fleet::collect_outputs(&store, &specs, &out)
+        .unwrap_or_else(|e| panic!("collect fleet outputs: {e}"));
+    for (spec, logs) in specs.iter().zip(&all_logs) {
+        if spec.id == "fig7" {
+            figures::print_fig7b(logs, &spec.runs);
+        }
+    }
+    if which == "all" {
+        theory::run(&theory::TheoryParams::default(), &out);
+    }
+}
+
+/// `repro worker`: attach one worker to a store's fleet queue and drain it.
+fn cmd_worker(args: &Args) {
+    let out = out_dir(args);
+    let mut campaign = campaign_from_args(args, true)
+        .expect("resume-forced campaign config is always present");
+    let store_dir = campaign.store_dir_or(&out);
+    campaign.store_dir = store_dir.clone();
+    let fleet_cfg = fleet_from_args(args);
+    let worker_id = args
+        .get("worker-id")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("pid{}", std::process::id()));
+    let verbose = !args.flag("quiet");
+    let report = fleet::run_worker(&store_dir, &fleet_cfg, &campaign, &worker_id, verbose)
+        .unwrap_or_else(|e| panic!("worker loop: {e}"));
+    println!(
+        "[{worker_id}] done: {} executed, {} resumed, {} already complete",
+        report.executed, report.resumed, report.already_done
+    );
+}
+
+/// `repro fleet-status`: live view of the queue, leases and progress.
+fn cmd_fleet_status(args: &Args) {
+    let out = out_dir(args);
+    let campaign = campaign_from_args(args, true)
+        .expect("resume-forced campaign config is always present");
+    let store_dir = campaign.store_dir_or(&out);
+    let store = match RunStore::open(&store_dir) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("campaign store {store_dir}: unavailable ({e})");
+            return;
+        }
+    };
+    let items = fleet::load_queue(&store).unwrap_or_default();
+    if items.is_empty() {
+        println!("fleet queue at {store_dir}: empty (run `repro fleet` to enqueue)");
+        return;
+    }
+    let fleet_cfg = fleet_from_args(args);
+    let ttl = std::time::Duration::from_secs_f64(fleet_cfg.lease_secs);
+    let ldir = fleet::lease_dir(store.root());
+    let (mut complete, mut running, mut stale) = (0usize, 0usize, 0usize);
+    let (mut rounds_done, mut rounds_total) = (0usize, 0usize);
+    println!("fleet store {store_dir}: {} queued run(s)", items.len());
+    println!("{:<4} {:<16} {:<14} {:>11}  {}", "seq", "key", "state", "round", "run");
+    for item in &items {
+        let remaining = fleet::remaining_rounds(&store, item);
+        let done = item.cfg.iterations - remaining;
+        rounds_done += done;
+        rounds_total += item.cfg.iterations;
+        let state = if remaining == 0 {
+            complete += 1;
+            "complete".to_string()
+        } else {
+            match fleet::lease_state(&ldir, &item.key, ttl) {
+                fleet::LeaseState::Held(owner) => {
+                    running += 1;
+                    format!("run:{owner}")
+                }
+                fleet::LeaseState::Stale => {
+                    stale += 1;
+                    "stale-lease".to_string()
+                }
+                fleet::LeaseState::Free => "queued".to_string(),
+            }
+        };
+        println!(
+            "{:<4} {:<16} {:<14} {:>5}/{:<5}  `{}` ({})",
+            item.seq, item.key, state, done, item.cfg.iterations, item.label, item.spec_id
+        );
+    }
+    println!(
+        "\n{}/{} run(s) complete, {running} running, {stale} stale lease(s); \
+         {rounds_done}/{rounds_total} rounds done",
+        complete,
+        items.len()
+    );
+}
+
+/// `repro gc`: prune the store per the retention policy.
+fn cmd_gc(args: &Args) {
+    let out = out_dir(args);
+    let campaign = campaign_from_args(args, true)
+        .expect("resume-forced campaign config is always present");
+    let store_dir = campaign.store_dir_or(&out);
+    let store = match RunStore::open(&store_dir) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("campaign store {store_dir}: unavailable ({e})");
+            return;
+        }
+    };
+    let report = store
+        .gc(campaign.keep_last_n)
+        .unwrap_or_else(|e| panic!("gc {store_dir}: {e}"));
+    println!(
+        "gc {store_dir}: {} entr{} scanned, {} file(s) removed, {} byte(s) reclaimed \
+         (keep_last_n = {})",
+        report.entries,
+        if report.entries == 1 { "y" } else { "ies" },
+        report.files_removed,
+        report.bytes_reclaimed,
+        campaign.keep_last_n
+    );
 }
 
 /// `repro status`: list the campaign store's entries.

@@ -46,8 +46,7 @@ fn cache_skips_completed_runs_with_byte_identical_outputs() {
     let campaign = CampaignConfig {
         snapshot_every: 2,
         store_dir: base.join("store").to_str().unwrap().to_string(),
-        resume: true,
-        enabled: true,
+        ..CampaignConfig::default()
     };
     let out1 = base.join("out1");
     let out2 = base.join("out2");
@@ -119,8 +118,7 @@ fn partial_runs_resume_and_match_straight_execution() {
     let campaign = CampaignConfig {
         snapshot_every: 3,
         store_dir,
-        resume: true,
-        enabled: true,
+        ..CampaignConfig::default()
     };
     let out = base.join("out");
     let (logs, rep) =

@@ -1,0 +1,294 @@
+//! Fleet semantics, end to end:
+//!
+//! * a 4-worker fleet produces `summary.csv` byte-identical to the
+//!   single-process runner, and the cache-fronted `repro fig` path over
+//!   the fleet's store regenerates even the per-run CSVs byte-identically
+//!   (wall-clock columns included — they come from the stored result);
+//! * a worker SIGKILL'd mid-run leaves a stale lease that a surviving
+//!   worker reclaims, resuming from the latest snapshot rather than
+//!   recomputing, with final output byte-identical to the uninterrupted
+//!   golden (this test is the CI fleet-smoke step).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use ota_dsgd::campaign::{manifest::RunStatus, scheduler, CampaignReport, RunManifest, RunStore};
+use ota_dsgd::config::{presets, CampaignConfig, FleetConfig, RunConfig, Scheme};
+use ota_dsgd::experiments::runner::{self, ExperimentSpec};
+use ota_dsgd::fleet;
+use ota_dsgd::model::PARAM_DIM;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn read(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"))
+}
+
+fn lean(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 4,
+        eval_every: 2,
+        channel_uses: PARAM_DIM / 8,
+        sparsity: PARAM_DIM / 16,
+        ..presets::smoke()
+    }
+}
+
+fn spec() -> ExperimentSpec {
+    ExperimentSpec {
+        id: "tfleet".into(),
+        title: "fleet vs single-process".into(),
+        runs: vec![
+            ("error-free".into(), lean(Scheme::ErrorFree)),
+            ("signsgd".into(), lean(Scheme::SignSgd)),
+            ("qsgd".into(), lean(Scheme::Qsgd)),
+        ],
+    }
+}
+
+fn campaign_for(store_dir: &str) -> CampaignConfig {
+    CampaignConfig {
+        snapshot_every: 1,
+        store_dir: store_dir.to_string(),
+        ..CampaignConfig::default()
+    }
+}
+
+/// Compare two per-run CSVs cell by cell, ignoring the wall-clock
+/// `round_secs` column (independent executions time differently; byte
+/// identity across executions is asserted separately via the cache path).
+fn assert_csv_equal_modulo_timing(a: &Path, b: &Path, label: &str) {
+    let ra = ota_dsgd::util::csv::read_csv(a).expect("csv a");
+    let rb = ota_dsgd::util::csv::read_csv(b).expect("csv b");
+    assert_eq!(ra.len(), rb.len(), "{label}: row count");
+    let t_col = ra[0]
+        .iter()
+        .position(|h| h == "round_secs")
+        .expect("round_secs column");
+    for (i, (rowa, rowb)) in ra.iter().zip(&rb).enumerate() {
+        for (c, (va, vb)) in rowa.iter().zip(rowb).enumerate() {
+            if c != t_col {
+                assert_eq!(va, vb, "{label}: row {i} col {c}");
+            }
+        }
+    }
+}
+
+/// The acceptance gate: 4 in-process workers over one store ≡ 1 worker
+/// over another store ≡ the plain single-process runner, and `repro fig`'s
+/// cache path over the fleet store regenerates per-run CSVs byte-for-byte.
+#[test]
+fn fleet_of_four_matches_single_process_byte_identical() {
+    let base = fresh_dir("ota_fleet_identity_test");
+    // Reference: the plain single-process runner, no store at all.
+    let out_ref = base.join("ref");
+    runner::run_experiment(&spec(), out_ref.to_str().unwrap(), false);
+
+    // Fleet A: 4 concurrent workers sharing one store.
+    let store4 = base.join("store4").to_str().unwrap().to_string();
+    {
+        let store = RunStore::open(&store4).unwrap();
+        fleet::enqueue_specs(&store, &[spec()]).unwrap();
+    }
+    let campaign = campaign_for(&store4);
+    let fleet_cfg = FleetConfig::default();
+    let reports: Vec<fleet::WorkerReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let store4 = &store4;
+                let campaign = &campaign;
+                let fleet_cfg = &fleet_cfg;
+                scope.spawn(move || {
+                    fleet::run_worker(store4, fleet_cfg, campaign, &format!("w{i}"), false)
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let executed: usize = reports.iter().map(|r| r.executed + r.resumed).sum();
+    assert_eq!(executed, 3, "every run executed exactly once across the fleet: {reports:?}");
+    let out4 = base.join("out4");
+    {
+        let store = RunStore::open(&store4).unwrap();
+        fleet::collect_outputs(&store, &[spec()], out4.to_str().unwrap()).unwrap();
+    }
+
+    // Fleet B: a single worker in a fresh store.
+    let store1 = base.join("store1").to_str().unwrap().to_string();
+    {
+        let store = RunStore::open(&store1).unwrap();
+        fleet::enqueue_specs(&store, &[spec()]).unwrap();
+    }
+    fleet::run_worker(&store1, &fleet_cfg, &campaign_for(&store1), "solo", false).unwrap();
+    let out1 = base.join("out1");
+    {
+        let store = RunStore::open(&store1).unwrap();
+        fleet::collect_outputs(&store, &[spec()], out1.to_str().unwrap()).unwrap();
+    }
+
+    // summary.csv is fully deterministic: byte-identical across the plain
+    // runner, the 1-worker fleet and the 4-worker fleet.
+    let summary_ref = read(&out_ref.join("tfleet/summary.csv"));
+    assert_eq!(
+        summary_ref,
+        read(&out4.join("tfleet/summary.csv")),
+        "4-worker fleet summary must be byte-identical to single-process"
+    );
+    assert_eq!(
+        summary_ref,
+        read(&out1.join("tfleet/summary.csv")),
+        "1-worker fleet summary must be byte-identical to single-process"
+    );
+    // Per-run CSVs: identical numbers, timing column aside.
+    for label in ["error-free", "signsgd", "qsgd"] {
+        assert_csv_equal_modulo_timing(
+            &out_ref.join(format!("tfleet/{label}.csv")),
+            &out4.join(format!("tfleet/{label}.csv")),
+            label,
+        );
+    }
+
+    // `repro fig` over the fleet's store is a pure cache load and its
+    // per-run CSVs are byte-identical to the fleet's — wall clock
+    // included, because both regenerate from the same stored result.
+    let out_fig = base.join("out_fig");
+    let (_, report) = scheduler::run_experiment_cached(
+        &spec(),
+        out_fig.to_str().unwrap(),
+        false,
+        &campaign,
+    );
+    assert_eq!(
+        report,
+        CampaignReport { executed: 0, resumed: 0, cached: 3 },
+        "the figure path must serve entirely from the fleet's store"
+    );
+    for file in ["summary.csv", "error-free.csv", "signsgd.csv", "qsgd.csv"] {
+        assert_eq!(
+            read(&out4.join(format!("tfleet/{file}"))),
+            read(&out_fig.join(format!("tfleet/{file}"))),
+            "{file} must be byte-identical between fleet output and cached repro fig"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The CI fleet-smoke: enqueue a campaign, attach a real `repro worker`
+/// process, SIGKILL it mid-run, and verify a second worker reclaims the
+/// stale lease, resumes from the snapshot (not from scratch), and the
+/// resume/cache path completes with output byte-identical to the
+/// uninterrupted golden.
+#[test]
+fn sigkill_worker_reclaim_resumes_to_identical_output() {
+    let base = fresh_dir("ota_fleet_sigkill_test");
+    // One long run so the kill reliably lands mid-execution: error-free
+    // rounds are milliseconds, snapshots land every round.
+    let cfg = RunConfig {
+        iterations: 400,
+        eval_every: 100,
+        ..lean(Scheme::ErrorFree)
+    };
+    let spec = || ExperimentSpec {
+        id: "tkill".into(),
+        title: "sigkill reclaim".into(),
+        runs: vec![("error-free".into(), cfg.clone())],
+    };
+    // Golden: the uninterrupted single-process trajectory.
+    let out_ref = base.join("ref");
+    let golden = runner::run_experiment(&spec(), out_ref.to_str().unwrap(), false);
+
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    let items = fleet::enqueue_specs(&store, &[spec()]).unwrap();
+    let key = items[0].key.clone();
+
+    // A real worker process, snapshotting every round, heartbeating fast.
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["worker", "--store-dir", store_dir.as_str()])
+        .args(["--lease-secs", "2", "--heartbeat-secs", "0.5"])
+        .args(["--snapshot-every", "1", "--worker-id", "victim"])
+        .arg("--quiet")
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn repro worker");
+
+    // Wait until it has made mid-run progress (a partial manifest with a
+    // few snapshot rounds), then SIGKILL it — no cleanup, no release.
+    let manifest_path = store.root().join(&key).join("manifest.toml");
+    let mut progressed = false;
+    for _ in 0..3000 {
+        if let Ok(m) = RunManifest::read(&manifest_path) {
+            if m.status == RunStatus::Partial && m.snapshot_round >= 3 {
+                progressed = true;
+                break;
+            }
+            if m.status == RunStatus::Complete {
+                break;
+            }
+        }
+        if child.try_wait().expect("try_wait").is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    child.kill().ok();
+    child.wait().ok();
+    assert!(
+        progressed,
+        "worker must reach a mid-run snapshot before the kill (machine too slow or worker died early?)"
+    );
+    let partial_round = RunManifest::read(&manifest_path).unwrap().snapshot_round;
+    assert!(store.load_result(&cfg).is_none(), "the kill must land mid-run");
+
+    // A surviving worker reclaims the stale lease (TTL 2s) and resumes
+    // from the snapshot rather than recomputing from round 0.
+    let fleet_cfg = FleetConfig {
+        workers: 1,
+        lease_secs: 2.0,
+        heartbeat_secs: 0.5,
+    };
+    let campaign = campaign_for(&store_dir);
+    let report = fleet::run_worker(&store_dir, &fleet_cfg, &campaign, "survivor", false).unwrap();
+    assert_eq!(
+        (report.executed, report.resumed),
+        (0, 1),
+        "the survivor must resume the dead worker's run from its snapshot, not restart it"
+    );
+    let finished = RunManifest::read(&manifest_path).unwrap();
+    assert_eq!(finished.status, RunStatus::Complete);
+    assert!(
+        partial_round >= 3,
+        "resume started from round {partial_round}, so at least that much work was salvaged"
+    );
+
+    // The resumed trajectory is the golden one, bit for bit…
+    let result = store.load_result(&cfg).expect("completed result");
+    let bits = |log: &ota_dsgd::coordinator::TrainLog| {
+        log.records.iter().map(|r| r.grad_norm.to_bits()).collect::<Vec<_>>()
+    };
+    assert_eq!(bits(&golden[0]), bits(&result));
+
+    // …and `repro resume`'s machinery over this store completes as a pure
+    // cache load with summary.csv byte-identical to the golden.
+    let out_resume = base.join("out_resume");
+    let (_, rep) = scheduler::run_experiment_cached(
+        &spec(),
+        out_resume.to_str().unwrap(),
+        false,
+        &campaign,
+    );
+    assert_eq!(rep, CampaignReport { executed: 0, resumed: 0, cached: 1 });
+    assert_eq!(
+        read(&out_ref.join("tkill/summary.csv")),
+        read(&out_resume.join("tkill/summary.csv")),
+        "post-kill resume output must match the uninterrupted golden byte-for-byte"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
