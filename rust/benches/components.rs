@@ -1,6 +1,14 @@
 //! Component microbenchmarks: every hot-path primitive of the stack at the
 //! paper's shapes (d = 7850, s = d/2, k = s/2, M = 25). These are the
-//! numbers EXPERIMENTS.md §Perf tracks before/after optimization.
+//! numbers PERF.md tracks before/after optimization.
+//!
+//! Every result is collected into a [`BenchSuite`] and written as
+//! `BENCH_components.json` at the repo root (override with
+//! `OTA_BENCH_JSON=<path>`). The seed formulations are benched alongside
+//! the optimized kernels under "… reference …" names, so a single run
+//! records an honest before/after pair on the same host and build;
+//! `scripts/bench_compare.py` gates CI on >2× regressions of any entry vs
+//! the committed snapshot.
 
 use ota_dsgd::amp::{self, AmpConfig};
 use ota_dsgd::analog::{AnalogDevice, Projection};
@@ -11,9 +19,9 @@ use ota_dsgd::compress::signsgd::SignSgdCompressor;
 use ota_dsgd::compress::DigitalCompressor;
 use ota_dsgd::coordinator::{DeviceSet, GradientBackend, RustBackend};
 use ota_dsgd::data::{partition, synthetic};
-use ota_dsgd::model::PARAM_DIM;
+use ota_dsgd::model::{self, PARAM_DIM};
 use ota_dsgd::tensor;
-use ota_dsgd::util::bench::{black_box, group, Bench};
+use ota_dsgd::util::bench::{black_box, group, Bench, BenchSuite};
 use ota_dsgd::util::rng::Pcg64;
 use std::time::Duration;
 
@@ -28,95 +36,149 @@ fn main() {
     let s_tilde = s - 1;
     let k = s / 2;
     let mut rng = Pcg64::new(1);
+    let mut suite = BenchSuite::new("components");
 
     group("selection / sparsification (d = 7850)");
     let g = random_grad(&mut rng);
-    Bench::new(format!("topk_indices k={k}"))
-        .throughput(D as u64)
-        .run(|| black_box(tensor::topk_indices(&g, k)));
-    Bench::new("sparsify_topk k=s/2")
-        .throughput(D as u64)
-        .run(|| black_box(tensor::sparsify_topk(&g, k)));
+    suite.record(
+        Bench::new(format!("topk_indices k={k}"))
+            .throughput(D as u64)
+            .run(|| black_box(tensor::topk_indices(&g, k))),
+    );
+    suite.record(
+        Bench::new("sparsify_topk k=s/2")
+            .throughput(D as u64)
+            .run(|| black_box(tensor::sparsify_topk(&g, k))),
+    );
 
     group("digital codecs (budget = R_t at P=500, s=d/2, M=25)");
     let budget = ota_dsgd::digital::capacity_bits(s, 25, 500.0, 1.0);
     println!("(R_t = {budget:.1} bits)");
     let mut sbc = SbcCompressor::new();
-    Bench::new("SBC encode (D-DSGD)").run(|| black_box(sbc.encode(&g, budget)));
+    suite.record(Bench::new("SBC encode (D-DSGD)").run(|| black_box(sbc.encode(&g, budget))));
     let mut sign = SignSgdCompressor::new();
-    Bench::new("SignSGD encode").run(|| black_box(sign.encode(&g, budget)));
+    suite.record(Bench::new("SignSGD encode").run(|| black_box(sign.encode(&g, budget))));
     let mut qsgd = QsgdCompressor::new(2, 7);
-    Bench::new("QSGD encode").run(|| black_box(qsgd.encode(&g, budget)));
-    Bench::new("q_t budget search (SBC)")
-        .run(|| black_box(SbcCompressor::pick_q(D, black_box(budget))));
+    suite.record(Bench::new("QSGD encode").run(|| black_box(qsgd.encode(&g, budget))));
+    suite.record(
+        Bench::new("q_t budget search (SBC)")
+            .run(|| black_box(SbcCompressor::pick_q(D, black_box(budget)))),
+    );
+
+    group("projection generation (s̃ = d/2 − 1)");
+    suite.record(
+        Bench::new("projection generate s̃×d (parallel)")
+            .warmup(0)
+            .iters(1, 3)
+            .target_time(Duration::from_secs(4))
+            .throughput((s_tilde * D) as u64)
+            .run(|| black_box(Projection::generate(s_tilde, D, 3)).matrix.data[0]),
+    );
+    suite.record(
+        Bench::new("projection generate s̃×d (workers=1 reference)")
+            .warmup(0)
+            .iters(1, 2)
+            .target_time(Duration::from_secs(2))
+            .throughput((s_tilde * D) as u64)
+            .run(|| {
+                black_box(Projection::generate_with_workers(s_tilde, D, 3, 1))
+                    .matrix
+                    .data[0]
+            }),
+    );
 
     group("analog pipeline (s̃ = d/2 − 1)");
-    let t0 = std::time::Instant::now();
     let proj = Projection::generate(s_tilde, D, 3);
-    println!("(projection generate: {:.2}s for {}x{})", t0.elapsed().as_secs_f64(), s_tilde, D);
     let mut dev = AnalogDevice::new(D, k);
-    Bench::new("A-DSGD device transmit (sparsify+project+scale)")
-        .iters(3, 20)
-        .target_time(Duration::from_secs(3))
-        .run(|| black_box(dev.transmit(&g, &proj, 500.0)));
+    suite.record(
+        Bench::new("A-DSGD device transmit (sparsify+project+scale)")
+            .iters(3, 20)
+            .target_time(Duration::from_secs(3))
+            .run(|| black_box(dev.transmit(&g, &proj, 500.0))),
+    );
+    let mut dev_ref = AnalogDevice::new(D, k);
+    suite.record(
+        Bench::new("A-DSGD device transmit (reference unfused)")
+            .iters(3, 20)
+            .target_time(Duration::from_secs(3))
+            .run(|| black_box(dev_ref.transmit_reference(&g, &proj, 500.0))),
+    );
     let g_sp = tensor::sparsify_topk(&g, k);
     let support = tensor::topk_indices(&g, k);
-    Bench::new("projection apply_sparse (s̃·k MACs)")
-        .iters(3, 20)
-        .throughput((s_tilde * k) as u64)
-        .run(|| black_box(proj.apply_sparse(&g_sp, &support)));
-    Bench::new("projection apply_dense (s̃·d MACs)")
-        .iters(3, 10)
-        .throughput((s_tilde * D) as u64)
-        .run(|| black_box(proj.apply_dense(&g_sp)));
+    suite.record(
+        Bench::new("projection apply_sparse (s̃·k MACs)")
+            .iters(3, 20)
+            .throughput((s_tilde * k) as u64)
+            .run(|| black_box(proj.apply_sparse(&g_sp, &support))),
+    );
+    suite.record(
+        Bench::new("projection apply_dense (s̃·d MACs)")
+            .iters(3, 10)
+            .throughput((s_tilde * D) as u64)
+            .run(|| black_box(proj.apply_dense(&g_sp))),
+    );
 
     group("AMP recovery at paper scale");
     let y = proj.apply_dense(&g_sp);
     for iters in [5usize, 15, 30] {
-        Bench::new(format!("amp::recover max_iters={iters} (row-major only)"))
-            .iters(2, 6)
-            .target_time(Duration::from_secs(4))
-            .run(|| {
-                black_box(amp::recover(
-                    &proj.matrix,
-                    &y,
-                    &AmpConfig {
-                        max_iters: iters,
-                        tol: 0.0,
-                        threshold_mult: 1.1,
-                    },
-                ))
-            });
-        Bench::new(format!("amp::recover_with Aᵀ max_iters={iters} (production)"))
-            .iters(2, 6)
-            .target_time(Duration::from_secs(4))
-            .run(|| {
-                black_box(amp::recover_with(
-                    &proj.matrix,
-                    Some(&proj.matrix_t),
-                    &y,
-                    &AmpConfig {
-                        max_iters: iters,
-                        tol: 0.0,
-                        threshold_mult: 1.1,
-                    },
-                ))
-            });
+        let cfg = AmpConfig {
+            max_iters: iters,
+            tol: 0.0,
+            threshold_mult: 1.1,
+        };
+        suite.record(
+            Bench::new(format!("amp::recover max_iters={iters} (row-major only)"))
+                .iters(2, 6)
+                .target_time(Duration::from_secs(4))
+                .run(|| black_box(amp::recover(&proj.matrix, &y, &cfg))),
+        );
+        suite.record(
+            Bench::new(format!("amp::recover_with Aᵀ max_iters={iters} (production)"))
+                .iters(2, 6)
+                .target_time(Duration::from_secs(4))
+                .run(|| black_box(amp::recover_with(&proj.matrix, Some(&proj.matrix_t), &y, &cfg))),
+        );
+    }
+    {
+        let cfg = AmpConfig {
+            max_iters: 15,
+            tol: 0.0,
+            threshold_mult: 1.1,
+        };
+        suite.record(
+            Bench::new("amp::recover_with Aᵀ max_iters=15 (reference unfused)")
+                .iters(2, 6)
+                .target_time(Duration::from_secs(4))
+                .run(|| {
+                    black_box(amp::recover_with_reference(
+                        &proj.matrix,
+                        Some(&proj.matrix_t),
+                        &y,
+                        &cfg,
+                    ))
+                }),
+        );
     }
 
     group("device encode fan-out (M=25, DeviceSet::encode)");
     for workers in [1usize, 4] {
         let grads25: Vec<Vec<f32>> = {
             let mut r = Pcg64::new(21);
-            (0..25).map(|_| (0..D).map(|_| r.normal_ms(0.0, 0.02) as f32).collect()).collect()
+            (0..25)
+                .map(|_| (0..D).map(|_| r.normal_ms(0.0, 0.02) as f32).collect())
+                .collect()
         };
         let states: Vec<AnalogDevice> = (0..25).map(|_| AnalogDevice::new(D, k)).collect();
         let mut set = DeviceSet::with_workers(states, workers);
-        Bench::new(format!("A-DSGD encode M=25 workers={workers}"))
-            .iters(2, 6)
-            .target_time(Duration::from_secs(4))
-            .throughput(25)
-            .run(|| black_box(set.encode(|dev, st| st.transmit(&grads25[dev], &proj, 500.0).x)));
+        suite.record(
+            Bench::new(format!("A-DSGD encode M=25 workers={workers}"))
+                .iters(2, 6)
+                .target_time(Duration::from_secs(4))
+                .throughput(25)
+                .run(|| {
+                    black_box(set.encode(|dev, st| st.transmit(&grads25[dev], &proj, 500.0).x))
+                }),
+        );
     }
 
     group("channel");
@@ -124,9 +186,11 @@ fn main() {
     let frames: Vec<Vec<f32>> = (0..25)
         .map(|i| (0..s).map(|j| ((i + j) % 7) as f32 * 0.1).collect())
         .collect();
-    Bench::new("GaussianMac transmit (M=25, s=d/2)")
-        .throughput((25 * s) as u64)
-        .run(|| black_box(mac.transmit(&frames)));
+    suite.record(
+        Bench::new("GaussianMac transmit (M=25, s=d/2)")
+            .throughput((25 * s) as u64)
+            .run(|| black_box(mac.transmit(&frames))),
+    );
 
     group("gradient backend (rust reference)");
     let corpus = synthetic::generate(25 * 200, 9, 0);
@@ -134,24 +198,59 @@ fn main() {
     let shards = partition::iid(&corpus, 25, 200, &mut prng);
     let params = vec![0.01f32; D];
     let mut backend = RustBackend::new();
-    Bench::new("per_device_gradients M=25 B=200")
-        .iters(2, 8)
-        .target_time(Duration::from_secs(4))
-        .throughput((25 * 200) as u64)
-        .run(|| black_box(backend.per_device_gradients(&params, &corpus, &shards)));
+    suite.record(
+        Bench::new("per_device_gradients M=25 B=200")
+            .iters(2, 8)
+            .target_time(Duration::from_secs(4))
+            .throughput((25 * 200) as u64)
+            .run(|| black_box(backend.per_device_gradients(&params, &corpus, &shards))),
+    );
+    let mut gbuf = vec![0f32; D];
+    suite.record(
+        Bench::new("minibatch gradient B=200 (tiled)")
+            .iters(3, 30)
+            .target_time(Duration::from_secs(2))
+            .throughput(200)
+            .run(|| black_box(model::gradient(&params, &corpus, &shards[0], &mut gbuf))),
+    );
+    suite.record(
+        Bench::new("minibatch gradient B=200 (reference per-sample)")
+            .iters(3, 30)
+            .target_time(Duration::from_secs(2))
+            .throughput(200)
+            .run(|| black_box(model::gradient_reference(&params, &corpus, &shards[0], &mut gbuf))),
+    );
 
     group("linalg primitives");
     let x: Vec<f32> = (0..D).map(|i| (i % 13) as f32 * 0.1).collect();
     let yv: Vec<f32> = (0..D).map(|i| (i % 7) as f32 * 0.2).collect();
-    Bench::new("dot d=7850")
-        .throughput(D as u64)
-        .run(|| black_box(tensor::dot(&x, &yv)));
+    suite.record(
+        Bench::new("dot d=7850")
+            .throughput(D as u64)
+            .run(|| black_box(tensor::dot(&x, &yv))),
+    );
+    suite.record(
+        Bench::new("dot d=7850 (reference scalar)")
+            .throughput(D as u64)
+            .run(|| black_box(tensor::reference::dot_scalar(&x, &yv))),
+    );
     let mut out = vec![0f32; D];
-    Bench::new("gemv_t (s̃×d)ᵀ·r")
-        .iters(3, 15)
-        .throughput((s_tilde * D) as u64)
-        .run(|| {
-            tensor::gemv_t(&proj.matrix, &y, &mut out);
-            black_box(out[0])
-        });
+    suite.record(
+        Bench::new("gemv_t (s̃×d)ᵀ·r")
+            .iters(3, 15)
+            .throughput((s_tilde * D) as u64)
+            .run(|| {
+                tensor::gemv_t(&proj.matrix, &y, &mut out);
+                black_box(out[0])
+            }),
+    );
+
+    let path = BenchSuite::output_path("BENCH_components.json");
+    match suite.write_json(&path) {
+        Ok(()) => println!("\nwrote {} results to {}", suite.results().len(), path.display()),
+        Err(e) => {
+            eprintln!("failed to write {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
 }

@@ -13,6 +13,20 @@
 //! monotonically toward the channel noise σ — the reconstruction behaves
 //! like `x + σω`. The state-evolution trace exposed here lets tests verify
 //! that monotone contraction on synthetic signals.
+//!
+//! # Perf (see PERF.md)
+//!
+//! With a precomputed Aᵀ, [`recover_with`] runs a **fused single-stream
+//! iteration**: one pass over the rows of Aᵀ computes the pseudo-data dot
+//! `Aᵀr`, applies the soft threshold, and accumulates the surviving
+//! coefficient's contribution to `A·x̂` while the 16 KB row is still
+//! cache-hot. The seed formulation streamed the 123 MB (at paper shape)
+//! matrix twice per iteration; the fused pass streams it once, which on a
+//! memory-bound host roughly halves AMP iteration time. Per-element
+//! floating-point order is exactly the seed's (dot reduction tree,
+//! threshold expression, ascending-j accumulation with the `x̂_j == 0`
+//! skip), so results are **bit-identical** to
+//! [`recover_with_reference`] — enforced by `rust/tests/kernel_contracts.rs`.
 
 use crate::tensor::{gemv_t, soft_threshold, Matf};
 
@@ -51,10 +65,115 @@ pub fn recover(a: &Matf, y: &[f32], cfg: &AmpConfig) -> (Vec<f32>, AmpTrace) {
 }
 
 /// Recovery with an optional precomputed Aᵀ (d×s̃). When provided, the
-/// A·x̂ residual pass runs as contiguous axpys over rows of Aᵀ instead of
-/// strided column gathers — the §Perf hot-path variant used by
-/// [`crate::analog::AnalogPs`].
+/// whole iteration runs as one fused pass over the rows of Aᵀ (pseudo-data
+/// dot + threshold + A·x̂ accumulation per row while it is cache-hot) —
+/// bit-identical to the unfused [`recover_with_reference`] but streaming
+/// the matrix once per iteration instead of twice. Without Aᵀ the seed
+/// row-major formulation runs unchanged.
 pub fn recover_with(
+    a: &Matf,
+    a_t: Option<&Matf>,
+    y: &[f32],
+    cfg: &AmpConfig,
+) -> (Vec<f32>, AmpTrace) {
+    match a_t {
+        Some(at) => recover_fused(a, at, y, cfg),
+        None => recover_with_reference(a, None, y, cfg),
+    }
+}
+
+/// The fused-iteration hot path (requires Aᵀ).
+fn recover_fused(a: &Matf, at: &Matf, y: &[f32], cfg: &AmpConfig) -> (Vec<f32>, AmpTrace) {
+    let s = a.rows;
+    let d = a.cols;
+    assert_eq!((at.rows, at.cols), (d, s), "Aᵀ shape mismatch");
+    assert_eq!(y.len(), s, "observation length must equal rows of A");
+    // x^0 = 0, r^0 = y (A·x^0 = 0, no Onsager term yet).
+    let mut x = vec![0f32; d];
+    let mut r = y.to_vec();
+    let mut ax = vec![0f32; s];
+    let mut trace = AmpTrace {
+        tau: Vec::with_capacity(cfg.max_iters),
+        iterations: 0,
+        converged: false,
+    };
+    let inv_sqrt_s = 1.0 / (s as f32).sqrt();
+
+    for it in 0..cfg.max_iters {
+        // Noise-level estimate and threshold from the current residual.
+        let sigma_hat = (crate::tensor::norm(&r) as f32) * inv_sqrt_s;
+        let tau = cfg.threshold_mult * sigma_hat;
+        trace.tau.push(sigma_hat as f64);
+
+        // ‖x^t‖² before the update — the convergence denominator.
+        let base = crate::tensor::norm_sq(&x).max(1e-12);
+
+        // Fused pass over rows of Aᵀ, four at a time: pseudo-data
+        // u_j = (Aᵀr)_j + x_j, denoise x^{t+1}_j = η_τ(u_j), and fold the
+        // surviving coefficient into A·x^{t+1} while row j is cache-hot.
+        ax.fill(0.0);
+        let mut nnz = 0usize;
+        let mut diff = 0f64;
+        let mut j = 0usize;
+        while j + 4 <= d {
+            let (r0, r1, r2, r3) = (at.row(j), at.row(j + 1), at.row(j + 2), at.row(j + 3));
+            let u = crate::tensor::dot4(r0, r1, r2, r3, &r);
+            let mut xn = [0f32; 4];
+            for (l, xl) in xn.iter_mut().enumerate() {
+                let uj = u[l] + x[j + l];
+                let aj = uj.abs() - tau;
+                let v = if aj > 0.0 { aj * uj.signum() } else { 0.0 };
+                let dlt = (v - x[j + l]) as f64;
+                diff += dlt * dlt;
+                *xl = v;
+                x[j + l] = v;
+            }
+            if xn[0] != 0.0 && xn[1] != 0.0 && xn[2] != 0.0 && xn[3] != 0.0 {
+                nnz += 4;
+                crate::tensor::axpy4(xn, r0, r1, r2, r3, &mut ax);
+            } else {
+                for (l, &v) in xn.iter().enumerate() {
+                    if v != 0.0 {
+                        nnz += 1;
+                        crate::tensor::axpy(v, at.row(j + l), &mut ax);
+                    }
+                }
+            }
+            j += 4;
+        }
+        while j < d {
+            let uj = crate::tensor::dot(at.row(j), &r) + x[j];
+            let aj = uj.abs() - tau;
+            let v = if aj > 0.0 { aj * uj.signum() } else { 0.0 };
+            let dlt = (v - x[j]) as f64;
+            diff += dlt * dlt;
+            x[j] = v;
+            if v != 0.0 {
+                nnz += 1;
+                crate::tensor::axpy(v, at.row(j), &mut ax);
+            }
+            j += 1;
+        }
+
+        // Next residual with the Onsager correction:
+        // r^{t+1} = y − A x^{t+1} + (‖x^{t+1}‖₀/s)·r^t.
+        let b = nnz as f32 / s as f32;
+        crate::tensor::residual_update(&mut r, y, &ax, b);
+
+        trace.iterations = it + 1;
+        if (diff / base).sqrt() < cfg.tol {
+            trace.converged = true;
+            break;
+        }
+    }
+    (x, trace)
+}
+
+/// The seed's unfused iteration (gemv pseudo-data pass, separate threshold
+/// and A·x̂ passes), kept verbatim: it is the live bit-identity oracle for
+/// the fused path, the fallback when no Aᵀ is available, and the "before"
+/// timing in the components bench.
+pub fn recover_with_reference(
     a: &Matf,
     a_t: Option<&Matf>,
     y: &[f32],
@@ -169,10 +288,24 @@ pub fn mul_sparse(a: &Matf, x: &[f32], out: &mut [f32]) {
 /// i.i.d. N(0, 1/s̃) entries from a shared seed (§IV). Devices and the PS
 /// call this with identical arguments and obtain identical matrices.
 pub fn measurement_matrix(s_tilde: usize, d: usize, seed: u64) -> Matf {
+    let workers = crate::util::threadpool::default_workers(s_tilde);
+    measurement_matrix_with_workers(s_tilde, d, seed, workers)
+}
+
+/// [`measurement_matrix`] with an explicit worker count. Row r's entries
+/// come from the counter-seeded stream `(seed ^ 0xA117_0000, r)`, which
+/// depends only on `(seed, r)` — never on which worker drew it or in what
+/// order — so any `workers` value yields bit-identical matrices (asserted
+/// by `rust/tests/kernel_contracts.rs`).
+pub fn measurement_matrix_with_workers(
+    s_tilde: usize,
+    d: usize,
+    seed: u64,
+    workers: usize,
+) -> Matf {
     let mut m = Matf::zeros(s_tilde, d);
     let sd = (1.0 / s_tilde as f64).sqrt() as f32;
     // Parallel deterministic fill: one RNG stream per row.
-    let workers = crate::util::threadpool::default_workers(s_tilde);
     crate::util::threadpool::par_chunks_mut(&mut m.data, d, workers, |row, chunk| {
         let mut rng = crate::util::rng::Pcg64::with_stream(seed ^ 0xA117_0000, row as u64);
         rng.fill_normal_f32(chunk, sd);
@@ -213,6 +346,41 @@ mod tests {
         );
         let err = rel_err(&x, &xhat);
         assert!(err < 0.05, "relative error {err}, trace={:?}", trace.tau);
+    }
+
+    #[test]
+    fn fused_path_matches_reference_bitwise() {
+        // The fused single-stream iteration must reproduce the seed's
+        // unfused iteration bit-for-bit, trace included.
+        let (d, s, k) = (403, 201, 25); // odd shapes exercise the j-tail
+        let mut rng = Pcg64::new(17);
+        let a = measurement_matrix(s, d, 19);
+        let at = crate::analog::projection::transpose(&a);
+        let x = sparse_signal(d, k, &mut rng);
+        let mut y = vec![0f32; s];
+        crate::tensor::gemv(&a, &x, &mut y);
+        for v in y.iter_mut() {
+            *v += rng.normal_ms(0.0, 0.02) as f32;
+        }
+        for cfg in [
+            AmpConfig::default(),
+            AmpConfig {
+                max_iters: 40,
+                tol: 1e-7,
+                threshold_mult: 1.3,
+            },
+        ] {
+            let (x_fused, t_fused) = recover_with(&a, Some(&at), &y, &cfg);
+            let (x_ref, t_ref) = recover_with_reference(&a, Some(&at), &y, &cfg);
+            for (f, r) in x_fused.iter().zip(&x_ref) {
+                assert_eq!(f.to_bits(), r.to_bits());
+            }
+            assert_eq!(t_fused.iterations, t_ref.iterations);
+            assert_eq!(t_fused.converged, t_ref.converged);
+            for (f, r) in t_fused.tau.iter().zip(&t_ref.tau) {
+                assert_eq!(f.to_bits(), r.to_bits());
+            }
+        }
     }
 
     #[test]
@@ -268,6 +436,11 @@ mod tests {
         let (xhat, trace) = recover(&a, &y, &AmpConfig::default());
         assert!(xhat.iter().all(|&v| v == 0.0));
         assert!(trace.converged);
+        // Same through the fused path.
+        let at = crate::analog::projection::transpose(&a);
+        let (xhat2, trace2) = recover_with(&a, Some(&at), &y, &AmpConfig::default());
+        assert!(xhat2.iter().all(|&v| v == 0.0));
+        assert!(trace2.converged);
     }
 
     #[test]
@@ -288,6 +461,15 @@ mod tests {
         }
         let mean = norms.iter().sum::<f64>() / norms.len() as f64;
         assert!((mean - 1.0).abs() < 0.05, "mean col norm {mean}");
+    }
+
+    #[test]
+    fn measurement_matrix_worker_invariant() {
+        for workers in [1usize, 2, 4, 7] {
+            let m = measurement_matrix_with_workers(33, 50, 42, workers);
+            let m1 = measurement_matrix_with_workers(33, 50, 42, 1);
+            assert_eq!(m.data, m1.data, "workers={workers}");
+        }
     }
 
     #[test]

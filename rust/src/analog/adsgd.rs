@@ -42,7 +42,29 @@ impl AnalogDevice {
     }
 
     /// Standard framing (s̃ = s−1): Alg. 1 lines 4–9.
+    ///
+    /// Fused hot path (PERF.md): the projection lands directly in the
+    /// frame buffer via [`Projection::apply_sparse_into`] (4-way blocked
+    /// axpys, no intermediate `g̃` allocation) and the power scaling runs
+    /// in place. Bit-identical to [`AnalogDevice::transmit_reference`].
     pub fn transmit(&mut self, g: &[f32], proj: &Projection, p_t: f64) -> AnalogFrame {
+        let (g_sp, support) = self.sparsify_step(g);
+        let s_tilde = proj.s_tilde();
+        let mut x = vec![0f32; s_tilde + 1];
+        proj.apply_sparse_into(&g_sp, &support, &mut x[..s_tilde]);
+        // Eq. 13: α = P_t / (‖g̃‖² + 1)
+        let alpha = p_t / (crate::tensor::norm_sq(&x[..s_tilde]) + 1.0);
+        let sa = alpha.sqrt();
+        crate::tensor::scale(&mut x[..s_tilde], sa as f32);
+        x[s_tilde] = sa as f32;
+        AnalogFrame { x, sqrt_alpha: sa }
+    }
+
+    /// The seed's unfused transmit (separate projection allocation, then a
+    /// scaled copy into the frame), kept verbatim as the bit-identity
+    /// oracle for [`AnalogDevice::transmit`] and the "before" timing in
+    /// the components bench. Identical error-accumulator semantics.
+    pub fn transmit_reference(&mut self, g: &[f32], proj: &Projection, p_t: f64) -> AnalogFrame {
         let (g_sp, support) = self.sparsify_step(g);
         let g_tilde = proj.apply_sparse(&g_sp, &support);
         // Eq. 13: α = P_t / (‖g̃‖² + 1)
@@ -54,7 +76,9 @@ impl AnalogDevice {
         AnalogFrame { x, sqrt_alpha: sa }
     }
 
-    /// Mean-removal framing (s̃ = s−2): §IV-A, Eq. 19–22.
+    /// Mean-removal framing (s̃ = s−2): §IV-A, Eq. 19–22. Fused like
+    /// [`AnalogDevice::transmit`]; the mean-removal scaling
+    /// `√α·(g̃_i − μ)` keeps the seed's exact expression per element.
     pub fn transmit_mean_removed(
         &mut self,
         g: &[f32],
@@ -64,19 +88,23 @@ impl AnalogDevice {
     ) -> AnalogFrame {
         assert_eq!(proj.s_tilde(), s - 2, "mean removal uses s̃ = s − 2");
         let (g_sp, support) = self.sparsify_step(g);
-        let g_tilde = proj.apply_sparse(&g_sp, &support);
-        let s_tilde = g_tilde.len();
-        let mu = crate::tensor::mean(&g_tilde) as f64;
+        let s_tilde = proj.s_tilde();
+        let mut x = vec![0f32; s_tilde + 2];
+        proj.apply_sparse_into(&g_sp, &support, &mut x[..s_tilde]);
+        let mu = crate::tensor::mean(&x[..s_tilde]) as f64;
         // Eq. 22: α = P_t / (‖g̃‖² − (s−3)μ² + 1).
         // ‖g̃ − μ1‖² = ‖g̃‖² − s̃μ², and the μ side-channel adds μ² back,
         // hence the (s̃ − 1) = (s − 3) in the denominator.
-        let denom = crate::tensor::norm_sq(&g_tilde) - (s as f64 - 3.0) * mu * mu + 1.0;
+        let denom = crate::tensor::norm_sq(&x[..s_tilde]) - (s as f64 - 3.0) * mu * mu + 1.0;
         let alpha = p_t / denom.max(1e-12);
         let sa = alpha.sqrt();
-        let mut x = Vec::with_capacity(s_tilde + 2);
-        x.extend(g_tilde.iter().map(|&v| (sa as f32) * (v - mu as f32)));
-        x.push((sa * mu) as f32);
-        x.push(sa as f32);
+        let sa_f = sa as f32;
+        let mu_f = mu as f32;
+        for v in x[..s_tilde].iter_mut() {
+            *v = sa_f * (*v - mu_f);
+        }
+        x[s_tilde] = (sa * mu) as f32;
+        x[s_tilde + 1] = sa as f32;
         AnalogFrame { x, sqrt_alpha: sa }
     }
 

@@ -3,7 +3,7 @@
 //! devices before training starts. Devices compute `g̃ = A·g^sp`; the PS
 //! uses the same matrix inside AMP.
 
-use crate::amp::measurement_matrix;
+use crate::amp::{measurement_matrix, measurement_matrix_with_workers};
 use crate::tensor::Matf;
 
 /// A cached projection matrix tied to its (s̃, d, seed) identity.
@@ -11,9 +11,9 @@ use crate::tensor::Matf;
 /// Both layouts are kept: `matrix` (s̃×d, row-major) for the PS-side AMP
 /// pseudo-data pass, and `matrix_t` (d×s̃) so that sparse applies
 /// `A·g^sp = Σ_{j∈supp} g_j·col_j(A)` become *contiguous* axpys over rows
-/// of Aᵀ — the §Perf optimization that took the device transmit path from
-/// 17 ms to ~4 ms and AMP's A·x̂ pass off the strided-gather cliff (see
-/// EXPERIMENTS.md §Perf). Costs one extra s̃·d·4-byte buffer.
+/// of Aᵀ — the optimization that takes the device transmit path and AMP's
+/// A·x̂ pass off the strided-gather cliff (see PERF.md §Kernel table).
+/// Costs one extra s̃·d·4-byte buffer.
 #[derive(Clone, Debug)]
 pub struct Projection {
     pub matrix: Matf,
@@ -23,11 +23,33 @@ pub struct Projection {
 }
 
 impl Projection {
-    /// Generate (deterministically) the shared matrix.
+    /// Generate (deterministically) the shared matrix. Row generation and
+    /// the transpose both run on the thread pool; the result is
+    /// bit-identical for any worker count (counter-based per-row RNG
+    /// streams — see [`measurement_matrix_with_workers`]).
     pub fn generate(s_tilde: usize, d: usize, seed: u64) -> Projection {
         assert!(s_tilde > 0 && d > 0);
         let matrix = measurement_matrix(s_tilde, d, seed);
         let matrix_t = transpose(&matrix);
+        Projection {
+            matrix,
+            matrix_t,
+            seed,
+        }
+    }
+
+    /// [`Projection::generate`] with an explicit worker count for both the
+    /// row fill and the transpose (tests assert workers = 1 ≡ workers = N
+    /// bitwise).
+    pub fn generate_with_workers(
+        s_tilde: usize,
+        d: usize,
+        seed: u64,
+        workers: usize,
+    ) -> Projection {
+        assert!(s_tilde > 0 && d > 0);
+        let matrix = measurement_matrix_with_workers(s_tilde, d, seed, workers);
+        let matrix_t = transpose_with_workers(&matrix, workers);
         Projection {
             matrix,
             matrix_t,
@@ -49,12 +71,39 @@ impl Projection {
     /// (axpy over rows of Aᵀ). This is the device-side hot path (Alg. 1
     /// line 8).
     pub fn apply_sparse(&self, g_sp: &[f32], support: &[usize]) -> Vec<f32> {
-        assert_eq!(g_sp.len(), self.d());
         let mut out = vec![0f32; self.s_tilde()];
-        for &j in support {
-            crate::tensor::axpy(g_sp[j], self.matrix_t.row(j), &mut out);
-        }
+        self.apply_sparse_into(g_sp, support, &mut out);
         out
+    }
+
+    /// [`Projection::apply_sparse`] writing into a caller buffer, with the
+    /// support consumed four entries at a time via fused
+    /// [`crate::tensor::axpy4`] (each s̃-float accumulator block is
+    /// loaded/stored once per 4 support entries instead of once per entry).
+    /// Bit-identical to sequential axpys over the support in order.
+    pub fn apply_sparse_into(&self, g_sp: &[f32], support: &[usize], out: &mut [f32]) {
+        assert_eq!(g_sp.len(), self.d());
+        assert_eq!(out.len(), self.s_tilde());
+        out.fill(0.0);
+        let t = &self.matrix_t;
+        let mut i = 0usize;
+        while i + 4 <= support.len() {
+            let (j0, j1, j2, j3) = (support[i], support[i + 1], support[i + 2], support[i + 3]);
+            crate::tensor::axpy4(
+                [g_sp[j0], g_sp[j1], g_sp[j2], g_sp[j3]],
+                t.row(j0),
+                t.row(j1),
+                t.row(j2),
+                t.row(j3),
+                out,
+            );
+            i += 4;
+        }
+        while i < support.len() {
+            let j = support[i];
+            crate::tensor::axpy(g_sp[j], t.row(j), out);
+            i += 1;
+        }
     }
 
     /// Dense apply (tests / reference).
@@ -65,22 +114,35 @@ impl Projection {
     }
 }
 
-/// Blocked transpose (cache-tiled).
+/// Blocked transpose (cache-tiled), parallelized over 64-row output strips.
 pub fn transpose(a: &Matf) -> Matf {
+    let workers = crate::util::threadpool::default_workers(a.cols / TRANSPOSE_BLOCK + 1);
+    transpose_with_workers(a, workers)
+}
+
+const TRANSPOSE_BLOCK: usize = 64;
+
+/// [`transpose`] with an explicit worker count. Each worker fills a
+/// disjoint strip of output rows (= input columns); the copy is exact, so
+/// the result is bit-identical for any worker count.
+pub fn transpose_with_workers(a: &Matf, workers: usize) -> Matf {
     let mut t = Matf::zeros(a.cols, a.rows);
-    const B: usize = 64;
-    for r0 in (0..a.rows).step_by(B) {
-        let r1 = (r0 + B).min(a.rows);
-        for c0 in (0..a.cols).step_by(B) {
-            let c1 = (c0 + B).min(a.cols);
+    const B: usize = TRANSPOSE_BLOCK;
+    let rows = a.rows;
+    crate::util::threadpool::par_chunks_mut(&mut t.data, B * rows, workers, |blk, chunk| {
+        // This chunk holds output rows [c0, c1) == input columns [c0, c1).
+        let c0 = blk * B;
+        let c1 = (c0 + B).min(a.cols);
+        for r0 in (0..rows).step_by(B) {
+            let r1 = (r0 + B).min(rows);
             for r in r0..r1 {
                 let row = a.row(r);
                 for c in c0..c1 {
-                    t.data[c * a.rows + r] = row[c];
+                    chunk[(c - c0) * rows + r] = row[c];
                 }
             }
         }
-    }
+    });
     t
 }
 
@@ -104,10 +166,61 @@ mod tests {
     }
 
     #[test]
+    fn apply_sparse_blocked_matches_sequential_axpys_bitwise() {
+        // Support sizes around the 4-entry block boundary; the fused path
+        // must equal sequential axpys over the support, bit for bit.
+        let proj = Projection::generate(37, 90, 5);
+        let mut rng = Pcg64::new(6);
+        for &k in &[1usize, 3, 4, 5, 8, 11] {
+            let mut g: Vec<f32> = (0..90).map(|_| rng.normal() as f32).collect();
+            let support = sparsify_topk_inplace(&mut g, k);
+            let got = proj.apply_sparse(&g, &support);
+            let mut want = vec![0f32; proj.s_tilde()];
+            for &j in &support {
+                crate::tensor::reference::axpy_scalar(g[j], proj.matrix_t.row(j), &mut want);
+            }
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "k={k}");
+            }
+        }
+    }
+
+    #[test]
     fn shared_seed_identical_across_parties() {
         let device_side = Projection::generate(64, 256, 99);
         let ps_side = Projection::generate(64, 256, 99);
         assert_eq!(device_side.matrix.data, ps_side.matrix.data);
+    }
+
+    #[test]
+    fn generate_worker_invariant_bitwise() {
+        // Satellite contract: parallel generation (rows + transpose) is
+        // bit-identical to sequential for any worker count.
+        let seq = Projection::generate_with_workers(65, 130, 12, 1);
+        for workers in [2usize, 3, 8] {
+            let par = Projection::generate_with_workers(65, 130, 12, workers);
+            assert_eq!(seq.matrix.data, par.matrix.data, "workers={workers}");
+            assert_eq!(seq.matrix_t.data, par.matrix_t.data, "workers={workers}");
+        }
+        // And the default entry point agrees with the sequential result.
+        let default = Projection::generate(65, 130, 12);
+        assert_eq!(seq.matrix.data, default.matrix.data);
+        assert_eq!(seq.matrix_t.data, default.matrix_t.data);
+    }
+
+    #[test]
+    fn transpose_matches_naive_bitwise() {
+        let mut rng = Pcg64::new(9);
+        // Shapes straddling the 64-wide block in both dimensions.
+        for &(r, c) in &[(3usize, 5usize), (64, 64), (65, 130), (130, 65)] {
+            let a = Matf::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect());
+            let naive = crate::tensor::reference::transpose_naive(&a);
+            for workers in [1usize, 4] {
+                let t = transpose_with_workers(&a, workers);
+                assert_eq!((t.rows, t.cols), (c, r));
+                assert_eq!(t.data, naive.data, "{r}x{c} workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -5,12 +5,32 @@
 //! This pure-rust implementation is the reference path and the test oracle
 //! for the L2 JAX graph (`python/compile/model.py`); the coordinator can
 //! compute gradients with either backend (`grad` module in `coordinator`).
+//!
+//! # Perf (see PERF.md)
+//!
+//! [`gradient`] is the blocked formulation: samples are processed in tiles
+//! of [`GRAD_TILE`]; the forward pass (logits → softmax → error) runs
+//! sample-major exactly as before, then the backward rank-k update runs
+//! class-major over the tile with 4-sample fused [`crate::tensor::axpy4`]
+//! blocks, so each 784-float gradient row is loaded/stored once per 4
+//! samples instead of once per sample. Both [`logits`] (4 classes share one
+//! pass over the image via `dot4`) and the backward pass preserve the
+//! seed's per-destination floating-point add order, so [`gradient`] is
+//! **bit-identical** to [`gradient_reference`] — enforced by tests here and
+//! in `rust/tests/kernel_contracts.rs`, and what keeps the golden
+//! trajectories and campaign-resume suites byte-stable.
 
 use crate::data::{Dataset, IMG_PIXELS, NUM_CLASSES};
 use crate::tensor::{softmax, Matf};
 
 /// Total parameter count d = 7850.
 pub const PARAM_DIM: usize = IMG_PIXELS * NUM_CLASSES + NUM_CLASSES;
+
+/// Sample-tile size for the blocked gradient: 32 error rows (1.3 KB) plus
+/// 32 cached 784-float images (~100 KB) stay L2-resident while the 31 KB
+/// weight gradient streams through L1. Mirrors the BLOCK_M row-tiling in
+/// `python/compile/kernels/matmul.py`.
+pub const GRAD_TILE: usize = 32;
 
 /// Flat parameter layout: `[W row-major (10×784) | b (10)]`.
 #[inline]
@@ -24,13 +44,28 @@ pub fn b_slice(params: &[f32]) -> &[f32] {
 }
 
 /// Compute logits for one image: logits[c] = W_c · x + b_c.
+///
+/// Four weight rows share each streaming pass over the image via
+/// [`crate::tensor::dot4`]; every logit is bit-identical to the per-class
+/// `dot(W_c, x) + b_c` formulation.
 pub fn logits(params: &[f32], image: &[f32], out: &mut [f32; NUM_CLASSES]) {
     debug_assert_eq!(params.len(), PARAM_DIM);
     debug_assert_eq!(image.len(), IMG_PIXELS);
     let w = w_slice(params);
     let b = b_slice(params);
-    for c in 0..NUM_CLASSES {
-        out[c] = crate::tensor::dot(&w[c * IMG_PIXELS..(c + 1) * IMG_PIXELS], image) + b[c];
+    let row = |c: usize| &w[c * IMG_PIXELS..(c + 1) * IMG_PIXELS];
+    let mut c = 0usize;
+    while c + 4 <= NUM_CLASSES {
+        let d4 = crate::tensor::dot4(row(c), row(c + 1), row(c + 2), row(c + 3), image);
+        out[c] = d4[0] + b[c];
+        out[c + 1] = d4[1] + b[c + 1];
+        out[c + 2] = d4[2] + b[c + 2];
+        out[c + 3] = d4[3] + b[c + 3];
+        c += 4;
+    }
+    while c < NUM_CLASSES {
+        out[c] = crate::tensor::dot(row(c), image) + b[c];
+        c += 1;
     }
 }
 
@@ -50,7 +85,83 @@ pub fn loss(params: &[f32], data: &Dataset, idx: &[usize]) -> f64 {
 
 /// Gradient of the average loss over `idx`, written into `grad` (len d).
 /// Returns the loss as a by-product.
+///
+/// Blocked formulation: per [`GRAD_TILE`]-sample tile, the forward pass
+/// fills an error matrix sample-major (identical order to the seed), then
+/// the backward pass accumulates each class's weight-gradient row over the
+/// tile's samples in ascending order with fused 4-sample
+/// [`crate::tensor::axpy4`] updates. Since f32 adds into each destination
+/// happen in the seed's exact order (samples ascending per class row, the
+/// zero-error skip preserved), the result is bit-identical to
+/// [`gradient_reference`].
 pub fn gradient(params: &[f32], data: &Dataset, idx: &[usize], grad: &mut [f32]) -> f64 {
+    assert_eq!(params.len(), PARAM_DIM);
+    assert_eq!(grad.len(), PARAM_DIM);
+    grad.fill(0.0);
+    let inv_n = 1.0 / idx.len().max(1) as f32;
+    let mut lg = [0f32; NUM_CLASSES];
+    let mut probs = [0f32; NUM_CLASSES];
+    let mut err = [[0f32; NUM_CLASSES]; GRAD_TILE];
+    let mut total_loss = 0f64;
+    let (gw, gb) = grad.split_at_mut(IMG_PIXELS * NUM_CLASSES);
+    for tile in idx.chunks(GRAD_TILE) {
+        // Forward: logits → softmax → scaled error rows, sample-major.
+        for (t, &i) in tile.iter().enumerate() {
+            logits(params, data.image(i), &mut lg);
+            softmax(&lg, &mut probs);
+            let y = data.label(i);
+            total_loss -= (probs[y].max(1e-12) as f64).ln();
+            for c in 0..NUM_CLASSES {
+                // dL/dlogit_c = p_c − 1{c==y}
+                let e = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
+                err[t][c] = e;
+                if e != 0.0 {
+                    gb[c] += e;
+                }
+            }
+        }
+        // Backward: rank-|tile| update, class-major so each gradient row
+        // stays hot across the whole tile.
+        for c in 0..NUM_CLASSES {
+            let gwc = &mut gw[c * IMG_PIXELS..(c + 1) * IMG_PIXELS];
+            let mut t = 0usize;
+            while t + 4 <= tile.len() {
+                let co = [err[t][c], err[t + 1][c], err[t + 2][c], err[t + 3][c]];
+                if co[0] != 0.0 && co[1] != 0.0 && co[2] != 0.0 && co[3] != 0.0 {
+                    crate::tensor::axpy4(
+                        co,
+                        data.image(tile[t]),
+                        data.image(tile[t + 1]),
+                        data.image(tile[t + 2]),
+                        data.image(tile[t + 3]),
+                        gwc,
+                    );
+                } else {
+                    for (j, &cj) in co.iter().enumerate() {
+                        if cj != 0.0 {
+                            crate::tensor::axpy(cj, data.image(tile[t + j]), gwc);
+                        }
+                    }
+                }
+                t += 4;
+            }
+            while t < tile.len() {
+                let e = err[t][c];
+                if e != 0.0 {
+                    crate::tensor::axpy(e, data.image(tile[t]), gwc);
+                }
+                t += 1;
+            }
+        }
+    }
+    total_loss / idx.len().max(1) as f64
+}
+
+/// The seed's per-sample gradient formulation (one dot+axpy pass per
+/// sample and class), kept verbatim as the bit-identity oracle for
+/// [`gradient`] and as the "before" timing in the components bench. Not
+/// used by any training path.
+pub fn gradient_reference(params: &[f32], data: &Dataset, idx: &[usize], grad: &mut [f32]) -> f64 {
     assert_eq!(params.len(), PARAM_DIM);
     assert_eq!(grad.len(), PARAM_DIM);
     grad.fill(0.0);
@@ -66,7 +177,6 @@ pub fn gradient(params: &[f32], data: &Dataset, idx: &[usize], grad: &mut [f32])
         let y = data.label(i);
         total_loss -= (probs[y].max(1e-12) as f64).ln();
         for c in 0..NUM_CLASSES {
-            // dL/dlogit_c = p_c − 1{c==y}
             let err = (probs[c] - if c == y { 1.0 } else { 0.0 }) * inv_n;
             if err != 0.0 {
                 crate::tensor::axpy(err, x, &mut gw[c * IMG_PIXELS..(c + 1) * IMG_PIXELS]);
@@ -167,6 +277,27 @@ mod tests {
                 (a - n).abs() < 2e-3 + 0.05 * n.abs(),
                 "coord {c}: analytic {a} vs numeric {n}"
             );
+        }
+    }
+
+    #[test]
+    fn gradient_tiled_matches_reference_bitwise() {
+        // Batch sizes straddling the tile: below, at, above, and with a
+        // ragged tail — every one must be bit-identical to the seed
+        // formulation (loss included).
+        let ds = synthetic::generate(3 * GRAD_TILE, 8, 0);
+        let mut rng = Pcg64::new(21);
+        let params = random_params(&mut rng);
+        for &n in &[1usize, 5, GRAD_TILE - 1, GRAD_TILE, GRAD_TILE + 3, 3 * GRAD_TILE] {
+            let idx: Vec<usize> = (0..n).collect();
+            let mut g_tiled = vec![0f32; PARAM_DIM];
+            let mut g_ref = vec![0f32; PARAM_DIM];
+            let l_tiled = gradient(&params, &ds, &idx, &mut g_tiled);
+            let l_ref = gradient_reference(&params, &ds, &idx, &mut g_ref);
+            assert_eq!(l_tiled.to_bits(), l_ref.to_bits(), "loss differs at n={n}");
+            for (j, (a, b)) in g_tiled.iter().zip(&g_ref).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "coord {j} differs at n={n}");
+            }
         }
     }
 

@@ -1,4 +1,15 @@
 //! Vector/matrix primitives (row-major, f32).
+//!
+//! The elementwise/reduction kernels (`dot`, `axpy`, `scale`,
+//! `soft_threshold`, …) live in [`super::simd`]; this module keeps the
+//! matrix container and the blocked matrix kernels built on top of them.
+//!
+//! Blocking mirrors the Pallas tiling sketched in
+//! `python/compile/kernels/{matmul,projection}.py`: row-strip matvec
+//! (4 rows share one load of `x`), k-blocked GEMM (`BK = 64` keeps the
+//! active B-panel in L1 while C rows stream).
+
+use super::simd;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,45 +54,13 @@ impl Matf {
     }
 }
 
-/// y += a * x
-#[inline]
-pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
-}
-
-/// Dot product with 4-lane unrolling (autovectorizes well at opt-level 3).
-#[inline]
-pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
-    for i in 0..chunks {
-        let b = i * 8;
-        s0 += x[b] * y[b];
-        s1 += x[b + 1] * y[b + 1];
-        s2 += x[b + 2] * y[b + 2];
-        s3 += x[b + 3] * y[b + 3];
-        s4 += x[b + 4] * y[b + 4];
-        s5 += x[b + 5] * y[b + 5];
-        s6 += x[b + 6] * y[b + 6];
-        s7 += x[b + 7] * y[b + 7];
-    }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += x[i] * y[i];
-    }
-    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
-}
-
 /// ‖x‖₂²
 #[inline]
 pub fn norm_sq(x: &[f32]) -> f64 {
     // f64 accumulator: d = 7850 partial sums in f32 lose ~3 digits.
+    // Sequential on purpose — the f64 sum order is part of the golden
+    // trajectories (alpha in Eq. 21 depends on it), so this kernel is
+    // deliberately NOT lane-blocked.
     x.iter().map(|&v| (v as f64) * (v as f64)).sum()
 }
 
@@ -91,37 +70,59 @@ pub fn norm(x: &[f32]) -> f64 {
     norm_sq(x).sqrt()
 }
 
-/// Scale in place.
-#[inline]
-pub fn scale(x: &mut [f32], a: f32) {
-    for v in x.iter_mut() {
-        *v *= a;
-    }
-}
-
-/// out = A · x  (A: m×n row-major, x: n, out: m)
+/// out = A · x  (A: m×n row-major, x: n, out: m). Row-strip blocked: four
+/// rows share one streaming pass over `x` via [`simd::dot4`]; each output
+/// element is bit-identical to `simd::dot(a.row(r), x)`.
 pub fn gemv(a: &Matf, x: &[f32], out: &mut [f32]) {
     assert_eq!(a.cols, x.len());
     assert_eq!(a.rows, out.len());
-    for (r, o) in out.iter_mut().enumerate() {
-        *o = dot(a.row(r), x);
+    let mut r = 0usize;
+    while r + 4 <= a.rows {
+        let d4 = simd::dot4(a.row(r), a.row(r + 1), a.row(r + 2), a.row(r + 3), x);
+        out[r..r + 4].copy_from_slice(&d4);
+        r += 4;
+    }
+    while r < a.rows {
+        out[r] = simd::dot(a.row(r), x);
+        r += 1;
     }
 }
 
 /// out = Aᵀ · x  (A: m×n row-major, x: m, out: n) — traverses rows to stay
-/// cache-friendly on the row-major layout (axpy per row).
+/// cache-friendly on the row-major layout. Rows are consumed four at a time
+/// via [`simd::axpy4`] when all four coefficients are nonzero; the seed's
+/// zero-skip semantics and per-destination add order are preserved exactly,
+/// so results are bit-identical to the sequential axpy-per-row version.
 pub fn gemv_t(a: &Matf, x: &[f32], out: &mut [f32]) {
     assert_eq!(a.rows, x.len());
     assert_eq!(a.cols, out.len());
     out.fill(0.0);
-    for (r, &xr) in x.iter().enumerate() {
-        if xr != 0.0 {
-            axpy(xr, a.row(r), out);
+    let mut r = 0usize;
+    while r + 4 <= a.rows {
+        let c = [x[r], x[r + 1], x[r + 2], x[r + 3]];
+        if c[0] != 0.0 && c[1] != 0.0 && c[2] != 0.0 && c[3] != 0.0 {
+            simd::axpy4(c, a.row(r), a.row(r + 1), a.row(r + 2), a.row(r + 3), out);
+        } else {
+            for (j, &cj) in c.iter().enumerate() {
+                if cj != 0.0 {
+                    simd::axpy(cj, a.row(r + j), out);
+                }
+            }
         }
+        r += 4;
+    }
+    while r < a.rows {
+        if x[r] != 0.0 {
+            simd::axpy(x[r], a.row(r), out);
+        }
+        r += 1;
     }
 }
 
-/// C = A · B (naive-blocked; only used for small model shapes and tests).
+/// C = A · B (k-blocked with 4-way fused row updates; used for small model
+/// shapes and tests). Per C-row the adds happen in ascending-k order with
+/// the seed's `a[i,k] == 0` skip, so results are bit-identical to the
+/// axpy-per-k version.
 pub fn gemm(a: &Matf, b: &Matf) -> Matf {
     assert_eq!(a.cols, b.rows);
     let mut c = Matf::zeros(a.rows, b.cols);
@@ -131,11 +132,26 @@ pub fn gemm(a: &Matf, b: &Matf) -> Matf {
         for i in 0..a.rows {
             let arow = a.row(i);
             let crow = c.row_mut(i);
-            for k in k0..kmax {
+            let mut k = k0;
+            while k + 4 <= kmax {
+                let co = [arow[k], arow[k + 1], arow[k + 2], arow[k + 3]];
+                if co[0] != 0.0 && co[1] != 0.0 && co[2] != 0.0 && co[3] != 0.0 {
+                    simd::axpy4(co, b.row(k), b.row(k + 1), b.row(k + 2), b.row(k + 3), crow);
+                } else {
+                    for (j, &cj) in co.iter().enumerate() {
+                        if cj != 0.0 {
+                            simd::axpy(cj, b.row(k + j), crow);
+                        }
+                    }
+                }
+                k += 4;
+            }
+            while k < kmax {
                 let aik = arow[k];
                 if aik != 0.0 {
-                    axpy(aik, b.row(k), crow);
+                    simd::axpy(aik, b.row(k), crow);
                 }
+                k += 1;
             }
         }
     }
@@ -158,15 +174,6 @@ pub fn softmax(x: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Elementwise soft-threshold (the AMP denoiser): sign(x)·max(|x|−τ, 0).
-#[inline]
-pub fn soft_threshold(x: &mut [f32], tau: f32) {
-    for v in x.iter_mut() {
-        let a = v.abs() - tau;
-        *v = if a > 0.0 { a * v.signum() } else { 0.0 };
-    }
-}
-
 /// Mean of a slice.
 #[inline]
 pub fn mean(x: &[f32]) -> f32 {
@@ -179,14 +186,8 @@ pub fn mean(x: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn dot_matches_naive() {
-        let x: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
-        let y: Vec<f32> = (0..100).map(|i| (100 - i) as f32 * 0.05).collect();
-        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
-        assert!((dot(&x, &y) - naive).abs() < 1e-2);
-    }
+    use crate::tensor::reference;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn gemv_identity() {
@@ -211,11 +212,56 @@ mod tests {
     }
 
     #[test]
+    fn gemv_t_blocked_matches_sequential_axpys_bitwise() {
+        // Mixed zero/nonzero coefficients hit both the fused and the
+        // fallback branch; compare against the seed formulation.
+        let mut rng = Pcg64::new(11);
+        let rows = 13;
+        let cols = 37;
+        let a = Matf::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+        );
+        let x: Vec<f32> = (0..rows)
+            .map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let mut got = vec![0f32; cols];
+        gemv_t(&a, &x, &mut got);
+        let mut want = vec![0f32; cols];
+        for (r, &xr) in x.iter().enumerate() {
+            if xr != 0.0 {
+                reference::axpy_scalar(xr, a.row(r), &mut want);
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
     fn gemm_small() {
         let a = Matf::from_vec(2, 2, vec![1., 2., 3., 4.]);
         let b = Matf::from_vec(2, 2, vec![5., 6., 7., 8.]);
         let c = gemm(&a, &b);
         assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn gemm_matches_f64_reference() {
+        let mut rng = Pcg64::new(12);
+        let a = Matf::from_vec(9, 70, (0..9 * 70).map(|_| rng.normal() as f32).collect());
+        let b = Matf::from_vec(70, 11, (0..70 * 11).map(|_| rng.normal() as f32).collect());
+        let c = gemm(&a, &b);
+        let want = reference::gemm_f64(&a, &b);
+        for i in 0..c.data.len() {
+            let w = want[i];
+            assert!(
+                (c.data[i] as f64 - w).abs() <= 1e-4 * w.abs().max(1.0),
+                "idx {i}: {} vs {w}",
+                c.data[i]
+            );
+        }
     }
 
     #[test]
@@ -228,13 +274,6 @@ mod tests {
         for &p in &out {
             assert!((p - 1.0 / 3.0).abs() < 1e-6);
         }
-    }
-
-    #[test]
-    fn soft_threshold_behaviour() {
-        let mut x = [3.0, -3.0, 0.5, -0.5, 0.0];
-        soft_threshold(&mut x, 1.0);
-        assert_eq!(x, [2.0, -2.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -1,12 +1,29 @@
 //! Dense f32 linear algebra substrate.
 //!
 //! Small, allocation-conscious routines sized for this paper's shapes
-//! (d = 7850, s up to d/2, M up to 50). The hot paths — `gemv`, the
-//! sparse-aware projection in `analog::projection`, and AMP's `gemv_t` —
-//! are written to autovectorize; see EXPERIMENTS.md §Perf.
+//! (d = 7850, s up to d/2, M up to 50). Layout:
+//!
+//! - [`simd`] — portable 8-wide f32 lane kernels (`dot`, `axpy`, the
+//!   4-row blocked `dot4`/`axpy4`, fused `axpy_scaled_add` /
+//!   `residual_update` / `soft_threshold_count`). All re-exported here;
+//!   every hot path in `model`, `analog`, and `amp` runs on these.
+//! - `dense` — the [`Matf`] container plus blocked matrix kernels
+//!   ([`gemv`], [`gemv_t`], [`gemm`]) built on the simd layer.
+//! - `select` — top-k / sparsify (quickselect, bit-exact).
+//! - [`reference`] — naive scalar/f64 oracles used by the contract tests
+//!   and the components bench (never by library hot paths).
+//!
+//! Exactness contracts per kernel are tabulated in PERF.md and enforced by
+//! `rust/tests/kernel_contracts.rs`.
 
 mod dense;
+pub mod reference;
 mod select;
+pub mod simd;
 
 pub use dense::*;
 pub use select::*;
+pub use simd::{
+    add_assign, axpy, axpy4, axpy_scaled_add, dot, dot4, residual_update, scale, scale_into,
+    soft_threshold, soft_threshold_count, F32x8, LANES,
+};

@@ -1,0 +1,119 @@
+//! Naive reference oracles for the optimized kernels.
+//!
+//! Two uses, both deliberate:
+//!
+//! 1. **Contract tests** (`rust/tests/kernel_contracts.rs` and module
+//!    tests) check the optimized kernels against these at tiny and paper
+//!    shapes — f64 oracles with relative bounds for f32 reductions,
+//!    bit-for-bit for the kernels whose contract is exactness.
+//! 2. **The components bench** times the scalar formulations alongside the
+//!    optimized ones, so one `cargo bench --bench components` run records
+//!    an honest before/after pair in `BENCH_components.json` on the same
+//!    host, same build, same inputs.
+//!
+//! Nothing in the library hot paths calls into this module.
+
+use super::Matf;
+
+/// Sequential f64 dot product — the accuracy oracle for [`super::dot`].
+pub fn dot_f64(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| a as f64 * b as f64)
+        .sum()
+}
+
+/// Σ|xᵢ·yᵢ| in f64 — the magnitude scale for relative error bounds on dot
+/// products (a near-cancelling dot can have a tiny value but large terms).
+pub fn abs_dot_f64(x: &[f32], y: &[f32]) -> f64 {
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| (a as f64 * b as f64).abs())
+        .sum()
+}
+
+/// Sequential f32 dot (single accumulator) — the scalar formulation the
+/// bench uses as the "before" timing for `dot`.
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0f32;
+    for (a, b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}
+
+/// The seed's elementwise axpy — bit-identity oracle for [`super::axpy`].
+pub fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// out = A·x in f64 — accuracy oracle for [`super::gemv`].
+pub fn gemv_f64(a: &Matf, x: &[f32]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|r| dot_f64(a.row(r), x)).collect()
+}
+
+/// out = Aᵀ·x in f64 — accuracy oracle for [`super::gemv_t`].
+pub fn gemv_t_f64(a: &Matf, x: &[f32]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len());
+    let mut out = vec![0f64; a.cols];
+    for (r, &xr) in x.iter().enumerate() {
+        let row = a.row(r);
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += xr as f64 * v as f64;
+        }
+    }
+    out
+}
+
+/// C = A·B with per-element f64 accumulation — accuracy oracle for
+/// [`super::gemm`].
+pub fn gemm_f64(a: &Matf, b: &Matf) -> Vec<f64> {
+    assert_eq!(a.cols, b.rows);
+    let mut c = vec![0f64; a.rows * b.cols];
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let aik = a.at(i, k) as f64;
+            if aik != 0.0 {
+                let brow = b.row(k);
+                let crow = &mut c[i * b.cols..(i + 1) * b.cols];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv as f64;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Naive double-loop transpose — bit-identity oracle for the blocked
+/// (and now parallel) transpose in `analog::projection`.
+pub fn transpose_naive(a: &Matf) -> Matf {
+    let mut t = Matf::zeros(a.cols, a.rows);
+    for r in 0..a.rows {
+        for c in 0..a.cols {
+            *t.at_mut(c, r) = a.at(r, c);
+        }
+    }
+    t
+}
+
+/// Top-k indices by |v| via full sort (stable tie-break: lowest index
+/// first, matching the quickselect contract in `tensor::select`).
+pub fn topk_indices_sort(v: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| {
+        v[b].abs()
+            .partial_cmp(&v[a].abs())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}

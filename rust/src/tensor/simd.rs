@@ -1,0 +1,454 @@
+//! Portable 8-wide f32 lane kernels — the SIMD substrate of every hot path.
+//!
+//! Stable Rust, no intrinsics, no new dependencies: [`F32x8`] is a plain
+//! `[f32; 8]` wrapper whose lanewise ops compile to straight-line vector
+//! code under `opt-level = 3` on any target (SSE2 pairs on baseline x86-64,
+//! NEON quads on aarch64). The win over the seed's scalar loops is not the
+//! vector ISA alone — it is the *fixed lane structure* these kernels give
+//! LLVM (reductions become 8 independent accumulator chains it is allowed
+//! to vectorize) plus the 4-row blocked variants ([`dot4`], [`axpy4`]) that
+//! quarter the load/store traffic on the shared operand.
+//!
+//! # Exactness contract (see PERF.md §Kernel table)
+//!
+//! Every kernel here is **deterministic and machine-portable**: no
+//! `mul_add`/FMA (Rust never contracts `a * b + c` on its own), no
+//! worker-count-dependent reduction trees. Beyond that, two classes:
+//!
+//! - **Bit-identical to the seed kernels**: `axpy`, `axpy4` (≡ four
+//!   sequential `axpy` passes), `axpy_scaled_add`, `scale`, `scale_into`,
+//!   `add_assign`, `soft_threshold`, `soft_threshold_count`,
+//!   `residual_update` are elementwise with the seed's expression order,
+//!   and `dot`/`dot4` reproduce the seed `dot`'s exact reduction tree
+//!   (8 lane accumulators, pairwise combine, scalar tail) — so every
+//!   golden trajectory recorded before this layer landed still holds
+//!   bit-for-bit.
+//! - **Tolerance-gated vs an f64 oracle**: `dot` (and everything built on
+//!   it: `gemv`, `gemm`, logits) is an f32 reduction, so it carries the
+//!   usual ~n·ε relative error against [`super::reference::dot_f64`];
+//!   `rust/tests/kernel_contracts.rs` pins the bound at both tiny and
+//!   paper (d = 7850) shapes.
+
+/// Lane width of the portable vector type.
+pub const LANES: usize = 8;
+
+/// Portable 8-lane f32 vector: lanewise ops over a fixed-size array that
+/// LLVM unrolls and vectorizes. 32-byte alignment matches one AVX register
+/// (two SSE/NEON registers) so spills stay aligned.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C, align(32))]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; 8]);
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; 8])
+    }
+
+    /// Load the first 8 elements of `src` (must have len >= 8).
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> F32x8 {
+        let mut a = [0f32; 8];
+        a.copy_from_slice(&src[..8]);
+        F32x8(a)
+    }
+
+    /// Store into the first 8 elements of `dst` (must have len >= 8).
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..8].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut r = [0f32; 8];
+        for i in 0..8 {
+            r[i] = self.0[i] + o.0[i];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: F32x8) -> F32x8 {
+        let mut r = [0f32; 8];
+        for i in 0..8 {
+            r[i] = self.0[i] - o.0[i];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut r = [0f32; 8];
+        for i in 0..8 {
+            r[i] = self.0[i] * o.0[i];
+        }
+        F32x8(r)
+    }
+
+    /// Horizontal sum with a *fixed* pairwise tree:
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — exactly the combine order
+    /// of the seed `dot`'s eight scalar accumulators.
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let v = self.0;
+        ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+    }
+}
+
+/// Dot product: one 8-lane accumulator, pairwise horizontal combine, scalar
+/// tail — the seed kernel's exact reduction tree, so the result is
+/// bit-identical to the pre-SIMD `dot` (and tolerance-gated only against
+/// the f64 oracle, like any f32 reduction).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = F32x8::ZERO;
+    for c in 0..chunks {
+        let b = c * LANES;
+        acc = acc.add(F32x8::load(&x[b..]).mul(F32x8::load(&y[b..])));
+    }
+    let mut tail = 0f32;
+    for i in chunks * LANES..n {
+        tail += x[i] * y[i];
+    }
+    acc.hsum() + tail
+}
+
+/// Four dot products against a shared right-hand side, computed in one
+/// pass: `x` is loaded once per 8 lanes instead of four times, and the four
+/// independent accumulator chains give the ILP a single running sum cannot.
+/// Each returned lane is bit-identical to `dot(r_i, x)`.
+#[inline]
+pub fn dot4(r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32], x: &[f32]) -> [f32; 4] {
+    let n = x.len();
+    debug_assert_eq!(r0.len(), n);
+    debug_assert_eq!(r1.len(), n);
+    debug_assert_eq!(r2.len(), n);
+    debug_assert_eq!(r3.len(), n);
+    let chunks = n / LANES;
+    let mut a0 = F32x8::ZERO;
+    let mut a1 = F32x8::ZERO;
+    let mut a2 = F32x8::ZERO;
+    let mut a3 = F32x8::ZERO;
+    for c in 0..chunks {
+        let b = c * LANES;
+        let xv = F32x8::load(&x[b..]);
+        a0 = a0.add(F32x8::load(&r0[b..]).mul(xv));
+        a1 = a1.add(F32x8::load(&r1[b..]).mul(xv));
+        a2 = a2.add(F32x8::load(&r2[b..]).mul(xv));
+        a3 = a3.add(F32x8::load(&r3[b..]).mul(xv));
+    }
+    let (mut t0, mut t1, mut t2, mut t3) = (0f32, 0f32, 0f32, 0f32);
+    for i in chunks * LANES..n {
+        t0 += r0[i] * x[i];
+        t1 += r1[i] * x[i];
+        t2 += r2[i] * x[i];
+        t3 += r3[i] * x[i];
+    }
+    [
+        a0.hsum() + t0,
+        a1.hsum() + t1,
+        a2.hsum() + t2,
+        a3.hsum() + t3,
+    ]
+}
+
+/// y += a * x (elementwise; bit-identical to the seed kernel).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let chunks = n / LANES;
+    let av = F32x8::splat(a);
+    for c in 0..chunks {
+        let b = c * LANES;
+        let r = F32x8::load(&y[b..]).add(F32x8::load(&x[b..]).mul(av));
+        r.store(&mut y[b..]);
+    }
+    for i in chunks * LANES..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Four fused axpy passes: `y = (((y + a0·x0) + a1·x1) + a2·x2) + a3·x3`
+/// per element — bit-identical to four sequential [`axpy`] calls in that
+/// order, but `y` is loaded and stored once per block instead of four
+/// times. This is the workhorse of the device transmit path, `gemv_t`,
+/// `gemm`, the blocked backward pass, and AMP's fused A·x̂ accumulation.
+#[inline]
+pub fn axpy4(a: [f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert_eq!(x0.len(), n);
+    debug_assert_eq!(x1.len(), n);
+    debug_assert_eq!(x2.len(), n);
+    debug_assert_eq!(x3.len(), n);
+    let chunks = n / LANES;
+    let a0 = F32x8::splat(a[0]);
+    let a1 = F32x8::splat(a[1]);
+    let a2 = F32x8::splat(a[2]);
+    let a3 = F32x8::splat(a[3]);
+    for c in 0..chunks {
+        let b = c * LANES;
+        let mut acc = F32x8::load(&y[b..]);
+        acc = acc.add(F32x8::load(&x0[b..]).mul(a0));
+        acc = acc.add(F32x8::load(&x1[b..]).mul(a1));
+        acc = acc.add(F32x8::load(&x2[b..]).mul(a2));
+        acc = acc.add(F32x8::load(&x3[b..]).mul(a3));
+        acc.store(&mut y[b..]);
+    }
+    for i in chunks * LANES..n {
+        y[i] = (((y[i] + a[0] * x0[i]) + a[1] * x1[i]) + a[2] * x2[i]) + a[3] * x3[i];
+    }
+}
+
+/// Fused scaled update: y = a·x + b·y per element (one pass instead of a
+/// `scale` pass followed by an `axpy` pass).
+#[inline]
+pub fn axpy_scaled_add(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let chunks = n / LANES;
+    let av = F32x8::splat(a);
+    let bv = F32x8::splat(b);
+    for c in 0..chunks {
+        let o = c * LANES;
+        let r = F32x8::load(&x[o..])
+            .mul(av)
+            .add(F32x8::load(&y[o..]).mul(bv));
+        r.store(&mut y[o..]);
+    }
+    for i in chunks * LANES..n {
+        y[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// AMP residual update, fused: r = (y − ax) + b·r per element — the seed's
+/// exact expression order, one pass instead of three.
+#[inline]
+pub fn residual_update(r: &mut [f32], y: &[f32], ax: &[f32], b: f32) {
+    debug_assert_eq!(r.len(), y.len());
+    debug_assert_eq!(r.len(), ax.len());
+    for i in 0..r.len() {
+        r[i] = y[i] - ax[i] + b * r[i];
+    }
+}
+
+/// Scale in place (bit-identical to the seed kernel).
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out = a·x (fused scale-into-destination, no read of `out`).
+#[inline]
+pub fn scale_into(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = a * v;
+    }
+}
+
+/// y += x.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += xi;
+    }
+}
+
+/// Elementwise soft-threshold (the AMP denoiser): sign(x)·max(|x|−τ, 0).
+/// Bit-identical to the seed kernel (compare + select per lane).
+#[inline]
+pub fn soft_threshold(x: &mut [f32], tau: f32) {
+    for v in x.iter_mut() {
+        let a = v.abs() - tau;
+        *v = if a > 0.0 { a * v.signum() } else { 0.0 };
+    }
+}
+
+/// Fused soft-threshold + support count: same elementwise results as
+/// [`soft_threshold`], and returns ‖x‖₀ from the same pass (AMP needs the
+/// count for its Onsager term and previously re-scanned the vector).
+#[inline]
+pub fn soft_threshold_count(x: &mut [f32], tau: f32) -> usize {
+    let mut nnz = 0usize;
+    for v in x.iter_mut() {
+        let a = v.abs() - tau;
+        if a > 0.0 {
+            *v = a * v.signum();
+            nnz += 1;
+        } else {
+            *v = 0.0;
+        }
+    }
+    nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::reference;
+    use crate::util::rng::Pcg64;
+
+    fn random_vec(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_relative() {
+        // The seed test compared against an f32 naive sum with a loose 1e-2
+        // absolute bound; the honest oracle is f64 with a relative bound.
+        let mut rng = Pcg64::new(1);
+        for &n in &[100usize, 7850] {
+            let x = random_vec(n, &mut rng);
+            let y = random_vec(n, &mut rng);
+            let got = dot(&x, &y) as f64;
+            let want = reference::dot_f64(&x, &y);
+            let mag = reference::abs_dot_f64(&x, &y).max(1e-12);
+            assert!(
+                (got - want).abs() <= 1e-5 * mag,
+                "n={n}: dot {got} vs f64 {want} (mag {mag})"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_property_random_lengths_exercise_tail() {
+        // Random lengths, including n % 8 != 0, so the scalar tail path is
+        // genuinely exercised (the seed test only ever used n = 100).
+        let mut rng = Pcg64::new(2);
+        let mut saw_tail = false;
+        for _ in 0..60 {
+            let n = 1 + rng.below(97) as usize;
+            if n % LANES != 0 {
+                saw_tail = true;
+            }
+            let x = random_vec(n, &mut rng);
+            let y = random_vec(n, &mut rng);
+            let got = dot(&x, &y) as f64;
+            let want = reference::dot_f64(&x, &y);
+            let mag = reference::abs_dot_f64(&x, &y).max(1e-12);
+            assert!(
+                (got - want).abs() <= 1e-5 * mag,
+                "n={n}: dot {got} vs f64 {want}"
+            );
+        }
+        assert!(saw_tail, "random lengths never hit the tail path");
+    }
+
+    #[test]
+    fn dot4_lanes_bit_identical_to_dot() {
+        let mut rng = Pcg64::new(3);
+        for &n in &[8usize, 15, 64, 103] {
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| random_vec(n, &mut rng)).collect();
+            let x = random_vec(n, &mut rng);
+            let got = dot4(&rows[0], &rows[1], &rows[2], &rows[3], &x);
+            for l in 0..4 {
+                assert_eq!(
+                    got[l].to_bits(),
+                    dot(&rows[l], &x).to_bits(),
+                    "lane {l}, n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_bit_identical_to_sequential_axpys() {
+        let mut rng = Pcg64::new(4);
+        for &n in &[8usize, 23, 96] {
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| random_vec(n, &mut rng)).collect();
+            let a = [0.5f32, -1.25, 0.03125, 2.0];
+            let y0 = random_vec(n, &mut rng);
+            let mut fused = y0.clone();
+            axpy4(a, &xs[0], &xs[1], &xs[2], &xs[3], &mut fused);
+            let mut seq = y0;
+            for l in 0..4 {
+                axpy(a[l], &xs[l], &mut seq);
+            }
+            for (f, s) in fused.iter().zip(&seq) {
+                assert_eq!(f.to_bits(), s.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_reference_bitwise() {
+        let mut rng = Pcg64::new(5);
+        for &n in &[1usize, 8, 13, 40] {
+            let x = random_vec(n, &mut rng);
+            let mut y = random_vec(n, &mut rng);
+            let mut want = y.clone();
+            reference::axpy_scalar(0.75, &x, &mut want);
+            axpy(0.75, &x, &mut y);
+            for (g, w) in y.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_scaled_add_matches_expression() {
+        let mut rng = Pcg64::new(6);
+        let x = random_vec(21, &mut rng);
+        let y0 = random_vec(21, &mut rng);
+        let mut y = y0.clone();
+        axpy_scaled_add(1.5, &x, -0.5, &mut y);
+        for i in 0..21 {
+            let want = 1.5f32 * x[i] + (-0.5f32) * y0[i];
+            assert_eq!(y[i].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn residual_update_matches_expression() {
+        let mut rng = Pcg64::new(7);
+        let y = random_vec(17, &mut rng);
+        let ax = random_vec(17, &mut rng);
+        let r0 = random_vec(17, &mut rng);
+        let mut r = r0.clone();
+        residual_update(&mut r, &y, &ax, 0.3);
+        for i in 0..17 {
+            let want = y[i] - ax[i] + 0.3f32 * r0[i];
+            assert_eq!(r[i].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn soft_threshold_count_matches_plain() {
+        let mut rng = Pcg64::new(8);
+        let x0 = random_vec(100, &mut rng);
+        let mut a = x0.clone();
+        let mut b = x0;
+        soft_threshold(&mut a, 0.8);
+        let nnz = soft_threshold_count(&mut b, 0.8);
+        assert_eq!(a, b);
+        assert_eq!(nnz, a.iter().filter(|&&v| v != 0.0).count());
+    }
+
+    #[test]
+    fn soft_threshold_behaviour() {
+        let mut x = [3.0, -3.0, 0.5, -0.5, 0.0];
+        soft_threshold(&mut x, 1.0);
+        assert_eq!(x, [2.0, -2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_into_and_add_assign() {
+        let x = [1.0f32, -2.0, 3.0];
+        let mut out = [0f32; 3];
+        scale_into(&mut out, &x, 2.0);
+        assert_eq!(out, [2.0, -4.0, 6.0]);
+        let mut y = [1.0f32, 1.0, 1.0];
+        add_assign(&mut y, &x);
+        assert_eq!(y, [2.0, -1.0, 4.0]);
+    }
+}

@@ -5,8 +5,23 @@
 //! near-sequential execution, but the structure mirrors a real deployment
 //! (one worker per edge device) and scales with available cores.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    /// Set on pool worker threads for their whole lifetime. Nested
+    /// `par_map`/`par_chunks_mut` calls issued from inside a worker run
+    /// sequentially instead of spawning a second generation of threads —
+    /// e.g. the experiments runner par_maps over runs while each run's
+    /// `Projection::generate` would otherwise par_chunks_mut inside it.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker (see `IN_POOL`).
+pub fn in_pool_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
 
 /// Number of worker threads to use for `n_items` independent items.
 pub fn default_workers(n_items: usize) -> usize {
@@ -27,20 +42,23 @@ where
     if n == 0 {
         return Vec::new();
     }
-    if workers == 1 || n == 1 {
+    if workers == 1 || n == 1 || in_pool_worker() {
         return (0..n).map(&f).collect();
     }
     let cursor = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers.min(n) {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i);
+                    *results[i].lock().unwrap() = Some(out);
                 }
-                let out = f(i);
-                *results[i].lock().unwrap() = Some(out);
             });
         }
     });
@@ -59,7 +77,7 @@ where
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(chunk > 0);
-    if workers <= 1 || data.len() <= chunk {
+    if workers <= 1 || data.len() <= chunk || in_pool_worker() {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
@@ -69,11 +87,14 @@ where
     let pending = Mutex::new(chunks);
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let item = pending.lock().unwrap().pop();
-                match item {
-                    Some((i, c)) => f(i, c),
-                    None => break,
+            scope.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let item = pending.lock().unwrap().pop();
+                    match item {
+                        Some((i, c)) => f(i, c),
+                        None => break,
+                    }
                 }
             });
         }
@@ -111,6 +132,31 @@ mod tests {
             }
         });
         assert_eq!(data, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_parallelism_collapses_to_sequential() {
+        assert!(!in_pool_worker());
+        // A nested par_map inside a pool worker must run inline on that
+        // worker (no second generation of threads) and still be correct.
+        let out = par_map(8, 4, |i| {
+            let inner = par_map(5, 4, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, want);
+        // Nested par_chunks_mut likewise stays sequential and correct.
+        let sums = par_map(4, 4, |i| {
+            let mut buf = vec![0u32; 100];
+            par_chunks_mut(&mut buf, 16, 4, |ci, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i + ci * 16 + j) as u32;
+                }
+            });
+            buf.iter().sum::<u32>()
+        });
+        assert_eq!(sums.len(), 4);
+        assert!(!in_pool_worker());
     }
 
     #[test]

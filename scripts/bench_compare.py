@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Gate bench regressions: compare a fresh BENCH_*.json against a baseline.
+
+Usage:
+    bench_compare.py BASELINE.json FRESH.json [--fail-over RATIO]
+
+Compares entries by name on mean_ns. An entry whose fresh mean exceeds
+``RATIO x`` its baseline mean (default 2.0 -- generous, because shared CI
+runners are noisy) counts as a regression and fails the script. Entries
+present on only one side are reported but never fail the gate (kernels are
+added and retired across PRs).
+
+Exit status: 0 = no regression, 1 = at least one regression, 2 = bad input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_results(path: str) -> dict[str, dict]:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"error: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    results = doc.get("results")
+    if not isinstance(results, list):
+        print(f"error: {path} has no 'results' array", file=sys.stderr)
+        sys.exit(2)
+    out: dict[str, dict] = {}
+    for entry in results:
+        name = entry.get("name")
+        if isinstance(name, str) and isinstance(entry.get("mean_ns"), (int, float)):
+            out[name] = entry
+    return out
+
+
+def fmt_ns(ns: float) -> str:
+    if ns < 1e3:
+        return f"{ns:.0f} ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.2f} us"
+    if ns < 1e9:
+        return f"{ns / 1e6:.2f} ms"
+    return f"{ns / 1e9:.3f} s"
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("baseline", help="committed baseline BENCH_*.json")
+    parser.add_argument("fresh", help="freshly generated BENCH_*.json")
+    parser.add_argument(
+        "--fail-over",
+        type=float,
+        default=2.0,
+        metavar="RATIO",
+        help="fail when fresh mean > RATIO x baseline mean (default: 2.0)",
+    )
+    args = parser.parse_args()
+    if args.fail_over <= 0:
+        print("error: --fail-over must be positive", file=sys.stderr)
+        return 2
+
+    base = load_results(args.baseline)
+    fresh = load_results(args.fresh)
+
+    regressions = []
+    print(f"{'kernel':<56} {'baseline':>12} {'fresh':>12} {'ratio':>8}")
+    for name in sorted(base.keys() | fresh.keys()):
+        b = base.get(name)
+        f = fresh.get(name)
+        if b is None:
+            print(f"{name:<56} {'(new)':>12} {fmt_ns(f['mean_ns']):>12} {'-':>8}")
+            continue
+        if f is None:
+            print(f"{name:<56} {fmt_ns(b['mean_ns']):>12} {'(gone)':>12} {'-':>8}")
+            continue
+        b_ns, f_ns = float(b["mean_ns"]), float(f["mean_ns"])
+        ratio = f_ns / b_ns if b_ns > 0 else float("inf")
+        flag = ""
+        if ratio > args.fail_over:
+            regressions.append((name, ratio))
+            flag = "  << REGRESSION"
+        print(f"{name:<56} {fmt_ns(b_ns):>12} {fmt_ns(f_ns):>12} {ratio:>7.2f}x{flag}")
+
+    if regressions:
+        print(
+            f"\n{len(regressions)} kernel(s) regressed more than "
+            f"{args.fail_over:.2f}x vs baseline:",
+            file=sys.stderr,
+        )
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print(f"\nno regressions beyond {args.fail_over:.2f}x ({len(fresh)} fresh entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
