@@ -14,13 +14,26 @@
 //! to the original execution (asserted in `rust/tests/campaign_cache.rs`).
 
 use crate::config::{CampaignConfig, RunConfig};
-use crate::coordinator::{link, LinkScheme, TrainLog, Trainer};
+use crate::coordinator::{link, LinkScheme, RoundRecord, TrainLog, Trainer};
 use crate::experiments::runner::{self, ExperimentSpec};
+use crate::fleet::events::{EventKind, EventLog};
 use crate::model::PARAM_DIM;
 use crate::util::threadpool::{default_workers, par_map};
 
 use super::snapshot::{SnapshotReader, TrainerSnapshot};
-use super::store::RunStore;
+use super::store::{cache_key, RunStore};
+
+/// Attach the telemetry event log to a freshly opened store when the
+/// campaign enables it (the scheduler's writer id is pid-scoped so two
+/// campaigns sharing a store never share a segment file).
+fn attach_telemetry(store: &RunStore, campaign: &CampaignConfig) {
+    if !campaign.telemetry.enabled {
+        return;
+    }
+    if let Ok(log) = EventLog::open(store.root(), &format!("sched-{}", std::process::id())) {
+        store.attach_events(log);
+    }
+}
 
 /// What the scheduler did with a spec's runs (the cache test's execution
 /// counter).
@@ -82,6 +95,7 @@ pub fn run_experiment_cached(
 ) -> (Vec<TrainLog>, CampaignReport) {
     let store_dir = campaign.store_dir_or(out_dir);
     let store = RunStore::open(&store_dir).expect("open campaign run store");
+    attach_telemetry(&store, campaign);
     println!("\n### {} — {} [store: {store_dir}]", spec.id, spec.title);
 
     let plan: Vec<Plan> = spec
@@ -95,6 +109,9 @@ pub fn run_experiment_cached(
         match step {
             Plan::Cached(_) => {
                 report.cached += 1;
+                if let Some(log) = store.event_log() {
+                    log.emit(EventKind::Cached, &cache_key(cfg), None, &[]);
+                }
                 println!("--- run `{label}`: cached ({})", cfg.summary());
             }
             Plan::Resume(snap) => {
@@ -151,8 +168,12 @@ pub fn run_single_cached(
 ) -> (TrainLog, RunDisposition) {
     let store_dir = campaign.store_dir_or(out_dir);
     let store = RunStore::open(&store_dir).expect("open campaign run store");
+    attach_telemetry(&store, campaign);
     match plan_run(&store, label, cfg, campaign) {
         Plan::Cached(mut log) => {
+            if let Some(ev) = store.event_log() {
+                ev.emit(EventKind::Cached, &cache_key(cfg), None, &[]);
+            }
             log.label = label.to_string();
             (log, RunDisposition::Cached)
         }
@@ -191,6 +212,14 @@ pub(crate) fn snapshot_restorable(cfg: &RunConfig, snap: &TrainerSnapshot) -> bo
 /// campaign's retention policy along the way. Shared with the fleet
 /// worker loop (`crate::fleet::worker`), which adds lease heartbeating
 /// around it.
+///
+/// This is also the central telemetry emission point: when the store
+/// carries an event log, the run's `executed`/`resumed` start, every
+/// persisted `snapshot`, per-round `round` telemetry (at the
+/// `[telemetry]` cadence), and the final `completed` record are all
+/// emitted here — so the campaign, `repro train`, and fleet-worker
+/// paths produce one uniform event stream. Telemetry is observe-only:
+/// trajectories and stored blobs are byte-identical with it disabled.
 pub(crate) fn execute_run(
     store: &RunStore,
     label: &str,
@@ -202,16 +231,67 @@ pub(crate) fn execute_run(
     cfg.validate(PARAM_DIM).expect("invalid experiment config");
     let mut trainer = Trainer::new(cfg.clone()).expect("trainer construction");
     trainer.verbose = verbose;
+    let events = store.event_log();
+    let key = cache_key(cfg);
+    if let Some(ev) = &events {
+        match resume {
+            Some(snap) => ev.emit(EventKind::Resumed, &key, Some(snap.next_round as u64), &[]),
+            None => ev.emit(EventKind::Executed, &key, None, &[]),
+        }
+        let ev = ev.clone();
+        let obs_key = key.clone();
+        let every = campaign.telemetry.every.max(1);
+        let last = cfg.iterations.saturating_sub(1);
+        trainer.round_observer = Some(Box::new(move |r: &RoundRecord| {
+            // Cadence-thinned, but the final round always lands so the
+            // last gauges (grad norm, accuracy) are current. Wall-clock
+            // round_secs is deliberately NOT emitted: `ms` is the only
+            // nondeterministic event field (see the replay contract).
+            if r.iter % every == 0 || r.iter == last {
+                ev.emit(
+                    EventKind::Round,
+                    &obs_key,
+                    Some(r.iter as u64),
+                    &[
+                        ("grad_norm", r.grad_norm),
+                        ("test_accuracy", r.test_accuracy),
+                        ("train_loss", r.train_loss),
+                        ("p_t", r.p_t),
+                    ],
+                );
+            }
+        }));
+    }
     let mut sink = |snap: &TrainerSnapshot| {
         // A failed snapshot write must not kill the run it protects.
-        if let Err(e) = store.save_snapshot_retained(cfg, label, snap, campaign.keep_last_n) {
-            eprintln!("warning: snapshot write failed for `{label}`: {e}");
+        match store.save_snapshot_retained(cfg, label, snap, campaign.keep_last_n) {
+            Ok(()) => {
+                if let Some(ev) = &events {
+                    ev.emit(EventKind::Snapshot, &key, Some(snap.next_round as u64), &[]);
+                }
+            }
+            Err(e) => eprintln!("warning: snapshot write failed for `{label}`: {e}"),
         }
     };
     let mut log = trainer.run_with_snapshots(resume, campaign.snapshot_every, &mut sink);
     log.label = label.to_string();
-    if let Err(e) = store.save_result(cfg, label, &log) {
-        eprintln!("warning: result write failed for `{label}`: {e}");
+    match store.save_result(cfg, label, &log) {
+        Ok(()) => {
+            if let Some(ev) = &events {
+                ev.emit(
+                    EventKind::Completed,
+                    &key,
+                    None,
+                    &[
+                        ("final_accuracy", log.final_accuracy),
+                        ("pbar", log.pbar),
+                        ("max_avg_power", log.max_avg_power()),
+                        ("rounds", log.records.len() as f64),
+                    ],
+                );
+            }
+        }
+        Err(e) => eprintln!("warning: result write failed for `{label}`: {e}"),
     }
     log
 }

@@ -29,6 +29,7 @@
 //! <store_dir>/<cache_key>/result.bin        # finished TrainLog (complete runs)
 //! <store_dir>/<cache_key>/*.corrupt         # quarantined blobs (kept for forensics)
 //! <store_dir>/fleet/                        # worker-fleet queue + leases (see `crate::fleet`)
+//! <store_dir>/fleet/events/<writer>.jsonl   # append-only telemetry log (see `crate::fleet::events`)
 //! ```
 //!
 //! All writes go through a temp-file + rename, so a crash mid-write leaves
@@ -51,6 +52,7 @@ use std::path::{Path, PathBuf};
 
 use crate::config::{Backend, DatasetSpec, RunConfig};
 use crate::coordinator::TrainLog;
+use crate::fleet::events::{EventKind, EventLog};
 
 use super::manifest::{RunManifest, RunStatus};
 use super::snapshot::{decode_log, encode_log, fnv1a64, TrainerSnapshot, SNAPSHOT_VERSION};
@@ -242,6 +244,9 @@ pub struct GcReport {
 /// A directory of content-addressed run entries.
 pub struct RunStore {
     root: PathBuf,
+    /// Optional telemetry sink ([`crate::fleet::events`]); observe-only,
+    /// attached by the scheduler / worker when telemetry is enabled.
+    events: std::sync::Mutex<Option<EventLog>>,
 }
 
 impl RunStore {
@@ -249,11 +254,44 @@ impl RunStore {
     pub fn open(dir: &str) -> io::Result<RunStore> {
         let root = PathBuf::from(dir);
         fs::create_dir_all(&root)?;
-        Ok(RunStore { root })
+        Ok(RunStore {
+            root,
+            events: std::sync::Mutex::new(None),
+        })
     }
 
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// Attach a telemetry event log: store operations (quarantines) and
+    /// every layer holding this store emit through it. Telemetry is
+    /// observe-only — nothing here changes what the store persists.
+    pub fn attach_events(&self, log: EventLog) {
+        *self.events.lock().unwrap_or_else(|e| e.into_inner()) = Some(log);
+    }
+
+    /// The attached event log, if any (cheap clone — all clones append
+    /// to the same per-writer segment).
+    pub fn event_log(&self) -> Option<EventLog> {
+        self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// [`quarantine`] plus a `quarantined` telemetry event keyed by the
+    /// store entry the blob belonged to.
+    fn quarantine_blob(&self, path: &Path, why: &str) {
+        quarantine(path, why);
+        if let Some(log) = self.event_log() {
+            let key = path
+                .parent()
+                .and_then(|p| p.file_name())
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            log.emit(EventKind::Quarantined, &key, None, &[]);
+        }
     }
 
     fn entry_dir(&self, cfg: &RunConfig) -> PathBuf {
@@ -278,7 +316,7 @@ impl RunStore {
         match decode_log(&bytes) {
             Ok(log) => Some(log),
             Err(e) => {
-                quarantine(&path, &e.to_string());
+                self.quarantine_blob(&path, &e.to_string());
                 None
             }
         }
@@ -298,7 +336,7 @@ impl RunStore {
         let snap = match TrainerSnapshot::decode(&bytes) {
             Ok(snap) => snap,
             Err(e) => {
-                quarantine(path, &e.to_string());
+                self.quarantine_blob(path, &e.to_string());
                 return None;
             }
         };

@@ -1074,6 +1074,10 @@ pub struct CampaignConfig {
     /// the run, at the cost of `keep_last_n` blobs per partial entry.
     /// `repro gc` prunes stores down to this policy.
     pub keep_last_n: usize,
+    /// Observability policy (`[telemetry]` table). Like the campaign knobs
+    /// above, telemetry never enters a run's content-address — the event
+    /// log is observe-only and toggling it cannot invalidate cached runs.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for CampaignConfig {
@@ -1084,6 +1088,7 @@ impl Default for CampaignConfig {
             resume: true,
             enabled: true,
             keep_last_n: 2,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -1093,6 +1098,10 @@ impl CampaignConfig {
     /// all defaults).
     pub fn from_doc(doc: &Document) -> Result<CampaignConfig, ConfigError> {
         let mut cfg = CampaignConfig::default();
+        // `[telemetry]` is its own table but rides on the campaign config —
+        // parse it first so a document with `[telemetry]` and no
+        // `[campaign]` still takes effect.
+        cfg.telemetry = TelemetryConfig::from_doc(doc)?;
         let Some(section) = doc.get("campaign") else {
             return Ok(cfg);
         };
@@ -1130,6 +1139,62 @@ impl CampaignConfig {
         } else {
             self.store_dir.clone()
         }
+    }
+}
+
+/// The `[telemetry]` table: event-sourced observability policy for
+/// campaign stores (see `fleet::events`). Telemetry is observe-only — it
+/// never enters a run's content-address and never perturbs a trajectory —
+/// so it defaults to on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch; `false` means no event log is attached and nothing
+    /// is emitted (the CLI's `--no-telemetry`).
+    pub enabled: bool,
+    /// Emit a `round` telemetry event every N trainer rounds (the final
+    /// round is always emitted). Must be >= 1; raise it for very long runs
+    /// to bound event-log growth.
+    pub every: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: true, every: 1 }
+    }
+}
+
+impl TelemetryConfig {
+    /// Read the `[telemetry]` table from a parsed document (absent table =
+    /// all defaults).
+    pub fn from_doc(doc: &Document) -> Result<TelemetryConfig, ConfigError> {
+        let mut cfg = TelemetryConfig::default();
+        let Some(section) = doc.get("telemetry") else {
+            return Ok(cfg);
+        };
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("[telemetry] key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in section {
+            match k.as_str() {
+                "enabled" => cfg.enabled = v.as_bool().ok_or_else(|| bad(k, v))?,
+                "every" => cfg.every = v.as_usize().ok_or_else(|| bad(k, v))?,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown [telemetry] key {other:?}"
+                    )));
+                }
+            }
+        }
+        if cfg.every == 0 {
+            return Err(ConfigError::Invalid(
+                "telemetry every must be >= 1".into(),
+            ));
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_toml(text: &str) -> Result<TelemetryConfig, ConfigError> {
+        Self::from_doc(&parser::parse(text)?)
     }
 }
 
@@ -1629,6 +1694,31 @@ rho = 0.85
         let rc =
             RunConfig::from_toml("[run]\ndevices = 4\n[campaign]\nsnapshot_every = 5\n").unwrap();
         assert_eq!(rc.devices, 4);
+    }
+
+    #[test]
+    fn telemetry_table_parses_validates_and_defaults() {
+        let t = TelemetryConfig::from_toml("[telemetry]\nenabled = false\nevery = 25\n").unwrap();
+        assert!(!t.enabled);
+        assert_eq!(t.every, 25);
+        // Absent table = defaults (on, every round).
+        assert_eq!(
+            TelemetryConfig::from_toml("[run]\ndevices = 4\n").unwrap(),
+            TelemetryConfig::default()
+        );
+        // A zero cadence and unknown keys are rejected.
+        assert!(TelemetryConfig::from_toml("[telemetry]\nevery = 0\n").is_err());
+        assert!(TelemetryConfig::from_toml("[telemetry]\nbogus = 1\n").is_err());
+        // `[telemetry]` rides on CampaignConfig::from_toml, with or
+        // without a [campaign] table in the same document.
+        let c = CampaignConfig::from_toml("[telemetry]\nevery = 10\n").unwrap();
+        assert_eq!(c.telemetry.every, 10);
+        let c = CampaignConfig::from_toml(
+            "[campaign]\nsnapshot_every = 5\n[telemetry]\nenabled = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.snapshot_every, 5);
+        assert!(!c.telemetry.enabled);
     }
 
     #[test]

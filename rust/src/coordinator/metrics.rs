@@ -77,6 +77,26 @@ impl TrainLog {
             .all(|&p| p <= self.pbar * (1.0 + tol))
     }
 
+    /// The worst (largest) measured per-device average power — the side
+    /// of the Eq. 6 audit that actually binds. NaN when unmeasured.
+    pub fn max_avg_power(&self) -> f64 {
+        self.measured_avg_power
+            .iter()
+            .copied()
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Eq. 6 audit headroom: the fraction of the power budget the
+    /// worst device left unused, `1 − max_avg_power / P̄`. NaN when
+    /// unmeasured or the budget is non-positive.
+    pub fn power_headroom(&self) -> f64 {
+        if self.pbar > 0.0 {
+            1.0 - self.max_avg_power() / self.pbar
+        } else {
+            f64::NAN
+        }
+    }
+
     /// Write the full per-round series as CSV. The participation columns
     /// are NaN for schemes that do not model participation — an honest
     /// "absent", never conflated with a measured 0.

@@ -28,6 +28,12 @@ pub struct Trainer {
     backend: Box<dyn GradientBackend>,
     /// Progress printing (on for CLI, off for tests/benches).
     pub verbose: bool,
+    /// Observe-only per-round telemetry hook, called with each round's
+    /// [`RoundRecord`] after it is finalized (the campaign scheduler
+    /// wires this to the fleet event log). It sees the record, never
+    /// mutates trainer state — trajectories are bit-identical with or
+    /// without an observer installed.
+    pub round_observer: Option<Box<dyn FnMut(&RoundRecord) + Send>>,
 }
 
 impl Trainer {
@@ -55,6 +61,7 @@ impl Trainer {
             shards,
             backend,
             verbose: false,
+            round_observer: None,
         })
     }
 
@@ -193,6 +200,9 @@ impl Trainer {
             }
             if !acc.is_nan() {
                 log.final_accuracy = acc;
+            }
+            if let Some(observer) = self.round_observer.as_mut() {
+                observer(&record);
             }
             log.records.push(record);
 

@@ -80,8 +80,16 @@ pub fn write_outputs(spec: &ExperimentSpec, logs: &[TrainLog], out_dir: &str) {
     for (((label, _), log), fname) in spec.runs.iter().zip(logs).zip(&filenames) {
         let path = format!("{out_dir}/{}/{fname}.csv", spec.id);
         log.write_csv(&path).expect("write csv");
+        // Headroom is stdout-only telemetry: the CSV columns (and so the
+        // golden summary files) are untouched by it.
+        let headroom = log.power_headroom();
+        let headroom = if headroom.is_nan() {
+            "  --".to_string()
+        } else {
+            format!("{:4.1}%", 100.0 * headroom)
+        };
         println!(
-            "    `{label}`: final acc {:.4} (best {:.4}) in {:.1}s → {path}",
+            "    `{label}`: final acc {:.4} (best {:.4}) in {:.1}s, power headroom {headroom} → {path}",
             log.final_accuracy,
             log.best_accuracy(),
             log.total_secs

@@ -1,0 +1,719 @@
+//! Append-only, crash-safe JSONL event log for fleet observability.
+//!
+//! Every layer that touches a run — queue, lease, worker, scheduler,
+//! trainer callback, blob store — emits typed [`Event`]s into
+//! `<store>/fleet/events/`. The log is the source of truth for
+//! [`super::metrics`]: nothing is aggregated at write time; readers
+//! replay the log with a deterministic reducer.
+//!
+//! # Event schema (v1)
+//!
+//! One JSON object per line, flat, with a fixed field order:
+//!
+//! ```text
+//! {"v":1,"kind":"round","key":"06e71b1ab9b1e1b7","worker":"w0",
+//!  "round":3,"ms":1754650000123,"grad_norm":1.25,"test_accuracy":0.41}
+//! ```
+//!
+//! * `v` — schema version. Readers skip lines with an unknown version.
+//! * `kind` — one of the [`EventKind`] names (lifecycle order:
+//!   `enqueued`, `claimed`, `reclaimed`, `heartbeat`, `executed`,
+//!   `resumed`, `cached`, `already_done`, `snapshot`, `round`,
+//!   `completed`, `quarantined`).
+//! * `key` — the run's content-addressed cache key (store directory
+//!   name); empty for events not tied to a run.
+//! * `label` — optional human-readable run label (carried by
+//!   `enqueued` so dashboards can name runs without parsing configs).
+//! * `worker` — the emitting writer id (worker id, or a scheduler /
+//!   coordinator writer name).
+//! * `round` — optional 0-based round index (`round` / `snapshot`).
+//! * `ms` — wall-clock unix milliseconds. This is the **only**
+//!   wall-clock field: the determinism contract masks it (see
+//!   [`mask_wallclock`]) and everything else must replay identically
+//!   across fleet shapes.
+//! * any further numeric fields are the event's payload `data`
+//!   (non-finite values are dropped at emit time, so NaN never
+//!   reaches the wire).
+//!
+//! # Append / torn-record rules
+//!
+//! * **One file per writer** (`<writer>.jsonl`): concurrent workers
+//!   never interleave bytes within a file, so a reader can only ever
+//!   observe a *trailing* partial line per file, never a corrupted
+//!   middle.
+//! * **One `write(2)` per event** on an `O_APPEND` handle: a line is
+//!   either fully in the file or not at all on every local
+//!   filesystem's crash model that matters here; a SIGKILL mid-call
+//!   leaves at most one unterminated tail line.
+//! * **Readers are fail-soft**: a line that is unterminated,
+//!   unparseable, or of an unknown schema version is skipped and
+//!   counted ([`ReadReport::skipped_lines`]); an unreadable file is
+//!   skipped and counted ([`ReadReport::unreadable_files`]). A torn
+//!   record can therefore never poison a reader.
+//! * Emission itself is fail-soft too: telemetry must never take down
+//!   a run, so append errors are reported once to stderr and dropped.
+//!
+//! # Replay contract
+//!
+//! [`super::metrics::reduce`] folds events with commutative,
+//! key-deduplicated operations, so the deterministic core of the
+//! metrics (which runs executed / resumed / cached / completed, which
+//! rounds were trained, final gauges) is identical for a 1-worker and
+//! a 4-worker fleet over the same campaign once events are ordered by
+//! [`sort_events`] and wall clocks are zeroed by [`mask_wallclock`].
+//! Per-worker throughput and reclaim counts are intentionally
+//! *outside* that core — they describe the fleet, not the campaign.
+
+use std::fs::{self, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Schema version emitted by this build; readers skip other versions.
+pub const EVENT_VERSION: u64 = 1;
+
+/// Typed event kinds, declared in lifecycle order (the declaration
+/// order is also the deterministic sort order within a run+round).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A run was placed on the fleet queue.
+    Enqueued,
+    /// A worker acquired the run's lease.
+    Claimed,
+    /// A stale lease was stolen from a dead owner (exactly once per
+    /// steal — emitted by the winner of the reclaim rename).
+    Reclaimed,
+    /// A lease heartbeat landed.
+    Heartbeat,
+    /// A run started from round 0.
+    Executed,
+    /// A run resumed from a snapshot.
+    Resumed,
+    /// A finished result was served from the run cache.
+    Cached,
+    /// A worker claimed a run whose result had just landed (claim
+    /// race) — operational, not part of the deterministic core.
+    AlreadyDone,
+    /// A snapshot was persisted at `round`.
+    Snapshot,
+    /// Per-round telemetry from the trainer callback.
+    Round,
+    /// A run finished and its result was persisted.
+    Completed,
+    /// A corrupt blob was quarantined by the store.
+    Quarantined,
+}
+
+impl EventKind {
+    /// All kinds, in lifecycle (= sort) order.
+    pub const ALL: [EventKind; 12] = [
+        EventKind::Enqueued,
+        EventKind::Claimed,
+        EventKind::Reclaimed,
+        EventKind::Heartbeat,
+        EventKind::Executed,
+        EventKind::Resumed,
+        EventKind::Cached,
+        EventKind::AlreadyDone,
+        EventKind::Snapshot,
+        EventKind::Round,
+        EventKind::Completed,
+        EventKind::Quarantined,
+    ];
+
+    /// Wire name of the kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Enqueued => "enqueued",
+            EventKind::Claimed => "claimed",
+            EventKind::Reclaimed => "reclaimed",
+            EventKind::Heartbeat => "heartbeat",
+            EventKind::Executed => "executed",
+            EventKind::Resumed => "resumed",
+            EventKind::Cached => "cached",
+            EventKind::AlreadyDone => "already_done",
+            EventKind::Snapshot => "snapshot",
+            EventKind::Round => "round",
+            EventKind::Completed => "completed",
+            EventKind::Quarantined => "quarantined",
+        }
+    }
+
+    /// Inverse of [`EventKind::name`].
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// One log record. See the module docs for the wire schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Run cache key (store directory name); empty if not run-scoped.
+    pub key: String,
+    /// Optional human label (carried by `enqueued`).
+    pub label: String,
+    /// Writer id (worker name / scheduler writer).
+    pub worker: String,
+    /// 0-based round, for `round` / `snapshot` events.
+    pub round: Option<u64>,
+    /// Wall-clock unix milliseconds — the only nondeterministic field.
+    pub unix_ms: u64,
+    /// Numeric payload, sorted by field name at emit time.
+    pub data: Vec<(String, f64)>,
+}
+
+impl Event {
+    /// Payload field lookup.
+    pub fn field(&self, name: &str) -> Option<f64> {
+        self.data
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"v\":");
+        s.push_str(&EVENT_VERSION.to_string());
+        s.push_str(",\"kind\":\"");
+        s.push_str(self.kind.name());
+        s.push('"');
+        if !self.key.is_empty() {
+            s.push_str(",\"key\":\"");
+            s.push_str(&json_escape(&self.key));
+            s.push('"');
+        }
+        if !self.label.is_empty() {
+            s.push_str(",\"label\":\"");
+            s.push_str(&json_escape(&self.label));
+            s.push('"');
+        }
+        if !self.worker.is_empty() {
+            s.push_str(",\"worker\":\"");
+            s.push_str(&json_escape(&self.worker));
+            s.push('"');
+        }
+        if let Some(r) = self.round {
+            s.push_str(",\"round\":");
+            s.push_str(&r.to_string());
+        }
+        s.push_str(",\"ms\":");
+        s.push_str(&self.unix_ms.to_string());
+        for (k, v) in &self.data {
+            if !v.is_finite() {
+                continue;
+            }
+            s.push_str(",\"");
+            s.push_str(&json_escape(k));
+            s.push_str("\":");
+            // `{}` on f64 is the shortest exact round-trip form.
+            s.push_str(&format!("{v}"));
+        }
+        s.push('}');
+        s
+    }
+
+    /// Parse one line. `Err` carries a short reason; callers count it
+    /// as a skipped line rather than aborting.
+    pub fn parse(line: &str) -> Result<Event, String> {
+        let mut p = JsonParser::new(line);
+        p.expect(b'{')?;
+        let mut ev = Event {
+            kind: EventKind::Round,
+            key: String::new(),
+            label: String::new(),
+            worker: String::new(),
+            round: None,
+            unix_ms: 0,
+            data: Vec::new(),
+        };
+        let mut saw_kind = false;
+        let mut version = 0u64;
+        loop {
+            p.skip_ws();
+            if p.eat(b'}') {
+                break;
+            }
+            let field = p.string()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            match field.as_str() {
+                "v" => version = p.number()? as u64,
+                "kind" => {
+                    let name = p.string()?;
+                    ev.kind = EventKind::parse(&name)
+                        .ok_or_else(|| format!("unknown kind `{name}`"))?;
+                    saw_kind = true;
+                }
+                "key" => ev.key = p.string()?,
+                "label" => ev.label = p.string()?,
+                "worker" => ev.worker = p.string()?,
+                "round" => ev.round = Some(p.number()? as u64),
+                "ms" => ev.unix_ms = p.number()? as u64,
+                _ => {
+                    // Any other field is numeric payload; tolerate (and
+                    // drop) nulls so forward-compat additions parse.
+                    if !p.eat_literal("null") {
+                        let v = p.number()?;
+                        ev.data.push((field, v));
+                    }
+                }
+            }
+            p.skip_ws();
+            if !p.eat(b',') {
+                p.expect(b'}')?;
+                break;
+            }
+        }
+        if version != EVENT_VERSION {
+            return Err(format!("unsupported event version {version}"));
+        }
+        if !saw_kind {
+            return Err("missing `kind`".into());
+        }
+        Ok(ev)
+    }
+}
+
+/// Directory holding the per-writer event segments.
+pub fn events_dir(store_root: &Path) -> PathBuf {
+    store_root.join("fleet").join("events")
+}
+
+static EMIT_FAILED: AtomicBool = AtomicBool::new(false);
+
+/// Handle for appending events as one writer. Cloning is cheap; all
+/// clones append to the same per-writer segment file.
+#[derive(Clone, Debug)]
+pub struct EventLog {
+    path: PathBuf,
+    writer: String,
+}
+
+impl EventLog {
+    /// Open (creating directories as needed) the segment for `writer`
+    /// under `store_root`. Writer ids are sanitized to
+    /// `[A-Za-z0-9._-]` so they are always valid file names.
+    pub fn open(store_root: &Path, writer: &str) -> io::Result<EventLog> {
+        let dir = events_dir(store_root);
+        fs::create_dir_all(&dir)?;
+        let writer: String = writer
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                    c
+                } else {
+                    '-'
+                }
+            })
+            .collect();
+        let writer = if writer.is_empty() { "anon".to_string() } else { writer };
+        let path = dir.join(format!("{writer}.jsonl"));
+        Ok(EventLog { path, writer })
+    }
+
+    /// The sanitized writer id this log appends as.
+    pub fn writer(&self) -> &str {
+        &self.writer
+    }
+
+    /// Emit an event with no label. Never fails (see module docs).
+    pub fn emit(&self, kind: EventKind, key: &str, round: Option<u64>, data: &[(&str, f64)]) {
+        self.emit_labeled(kind, key, "", round, data)
+    }
+
+    /// Emit an event carrying a human label (used by `enqueued`).
+    pub fn emit_labeled(
+        &self,
+        kind: EventKind,
+        key: &str,
+        label: &str,
+        round: Option<u64>,
+        data: &[(&str, f64)],
+    ) {
+        let mut payload: Vec<(String, f64)> = data
+            .iter()
+            .filter(|(_, v)| v.is_finite())
+            .map(|&(k, v)| (k.to_string(), v))
+            .collect();
+        payload.sort_by(|a, b| a.0.cmp(&b.0));
+        let ev = Event {
+            kind,
+            key: key.to_string(),
+            label: label.to_string(),
+            worker: self.writer.clone(),
+            round,
+            unix_ms: unix_ms_now(),
+            data: payload,
+        };
+        let mut line = ev.to_line();
+        line.push('\n');
+        // Single append-mode write per line: the crash-safety invariant.
+        let res = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .and_then(|mut f| f.write_all(line.as_bytes()));
+        if let Err(e) = res {
+            if !EMIT_FAILED.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "warning: telemetry append failed ({}): {e} — further failures are silent",
+                    self.path.display()
+                );
+            }
+        }
+    }
+}
+
+fn unix_ms_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// The result of replaying a store's event directory.
+#[derive(Clone, Debug, Default)]
+pub struct ReadReport {
+    /// Parsed events, in per-file order (not globally ordered — see
+    /// [`sort_events`]).
+    pub events: Vec<Event>,
+    /// Lines skipped: torn tails, parse failures, unknown versions.
+    pub skipped_lines: usize,
+    /// Segment files that could not be read at all.
+    pub unreadable_files: usize,
+}
+
+/// Read every `*.jsonl` segment under the store's event directory.
+/// Fail-soft: a missing directory yields an empty report; torn or
+/// unparseable lines and unreadable files are counted, never fatal.
+pub fn read_events(store_root: &Path) -> ReadReport {
+    let mut report = ReadReport::default();
+    let dir = events_dir(store_root);
+    let entries = match fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(_) => return report,
+    };
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("jsonl"))
+        .collect();
+    files.sort();
+    for path in files {
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                report.unreadable_files += 1;
+                continue;
+            }
+        };
+        let text = String::from_utf8_lossy(&bytes);
+        let terminated = text.ends_with('\n');
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            // An unterminated final line is a torn append from a killed
+            // writer: skip it without even attempting a parse.
+            if i + 1 == lines.len() && !terminated {
+                report.skipped_lines += 1;
+                continue;
+            }
+            match Event::parse(line) {
+                Ok(ev) => report.events.push(ev),
+                Err(_) => report.skipped_lines += 1,
+            }
+        }
+    }
+    report
+}
+
+/// Zero the wall-clock field of every event (the determinism mask).
+pub fn mask_wallclock(events: &mut [Event]) {
+    for ev in events {
+        ev.unix_ms = 0;
+    }
+}
+
+/// Deterministic order: by run key, then round (lifecycle events
+/// first), then kind lifecycle rank, then worker, then payload. After
+/// [`mask_wallclock`], two fleets of different shapes sort identical
+/// deterministic-core events into the same sequence.
+pub fn sort_events(events: &mut [Event]) {
+    events.sort_by(|a, b| {
+        (&a.key, a.round, a.kind, &a.worker, a.unix_ms)
+            .cmp(&(&b.key, b.round, b.kind, &b.worker, b.unix_ms))
+            .then_with(|| {
+                a.data
+                    .iter()
+                    .map(|(k, v)| (k, v.to_bits()))
+                    .cmp(b.data.iter().map(|(k, v)| (k, v.to_bits())))
+            })
+    });
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Minimal flat-JSON tokenizer for the line schema above (strings,
+/// numbers, `null`; no nesting). Hand-rolled because the crate has no
+/// JSON dependency by design.
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn new(s: &'a str) -> Self {
+        JsonParser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_whitespace())
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn eat_literal(&mut self, lit: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        self.skip_ws();
+        if self.eat(b) {
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.skip_ws();
+        if !self.eat(b'"') {
+            return Err(format!("expected string at byte {}", self.pos));
+        }
+        let mut out = String::new();
+        loop {
+            let b = self
+                .peek()
+                .ok_or_else(|| "unterminated string".to_string())?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self
+                        .peek()
+                        .ok_or_else(|| "dangling escape".to_string())?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(format!("unknown escape \\{}", e as char)),
+                    }
+                }
+                _ => {
+                    // Re-sync to char boundary for multi-byte UTF-8.
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len() && (self.bytes[end] & 0xC0) == 0x80 {
+                        end += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| "invalid utf-8 in string".to_string())?;
+                    out.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.peek().is_some_and(|b| {
+            b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E')
+        }) {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(format!("expected number at byte {start}"));
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ota_events_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn event_roundtrips_through_json() {
+        let ev = Event {
+            kind: EventKind::Round,
+            key: "0123456789abcdef".into(),
+            label: "A-DSGD \"quoted\" λ".into(),
+            worker: "w0".into(),
+            round: Some(7),
+            unix_ms: 1_754_650_000_123,
+            data: vec![
+                ("grad_norm".into(), 1.25),
+                ("test_accuracy".into(), 0.30000000000000004),
+            ],
+        };
+        let parsed = Event::parse(&ev.to_line()).unwrap();
+        assert_eq!(parsed, ev);
+    }
+
+    #[test]
+    fn nonfinite_payload_fields_are_dropped_at_emit() {
+        let root = tmp("nan");
+        let log = EventLog::open(&root, "w0").unwrap();
+        log.emit(
+            EventKind::Round,
+            "k",
+            Some(0),
+            &[("grad_norm", 2.0), ("test_accuracy", f64::NAN)],
+        );
+        let report = read_events(&root);
+        assert_eq!(report.events.len(), 1);
+        assert_eq!(report.events[0].field("grad_norm"), Some(2.0));
+        assert_eq!(report.events[0].field("test_accuracy"), None);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn torn_tail_and_garbage_lines_are_skipped_not_fatal() {
+        let root = tmp("torn");
+        let log = EventLog::open(&root, "w0").unwrap();
+        log.emit(EventKind::Claimed, "k1", None, &[]);
+        log.emit(EventKind::Completed, "k1", None, &[("final_accuracy", 0.9)]);
+        // Garbage in the middle (e.g. a cosmic-ray flip) and a torn,
+        // unterminated tail (a SIGKILL mid-append).
+        let path = events_dir(&root).join("w0.jsonl");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"not json at all\n").unwrap();
+        f.write_all(b"{\"v\":1,\"kind\":\"claimed\",\"key\":\"k2").unwrap();
+        drop(f);
+        let report = read_events(&root);
+        assert_eq!(report.events.len(), 2, "good lines still parse");
+        assert_eq!(report.skipped_lines, 2, "garbage + torn tail counted");
+        assert_eq!(report.unreadable_files, 0);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn unknown_version_is_skipped() {
+        let root = tmp("ver");
+        fs::create_dir_all(events_dir(&root)).unwrap();
+        fs::write(
+            events_dir(&root).join("w0.jsonl"),
+            "{\"v\":99,\"kind\":\"claimed\",\"key\":\"k\",\"ms\":0}\n",
+        )
+        .unwrap();
+        let report = read_events(&root);
+        assert!(report.events.is_empty());
+        assert_eq!(report.skipped_lines, 1);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn sort_is_stable_across_writer_interleavings() {
+        let mk = |key: &str, kind, round, worker: &str| Event {
+            kind,
+            key: key.into(),
+            label: String::new(),
+            worker: worker.into(),
+            round,
+            unix_ms: 0,
+            data: vec![],
+        };
+        let mut a = vec![
+            mk("k2", EventKind::Round, Some(1), "w1"),
+            mk("k1", EventKind::Completed, None, "w0"),
+            mk("k1", EventKind::Round, Some(0), "w0"),
+            mk("k1", EventKind::Claimed, None, "w0"),
+        ];
+        let mut b = a.clone();
+        b.reverse();
+        sort_events(&mut a);
+        sort_events(&mut b);
+        assert_eq!(a, b);
+        // Lifecycle events (round None) sort before any round event.
+        assert_eq!(a[0].kind, EventKind::Claimed);
+        assert_eq!(a[1].kind, EventKind::Completed);
+    }
+}

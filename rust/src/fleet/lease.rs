@@ -116,6 +116,21 @@ pub fn try_acquire(
     owner: &str,
     ttl: Duration,
 ) -> io::Result<Option<Lease>> {
+    try_acquire_with(dir, key, owner, ttl, &mut || {})
+}
+
+/// [`try_acquire`] with a reclaim observer: `on_reclaim` fires exactly
+/// when this claimant wins the stale-steal rename of a genuinely dead
+/// lease — the rename succeeds for exactly one stealer, so across the
+/// whole fleet the callback fires **exactly once per reclaimed lease**
+/// (the hook the event log's `reclaimed` kind relies on).
+pub fn try_acquire_with(
+    dir: &Path,
+    key: &str,
+    owner: &str,
+    ttl: Duration,
+    on_reclaim: &mut dyn FnMut(),
+) -> io::Result<Option<Lease>> {
     fs::create_dir_all(dir)?;
     let path = dir.join(format!("{key}.lease"));
     if let Ok(meta) = fs::metadata(&path) {
@@ -147,6 +162,7 @@ pub fn try_acquire(
                 // model). Fall through and contend normally.
             } else {
                 let _ = fs::remove_file(&grave);
+                on_reclaim();
             }
         }
     }

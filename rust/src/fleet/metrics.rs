@@ -1,0 +1,481 @@
+//! Deterministic replay reducer: fold the event log into
+//! Prometheus-style counters and gauges.
+//!
+//! [`reduce`] is a pure fold over [`super::events::Event`]s built
+//! entirely from commutative, deduplicating operations — key sets for
+//! run lifecycle, `(key, round)` sets for training progress, and
+//! latest-round gauges. That makes the **deterministic core**
+//! ([`Metrics::deterministic_core`]) independent of event order,
+//! worker count, and wall clock: a 1-worker and a 4-worker fleet over
+//! the same campaign reduce to the same core (the contract pinned by
+//! `rust/tests/fleet_events.rs`).
+//!
+//! Everything describing the *fleet* rather than the *campaign* —
+//! per-worker claim/heartbeat/round counts and rounds/sec, lease
+//! reclaims, claim races, skipped log lines — is kept in an
+//! operational section that is exported by [`Metrics::to_prometheus`]
+//! but excluded from the core.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use super::events::{Event, EventKind, ReadReport};
+
+/// Per-run telemetry folded from `round` / `completed` / `enqueued`.
+#[derive(Clone, Debug, Default)]
+pub struct RunSeries {
+    /// Human label, if an `enqueued` event carried one.
+    pub label: String,
+    /// Total planned rounds (`iterations` payload on `enqueued`).
+    pub planned_rounds: Option<u64>,
+    /// Deduplicated set of trained rounds.
+    pub rounds: BTreeSet<u64>,
+    /// grad-norm by round (first write wins; identical by determinism).
+    pub grad_norm: BTreeMap<u64, f64>,
+    /// test accuracy by round (only rounds that evaluated).
+    pub accuracy: BTreeMap<u64, f64>,
+    /// Final accuracy from `completed`.
+    pub final_accuracy: Option<f64>,
+    /// Eq. 6 power-audit headroom from `completed`:
+    /// `1 - max_avg_power / pbar` (fraction of budget left unused).
+    pub power_headroom: Option<f64>,
+}
+
+impl RunSeries {
+    /// Latest `(round, grad_norm)` gauge.
+    pub fn last_grad_norm(&self) -> Option<(u64, f64)> {
+        self.grad_norm.iter().next_back().map(|(&r, &v)| (r, v))
+    }
+
+    /// Latest `(round, accuracy)` gauge.
+    pub fn last_accuracy(&self) -> Option<(u64, f64)> {
+        self.accuracy.iter().next_back().map(|(&r, &v)| (r, v))
+    }
+
+    /// Completed fraction in `[0, 1]`, when the plan is known.
+    pub fn progress(&self) -> Option<f64> {
+        let planned = self.planned_rounds?;
+        if planned == 0 {
+            return None;
+        }
+        Some(self.rounds.len() as f64 / planned as f64)
+    }
+}
+
+/// Per-worker operational stats (excluded from the deterministic core).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub claims: u64,
+    pub heartbeats: u64,
+    /// Round events emitted by this worker (duplicates included — it
+    /// measures work done, not campaign progress).
+    pub rounds: u64,
+    pub reclaims: u64,
+    first_ms: Option<u64>,
+    last_ms: Option<u64>,
+}
+
+impl WorkerStats {
+    fn observe_ms(&mut self, ms: u64) {
+        if ms == 0 {
+            return; // masked or clock-less — leave rates undefined
+        }
+        self.first_ms = Some(self.first_ms.map_or(ms, |f| f.min(ms)));
+        self.last_ms = Some(self.last_ms.map_or(ms, |l| l.max(ms)));
+    }
+
+    /// Observed throughput over this worker's active window; `0.0`
+    /// when the window is empty or wall clocks were masked.
+    pub fn rounds_per_sec(&self) -> f64 {
+        match (self.first_ms, self.last_ms) {
+            (Some(first), Some(last)) if last > first => {
+                self.rounds as f64 / ((last - first) as f64 / 1000.0)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// The folded metrics. See the module docs for the core/operational
+/// split.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    // --- deterministic core -------------------------------------------
+    /// Runs ever enqueued (by cache key).
+    pub enqueued: BTreeSet<String>,
+    /// Runs started from round 0.
+    pub executed: BTreeSet<String>,
+    /// Runs resumed from a snapshot.
+    pub resumed: BTreeSet<String>,
+    /// Runs served from the run cache.
+    pub cached: BTreeSet<String>,
+    /// Runs whose result was persisted.
+    pub completed: BTreeSet<String>,
+    /// Store entries that quarantined a corrupt blob.
+    pub quarantined: BTreeSet<String>,
+    /// Per-run training telemetry.
+    pub runs: BTreeMap<String, RunSeries>,
+    // --- operational (fleet-shape dependent) --------------------------
+    /// Stale-lease steals (exactly one event per steal).
+    pub reclaims: u64,
+    /// Claim races that found the result already landed.
+    pub already_done: u64,
+    /// Snapshot events (resumes re-snapshot, so this may exceed the
+    /// per-run snapshot cadence).
+    pub snapshots: u64,
+    /// Total heartbeat events.
+    pub heartbeats: u64,
+    /// Per-worker stats.
+    pub workers: BTreeMap<String, WorkerStats>,
+    /// Log lines skipped by the reader (torn tails, parse failures).
+    pub skipped_lines: usize,
+    /// Log segment files that could not be read.
+    pub unreadable_files: usize,
+    /// Total events folded.
+    pub events_total: u64,
+}
+
+impl Metrics {
+    /// Enqueued-but-never-completed runs across the log's history.
+    pub fn queue_depth(&self) -> usize {
+        self.enqueued.difference(&self.completed).count()
+    }
+
+    /// Deduplicated `(run, round)` count across the campaign.
+    pub fn rounds_total(&self) -> u64 {
+        self.runs.values().map(|r| r.rounds.len() as u64).sum()
+    }
+
+    /// Canonical rendering of everything that must replay identically
+    /// across fleet shapes. Float gauges are rendered as exact bit
+    /// patterns so "identical" means bit-identical, not approximately
+    /// equal. Worker stats, reclaim/race counts, and reader-skip
+    /// counts are deliberately absent.
+    pub fn deterministic_core(&self) -> String {
+        let mut s = String::new();
+        let keyset = |s: &mut String, name: &str, set: &BTreeSet<String>| {
+            let _ = writeln!(
+                s,
+                "{name}=[{}]",
+                set.iter().cloned().collect::<Vec<_>>().join(",")
+            );
+        };
+        keyset(&mut s, "enqueued", &self.enqueued);
+        keyset(&mut s, "executed", &self.executed);
+        keyset(&mut s, "resumed", &self.resumed);
+        keyset(&mut s, "cached", &self.cached);
+        keyset(&mut s, "completed", &self.completed);
+        keyset(&mut s, "quarantined", &self.quarantined);
+        let _ = writeln!(s, "queue_depth={}", self.queue_depth());
+        for (key, run) in &self.runs {
+            let bits = |v: Option<f64>| match v {
+                Some(v) => format!("{:016x}", v.to_bits()),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "run[{key}] label={} planned={} rounds={} grad_last={} acc_last={} final_acc={} headroom={}",
+                run.label,
+                run.planned_rounds.map_or("-".into(), |p| p.to_string()),
+                run.rounds.len(),
+                bits(run.last_grad_norm().map(|(_, v)| v)),
+                bits(run.last_accuracy().map(|(_, v)| v)),
+                bits(run.final_accuracy),
+                bits(run.power_headroom),
+            );
+        }
+        s
+    }
+
+    /// Prometheus text exposition (the `repro metrics` output).
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(s, "# HELP {name} {help}");
+            let _ = writeln!(s, "# TYPE {name} counter");
+            let _ = writeln!(s, "{name} {v}");
+        };
+        counter("ota_events_total", "Events folded from the store log.", self.events_total as f64);
+        counter(
+            "ota_queue_enqueued_total",
+            "Distinct runs ever enqueued.",
+            self.enqueued.len() as f64,
+        );
+        counter(
+            "ota_runs_executed_total",
+            "Distinct runs started from round 0.",
+            self.executed.len() as f64,
+        );
+        counter(
+            "ota_runs_resumed_total",
+            "Distinct runs resumed from a snapshot.",
+            self.resumed.len() as f64,
+        );
+        counter(
+            "ota_runs_cached_total",
+            "Distinct runs served from the run cache.",
+            self.cached.len() as f64,
+        );
+        counter(
+            "ota_runs_completed_total",
+            "Distinct runs whose result was persisted.",
+            self.completed.len() as f64,
+        );
+        counter(
+            "ota_runs_quarantined_total",
+            "Store entries that quarantined a corrupt blob.",
+            self.quarantined.len() as f64,
+        );
+        counter(
+            "ota_rounds_total",
+            "Deduplicated (run, round) pairs trained.",
+            self.rounds_total() as f64,
+        );
+        counter(
+            "ota_lease_reclaims_total",
+            "Stale leases stolen from dead owners.",
+            self.reclaims as f64,
+        );
+        counter(
+            "ota_claim_races_total",
+            "Claims that found the result already landed.",
+            self.already_done as f64,
+        );
+        counter("ota_snapshots_total", "Snapshots persisted.", self.snapshots as f64);
+        counter("ota_heartbeats_total", "Lease heartbeats.", self.heartbeats as f64);
+        counter(
+            "ota_log_skipped_lines",
+            "Event-log lines skipped by the reader (torn/unparseable).",
+            self.skipped_lines as f64,
+        );
+        counter(
+            "ota_log_unreadable_files",
+            "Event-log segment files the reader could not open.",
+            self.unreadable_files as f64,
+        );
+        let _ = writeln!(s, "# HELP ota_queue_depth Enqueued runs not yet completed.");
+        let _ = writeln!(s, "# TYPE ota_queue_depth gauge");
+        let _ = writeln!(s, "ota_queue_depth {}", self.queue_depth());
+
+        if !self.workers.is_empty() {
+            let _ = writeln!(s, "# HELP ota_worker_claims_total Lease claims per worker.");
+            let _ = writeln!(s, "# TYPE ota_worker_claims_total counter");
+            for (w, st) in &self.workers {
+                let _ = writeln!(s, "ota_worker_claims_total{{worker=\"{w}\"}} {}", st.claims);
+            }
+            let _ = writeln!(s, "# HELP ota_worker_rounds_total Rounds processed per worker.");
+            let _ = writeln!(s, "# TYPE ota_worker_rounds_total counter");
+            for (w, st) in &self.workers {
+                let _ = writeln!(s, "ota_worker_rounds_total{{worker=\"{w}\"}} {}", st.rounds);
+            }
+            let _ = writeln!(
+                s,
+                "# HELP ota_worker_rounds_per_sec Observed rounds/sec over the worker's active window."
+            );
+            let _ = writeln!(s, "# TYPE ota_worker_rounds_per_sec gauge");
+            for (w, st) in &self.workers {
+                let _ = writeln!(
+                    s,
+                    "ota_worker_rounds_per_sec{{worker=\"{w}\"}} {:.3}",
+                    st.rounds_per_sec()
+                );
+            }
+        }
+
+        if !self.runs.is_empty() {
+            let _ = writeln!(s, "# HELP ota_run_rounds_total Deduplicated rounds per run.");
+            let _ = writeln!(s, "# TYPE ota_run_rounds_total counter");
+            for (k, run) in &self.runs {
+                let _ = writeln!(s, "ota_run_rounds_total{{key=\"{k}\"}} {}", run.rounds.len());
+            }
+            let _ = writeln!(s, "# HELP ota_run_last_grad_norm Latest gradient norm per run.");
+            let _ = writeln!(s, "# TYPE ota_run_last_grad_norm gauge");
+            for (k, run) in &self.runs {
+                if let Some((_, v)) = run.last_grad_norm() {
+                    let _ = writeln!(s, "ota_run_last_grad_norm{{key=\"{k}\"}} {v}");
+                }
+            }
+            let _ = writeln!(s, "# HELP ota_run_last_accuracy Latest test accuracy per run.");
+            let _ = writeln!(s, "# TYPE ota_run_last_accuracy gauge");
+            for (k, run) in &self.runs {
+                if let Some((_, v)) = run.last_accuracy() {
+                    let _ = writeln!(s, "ota_run_last_accuracy{{key=\"{k}\"}} {v}");
+                }
+            }
+            let _ = writeln!(
+                s,
+                "# HELP ota_run_power_headroom Eq. 6 audit headroom (1 - max avg power / pbar)."
+            );
+            let _ = writeln!(s, "# TYPE ota_run_power_headroom gauge");
+            for (k, run) in &self.runs {
+                if let Some(h) = run.power_headroom {
+                    let _ = writeln!(s, "ota_run_power_headroom{{key=\"{k}\"}} {h}");
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Fold events into [`Metrics`]. Order-insensitive by construction.
+pub fn reduce(events: &[Event]) -> Metrics {
+    let mut m = Metrics::default();
+    for ev in events {
+        m.events_total += 1;
+        let worker = || ev.worker.clone();
+        match ev.kind {
+            EventKind::Enqueued => {
+                m.enqueued.insert(ev.key.clone());
+                let run = m.runs.entry(ev.key.clone()).or_default();
+                if run.label.is_empty() && !ev.label.is_empty() {
+                    run.label = ev.label.clone();
+                }
+                if let Some(planned) = ev.field("iterations") {
+                    run.planned_rounds = Some(planned as u64);
+                }
+            }
+            EventKind::Claimed => {
+                let st = m.workers.entry(worker()).or_default();
+                st.claims += 1;
+                st.observe_ms(ev.unix_ms);
+            }
+            EventKind::Reclaimed => {
+                m.reclaims += 1;
+                m.workers.entry(worker()).or_default().reclaims += 1;
+            }
+            EventKind::Heartbeat => {
+                m.heartbeats += 1;
+                let st = m.workers.entry(worker()).or_default();
+                st.heartbeats += 1;
+                st.observe_ms(ev.unix_ms);
+            }
+            EventKind::Executed => {
+                m.executed.insert(ev.key.clone());
+            }
+            EventKind::Resumed => {
+                m.resumed.insert(ev.key.clone());
+            }
+            EventKind::Cached => {
+                m.cached.insert(ev.key.clone());
+            }
+            EventKind::AlreadyDone => m.already_done += 1,
+            EventKind::Snapshot => m.snapshots += 1,
+            EventKind::Round => {
+                let Some(round) = ev.round else { continue };
+                let run = m.runs.entry(ev.key.clone()).or_default();
+                run.rounds.insert(round);
+                if let Some(g) = ev.field("grad_norm") {
+                    run.grad_norm.entry(round).or_insert(g);
+                }
+                if let Some(a) = ev.field("test_accuracy") {
+                    run.accuracy.entry(round).or_insert(a);
+                }
+                let st = m.workers.entry(worker()).or_default();
+                st.rounds += 1;
+                st.observe_ms(ev.unix_ms);
+            }
+            EventKind::Completed => {
+                m.completed.insert(ev.key.clone());
+                let run = m.runs.entry(ev.key.clone()).or_default();
+                if let Some(acc) = ev.field("final_accuracy") {
+                    run.final_accuracy = Some(acc);
+                }
+                if let (Some(pbar), Some(max_p)) =
+                    (ev.field("pbar"), ev.field("max_avg_power"))
+                {
+                    if pbar > 0.0 {
+                        run.power_headroom = Some(1.0 - max_p / pbar);
+                    }
+                }
+                if let Some(planned) = ev.field("rounds") {
+                    run.planned_rounds.get_or_insert(planned as u64);
+                }
+            }
+            EventKind::Quarantined => {
+                m.quarantined.insert(ev.key.clone());
+            }
+        }
+    }
+    m
+}
+
+/// [`reduce`] plus the reader's skip counters.
+pub fn reduce_report(report: &ReadReport) -> Metrics {
+    let mut m = reduce(&report.events);
+    m.skipped_lines = report.skipped_lines;
+    m.unreadable_files = report.unreadable_files;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, key: &str, worker: &str, round: Option<u64>, data: &[(&str, f64)]) -> Event {
+        Event {
+            kind,
+            key: key.into(),
+            label: String::new(),
+            worker: worker.into(),
+            round,
+            unix_ms: 0,
+            data: data.iter().map(|&(k, v)| (k.into(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn reduce_is_order_insensitive_and_dedups() {
+        let mut events = vec![
+            ev(EventKind::Enqueued, "k1", "coord", None, &[("iterations", 4.0)]),
+            ev(EventKind::Claimed, "k1", "w0", None, &[]),
+            ev(EventKind::Executed, "k1", "w0", None, &[]),
+            ev(EventKind::Round, "k1", "w0", Some(0), &[("grad_norm", 2.0)]),
+            ev(EventKind::Round, "k1", "w0", Some(1), &[("grad_norm", 1.5)]),
+            // Duplicate round from a second worker after a steal: must
+            // not double-count campaign progress.
+            ev(EventKind::Round, "k1", "w1", Some(1), &[("grad_norm", 1.5)]),
+            ev(
+                EventKind::Completed,
+                "k1",
+                "w1",
+                None,
+                &[("final_accuracy", 0.8), ("pbar", 4.0), ("max_avg_power", 3.0)],
+            ),
+        ];
+        let fwd = reduce(&events);
+        events.reverse();
+        let rev = reduce(&events);
+        assert_eq!(fwd.deterministic_core(), rev.deterministic_core());
+        assert_eq!(fwd.rounds_total(), 2, "(key, round) deduplicated");
+        assert_eq!(fwd.queue_depth(), 0);
+        let run = &fwd.runs["k1"];
+        assert_eq!(run.last_grad_norm(), Some((1, 1.5)));
+        assert_eq!(run.final_accuracy, Some(0.8));
+        assert_eq!(run.power_headroom, Some(0.25));
+        assert_eq!(run.progress(), Some(0.5));
+        // Worker stats are operational: present, but outside the core.
+        assert_eq!(fwd.workers["w0"].rounds, 2);
+        assert!(!fwd.deterministic_core().contains("w0"));
+    }
+
+    #[test]
+    fn queue_depth_counts_incomplete_runs() {
+        let events = vec![
+            ev(EventKind::Enqueued, "k1", "c", None, &[]),
+            ev(EventKind::Enqueued, "k2", "c", None, &[]),
+            ev(EventKind::Completed, "k1", "w0", None, &[]),
+        ];
+        let m = reduce(&events);
+        assert_eq!(m.queue_depth(), 1);
+        assert!(m.to_prometheus().contains("ota_queue_depth 1"));
+    }
+
+    #[test]
+    fn prometheus_dump_has_core_counters() {
+        let m = reduce(&[ev(EventKind::Executed, "k", "w", None, &[])]);
+        let text = m.to_prometheus();
+        assert!(text.contains("ota_runs_executed_total 1"));
+        assert!(text.contains("# TYPE ota_runs_executed_total counter"));
+        assert!(text.contains("ota_events_total 1"));
+    }
+}

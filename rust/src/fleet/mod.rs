@@ -26,6 +26,21 @@
 //!   incomplete run, heartbeat while the trainer executes, snapshot every
 //!   `snapshot_every` rounds, write the result, release, repeat; exit
 //!   when the queue is drained.
+//! * [`events`] — the observability layer's source of truth: an
+//!   append-only, crash-safe JSONL event log (one segment per writer)
+//!   that lease, queue, worker, and scheduler layers emit typed lifecycle
+//!   and per-round telemetry events into. A SIGKILL'd writer can at worst
+//!   leave one torn *trailing* line in its own segment, which readers
+//!   skip and count — the log never poisons.
+//! * [`metrics`] — the deterministic replay reducer: folds an event
+//!   stream into Prometheus-style counters and gauges (`repro metrics`)
+//!   and per-run series for the live dashboard (`repro watch`). The
+//!   deterministic core of the reduction is identical for any fleet shape
+//!   executing the same campaign.
+//! * [`status`] — fail-soft queue/lease status collection
+//!   (`repro fleet-status`) and the terminal dashboard renderer: a torn
+//!   or mid-write queue item or lease record is skipped and *counted*,
+//!   never fatal — status must stay readable while writers are live.
 //!
 //! # Why a fleet changes nothing about the numbers
 //!
@@ -40,13 +55,21 @@
 //! is likewise harmless: both writers produce identical blobs through
 //! atomic renames.
 
+pub mod events;
 pub mod lease;
+pub mod metrics;
 pub mod queue;
+pub mod status;
 pub mod worker;
 
-pub use lease::{lease_dir, lease_state, try_acquire, Lease, LeaseState};
+pub use events::{
+    events_dir, mask_wallclock, read_events, sort_events, Event, EventKind, EventLog, ReadReport,
+};
+pub use lease::{lease_dir, lease_state, try_acquire, try_acquire_with, Lease, LeaseState};
+pub use metrics::{reduce, reduce_report, Metrics, RunSeries, WorkerStats};
 pub use queue::{
-    claim_order, collect_outputs, enqueue_specs, list_item_names, load_queue,
+    claim_order, collect_outputs, enqueue_specs, list_item_names, load_queue, load_queue_counted,
     order_by_remaining, queue_dir, remaining_rounds, WorkItem,
 };
+pub use status::{collect_status, render_dashboard, render_status, FleetStatus, ItemStatus};
 pub use worker::{run_worker, WorkerReport};

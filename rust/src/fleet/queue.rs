@@ -90,6 +90,15 @@ pub fn enqueue_specs(
                 cfg.to_toml(),
             );
             store::write_atomic(&dir.join(format!("{seq:06}_{key}.toml")), body.as_bytes())?;
+            if let Some(log) = store.event_log() {
+                log.emit_labeled(
+                    super::events::EventKind::Enqueued,
+                    &key,
+                    &clean(label),
+                    None,
+                    &[("seq", seq as f64), ("iterations", cfg.iterations as f64)],
+                );
+            }
             items.push(WorkItem {
                 seq,
                 spec_id: spec.id.clone(),
@@ -131,11 +140,20 @@ pub fn list_item_names(store: &RunStore) -> io::Result<Vec<String>> {
 /// reported and skipped — one hand-mangled file must not take the fleet
 /// down.
 pub fn load_queue(store: &RunStore) -> io::Result<Vec<WorkItem>> {
+    load_queue_counted(store).map(|(items, _)| items)
+}
+
+/// [`load_queue`] plus the number of item files that were skipped as
+/// unreadable (torn mid-write, hand-mangled, …). Status readers racing
+/// a writer surface this as `unreadable: N` instead of a confusing
+/// warning-only partial view.
+pub fn load_queue_counted(store: &RunStore) -> io::Result<(Vec<WorkItem>, usize)> {
     let dir = queue_dir(store.root());
     let mut items = Vec::new();
+    let mut unreadable = 0usize;
     let entries = match fs::read_dir(&dir) {
         Ok(e) => e,
-        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(items),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok((items, 0)),
         Err(e) => return Err(e),
     };
     for entry in entries.flatten() {
@@ -146,11 +164,14 @@ pub fn load_queue(store: &RunStore) -> io::Result<Vec<WorkItem>> {
         }
         match parse_item(&path) {
             Ok(item) => items.push(item),
-            Err(e) => eprintln!("warning: skipping queue item {}: {e}", path.display()),
+            Err(e) => {
+                unreadable += 1;
+                eprintln!("warning: skipping queue item {}: {e}", path.display());
+            }
         }
     }
     items.sort_by_key(|i| (i.seq, i.key.clone()));
-    Ok(items)
+    Ok((items, unreadable))
 }
 
 fn parse_item(path: &Path) -> Result<WorkItem, String> {

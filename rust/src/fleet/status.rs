@@ -1,0 +1,394 @@
+//! Fail-soft fleet status collection and terminal rendering.
+//!
+//! `repro fleet-status` and `repro watch` read the queue, the lease
+//! directory, and the manifests **while workers are writing them**. A
+//! status reader racing a writer may see a torn queue item (a replace
+//! in progress), a mid-write lease record, or a manifest in flight —
+//! none of which may abort the view: every unreadable artifact is
+//! skipped and *counted*, and the render surfaces the count as
+//! `unreadable: N`. [`collect_status`] therefore returns a plain value,
+//! never an error.
+//!
+//! The live dashboard ([`render_dashboard`]) joins this queue/lease
+//! view with the replayed event log ([`super::metrics`]): progress bars
+//! per run, grad-norm / accuracy sparklines from the per-round
+//! telemetry, and per-worker throughput.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::campaign::RunStore;
+
+use super::metrics::Metrics;
+use super::{lease, queue};
+
+/// One queue item's observed state.
+#[derive(Clone, Debug)]
+pub struct ItemStatus {
+    pub seq: usize,
+    pub key: String,
+    pub label: String,
+    pub spec_id: String,
+    /// `complete`, `run:<owner>`, `stale-lease`, or `queued`.
+    pub state: String,
+    pub rounds_done: usize,
+    pub rounds_total: usize,
+}
+
+/// A point-in-time, fail-soft view of a fleet store.
+#[derive(Clone, Debug, Default)]
+pub struct FleetStatus {
+    pub items: Vec<ItemStatus>,
+    /// Queue item files skipped as torn/unparseable, plus a whole
+    /// unreadable queue directory counted as one.
+    pub unreadable: usize,
+    pub complete: usize,
+    pub running: usize,
+    pub stale: usize,
+    pub rounds_done: usize,
+    pub rounds_total: usize,
+}
+
+/// Collect the queue/lease/progress view. Never fails: torn queue
+/// items and unreadable lease records are skipped and counted (see the
+/// module docs), and an unreadable queue directory yields an empty view
+/// with `unreadable >= 1`.
+pub fn collect_status(store: &RunStore, ttl: Duration) -> FleetStatus {
+    let mut st = FleetStatus::default();
+    let (items, skipped) = match queue::load_queue_counted(store) {
+        Ok(pair) => pair,
+        Err(_) => (Vec::new(), 1),
+    };
+    st.unreadable = skipped;
+    let ldir = lease::lease_dir(store.root());
+    for item in &items {
+        let remaining = queue::remaining_rounds(store, item);
+        let done = item.cfg.iterations.saturating_sub(remaining);
+        st.rounds_done += done;
+        st.rounds_total += item.cfg.iterations;
+        let state = if remaining == 0 {
+            st.complete += 1;
+            "complete".to_string()
+        } else {
+            // `lease_state` is itself fail-soft: a mid-write or
+            // garbage lease record reads as `Held("?")`, a missing
+            // file as `Free` — never an error.
+            match lease::lease_state(&ldir, &item.key, ttl) {
+                lease::LeaseState::Held(owner) => {
+                    st.running += 1;
+                    format!("run:{owner}")
+                }
+                lease::LeaseState::Stale => {
+                    st.stale += 1;
+                    "stale-lease".to_string()
+                }
+                lease::LeaseState::Free => "queued".to_string(),
+            }
+        };
+        st.items.push(ItemStatus {
+            seq: item.seq,
+            key: item.key.clone(),
+            label: item.label.clone(),
+            spec_id: item.spec_id.clone(),
+            state,
+            rounds_done: done,
+            rounds_total: item.cfg.iterations,
+        });
+    }
+    st
+}
+
+/// The classic `repro fleet-status` table.
+pub fn render_status(store_dir: &str, st: &FleetStatus) -> String {
+    let mut s = String::new();
+    if st.items.is_empty() {
+        let _ = writeln!(
+            s,
+            "fleet queue at {store_dir}: empty (run `repro fleet` to enqueue)"
+        );
+        if st.unreadable > 0 {
+            let _ = writeln!(s, "unreadable: {} queue item(s) skipped", st.unreadable);
+        }
+        return s;
+    }
+    let _ = writeln!(s, "fleet store {store_dir}: {} queued run(s)", st.items.len());
+    let _ = writeln!(s, "{:<4} {:<16} {:<14} {:>11}  {}", "seq", "key", "state", "round", "run");
+    for it in &st.items {
+        let _ = writeln!(
+            s,
+            "{:<4} {:<16} {:<14} {:>5}/{:<5}  `{}` ({})",
+            it.seq, it.key, it.state, it.rounds_done, it.rounds_total, it.label, it.spec_id
+        );
+    }
+    let _ = writeln!(
+        s,
+        "\n{}/{} run(s) complete, {} running, {} stale lease(s); {}/{} rounds done",
+        st.complete,
+        st.items.len(),
+        st.running,
+        st.stale,
+        st.rounds_done,
+        st.rounds_total
+    );
+    if st.unreadable > 0 {
+        let _ = writeln!(s, "unreadable: {} queue item(s) skipped", st.unreadable);
+    }
+    s
+}
+
+/// `[####....]`-style progress bar.
+fn progress_bar(done: usize, total: usize, width: usize) -> String {
+    let filled = if total == 0 {
+        0
+    } else {
+        (done * width + total / 2) / total
+    }
+    .min(width);
+    let mut bar = String::with_capacity(width + 2);
+    bar.push('[');
+    for i in 0..width {
+        bar.push(if i < filled { '#' } else { '.' });
+    }
+    bar.push(']');
+    bar
+}
+
+/// Unicode sparkline over the last `width` finite values.
+fn sparkline(values: impl Iterator<Item = f64>, width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let vals: Vec<f64> = values.filter(|v| v.is_finite()).collect();
+    let tail = &vals[vals.len().saturating_sub(width)..];
+    if tail.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in tail {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    tail.iter()
+        .map(|&v| {
+            let idx = if hi > lo {
+                (((v - lo) / (hi - lo)) * 7.0).round() as usize
+            } else {
+                3
+            };
+            BARS[idx.min(7)]
+        })
+        .collect()
+}
+
+/// The `repro watch` dashboard: the queue/lease view joined with the
+/// replayed event-log metrics.
+pub fn render_dashboard(store_dir: &str, st: &FleetStatus, m: &Metrics) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "fleet store {store_dir} — {} queued, depth {}, {} event(s), {} round(s) trained",
+        st.items.len(),
+        m.queue_depth(),
+        m.events_total,
+        m.rounds_total(),
+    );
+    let _ = writeln!(
+        s,
+        "runs: {} complete, {} running, {} stale lease(s); reclaims {}, claim races {}",
+        st.complete, st.running, st.stale, m.reclaims, m.already_done
+    );
+    if st.unreadable > 0 || m.skipped_lines > 0 || m.unreadable_files > 0 {
+        let _ = writeln!(
+            s,
+            "unreadable: {} queue item(s), {} log line(s), {} log file(s) skipped",
+            st.unreadable, m.skipped_lines, m.unreadable_files
+        );
+    }
+    let _ = writeln!(s);
+    for it in &st.items {
+        let pct = if it.rounds_total == 0 {
+            0.0
+        } else {
+            100.0 * it.rounds_done as f64 / it.rounds_total as f64
+        };
+        let _ = writeln!(
+            s,
+            "{} {:>5.1}%  {:<14} `{}` ({}) {}/{}",
+            progress_bar(it.rounds_done, it.rounds_total, 20),
+            pct,
+            it.state,
+            it.label,
+            it.spec_id,
+            it.rounds_done,
+            it.rounds_total
+        );
+        if let Some(run) = m.runs.get(&it.key) {
+            let grad = sparkline(run.grad_norm.values().copied(), 32);
+            let acc = sparkline(run.accuracy.values().copied(), 32);
+            if !grad.is_empty() || !acc.is_empty() {
+                let gauge = |v: Option<(u64, f64)>| {
+                    v.map_or("-".to_string(), |(_, x)| format!("{x:.4}"))
+                };
+                let _ = writeln!(
+                    s,
+                    "  ‖ĝ‖ {} {}   acc {} {}",
+                    grad,
+                    gauge(run.last_grad_norm()),
+                    acc,
+                    gauge(run.last_accuracy()),
+                );
+            }
+        }
+    }
+    if !m.workers.is_empty() {
+        let _ = writeln!(s);
+        let _ = writeln!(s, "workers:");
+        for (w, ws) in &m.workers {
+            let rate = ws.rounds_per_sec();
+            let mut line = format!(
+                "  {w:<12} claims={} rounds={} heartbeats={}",
+                ws.claims, ws.rounds, ws.heartbeats
+            );
+            if ws.reclaims > 0 {
+                line.push_str(&format!(" reclaims={}", ws.reclaims));
+            }
+            if rate > 0.0 {
+                line.push_str(&format!(" {rate:.2} r/s"));
+            }
+            let _ = writeln!(s, "{line}");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, RunConfig, Scheme};
+    use crate::experiments::runner::ExperimentSpec;
+    use std::fs;
+    use std::io::Write as _;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ota_status_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec() -> ExperimentSpec {
+        let mut cfg = presets::smoke();
+        cfg.iterations = 4;
+        cfg.eval_every = 2;
+        ExperimentSpec {
+            id: "tstat".into(),
+            title: "status".into(),
+            runs: vec![
+                ("error-free".into(), RunConfig { scheme: Scheme::ErrorFree, ..cfg.clone() }),
+                ("signsgd".into(), RunConfig { scheme: Scheme::SignSgd, ..cfg }),
+            ],
+        }
+    }
+
+    /// The satellite-1 regression: a queue item truncated mid-byte and a
+    /// lease record torn mid-write must degrade to a skip-and-count,
+    /// never an abort.
+    #[test]
+    fn torn_queue_item_and_lease_are_skipped_not_fatal() {
+        let dir = tmp("torn");
+        let store = RunStore::open(dir.to_str().unwrap()).unwrap();
+        let items = queue::enqueue_specs(&store, &[spec()]).unwrap();
+        assert_eq!(items.len(), 2);
+
+        // Truncate the first item file mid-byte — the shape a status
+        // reader sees while `enqueue_specs` replaces the queue.
+        let qdir = queue::queue_dir(store.root());
+        let victim = fs::read_dir(&qdir)
+            .unwrap()
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .find(|p| p.extension().and_then(|e| e.to_str()) == Some("toml"))
+            .unwrap();
+        let bytes = fs::read(&victim).unwrap();
+        fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+
+        // Tear the surviving item's lease record mid-write.
+        let ldir = lease::lease_dir(store.root());
+        fs::create_dir_all(&ldir).unwrap();
+        let survivor = items
+            .iter()
+            .find(|i| !victim.to_string_lossy().contains(&i.key))
+            .unwrap();
+        let mut f = fs::File::create(ldir.join(format!("{}.lease", survivor.key))).unwrap();
+        f.write_all(b"owner = \"w").unwrap(); // cut inside the value
+        drop(f);
+
+        let st = collect_status(&store, Duration::from_secs(60));
+        assert_eq!(st.unreadable, 1, "the torn item is counted, not fatal");
+        assert_eq!(st.items.len(), 1, "the readable item survives");
+        assert!(
+            st.items[0].state.starts_with("run:"),
+            "a torn-but-fresh lease reads as held-by-unknown, got {:?}",
+            st.items[0].state
+        );
+        let rendered = render_status(dir.to_str().unwrap(), &st);
+        assert!(rendered.contains("unreadable: 1"), "{rendered}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A missing store directory is an empty view, not a crash.
+    #[test]
+    fn missing_queue_is_empty_view() {
+        let dir = tmp("empty");
+        let store = RunStore::open(dir.to_str().unwrap()).unwrap();
+        let st = collect_status(&store, Duration::from_secs(30));
+        assert!(st.items.is_empty());
+        assert_eq!(st.unreadable, 0);
+        let rendered = render_status(dir.to_str().unwrap(), &st);
+        assert!(rendered.contains("empty"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn progress_bar_and_sparkline_render() {
+        assert_eq!(progress_bar(0, 4, 8), "[........]");
+        assert_eq!(progress_bar(2, 4, 8), "[####....]");
+        assert_eq!(progress_bar(4, 4, 8), "[########]");
+        assert_eq!(progress_bar(9, 4, 8), "[########]", "overshoot clamps");
+        assert_eq!(progress_bar(0, 0, 4), "[....]", "0/0 does not divide by zero");
+        let line = sparkline([1.0, 2.0, 3.0, f64::NAN, 4.0].into_iter(), 32);
+        assert_eq!(line.chars().count(), 4, "NaN dropped");
+        assert_eq!(line.chars().next(), Some('▁'));
+        assert_eq!(line.chars().last(), Some('█'));
+        assert_eq!(sparkline([2.0, 2.0].into_iter(), 8).chars().count(), 2);
+        assert_eq!(sparkline(std::iter::empty(), 8), "");
+    }
+
+    /// The dashboard joins the queue view with replayed metrics.
+    #[test]
+    fn dashboard_shows_progress_and_series() {
+        use super::super::events::{Event, EventKind};
+        let dir = tmp("dash");
+        let store = RunStore::open(dir.to_str().unwrap()).unwrap();
+        let items = queue::enqueue_specs(&store, &[spec()]).unwrap();
+        let key = items[0].key.clone();
+        let mk = |kind, round, data: &[(&str, f64)]| Event {
+            kind,
+            key: key.clone(),
+            label: String::new(),
+            worker: "w0".into(),
+            round,
+            unix_ms: 0,
+            data: data.iter().map(|&(k, v)| (k.into(), v)).collect(),
+        };
+        let m = super::super::metrics::reduce(&[
+            mk(EventKind::Executed, None, &[]),
+            mk(EventKind::Round, Some(0), &[("grad_norm", 2.0), ("test_accuracy", 0.3)]),
+            mk(EventKind::Round, Some(1), &[("grad_norm", 1.0), ("test_accuracy", 0.5)]),
+        ]);
+        let st = collect_status(&store, Duration::from_secs(30));
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m);
+        assert!(dash.contains("‖ĝ‖"), "{dash}");
+        assert!(dash.contains("workers:"), "{dash}");
+        assert!(dash.contains("[...................."), "fresh runs are empty bars:\n{dash}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

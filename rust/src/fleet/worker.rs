@@ -20,6 +20,7 @@ use crate::campaign::scheduler;
 use crate::campaign::RunStore;
 use crate::config::{CampaignConfig, FleetConfig};
 
+use super::events::{EventKind, EventLog};
 use super::lease::{self, Lease};
 use super::queue::{self, WorkItem};
 
@@ -49,6 +50,14 @@ pub fn run_worker(
         .validate()
         .unwrap_or_else(|e| panic!("invalid fleet config: {e}"));
     let store = RunStore::open(store_dir)?;
+    // Telemetry: this worker appends to its own event segment; the store
+    // attachment also routes scheduler + quarantine events through it.
+    if campaign.telemetry.enabled {
+        if let Ok(log) = EventLog::open(store.root(), worker_id) {
+            store.attach_events(log);
+        }
+    }
+    let events = store.event_log();
     let mut report = WorkerReport::default();
     let ttl = Duration::from_secs_f64(fleet.lease_secs);
     let ldir = lease::lease_dir(store.root());
@@ -120,7 +129,18 @@ pub fn run_worker(
         // reads scale with what is left, not with the whole campaign).
         let mut claimed: Option<(usize, Lease)> = None;
         for idx in queue::order_by_remaining(&items, pending, &store) {
-            if let Some(l) = lease::try_acquire(&ldir, &items[idx].key, worker_id, ttl)? {
+            let key = items[idx].key.clone();
+            let mut on_reclaim = || {
+                if let Some(ev) = &events {
+                    ev.emit(EventKind::Reclaimed, &key, None, &[]);
+                }
+            };
+            if let Some(l) =
+                lease::try_acquire_with(&ldir, &items[idx].key, worker_id, ttl, &mut on_reclaim)?
+            {
+                if let Some(ev) = &events {
+                    ev.emit(EventKind::Claimed, &items[idx].key, None, &[]);
+                }
                 claimed = Some((idx, l));
                 break;
             }
@@ -159,6 +179,9 @@ fn execute_item(
     // Between the scan and the lease a rival may have finished the run.
     if store.load_result(&item.cfg).is_some() {
         report.already_done += 1;
+        if let Some(ev) = store.event_log() {
+            ev.emit(EventKind::AlreadyDone, &item.key, None, &[]);
+        }
         return Ok(());
     }
     let resume = store
@@ -191,6 +214,7 @@ fn execute_item(
             self.0.store(true, Ordering::Relaxed);
         }
     }
+    let events = store.event_log();
     std::thread::scope(|scope| {
         scope.spawn(|| {
             let tick = Duration::from_millis(25);
@@ -203,7 +227,11 @@ fn execute_item(
                 if since_beat >= interval {
                     since_beat = Duration::ZERO;
                     match l.heartbeat() {
-                        Ok(true) => {}
+                        Ok(true) => {
+                            if let Some(ev) = &events {
+                                ev.emit(EventKind::Heartbeat, &item.key, None, &[]);
+                            }
+                        }
                         // Lease lost (we stalled past the TTL) or the
                         // refresh failed: finish the run anyway — the
                         // result is deterministic and its write atomic,

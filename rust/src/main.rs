@@ -9,6 +9,8 @@
 //!                shared store (lease-based claims, crash reclaim)
 //!   worker       attach one worker to a store's fleet queue
 //!   fleet-status live queue/lease/progress view of a fleet store
+//!   metrics      replay the store's event log into Prometheus text
+//!   watch        live terminal dashboard over the store's event log
 //!   resume       re-run a figure campaign through the run cache (forced on)
 //!   status       list the campaign store's cached/partial runs
 //!   gc           prune snapshot history + strays per the retention policy
@@ -43,6 +45,8 @@ fn usage() -> Usage {
             ("fleet <fig|all>", "run a figure campaign with a worker fleet over the store"),
             ("worker", "attach one worker to a store's fleet queue"),
             ("fleet-status", "live fleet queue/lease/progress view"),
+            ("metrics", "fold the store's event log into Prometheus text"),
+            ("watch", "live dashboard over the store's event log (--once for one frame)"),
             ("resume <fig|all>", "re-run a figure campaign through the run cache"),
             ("status", "campaign store status (cached/partial runs)"),
             ("gc", "prune snapshot history and stray files from the store"),
@@ -74,6 +78,10 @@ fn usage() -> Usage {
             ("--lease-secs <s>", "fleet lease TTL before reclaim (default 30)"),
             ("--heartbeat-secs <s>", "fleet lease refresh cadence (default 5)"),
             ("--worker-id <id>", "worker identity in lease records (worker)"),
+            ("--no-telemetry", "disable the store's fleet event log"),
+            ("--telemetry-every <N>", "round-event cadence in rounds (default 1)"),
+            ("--once", "render a single dashboard frame and exit (watch)"),
+            ("--interval-secs <s>", "dashboard refresh cadence (watch; default 2)"),
             ("--quiet", "suppress per-round progress"),
         ],
     }
@@ -90,6 +98,8 @@ fn main() {
         "fleet" => cmd_fleet(&args),
         "worker" => cmd_worker(&args),
         "fleet-status" => cmd_fleet_status(&args),
+        "metrics" => cmd_metrics(&args),
+        "watch" => cmd_watch(&args),
         "resume" => cmd_fig(&args, true),
         "status" => cmd_status(&args),
         "gc" => cmd_gc(&args),
@@ -130,6 +140,10 @@ fn campaign_from_args(args: &Args, force_resume: bool) -> Option<CampaignConfig>
     }
     c.snapshot_every = args.usize("snapshot-every", c.snapshot_every);
     c.keep_last_n = args.usize("keep-last-n", c.keep_last_n);
+    if args.flag("no-telemetry") {
+        c.telemetry.enabled = false;
+    }
+    c.telemetry.every = args.usize("telemetry-every", c.telemetry.every).max(1);
     if force_resume {
         c.enabled = true;
         c.resume = true;
@@ -378,15 +392,20 @@ fn cmd_fleet(args: &Args) {
     let exe = std::env::current_exe().expect("current executable path");
     let mut children = Vec::new();
     for i in 0..fleet_cfg.workers {
-        let child = std::process::Command::new(&exe)
-            .arg("worker")
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
             .args(["--store-dir", store_dir.as_str()])
             .args(["--lease-secs", fleet_cfg.lease_secs.to_string().as_str()])
             .args(["--heartbeat-secs", fleet_cfg.heartbeat_secs.to_string().as_str()])
             .args(["--snapshot-every", campaign.snapshot_every.to_string().as_str()])
             .args(["--keep-last-n", campaign.keep_last_n.to_string().as_str()])
+            .args(["--telemetry-every", campaign.telemetry.every.to_string().as_str()])
             .args(["--worker-id", format!("w{i}").as_str()])
-            .arg("--quiet")
+            .arg("--quiet");
+        if !campaign.telemetry.enabled {
+            cmd.arg("--no-telemetry");
+        }
+        let child = cmd
             .spawn()
             .unwrap_or_else(|e| panic!("spawn worker {i}: {e}"));
         children.push(child);
@@ -442,63 +461,78 @@ fn cmd_worker(args: &Args) {
     );
 }
 
-/// `repro fleet-status`: live view of the queue, leases and progress.
-fn cmd_fleet_status(args: &Args) {
+/// Resolve the fleet store for read-only views: `--store-dir` directly,
+/// else the campaign config's derivation against the results directory.
+fn open_store_for_view(args: &Args) -> Option<(RunStore, String)> {
     let out = out_dir(args);
-    let campaign = campaign_from_args(args, true)
-        .expect("resume-forced campaign config is always present");
-    let store_dir = campaign.store_dir_or(&out);
-    let store = match RunStore::open(&store_dir) {
-        Ok(s) => s,
+    let store_dir = match args.get("store-dir") {
+        Some(dir) => dir.to_string(),
+        None => campaign_from_args(args, true)
+            .expect("resume-forced campaign config is always present")
+            .store_dir_or(&out),
+    };
+    match RunStore::open(&store_dir) {
+        Ok(s) => Some((s, store_dir)),
         Err(e) => {
             println!("campaign store {store_dir}: unavailable ({e})");
-            return;
+            None
         }
-    };
-    let items = fleet::load_queue(&store).unwrap_or_default();
-    if items.is_empty() {
-        println!("fleet queue at {store_dir}: empty (run `repro fleet` to enqueue)");
-        return;
     }
+}
+
+/// `repro fleet-status`: live view of the queue, leases and progress.
+/// Fail-soft end to end — torn queue items and mid-write lease records
+/// are skipped and surfaced as `unreadable: N`, never an abort.
+fn cmd_fleet_status(args: &Args) {
+    let Some((store, store_dir)) = open_store_for_view(args) else {
+        return;
+    };
     let fleet_cfg = fleet_from_args(args);
     let ttl = std::time::Duration::from_secs_f64(fleet_cfg.lease_secs);
-    let ldir = fleet::lease_dir(store.root());
-    let (mut complete, mut running, mut stale) = (0usize, 0usize, 0usize);
-    let (mut rounds_done, mut rounds_total) = (0usize, 0usize);
-    println!("fleet store {store_dir}: {} queued run(s)", items.len());
-    println!("{:<4} {:<16} {:<14} {:>11}  {}", "seq", "key", "state", "round", "run");
-    for item in &items {
-        let remaining = fleet::remaining_rounds(&store, item);
-        let done = item.cfg.iterations - remaining;
-        rounds_done += done;
-        rounds_total += item.cfg.iterations;
-        let state = if remaining == 0 {
-            complete += 1;
-            "complete".to_string()
-        } else {
-            match fleet::lease_state(&ldir, &item.key, ttl) {
-                fleet::LeaseState::Held(owner) => {
-                    running += 1;
-                    format!("run:{owner}")
-                }
-                fleet::LeaseState::Stale => {
-                    stale += 1;
-                    "stale-lease".to_string()
-                }
-                fleet::LeaseState::Free => "queued".to_string(),
-            }
-        };
-        println!(
-            "{:<4} {:<16} {:<14} {:>5}/{:<5}  `{}` ({})",
-            item.seq, item.key, state, done, item.cfg.iterations, item.label, item.spec_id
-        );
+    let status = fleet::collect_status(&store, ttl);
+    print!("{}", fleet::render_status(&store_dir, &status));
+}
+
+/// `repro metrics`: replay the store's event log through the
+/// deterministic reducer and dump Prometheus exposition text.
+fn cmd_metrics(args: &Args) {
+    let Some((store, store_dir)) = open_store_for_view(args) else {
+        return;
+    };
+    let report = fleet::read_events(store.root());
+    if report.events.is_empty() && report.skipped_lines == 0 && report.unreadable_files == 0 {
+        eprintln!("note: no events recorded under {store_dir} (telemetry off or nothing run)");
     }
-    println!(
-        "\n{}/{} run(s) complete, {running} running, {stale} stale lease(s); \
-         {rounds_done}/{rounds_total} rounds done",
-        complete,
-        items.len()
-    );
+    let metrics = fleet::reduce_report(&report);
+    print!("{}", metrics.to_prometheus());
+}
+
+/// `repro watch`: live terminal dashboard over the queue and event log.
+/// `--once` renders a single frame (scripting/CI); otherwise refreshes
+/// every `--interval-secs` until interrupted.
+fn cmd_watch(args: &Args) {
+    let Some((store, store_dir)) = open_store_for_view(args) else {
+        return;
+    };
+    let fleet_cfg = fleet_from_args(args);
+    let ttl = std::time::Duration::from_secs_f64(fleet_cfg.lease_secs);
+    let once = args.flag("once");
+    let interval = std::time::Duration::from_secs_f64(args.f64("interval-secs", 2.0).max(0.1));
+    loop {
+        let status = fleet::collect_status(&store, ttl);
+        let metrics = fleet::reduce_report(&fleet::read_events(store.root()));
+        let frame = fleet::render_dashboard(&store_dir, &status, &metrics);
+        if once {
+            print!("{frame}");
+            return;
+        }
+        // ANSI clear + home keeps the frame flicker-free on any terminal
+        // the repo targets; plain output still renders under `--once`.
+        print!("\x1b[2J\x1b[H{frame}");
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(interval);
+    }
 }
 
 /// `repro gc`: prune the store per the retention policy.

@@ -44,9 +44,26 @@ impl Welford {
     }
 }
 
-/// Percentile of a sample (linear interpolation, p in [0, 100]).
+/// Percentile of an ascending-sorted sample (linear interpolation).
+///
+/// `p` must lie in `[0, 100]` — the old code silently saturated `p < 0`
+/// to the minimum (float→usize casts clamp) while `p > 100` walked the
+/// interpolation rank past the slice and panicked on an out-of-bounds
+/// *index*, two different behaviors for the same class of caller bug.
+/// Both now fail the explicit range assert (NaN included: a NaN `p`
+/// fails `contains`). Sortedness is the caller's contract; debug builds
+/// verify it because an unsorted sample returns a plausible-looking but
+/// meaningless number.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty());
+    assert!(
+        (0.0..=100.0).contains(&p),
+        "percentile p must be in [0, 100], got {p}"
+    );
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile input must be sorted ascending"
+    );
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -263,5 +280,71 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    /// Random sorted vectors against a sort-based oracle: the result must
+    /// land inside the bracketing order statistics at every probed `p`,
+    /// hit the extremes exactly at 0/100, and hit the middle element
+    /// exactly at p=50 on odd lengths.
+    #[test]
+    fn percentile_property_vs_sorted_oracle() {
+        use crate::util::proptest::{run_property_noshrink, Check, PropConfig};
+        run_property_noshrink(
+            "percentile-sorted-oracle",
+            PropConfig::default(),
+            |rng| {
+                let n = 1 + (rng.next_u64() % 40) as usize;
+                let mut v: Vec<f64> = (0..n).map(|_| rng.range_f64(-1e3, 1e3)).collect();
+                v.sort_by(f64::total_cmp);
+                v
+            },
+            |v| {
+                for &p in &[0.0, 50.0, 95.0, 100.0] {
+                    let got = percentile(v, p);
+                    let rank = p / 100.0 * (v.len() - 1) as f64;
+                    let (lo, hi) = (v[rank.floor() as usize], v[rank.ceil() as usize]);
+                    let tol = 1e-9 * lo.abs().max(hi.abs()).max(1.0);
+                    if !(lo - tol <= got && got <= hi + tol) {
+                        return Check::Fail(format!("p={p}: {got} outside [{lo}, {hi}]"));
+                    }
+                }
+                if percentile(v, 0.0) != v[0] || percentile(v, 100.0) != *v.last().unwrap() {
+                    return Check::Fail("extremes must be exact".into());
+                }
+                if v.len() % 2 == 1 && percentile(v, 50.0) != v[v.len() / 2] {
+                    return Check::Fail("odd-length median must be the middle element".into());
+                }
+                Check::Pass
+            },
+        );
+    }
+
+    /// The regression this PR fixes: `p > 100` used to panic on an
+    /// out-of-bounds *index* deep in the interpolation while `p < 0`
+    /// silently saturated to the minimum — both now fail the contract
+    /// assert up front.
+    #[test]
+    #[should_panic(expected = "percentile p must be in [0, 100]")]
+    fn percentile_rejects_p_over_100() {
+        percentile(&[1.0, 2.0], 150.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile p must be in [0, 100]")]
+    fn percentile_rejects_negative_p() {
+        percentile(&[1.0, 2.0], -5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile p must be in [0, 100]")]
+    fn percentile_rejects_nan_p() {
+        percentile(&[1.0, 2.0], f64::NAN);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "sorted ascending")]
+    fn percentile_rejects_unsorted_input_in_debug() {
+        percentile(&[3.0, 1.0, 2.0], 50.0);
     }
 }

@@ -268,6 +268,29 @@ fn sigkill_worker_reclaim_resumes_to_identical_output() {
         "resume started from round {partial_round}, so at least that much work was salvaged"
     );
 
+    // The kill can at worst tear the victim's *own* trailing event line;
+    // the log as a whole must stay readable, and replaying it must show
+    // the lease steal exactly once (the reclaim callback fires only in
+    // the winning rename branch).
+    let ev_report = fleet::read_events(store.root());
+    assert_eq!(
+        ev_report.unreadable_files, 0,
+        "every event segment must still open after a SIGKILL"
+    );
+    let ev_metrics = fleet::reduce_report(&ev_report);
+    assert_eq!(
+        ev_metrics.reclaims, 1,
+        "the stale lease must be reclaimed exactly once"
+    );
+    assert!(
+        ev_metrics.resumed.contains(&key),
+        "the event log must record the survivor's resume of {key}"
+    );
+    assert!(
+        ev_metrics.completed.contains(&key),
+        "the event log must record the run completing"
+    );
+
     // The resumed trajectory is the golden one, bit for bit…
     let result = store.load_result(&cfg).expect("completed result");
     let bits = |log: &ota_dsgd::coordinator::TrainLog| {
