@@ -51,7 +51,10 @@ impl AnalogDevice {
         let (g_sp, support) = self.sparsify_step(g);
         let s_tilde = proj.s_tilde();
         let mut x = vec![0f32; s_tilde + 1];
-        proj.apply_sparse_into(&g_sp, &support, &mut x[..s_tilde]);
+        {
+            let _sp = crate::util::prof::span("project");
+            proj.apply_sparse_into(&g_sp, &support, &mut x[..s_tilde]);
+        }
         // Eq. 13: α = P_t / (‖g̃‖² + 1)
         let alpha = p_t / (crate::tensor::norm_sq(&x[..s_tilde]) + 1.0);
         let sa = alpha.sqrt();
@@ -90,7 +93,10 @@ impl AnalogDevice {
         let (g_sp, support) = self.sparsify_step(g);
         let s_tilde = proj.s_tilde();
         let mut x = vec![0f32; s_tilde + 2];
-        proj.apply_sparse_into(&g_sp, &support, &mut x[..s_tilde]);
+        {
+            let _sp = crate::util::prof::span("project");
+            proj.apply_sparse_into(&g_sp, &support, &mut x[..s_tilde]);
+        }
         let mu = crate::tensor::mean(&x[..s_tilde]) as f64;
         // Eq. 22: α = P_t / (‖g̃‖² − (s−3)μ² + 1).
         // ‖g̃ − μ1‖² = ‖g̃‖² − s̃μ², and the μ side-channel adds μ² back,

@@ -14,6 +14,7 @@
 //! to the original execution (asserted in `rust/tests/campaign_cache.rs`).
 
 use crate::config::{CampaignConfig, RunConfig};
+use crate::coordinator::link::RoundDiagnostics;
 use crate::coordinator::{link, LinkScheme, RoundRecord, TrainLog, Trainer};
 use crate::experiments::runner::{self, ExperimentSpec};
 use crate::fleet::events::{EventKind, EventLog};
@@ -238,27 +239,79 @@ pub(crate) fn execute_run(
             Some(snap) => ev.emit(EventKind::Resumed, &key, Some(snap.next_round as u64), &[]),
             None => ev.emit(EventKind::Executed, &key, None, &[]),
         }
-        let ev = ev.clone();
-        let obs_key = key.clone();
         let every = campaign.telemetry.every.max(1);
         let last = cfg.iterations.saturating_sub(1);
+        // Round-level link aggregates, carried from the diag observer
+        // (which the trainer calls first) into the same round's `round`
+        // event payload. Arc<Mutex<..>> only to satisfy the two `Send`
+        // closures — both run on the trainer thread, in order.
+        let link_agg: std::sync::Arc<std::sync::Mutex<Option<(u64, Vec<(&'static str, f64)>)>>> =
+            std::sync::Arc::default();
+        if campaign.telemetry.diagnostics {
+            let dev_ev = ev.clone();
+            let dev_key = key.clone();
+            let agg = std::sync::Arc::clone(&link_agg);
+            trainer.diag_observer = Some(Box::new(move |d: &RoundDiagnostics| {
+                let (tx, _, _, _) = d.participation_counts();
+                let mut fields: Vec<(&'static str, f64)> =
+                    vec![("participating", tx as f64), ("power_headroom", d.power_headroom)];
+                if let Some(v) = d.effective_snr_db {
+                    fields.push(("snr_db", v));
+                }
+                if d.amp_iterations > 0 {
+                    fields.push(("amp_iterations", d.amp_iterations as f64));
+                }
+                if let Some(v) = d.amp_final_residual {
+                    fields.push(("amp_residual", v));
+                }
+                *agg.lock().unwrap() = Some((d.t as u64, fields));
+                if d.t % every == 0 || d.t == last {
+                    for dev in &d.devices {
+                        let mut data: Vec<(&'static str, f64)> = vec![
+                            ("device", dev.device as f64),
+                            ("outcome", dev.outcome.code() as f64),
+                            ("pre_sparsify_norm", dev.pre_sparsify_norm),
+                            ("post_sparsify_norm", dev.post_sparsify_norm),
+                            ("accumulator_norm", dev.accumulator_norm),
+                            ("tx_energy", dev.tx_energy),
+                        ];
+                        if let Some(h) = dev.fading_gain {
+                            data.push(("fading_gain", h));
+                        }
+                        if let Some(b) = dev.payload_bits {
+                            data.push(("payload_bits", b));
+                        }
+                        if let Some(n) = dev.d2d_tx_set {
+                            data.push(("d2d_tx_set", n as f64));
+                        }
+                        dev_ev.emit(EventKind::Device, &dev_key, Some(d.t as u64), &data);
+                    }
+                }
+            }));
+        }
+        let ev = ev.clone();
+        let obs_key = key.clone();
         trainer.round_observer = Some(Box::new(move |r: &RoundRecord| {
             // Cadence-thinned, but the final round always lands so the
             // last gauges (grad norm, accuracy) are current. Wall-clock
             // round_secs is deliberately NOT emitted: `ms` is the only
             // nondeterministic event field (see the replay contract).
             if r.iter % every == 0 || r.iter == last {
-                ev.emit(
-                    EventKind::Round,
-                    &obs_key,
-                    Some(r.iter as u64),
-                    &[
-                        ("grad_norm", r.grad_norm),
-                        ("test_accuracy", r.test_accuracy),
-                        ("train_loss", r.train_loss),
-                        ("p_t", r.p_t),
-                    ],
-                );
+                let mut data: Vec<(&str, f64)> = vec![
+                    ("grad_norm", r.grad_norm),
+                    ("test_accuracy", r.test_accuracy),
+                    ("train_loss", r.train_loss),
+                    ("p_t", r.p_t),
+                ];
+                if let Some(c) = r.consensus_distance {
+                    data.push(("consensus_distance", c));
+                }
+                if let Some((t, fields)) = link_agg.lock().unwrap().take() {
+                    if t == r.iter as u64 {
+                        data.extend(fields);
+                    }
+                }
+                ev.emit(EventKind::Round, &obs_key, Some(r.iter as u64), &data);
             }
         }));
     }

@@ -1155,11 +1155,17 @@ pub struct TelemetryConfig {
     /// round is always emitted). Must be >= 1; raise it for very long runs
     /// to bound event-log growth.
     pub every: usize,
+    /// Link diagnostics probes: per-device `device` events and the
+    /// `snr_db`/`power_headroom`/`participating` round payload (the
+    /// CLI's `--no-diagnostics`). Probes are read-only, so this only
+    /// trades event-log volume for visibility; `enabled = false`
+    /// implies no diagnostics regardless of this flag.
+    pub diagnostics: bool,
 }
 
 impl Default for TelemetryConfig {
     fn default() -> Self {
-        TelemetryConfig { enabled: true, every: 1 }
+        TelemetryConfig { enabled: true, every: 1, diagnostics: true }
     }
 }
 
@@ -1178,6 +1184,7 @@ impl TelemetryConfig {
             match k.as_str() {
                 "enabled" => cfg.enabled = v.as_bool().ok_or_else(|| bad(k, v))?,
                 "every" => cfg.every = v.as_usize().ok_or_else(|| bad(k, v))?,
+                "diagnostics" => cfg.diagnostics = v.as_bool().ok_or_else(|| bad(k, v))?,
                 other => {
                     return Err(ConfigError::Invalid(format!(
                         "unknown [telemetry] key {other:?}"
@@ -1701,6 +1708,11 @@ rho = 0.85
         let t = TelemetryConfig::from_toml("[telemetry]\nenabled = false\nevery = 25\n").unwrap();
         assert!(!t.enabled);
         assert_eq!(t.every, 25);
+        assert!(t.diagnostics, "diagnostics default on");
+        let t =
+            TelemetryConfig::from_toml("[telemetry]\ndiagnostics = false\n").unwrap();
+        assert!(!t.diagnostics);
+        assert!(t.enabled);
         // Absent table = defaults (on, every round).
         assert_eq!(
             TelemetryConfig::from_toml("[run]\ndevices = 4\n").unwrap(),

@@ -10,6 +10,7 @@ use crate::config::RunConfig;
 use crate::tensor::Matf;
 
 use super::super::device::DeviceSet;
+use super::diag::{DeviceDiag, DiagSink, RoundDiagnostics};
 use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
 
 pub struct AnalogLink {
@@ -23,6 +24,29 @@ pub struct AnalogLink {
     ps_mr: Option<AnalogPs>,
     mean_removal_rounds: usize,
     channel_uses: usize,
+    diag: Option<DiagSink>,
+}
+
+/// ‖g + Δ‖ for one device, read-only (f64 accumulation over the existing
+/// buffers — the same value `sparsify_step` sees, computed without running
+/// it). Shared by the static and fading analog probes.
+pub(super) fn pre_sparsify_norm(g: &[f32], accum: &[f32]) -> f64 {
+    debug_assert_eq!(g.len(), accum.len());
+    g.iter()
+        .zip(accum)
+        .map(|(&gi, &ai)| {
+            let v = (gi + ai) as f64;
+            v * v
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// ‖sp_k(g_ec)‖ via the disjoint-support identity
+/// ‖g_sp‖² = ‖g_ec‖² − ‖Δ(t+1)‖² (sparsification keeps the top-k entries
+/// and banks the rest, so the kept and banked parts are orthogonal).
+pub(super) fn post_sparsify_norm(pre_norm: f64, accum_norm_after: f64) -> f64 {
+    (pre_norm * pre_norm - accum_norm_after * accum_norm_after).max(0.0).sqrt()
 }
 
 /// Shared constructor guts for the static *and* fading analog links:
@@ -111,6 +135,7 @@ impl AnalogLink {
             ps_mr,
             mean_removal_rounds: cfg.mean_removal_rounds,
             channel_uses: cfg.channel_uses,
+            diag: None,
         }
     }
 }
@@ -120,31 +145,71 @@ impl LinkScheme for AnalogLink {
         let mean_removal = ctx.t < self.mean_removal_rounds;
         let s = self.channel_uses;
         let p_t = ctx.p_t;
-        let frames: Vec<Vec<f32>> = if mean_removal {
-            let proj = self
-                .ps_mr
-                .as_ref()
-                .expect("mean-removal decoder")
-                .projection();
-            self.devices.encode(|dev, state| {
-                state
-                    .transmit_mean_removed(grads.row(dev), proj, p_t, s)
-                    .x
-            })
-        } else {
-            let proj = self.ps_std.projection();
+        // Probe prologue: ‖g + Δ(t)‖ per device, read before encode mutates
+        // the accumulators. Only runs while a sink is installed.
+        let pre_norms: Option<Vec<f64>> = self.diag.as_ref().map(|_| {
             self.devices
-                .encode(|dev, state| state.transmit(grads.row(dev), proj, p_t).x)
+                .iter()
+                .enumerate()
+                .map(|(dev, state)| pre_sparsify_norm(grads.row(dev), state.accumulator()))
+                .collect()
+        });
+        let frames: Vec<Vec<f32>> = {
+            let _sp = crate::util::prof::span("encode");
+            if mean_removal {
+                let proj = self
+                    .ps_mr
+                    .as_ref()
+                    .expect("mean-removal decoder")
+                    .projection();
+                self.devices.encode(|dev, state| {
+                    state
+                        .transmit_mean_removed(grads.row(dev), proj, p_t, s)
+                        .x
+                })
+            } else {
+                let proj = self.ps_std.projection();
+                self.devices
+                    .encode(|dev, state| state.transmit(grads.row(dev), proj, p_t).x)
+            }
         };
-        let y = self.mac.transmit(&frames);
-        let (ghat, trace) = if mean_removal {
-            self.ps_mr
-                .as_ref()
-                .expect("mean-removal decoder")
-                .decode_mean_removed(&y)
-        } else {
-            self.ps_std.decode(&y)
+        let y = {
+            let _sp = crate::util::prof::span("transmit");
+            self.mac.transmit(&frames)
         };
+        let (ghat, trace) = {
+            let _sp = crate::util::prof::span("decode_amp");
+            if mean_removal {
+                self.ps_mr
+                    .as_ref()
+                    .expect("mean-removal decoder")
+                    .decode_mean_removed(&y)
+            } else {
+                self.ps_std.decode(&y)
+            }
+        };
+        if let (Some(sink), Some(pre)) = (&self.diag, &pre_norms) {
+            let mut d = RoundDiagnostics::new(ctx.t, "A-DSGD", self.devices.len());
+            let mut received = 0.0;
+            let mut max_energy: f64 = 0.0;
+            for (dev, state) in self.devices.iter().enumerate() {
+                let energy = crate::tensor::norm_sq(&frames[dev]);
+                let acc = state.accumulator_norm();
+                let dd: &mut DeviceDiag = &mut d.devices[dev];
+                dd.pre_sparsify_norm = pre[dev];
+                dd.post_sparsify_norm = post_sparsify_norm(pre[dev], acc);
+                dd.accumulator_norm = acc;
+                dd.tx_energy = energy;
+                received += energy;
+                max_energy = max_energy.max(energy);
+            }
+            d.power_budget = p_t;
+            d.power_headroom = p_t - max_energy;
+            d.effective_snr_db = super::diag::snr_db(received, s, self.mac.noise_var);
+            d.amp_iterations = trace.iterations;
+            d.amp_final_residual = trace.tau.last().copied();
+            sink.record(d);
+        }
         // Free the mean-removal projection once past its phase.
         if !mean_removal && self.ps_mr.is_some() {
             self.ps_mr = None;
@@ -173,6 +238,10 @@ impl LinkScheme for AnalogLink {
 
     fn name(&self) -> &'static str {
         "A-DSGD"
+    }
+
+    fn probe(&mut self, sink: Option<DiagSink>) {
+        self.diag = sink;
     }
 
     fn snapshot(&self, w: &mut SnapshotWriter) {
@@ -242,6 +311,45 @@ mod tests {
         // Eq. 12 framing spends exactly P_t per round per device.
         for &p in &link.measured_avg_power() {
             assert!((p - cfg.pbar).abs() < 1e-2 * cfg.pbar, "avg power {p}");
+        }
+    }
+
+    #[test]
+    fn probe_is_read_only_and_reports_the_round() {
+        let d = 500;
+        let cfg = small_cfg();
+        let g = grads(6, d, 21);
+        let run = |probe: bool| {
+            let mut link = AnalogLink::new(&cfg, d);
+            let sink = DiagSink::new();
+            if probe {
+                link.probe(Some(sink.clone()));
+            }
+            let mut ghats = Vec::new();
+            for t in 0..3 {
+                ghats.push(link.round(&RoundCtx { t, p_t: 500.0, deadline: None }, &g).ghat);
+            }
+            (ghats, sink.drain())
+        };
+        let (ghat_off, diags_off) = run(false);
+        let (ghat_on, diags_on) = run(true);
+        // Bit-identical trajectories with probes on or off.
+        assert_eq!(ghat_off, ghat_on);
+        assert!(diags_off.is_empty());
+        assert_eq!(diags_on.len(), 3);
+        for diag in &diags_on {
+            assert_eq!(diag.scheme, "A-DSGD");
+            assert_eq!(diag.devices.len(), 6);
+            assert!(diag.amp_iterations > 0);
+            assert!(diag.amp_final_residual.is_some());
+            assert!(diag.effective_snr_db.is_some());
+            for dd in &diag.devices {
+                // Eq. 12 framing spends exactly P_t → headroom ≈ 0.
+                assert!((dd.tx_energy - 500.0).abs() < 1.0, "{}", dd.tx_energy);
+                assert!(dd.pre_sparsify_norm >= dd.post_sparsify_norm);
+                assert!(dd.post_sparsify_norm > 0.0);
+            }
+            assert!(diag.power_headroom.abs() < 1.0);
         }
     }
 

@@ -49,7 +49,8 @@ use crate::topology::{Graph, MixingMatrix};
 use crate::util::rng::Pcg64;
 
 use super::super::device::DeviceSet;
-use super::analog::analog_parts;
+use super::analog::{analog_parts, post_sparsify_norm, pre_sparsify_norm};
+use super::diag::{DiagSink, RoundDiagnostics};
 use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
 
 pub struct D2dAnalogLink {
@@ -73,6 +74,7 @@ pub struct D2dAnalogLink {
     noise_var: f64,
     meter: PowerMeter,
     dim: usize,
+    diag: Option<DiagSink>,
 }
 
 impl D2dAnalogLink {
@@ -111,6 +113,7 @@ impl D2dAnalogLink {
             noise_var: cfg.noise_var,
             meter: PowerMeter::new(cfg.devices),
             dim,
+            diag: None,
         }
     }
 
@@ -166,26 +169,43 @@ impl LinkScheme for D2dAnalogLink {
         let s = self.channel_uses;
         let p_t = ctx.p_t;
 
+        // Probe prologue: ‖g + Δ(t)‖ per device, read before encode mutates
+        // the accumulators. Only runs while a sink is installed.
+        let pre_norms: Option<Vec<f64>> = self.diag.as_ref().map(|_| {
+            self.devices
+                .iter()
+                .enumerate()
+                .map(|(dev, state)| pre_sparsify_norm(grads.row(dev), state.accumulator()))
+                .collect()
+        });
+
         // 1. Encode: identical closure to the static AnalogLink (blind
         // full-power frames, no per-receiver scaling possible).
-        let frames: Vec<Vec<f32>> = if mean_removal {
-            let proj = self
-                .ps_mr
-                .as_ref()
-                .expect("mean-removal decoder")
-                .projection();
-            self.devices.encode(|dev, state| {
-                state
-                    .transmit_mean_removed(grads.row(dev), proj, p_t, s)
-                    .x
-            })
-        } else {
-            let proj = self.ps_std.projection();
-            self.devices
-                .encode(|dev, state| state.transmit(grads.row(dev), proj, p_t).x)
+        let frames: Vec<Vec<f32>> = {
+            let _sp = crate::util::prof::span("encode");
+            if mean_removal {
+                let proj = self
+                    .ps_mr
+                    .as_ref()
+                    .expect("mean-removal decoder")
+                    .projection();
+                self.devices.encode(|dev, state| {
+                    state
+                        .transmit_mean_removed(grads.row(dev), proj, p_t, s)
+                        .x
+                })
+            } else {
+                let proj = self.ps_std.projection();
+                self.devices
+                    .encode(|dev, state| state.transmit(grads.row(dev), proj, p_t).x)
+            }
         };
-        for (dev, x) in frames.iter().enumerate() {
-            self.meter.add(dev, crate::tensor::norm_sq(x));
+        // One f64 energy per frame: the meter records exactly these values
+        // in exactly this order (hoisted so the probe can reuse them
+        // without re-deriving).
+        let energies: Vec<f64> = frames.iter().map(|x| crate::tensor::norm_sq(x)).collect();
+        for (dev, &e) in energies.iter().enumerate() {
+            self.meter.add(dev, e);
         }
         self.meter.end_round();
 
@@ -211,9 +231,12 @@ impl LinkScheme for D2dAnalogLink {
         let mut cache: std::collections::BTreeMap<Vec<usize>, usize> =
             std::collections::BTreeMap::new();
         let mut decoded: Vec<(Vec<f32>, usize)> = Vec::new();
+        let mut residuals: Vec<Option<f64>> = Vec::new();
         let mut ghat_index = vec![0usize; m];
+        let mut tx_set_sizes = vec![0usize; m];
         for i in 0..m {
             let hood = self.graph.closed_neighborhood(i);
+            tx_set_sizes[i] = hood.len();
             if unit_gains {
                 if let Some(&idx) = cache.get(&hood) {
                     ghat_index[i] = idx;
@@ -225,22 +248,29 @@ impl LinkScheme for D2dAnalogLink {
             // `GaussianMac::transmit`, so the full-neighborhood h ≡ 1 case
             // reproduces the star MAC output bit-for-bit.
             let mut y = vec![0f32; s];
-            for &j in &hood {
-                let h = self.gain(i, j, ctx.t) as f32;
-                for (yi, &xi) in y.iter_mut().zip(&frames[j]) {
-                    *yi += h * xi;
+            {
+                let _sp = crate::util::prof::span("transmit");
+                for &j in &hood {
+                    let h = self.gain(i, j, ctx.t) as f32;
+                    for (yi, &xi) in y.iter_mut().zip(&frames[j]) {
+                        *yi += h * xi;
+                    }
+                }
+                for (yi, &zi) in y.iter_mut().zip(&z) {
+                    *yi += zi;
                 }
             }
-            for (yi, &zi) in y.iter_mut().zip(&z) {
-                *yi += zi;
-            }
-            let (ghat_i, trace) = if mean_removal {
-                decoder.decode_mean_removed(&y)
-            } else {
-                decoder.decode(&y)
+            let (ghat_i, trace) = {
+                let _sp = crate::util::prof::span("decode_amp");
+                if mean_removal {
+                    decoder.decode_mean_removed(&y)
+                } else {
+                    decoder.decode(&y)
+                }
             };
             let idx = decoded.len();
             decoded.push((ghat_i, trace.iterations));
+            residuals.push(trace.tau.last().copied());
             if unit_gains {
                 cache.insert(hood, idx);
             }
@@ -250,19 +280,22 @@ impl LinkScheme for D2dAnalogLink {
 
         // 3. Consensus mixing in deviation form (bit-exact no-op when all
         // replicas agree), then the local optimizer step on ĝ_i.
-        let old = self.replicas.clone();
-        for i in 0..m {
-            let row = self.mixing.row(i);
-            let theta_i = old.row(i);
-            let target = self.replicas.row_mut(i);
-            for c in 0..d {
-                let mut acc = 0.0f64;
-                for &j in self.graph.neighbors(i) {
-                    acc += row[j] * (old.at(j, c) - theta_i[c]) as f64;
+        {
+            let _sp = crate::util::prof::span("consensus");
+            let old = self.replicas.clone();
+            for i in 0..m {
+                let row = self.mixing.row(i);
+                let theta_i = old.row(i);
+                let target = self.replicas.row_mut(i);
+                for c in 0..d {
+                    let mut acc = 0.0f64;
+                    for &j in self.graph.neighbors(i) {
+                        acc += row[j] * (old.at(j, c) - theta_i[c]) as f64;
+                    }
+                    target[c] = theta_i[c] + acc as f32;
                 }
-                target[c] = theta_i[c] + acc as f32;
+                self.optimizers[i].step(target, &decoded[ghat_index[i]].0);
             }
-            self.optimizers[i].step(target, &decoded[ghat_index[i]].0);
         }
 
         // Reported ĝ: the fleet-average decoded gradient (f64-accumulated;
@@ -280,13 +313,54 @@ impl LinkScheme for D2dAnalogLink {
         if !mean_removal && self.ps_mr.is_some() {
             self.ps_mr = None;
         }
+        let consensus = self.consensus_distance();
+
+        if let (Some(sink), Some(pre)) = (&self.diag, &pre_norms) {
+            let mut diag = RoundDiagnostics::new(ctx.t, "d2d-A-DSGD", m);
+            let mut max_energy: f64 = 0.0;
+            // Mean per-receiver received signal energy, Σ_{j∈N̄(i)} h²‖x_j‖²
+            // (edge-gain reads are counter-based and pure — no RNG state
+            // advances here).
+            let mut received_mean = 0.0f64;
+            for (i, state) in self.devices.iter().enumerate() {
+                let acc = state.accumulator_norm();
+                let dd = &mut diag.devices[i];
+                dd.pre_sparsify_norm = pre[i];
+                dd.post_sparsify_norm = post_sparsify_norm(pre[i], acc);
+                dd.accumulator_norm = acc;
+                dd.tx_energy = energies[i];
+                // Satellite: per-receiver transmit-set size (closed
+                // neighborhood — everyone this receiver heard, incl. self).
+                dd.d2d_tx_set = Some(tx_set_sizes[i]);
+                max_energy = max_energy.max(energies[i]);
+                let mut received_i = 0.0f64;
+                for &j in &self.graph.closed_neighborhood(i) {
+                    let h = self.gain(i, j, ctx.t);
+                    received_i += h * h * energies[j];
+                }
+                received_mean += received_i / m as f64;
+            }
+            diag.power_budget = p_t;
+            diag.power_headroom = p_t - max_energy;
+            diag.effective_snr_db = super::diag::snr_db(received_mean, s, self.noise_var);
+            diag.amp_iterations = amp_iterations;
+            // Residual of the slowest decode (the one amp_iterations counts).
+            diag.amp_final_residual = decoded
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, &(_, it))| it)
+                .and_then(|(idx, _)| residuals[idx]);
+            diag.consensus_distance = Some(consensus);
+            sink.record(diag);
+        }
+
         LinkRound {
             ghat,
             telemetry: RoundTelemetry {
                 bits_per_device: 0.0,
                 amp_iterations,
                 participation: None,
-                consensus_distance: Some(self.consensus_distance()),
+                consensus_distance: Some(consensus),
             },
         }
     }
@@ -301,6 +375,10 @@ impl LinkScheme for D2dAnalogLink {
 
     fn name(&self) -> &'static str {
         "d2d-A-DSGD"
+    }
+
+    fn probe(&mut self, sink: Option<DiagSink>) {
+        self.diag = sink;
     }
 
     fn replicas(&self) -> Option<&Matf> {
@@ -531,6 +609,55 @@ mod tests {
             out.telemetry.consensus_distance.unwrap() > 0.0,
             "distinct per-receiver decodes must leave the replicas apart"
         );
+    }
+
+    #[test]
+    fn probe_is_read_only_and_reports_neighborhoods() {
+        let d = 300;
+        let cfg = RunConfig {
+            fading: FadingDist::Rayleigh,
+            ..small_cfg(GraphFamily::Ring)
+        };
+        let g = grads(6, d, 17);
+
+        let mut plain = D2dAnalogLink::new(&cfg, d);
+        let mut probed = D2dAnalogLink::new(&cfg, d);
+        let sink = DiagSink::new();
+        probed.probe(Some(sink.clone()));
+
+        for t in 0..3 {
+            let a = plain.round(&ctx(t), &g);
+            let b = probed.round(&ctx(t), &g);
+            assert_eq!(a.ghat, b.ghat, "probe must not perturb the round (t={t})");
+            assert_eq!(
+                a.telemetry.consensus_distance,
+                b.telemetry.consensus_distance
+            );
+        }
+
+        let diags = sink.drain();
+        assert_eq!(diags.len(), 3);
+        for (t, diag) in diags.iter().enumerate() {
+            assert_eq!(diag.t, t);
+            assert_eq!(diag.scheme, "d2d-A-DSGD");
+            assert_eq!(diag.devices.len(), 6);
+            assert_eq!(diag.power_budget, 500.0);
+            // Blind full-power encode spends exactly P_t (up to the
+            // projection's f32 rounding), so headroom hugs zero.
+            assert!(diag.power_headroom.abs() < 1e-2 * 500.0);
+            assert!(diag.effective_snr_db.is_some(), "noisy link reports SNR");
+            assert!(diag.amp_iterations > 0);
+            assert!(diag.amp_final_residual.is_some());
+            assert!(diag.consensus_distance.unwrap() > 0.0);
+            for dd in &diag.devices {
+                // Every ring receiver hears itself plus two neighbors.
+                assert_eq!(dd.d2d_tx_set, Some(3));
+                assert!((dd.tx_energy - 500.0).abs() < 1e-2 * 500.0);
+                assert!(dd.pre_sparsify_norm >= dd.post_sparsify_norm);
+                assert!(dd.post_sparsify_norm > 0.0);
+                assert!(dd.fading_gain.is_none(), "per-edge gains have no single h_m");
+            }
+        }
     }
 
     #[test]

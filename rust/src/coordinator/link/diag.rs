@@ -1,0 +1,256 @@
+//! Observe-only link diagnostics: what every scheme can tell you about a
+//! round beyond the ĝ it returns.
+//!
+//! A [`DiagSink`] is installed through the default-no-op
+//! [`LinkScheme::probe`] hook. Every scheme computes a
+//! [`RoundDiagnostics`] per round **only while a sink is installed**, and
+//! computes it strictly read-only: extra f64 norms over buffers the round
+//! already produced, no new RNG draws, no change to any f32 operation
+//! order. That construction — not a test — is why the golden trajectories
+//! and `summary.csv` are byte-identical with probes on or off; the tests
+//! in `rust/tests/link_diagnostics.rs` merely pin it.
+//!
+//! Diagnostics never enter a run's content-address and are never
+//! snapshotted: a resumed link simply starts probing again from the resume
+//! round. Wall-clock timing lives in [`crate::util::prof`], not here —
+//! everything in this module is deterministic per `(config, seed, t)`.
+//!
+//! [`LinkScheme::probe`]: super::LinkScheme::probe
+
+use std::sync::{Arc, Mutex};
+
+/// Why a device did or did not reach the channel this round. Mirrors the
+/// classification order of `FadingAnalogLink::roll_call`; the numeric
+/// codes are the wire encoding used by `device` telemetry events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceOutcome {
+    /// The device's frame hit the channel.
+    Transmitting,
+    /// Excluded by the round-level participation policy.
+    NotScheduled,
+    /// Silenced by the CSI gain threshold (truncated channel inversion).
+    SilencedLowGain,
+    /// Dropped for missing the round deadline.
+    DroppedStraggler,
+}
+
+impl DeviceOutcome {
+    /// Stable numeric code for event payloads (payloads are f64-only).
+    pub fn code(&self) -> u8 {
+        match self {
+            DeviceOutcome::Transmitting => 0,
+            DeviceOutcome::NotScheduled => 1,
+            DeviceOutcome::SilencedLowGain => 2,
+            DeviceOutcome::DroppedStraggler => 3,
+        }
+    }
+
+    /// Decode a wire code (`None` for codes this build does not know).
+    pub fn from_code(code: u8) -> Option<DeviceOutcome> {
+        match code {
+            0 => Some(DeviceOutcome::Transmitting),
+            1 => Some(DeviceOutcome::NotScheduled),
+            2 => Some(DeviceOutcome::SilencedLowGain),
+            3 => Some(DeviceOutcome::DroppedStraggler),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceOutcome::Transmitting => "transmitting",
+            DeviceOutcome::NotScheduled => "not-scheduled",
+            DeviceOutcome::SilencedLowGain => "silenced-low-gain",
+            DeviceOutcome::DroppedStraggler => "dropped-straggler",
+        }
+    }
+}
+
+/// One device's view of one round.
+#[derive(Clone, Debug)]
+pub struct DeviceDiag {
+    /// Device index m (0-based).
+    pub device: usize,
+    /// ‖g_m + Δ_m(t)‖ — the error-compensated gradient entering
+    /// sparsification (for schemes without error accumulation, ‖g_m‖).
+    pub pre_sparsify_norm: f64,
+    /// ‖sp_k(g_m + Δ_m(t))‖ — what survived sparsification. Computed via
+    /// the disjoint-support identity ‖g_sp‖² = ‖g_ec‖² − ‖Δ(t+1)‖² for
+    /// analog schemes; for digital schemes, the norm of the quantized
+    /// reconstruction.
+    pub post_sparsify_norm: f64,
+    /// ‖Δ_m(t+1)‖ — the residual banked for later rounds.
+    pub accumulator_norm: f64,
+    /// Fading gain h_m(t). `None` for links without a fading process.
+    pub fading_gain: Option<f64>,
+    /// ‖x_m(t)‖² actually radiated this round (0 for silent devices;
+    /// `ctx.p_t` for digital transmitters, which spend the full budget).
+    pub tx_energy: f64,
+    /// Where this device went this round.
+    pub outcome: DeviceOutcome,
+    /// Digital links: this device's actual payload size in bits.
+    pub payload_bits: Option<f64>,
+    /// D2D links: how many devices (incl. itself) this receiver heard —
+    /// its closed-neighborhood transmit-set size.
+    pub d2d_tx_set: Option<usize>,
+}
+
+impl DeviceDiag {
+    /// A fresh record for device `m` with every optional field absent and
+    /// the default outcome `Transmitting` (schemes overwrite as needed).
+    pub fn new(device: usize) -> DeviceDiag {
+        DeviceDiag {
+            device,
+            pre_sparsify_norm: 0.0,
+            post_sparsify_norm: 0.0,
+            accumulator_norm: 0.0,
+            fading_gain: None,
+            tx_energy: 0.0,
+            outcome: DeviceOutcome::Transmitting,
+            payload_bits: None,
+            d2d_tx_set: None,
+        }
+    }
+}
+
+/// Everything one link round can report about itself.
+#[derive(Clone, Debug, Default)]
+pub struct RoundDiagnostics {
+    /// Iteration index t.
+    pub t: usize,
+    /// The producing scheme's [`super::LinkScheme::name`].
+    pub scheme: &'static str,
+    /// Per-device records, in device order, length M.
+    pub devices: Vec<DeviceDiag>,
+    /// The round's power budget P_t (Eq. 6 per-round allocation).
+    pub power_budget: f64,
+    /// Eq. 6 headroom gauge: P_t − max_m ‖x_m(t)‖². Positive means every
+    /// device radiated under budget this round.
+    pub power_headroom: f64,
+    /// Effective receive SNR in dB: per-channel-use received signal power
+    /// (Σ_m ‖h_m·x_m‖²/s) over the MAC noise variance. `None` when the
+    /// link has no noise model (error-free) or nobody transmitted.
+    pub effective_snr_db: Option<f64>,
+    /// AMP iterations the decode ran (max over receivers for D2D).
+    pub amp_iterations: usize,
+    /// Final AMP state-evolution residual τ from the decode trace.
+    pub amp_final_residual: Option<f64>,
+    /// Digital links: the round's capacity budget R_t in bits.
+    pub quant_budget_bits: Option<f64>,
+    /// Decentralized links: RMS replica disagreement after mixing.
+    pub consensus_distance: Option<f64>,
+}
+
+impl RoundDiagnostics {
+    pub fn new(t: usize, scheme: &'static str, devices: usize) -> RoundDiagnostics {
+        RoundDiagnostics {
+            t,
+            scheme,
+            devices: (0..devices).map(DeviceDiag::new).collect(),
+            ..RoundDiagnostics::default()
+        }
+    }
+
+    /// Participation counts implied by the per-device outcomes.
+    pub fn participation_counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0usize, 0usize, 0usize, 0usize);
+        for d in &self.devices {
+            match d.outcome {
+                DeviceOutcome::Transmitting => c.0 += 1,
+                DeviceOutcome::NotScheduled => c.1 += 1,
+                DeviceOutcome::SilencedLowGain => c.2 += 1,
+                DeviceOutcome::DroppedStraggler => c.3 += 1,
+            }
+        }
+        c
+    }
+}
+
+/// A shared, clonable buffer the trainer hands to the link; the link
+/// pushes one [`RoundDiagnostics`] per round, the trainer drains it after
+/// each round and forwards to its `diag_observer`. Plain `Arc<Mutex<_>>`
+/// because production use is strictly single-producer single-consumer
+/// within one round — the lock is never contended, it just keeps the type
+/// `Send + Sync` without unsafe.
+#[derive(Clone, Default)]
+pub struct DiagSink {
+    inner: Arc<Mutex<Vec<RoundDiagnostics>>>,
+}
+
+impl DiagSink {
+    pub fn new() -> DiagSink {
+        DiagSink::default()
+    }
+
+    /// Append one round's diagnostics.
+    pub fn record(&self, d: RoundDiagnostics) {
+        self.inner.lock().unwrap().push(d);
+    }
+
+    /// Take everything recorded since the last drain.
+    pub fn drain(&self) -> Vec<RoundDiagnostics> {
+        std::mem::take(&mut *self.inner.lock().unwrap())
+    }
+}
+
+/// Effective receive SNR in dB from summed received signal energy over `s`
+/// channel uses with per-use noise variance `noise_var`. Returns `None`
+/// when nothing was received or the link is noiseless.
+pub fn snr_db(received_energy: f64, s: usize, noise_var: f64) -> Option<f64> {
+    if received_energy <= 0.0 || noise_var <= 0.0 || s == 0 {
+        return None;
+    }
+    let per_use = received_energy / s as f64;
+    Some(10.0 * (per_use / noise_var).log10())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_codes_roundtrip() {
+        for o in [
+            DeviceOutcome::Transmitting,
+            DeviceOutcome::NotScheduled,
+            DeviceOutcome::SilencedLowGain,
+            DeviceOutcome::DroppedStraggler,
+        ] {
+            assert_eq!(DeviceOutcome::from_code(o.code()), Some(o));
+        }
+        assert_eq!(DeviceOutcome::from_code(99), None);
+    }
+
+    #[test]
+    fn sink_drains_in_order_and_empties() {
+        let sink = DiagSink::new();
+        sink.record(RoundDiagnostics::new(0, "x", 2));
+        sink.record(RoundDiagnostics::new(1, "x", 2));
+        let got = sink.drain();
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].t, got[1].t), (0, 1));
+        assert!(sink.drain().is_empty());
+        // Clones share the same buffer.
+        let other = sink.clone();
+        other.record(RoundDiagnostics::new(7, "x", 1));
+        assert_eq!(sink.drain().len(), 1);
+    }
+
+    #[test]
+    fn participation_counts_sum_to_m() {
+        let mut d = RoundDiagnostics::new(3, "fading-A-DSGD", 4);
+        d.devices[1].outcome = DeviceOutcome::NotScheduled;
+        d.devices[2].outcome = DeviceOutcome::SilencedLowGain;
+        d.devices[3].outcome = DeviceOutcome::DroppedStraggler;
+        assert_eq!(d.participation_counts(), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn snr_db_behaves() {
+        // 100 units over 10 uses, unit noise → 10 per use → 10 dB.
+        let v = snr_db(100.0, 10, 1.0).unwrap();
+        assert!((v - 10.0).abs() < 1e-12, "{v}");
+        assert_eq!(snr_db(0.0, 10, 1.0), None);
+        assert_eq!(snr_db(5.0, 10, 0.0), None);
+    }
+}

@@ -26,6 +26,7 @@ use crate::tensor::Matf;
 
 use super::super::device::DeviceSet;
 use super::super::participation::ParticipationSelector;
+use super::diag::{DeviceOutcome, DiagSink, RoundDiagnostics};
 use super::{LinkRound, LinkScheme, ParticipationStats, RoundCtx, RoundTelemetry};
 
 pub struct DigitalLink {
@@ -38,6 +39,7 @@ pub struct DigitalLink {
     channel_uses: usize,
     noise_var: f64,
     dim: usize,
+    diag: Option<DiagSink>,
 }
 
 impl DigitalLink {
@@ -61,7 +63,62 @@ impl DigitalLink {
             channel_uses: cfg.channel_uses,
             noise_var: cfg.noise_var,
             dim,
+            diag: None,
         }
+    }
+
+    /// Probe epilogue shared by both round paths, read-only. `payloads[m]`
+    /// is `None` for silent devices; outcome defaults to `Transmitting`
+    /// when no per-device classification was run (the full-policy path).
+    fn record_diag(
+        &self,
+        ctx: &RoundCtx,
+        grads: &Matf,
+        budget: f64,
+        payloads: &[Option<&DigitalPayload>],
+        scheduled: Option<&[bool]>,
+    ) {
+        let Some(sink) = &self.diag else { return };
+        let m = self.devices.len();
+        let mut d = RoundDiagnostics::new(ctx.t, "digital", m);
+        let mut transmitting = 0usize;
+        for (dev, state) in self.devices.iter().enumerate() {
+            let dd = &mut d.devices[dev];
+            // D-DSGD compensates with its error accumulator before
+            // quantizing; the baselines quantize the raw gradient.
+            dd.pre_sparsify_norm = match state.accumulator() {
+                Some(acc) => super::analog::pre_sparsify_norm(grads.row(dev), acc),
+                None => crate::tensor::norm(grads.row(dev)),
+            };
+            dd.accumulator_norm = state.accumulator_norm();
+            match payloads[dev] {
+                Some(p) => {
+                    transmitting += 1;
+                    // For digital schemes "what survived compression" is
+                    // the norm of the quantized reconstruction.
+                    dd.post_sparsify_norm = crate::tensor::norm(&p.reconstruction);
+                    dd.payload_bits = Some(p.bits);
+                    // A digital transmitter spends exactly P_t (Eq. 6).
+                    dd.tx_energy = ctx.p_t;
+                    dd.outcome = DeviceOutcome::Transmitting;
+                }
+                None => {
+                    dd.payload_bits = None;
+                    dd.outcome = match scheduled {
+                        Some(s) if !s[dev] => DeviceOutcome::NotScheduled,
+                        _ => DeviceOutcome::Transmitting,
+                    };
+                }
+            }
+        }
+        d.power_budget = ctx.p_t;
+        // Digital devices spend the full budget whenever they transmit, so
+        // headroom is 0 with any transmitter and P_t on silent rounds.
+        d.power_headroom = if transmitting > 0 { 0.0 } else { ctx.p_t };
+        d.quant_budget_bits = Some(budget);
+        d.effective_snr_db =
+            super::diag::snr_db(transmitting as f64 * ctx.p_t, self.channel_uses, self.noise_var);
+        sink.record(d);
     }
 }
 
@@ -75,9 +132,11 @@ impl LinkScheme for DigitalLink {
         if self.selector.policy() == ParticipationPolicy::Full {
             // The original always-on path, untouched (and untouchable: the
             // seed golden pins it).
-            let payloads: Vec<DigitalPayload> = self
-                .devices
-                .encode(|dev, state| state.transmit(grads.row(dev), budget));
+            let payloads: Vec<DigitalPayload> = {
+                let _sp = crate::util::prof::span("encode");
+                self.devices
+                    .encode(|dev, state| state.transmit(grads.row(dev), budget))
+            };
             // Record what the compressors actually spent — the budget is a
             // bound, not an attainment; undershoot must be visible in logs.
             let bits = payloads.iter().map(|p| p.bits).fold(0.0, f64::max);
@@ -86,6 +145,8 @@ impl LinkScheme for DigitalLink {
                 "compressor overshot the capacity budget: {bits} > {budget} bits"
             );
             self.meter.add_uniform_round(ctx.p_t);
+            let refs: Vec<Option<&DigitalPayload>> = payloads.iter().map(Some).collect();
+            self.record_diag(ctx, grads, budget, &refs, None);
             return LinkRound {
                 ghat: aggregate(&payloads, self.dim),
                 telemetry: RoundTelemetry {
@@ -100,14 +161,17 @@ impl LinkScheme for DigitalLink {
         // Partial participation: no CSI in the digital pipe, so selection
         // sees unit gains (gain-threshold degenerates to full).
         let scheduled = self.selector.select(ctx.t, &vec![1.0; m]);
-        let frames: Vec<Option<DigitalPayload>> = self.devices.encode(|dev, state| {
-            if scheduled[dev] {
-                Some(state.transmit(grads.row(dev), budget))
-            } else {
-                state.absorb(grads.row(dev));
-                None
-            }
-        });
+        let frames: Vec<Option<DigitalPayload>> = {
+            let _sp = crate::util::prof::span("encode");
+            self.devices.encode(|dev, state| {
+                if scheduled[dev] {
+                    Some(state.transmit(grads.row(dev), budget))
+                } else {
+                    state.absorb(grads.row(dev));
+                    None
+                }
+            })
+        };
         let mut stats = ParticipationStats::default();
         for (dev, frame) in frames.iter().enumerate() {
             if frame.is_some() {
@@ -118,6 +182,8 @@ impl LinkScheme for DigitalLink {
             }
         }
         self.meter.end_round();
+        let refs: Vec<Option<&DigitalPayload>> = frames.iter().map(|f| f.as_ref()).collect();
+        self.record_diag(ctx, grads, budget, &refs, Some(&scheduled));
         let payloads: Vec<DigitalPayload> = frames.into_iter().flatten().collect();
         let bits = payloads.iter().map(|p| p.bits).fold(0.0, f64::max);
         assert!(
@@ -145,6 +211,10 @@ impl LinkScheme for DigitalLink {
 
     fn name(&self) -> &'static str {
         "digital"
+    }
+
+    fn probe(&mut self, sink: Option<DiagSink>) {
+        self.diag = sink;
     }
 
     /// Per device: the D-DSGD error accumulator (absent for the
@@ -328,6 +398,44 @@ mod tests {
         let mut link = DigitalLink::new(&cfg, d);
         link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(4, d));
         assert_eq!(link.accumulator_norm(), 0.0);
+    }
+
+    #[test]
+    fn probe_reports_bits_budget_and_outcomes() {
+        let d = 256;
+        let cfg = RunConfig {
+            participation: crate::config::ParticipationPolicy::UniformK(2),
+            ..link_cfg(Scheme::DDsgd)
+        };
+        let mut link = DigitalLink::new(&cfg, d);
+        let sink = DiagSink::new();
+        link.probe(Some(sink.clone()));
+        link.round(&RoundCtx { t: 0, p_t: 500.0, deadline: None }, &grads(4, d));
+        let diags = sink.drain();
+        assert_eq!(diags.len(), 1);
+        let diag = &diags[0];
+        let budget = capacity_bits(128, 4, 500.0, cfg.noise_var);
+        assert_eq!(diag.quant_budget_bits, Some(budget));
+        assert!(diag.effective_snr_db.is_some());
+        let (tx, ns, _, _) = diag.participation_counts();
+        assert_eq!((tx, ns), (2, 2));
+        for dd in &diag.devices {
+            match dd.outcome {
+                DeviceOutcome::Transmitting => {
+                    let bits = dd.payload_bits.expect("transmitters report payload bits");
+                    assert!(bits > 0.0 && bits <= budget, "{bits} vs {budget}");
+                    // Digital transmitters spend the whole budget: no headroom.
+                    assert_eq!(dd.tx_energy, 500.0);
+                    assert!(dd.post_sparsify_norm > 0.0);
+                }
+                _ => {
+                    assert_eq!(dd.payload_bits, None);
+                    assert_eq!(dd.tx_energy, 0.0);
+                }
+            }
+            assert!(dd.pre_sparsify_norm > 0.0);
+        }
+        assert_eq!(diag.power_headroom, 0.0);
     }
 
     #[test]

@@ -4,32 +4,51 @@
 use crate::campaign::snapshot::{SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::tensor::Matf;
 
+use super::diag::{DiagSink, RoundDiagnostics};
 use super::{LinkRound, LinkScheme, RoundCtx, RoundTelemetry};
 
 pub struct ErrorFreeLink {
     devices: usize,
     dim: usize,
+    diag: Option<DiagSink>,
 }
 
 impl ErrorFreeLink {
     pub fn new(devices: usize, dim: usize) -> ErrorFreeLink {
         assert!(devices > 0);
-        ErrorFreeLink { devices, dim }
+        ErrorFreeLink { devices, dim, diag: None }
     }
 }
 
 impl LinkScheme for ErrorFreeLink {
-    fn round(&mut self, _ctx: &RoundCtx, grads: &Matf) -> LinkRound {
+    fn round(&mut self, ctx: &RoundCtx, grads: &Matf) -> LinkRound {
         debug_assert_eq!(grads.rows, self.devices);
         debug_assert_eq!(grads.cols, self.dim);
         let mut avg = vec![0f32; self.dim];
         for dev in 0..self.devices {
             crate::tensor::axpy(1.0 / self.devices as f32, grads.row(dev), &mut avg);
         }
+        if let Some(sink) = &self.diag {
+            // Nothing is sparsified and nothing radiates: pre == post, zero
+            // energy, full budget headroom, no noise → no SNR.
+            let mut d = RoundDiagnostics::new(ctx.t, "error-free", self.devices);
+            for dev in 0..self.devices {
+                let n = crate::tensor::norm(grads.row(dev));
+                d.devices[dev].pre_sparsify_norm = n;
+                d.devices[dev].post_sparsify_norm = n;
+            }
+            d.power_budget = ctx.p_t;
+            d.power_headroom = ctx.p_t;
+            sink.record(d);
+        }
         LinkRound {
             ghat: avg,
             telemetry: RoundTelemetry::default(),
         }
+    }
+
+    fn probe(&mut self, sink: Option<DiagSink>) {
+        self.diag = sink;
     }
 
     fn accumulator_norm(&self) -> f64 {

@@ -40,6 +40,8 @@ use crate::tensor::Matf;
 use super::super::device::DeviceSet;
 use super::super::participation::ParticipationSelector;
 use super::analog::{analog_parts, restore_analog_state, snapshot_analog_state};
+use super::analog::{post_sparsify_norm, pre_sparsify_norm};
+use super::diag::{DeviceOutcome, DiagSink, RoundDiagnostics};
 use super::{LinkRound, LinkScheme, ParticipationStats, RoundCtx, RoundTelemetry};
 
 pub struct FadingAnalogLink {
@@ -56,6 +58,7 @@ pub struct FadingAnalogLink {
     latency: LatencyModel,
     csi_threshold: f64,
     dim: usize,
+    diag: Option<DiagSink>,
 }
 
 impl FadingAnalogLink {
@@ -92,34 +95,49 @@ impl FadingAnalogLink {
             latency: LatencyModel::new(cfg.latency_mean_secs, cfg.seed ^ 0x1A7),
             csi_threshold: cfg.csi_threshold,
             dim,
+            diag: None,
         }
     }
 
-    /// Classify every device for this round. Returns (active mask, stats).
-    fn roll_call(&self, ctx: &RoundCtx, gains: &[f64]) -> (Vec<bool>, ParticipationStats) {
+    /// Classify every device for this round. Returns (active mask, stats,
+    /// per-device outcome). The outcome vector is the *reason* record the
+    /// diagnostics probe reports — derived in the same pass, same
+    /// conditions, same order as the mask and counts, so the three can
+    /// never disagree.
+    fn roll_call(
+        &self,
+        ctx: &RoundCtx,
+        gains: &[f64],
+    ) -> (Vec<bool>, ParticipationStats, Vec<DeviceOutcome>) {
         let scheduled = self.selector.select(ctx.t, gains);
         let mut active = vec![false; gains.len()];
+        let mut outcomes = Vec::with_capacity(gains.len());
         let mut stats = ParticipationStats::default();
         for (dev, &h) in gains.iter().enumerate() {
-            if !scheduled[dev] {
+            let outcome = if !scheduled[dev] {
                 stats.not_scheduled += 1;
+                DeviceOutcome::NotScheduled
             } else if self.csi && h <= self.csi_threshold {
                 // `<=` (not `<`): with a zero threshold an exactly-zero
                 // gain must still be silenced, or the inversion scale
                 // ρ_t/h_m would be 0/0 = NaN. Active CSI devices therefore
                 // always have h > threshold ≥ 0, so ρ_t/h_m is finite.
                 stats.silenced_low_gain += 1;
+                DeviceOutcome::SilencedLowGain
             } else if ctx
                 .deadline
                 .is_some_and(|dl| self.latency.latency(dev, ctx.t) > dl)
             {
                 stats.dropped_stragglers += 1;
+                DeviceOutcome::DroppedStraggler
             } else {
                 active[dev] = true;
                 stats.transmitting += 1;
-            }
+                DeviceOutcome::Transmitting
+            };
+            outcomes.push(outcome);
         }
-        (active, stats)
+        (active, stats, outcomes)
     }
 }
 
@@ -128,7 +146,18 @@ impl LinkScheme for FadingAnalogLink {
         let m = self.devices.len();
         debug_assert_eq!(grads.rows, m);
         let gains = self.fading.gains_for_round(m, ctx.t);
-        let (active, stats) = self.roll_call(ctx, &gains);
+        let (active, stats, outcomes) = self.roll_call(ctx, &gains);
+        // Probe prologue: ‖g + Δ(t)‖ per device before encode mutates the
+        // accumulators (silent devices bank g + Δ, so pre-norms are
+        // meaningful for every outcome). Only runs while a sink is
+        // installed.
+        let pre_norms: Option<Vec<f64>> = self.diag.as_ref().map(|_| {
+            self.devices
+                .iter()
+                .enumerate()
+                .map(|(dev, state)| pre_sparsify_norm(grads.row(dev), state.accumulator()))
+                .collect()
+        });
 
         // Truncated inversion: every transmitting device pre-scales by
         // ρ_t/h_m so the channel delivers a coherent ρ_t-scaled sum; ρ_t is
@@ -170,48 +199,94 @@ impl LinkScheme for FadingAnalogLink {
         };
         let active_ref = &active;
         let scales_ref = &scales;
-        let frames: Vec<Option<Vec<f32>>> = self.devices.encode(|dev, state| {
-            if !active_ref[dev] {
-                state.absorb(grads.row(dev));
-                return None;
-            }
-            let mut x = if mean_removal {
-                state
-                    .transmit_mean_removed(grads.row(dev), proj, p_t, s)
-                    .x
-            } else {
-                state.transmit(grads.row(dev), proj, p_t).x
-            };
-            let scale = scales_ref[dev];
-            if scale != 1.0 {
-                for v in x.iter_mut() {
-                    *v *= scale;
+        let frames: Vec<Option<Vec<f32>>> = {
+            let _sp = crate::util::prof::span("encode");
+            self.devices.encode(|dev, state| {
+                if !active_ref[dev] {
+                    state.absorb(grads.row(dev));
+                    return None;
                 }
-            }
-            Some(x)
-        });
+                let mut x = if mean_removal {
+                    state
+                        .transmit_mean_removed(grads.row(dev), proj, p_t, s)
+                        .x
+                } else {
+                    state.transmit(grads.row(dev), proj, p_t).x
+                };
+                let scale = scales_ref[dev];
+                if scale != 1.0 {
+                    for v in x.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+                Some(x)
+            })
+        };
         let inputs: Vec<Vec<f32>> = frames
             .into_iter()
             .map(|f| f.unwrap_or_else(|| vec![0.0f32; s]))
             .collect();
 
-        let y = self.mac.transmit_faded(&inputs, &gains);
+        let y = {
+            let _sp = crate::util::prof::span("transmit");
+            self.mac.transmit_faded(&inputs, &gains)
+        };
 
         // With nobody transmitting, y is pure noise — decoding it would
         // amplify garbage through the 1/y_s normalization. Return ĝ = 0.
-        let (ghat, amp_iterations) = if stats.transmitting == 0 {
-            (vec![0.0f32; self.dim], 0)
+        let _decode_sp = crate::util::prof::span("decode_amp");
+        let (ghat, amp_iterations, amp_residual) = if stats.transmitting == 0 {
+            (vec![0.0f32; self.dim], 0, None)
         } else if mean_removal {
             let (g, trace) = self
                 .ps_mr
                 .as_ref()
                 .expect("mean-removal decoder")
                 .decode_mean_removed(&y);
-            (g, trace.iterations)
+            (g, trace.iterations, trace.tau.last().copied())
         } else {
             let (g, trace) = self.ps_std.decode(&y);
-            (g, trace.iterations)
+            (g, trace.iterations, trace.tau.last().copied())
         };
+        drop(_decode_sp);
+
+        if let (Some(sink), Some(pre)) = (&self.diag, &pre_norms) {
+            let mut d = RoundDiagnostics::new(ctx.t, self.name(), m);
+            let mut received = 0.0;
+            let mut max_energy: f64 = 0.0;
+            for (dev, state) in self.devices.iter().enumerate() {
+                let energy = if active[dev] {
+                    crate::tensor::norm_sq(&inputs[dev])
+                } else {
+                    0.0
+                };
+                let acc = state.accumulator_norm();
+                let dd = &mut d.devices[dev];
+                dd.pre_sparsify_norm = pre[dev];
+                // A silent device banks everything: nothing survived
+                // sparsification because sparsification never ran.
+                dd.post_sparsify_norm = if active[dev] {
+                    post_sparsify_norm(pre[dev], acc)
+                } else {
+                    0.0
+                };
+                dd.accumulator_norm = acc;
+                dd.fading_gain = Some(gains[dev]);
+                dd.tx_energy = energy;
+                dd.outcome = outcomes[dev];
+                // The channel multiplies device m's frame by h_m, so the
+                // received signal energy sums h²·‖x‖².
+                received += gains[dev] * gains[dev] * energy;
+                max_energy = max_energy.max(energy);
+            }
+            d.power_budget = p_t;
+            d.power_headroom = p_t - max_energy;
+            d.effective_snr_db = super::diag::snr_db(received, s, self.mac.noise_var);
+            d.amp_iterations = amp_iterations;
+            d.amp_final_residual = amp_residual;
+            sink.record(d);
+        }
+
         // Free the mean-removal projection once past its phase.
         if !mean_removal && self.ps_mr.is_some() {
             self.ps_mr = None;
@@ -241,6 +316,10 @@ impl LinkScheme for FadingAnalogLink {
         } else {
             "blind-A-DSGD"
         }
+    }
+
+    fn probe(&mut self, sink: Option<DiagSink>) {
+        self.diag = sink;
     }
 
     /// Same shape as the static analog link: accumulators + MAC state. The
@@ -391,6 +470,62 @@ mod tests {
         assert_eq!(link.measured_avg_power(), vec![0.0; 6]);
         // The silent round still banked gradients in the accumulators.
         assert!(link.accumulator_norm() > 0.0);
+    }
+
+    #[test]
+    fn probe_reports_outcomes_gains_and_headroom() {
+        let d = 400;
+        let cfg = RunConfig {
+            fading: FadingDist::Uniform(0.0, 1.0),
+            csi_threshold: 0.5,
+            ..small_cfg()
+        };
+        let g = grads(6, d, 31);
+        let run = |probe: bool| {
+            let mut link = FadingAnalogLink::new(&cfg, d, true);
+            let sink = DiagSink::new();
+            if probe {
+                link.probe(Some(sink.clone()));
+            }
+            let mut ghats = Vec::new();
+            for t in 0..4 {
+                ghats.push(link.round(&ctx(t, 500.0), &g).ghat);
+            }
+            (ghats, sink.drain())
+        };
+        let (ghat_off, _) = run(false);
+        let (ghat_on, diags) = run(true);
+        assert_eq!(ghat_off, ghat_on, "probes must not perturb the trajectory");
+        assert_eq!(diags.len(), 4);
+        for diag in &diags {
+            assert_eq!(diag.scheme, "fading-A-DSGD");
+            let (tx, ns, sil, dr) = diag.participation_counts();
+            assert_eq!(tx + ns + sil + dr, 6, "outcomes partition the fleet");
+            for dd in &diag.devices {
+                let h = dd.fading_gain.expect("fading link reports h_m(t)");
+                match dd.outcome {
+                    DeviceOutcome::SilencedLowGain => {
+                        assert!(h <= 0.5, "silenced device with h={h}");
+                        assert_eq!(dd.tx_energy, 0.0);
+                        assert_eq!(dd.post_sparsify_norm, 0.0);
+                        // A silent round banks everything: Δ(t+1) ≥ ‖g‖-ish.
+                        assert!(dd.accumulator_norm > 0.0);
+                    }
+                    DeviceOutcome::Transmitting => {
+                        assert!(h > 0.5, "transmitting device with h={h}");
+                        // Truncated inversion keeps ‖x‖² ≤ P_t.
+                        assert!(dd.tx_energy > 0.0);
+                        assert!(dd.tx_energy <= 500.0 * (1.0 + 1e-4));
+                    }
+                    _ => {}
+                }
+            }
+            // Headroom is the budget minus the hungriest device.
+            assert!(diag.power_headroom >= -500.0 * 1e-4);
+            if tx > 0 {
+                assert!(diag.effective_snr_db.is_some());
+            }
+        }
     }
 
     #[test]

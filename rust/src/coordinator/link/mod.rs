@@ -72,12 +72,14 @@
 
 pub mod analog;
 pub mod d2d;
+pub mod diag;
 pub mod digital;
 pub mod error_free;
 pub mod fading;
 
 pub use analog::AnalogLink;
 pub use d2d::D2dAnalogLink;
+pub use diag::{DeviceDiag, DeviceOutcome, DiagSink, RoundDiagnostics};
 pub use digital::DigitalLink;
 pub use error_free::ErrorFreeLink;
 pub use fading::FadingAnalogLink;
@@ -167,6 +169,16 @@ pub trait LinkScheme {
     fn measured_avg_power(&self) -> Vec<f64>;
 
     fn name(&self) -> &'static str;
+
+    /// Install (or remove, with `None`) an observe-only diagnostics sink.
+    /// While a sink is installed the link records one
+    /// [`RoundDiagnostics`] per [`LinkScheme::round`] call; with no sink
+    /// (the default) nothing extra is computed. Implementations must keep
+    /// probing strictly read-only — no RNG draws, no change to any f32
+    /// operation order — so trajectories are byte-identical with probes on
+    /// or off. Default is a no-op so third-party links stay source
+    /// compatible; every factory scheme implements it.
+    fn probe(&mut self, _sink: Option<DiagSink>) {}
 
     /// Decentralized links: the M per-device model replicas the round's
     /// gradients must be evaluated at (row m = device m's θ). `None` for

@@ -17,7 +17,7 @@ use crate::optim::{Adam, Optimizer};
 use crate::util::rng::Pcg64;
 
 use super::grad::{GradientBackend, RustBackend};
-use super::link::{self, LinkScheme, RoundCtx};
+use super::link::{self, DiagSink, LinkScheme, RoundCtx, RoundDiagnostics};
 use super::metrics::{RoundRecord, TrainLog};
 
 /// End-to-end trainer for one `RunConfig`.
@@ -34,6 +34,13 @@ pub struct Trainer {
     /// mutates trainer state — trajectories are bit-identical with or
     /// without an observer installed.
     pub round_observer: Option<Box<dyn FnMut(&RoundRecord) + Send>>,
+    /// Observe-only link diagnostics hook. When set, the trainer installs
+    /// a [`DiagSink`] on the link (via [`LinkScheme::probe`]) and forwards
+    /// each round's [`RoundDiagnostics`] here, *before* `round_observer`
+    /// sees the matching [`RoundRecord`]. Probes are read-only by
+    /// construction — see [`super::link::diag`] — so trajectories stay
+    /// bit-identical whether or not this hook is installed.
+    pub diag_observer: Option<Box<dyn FnMut(&RoundDiagnostics) + Send>>,
 }
 
 impl Trainer {
@@ -62,6 +69,7 @@ impl Trainer {
             backend,
             verbose: false,
             round_observer: None,
+            diag_observer: None,
         })
     }
 
@@ -108,6 +116,12 @@ impl Trainer {
         // The transmission pipeline: devices, channel, PS decoder, audit.
         let mut link = link::for_config(&self.cfg, d);
 
+        // Link diagnostics: only pay for probes when someone is listening.
+        let diag_sink = self.diag_observer.as_ref().map(|_| DiagSink::new());
+        if let Some(sink) = &diag_sink {
+            link.probe(Some(sink.clone()));
+        }
+
         let mut log = TrainLog {
             label: self.cfg.scheme.name().to_string(),
             records: Vec::with_capacity(self.cfg.iterations),
@@ -148,15 +162,18 @@ impl Trainer {
             // decentralized link exposes per-device model replicas; each
             // device's gradient is then taken at its own θ_i. PS-centric
             // links return None and keep the shared-model path bit-for-bit.
-            let grads = match link.replicas() {
-                Some(replicas) => self.backend.per_device_gradients_at(
-                    replicas,
-                    &self.corpus.train,
-                    &self.shards,
-                ),
-                None => self
-                    .backend
-                    .per_device_gradients(&params, &self.corpus.train, &self.shards),
+            let grads = {
+                let _sp = crate::util::prof::span("gradient");
+                match link.replicas() {
+                    Some(replicas) => self.backend.per_device_gradients_at(
+                        replicas,
+                        &self.corpus.train,
+                        &self.shards,
+                    ),
+                    None => self
+                        .backend
+                        .per_device_gradients(&params, &self.corpus.train, &self.shards),
+                }
             };
 
             // 2. Transmission + reconstruction (for a decentralized link
@@ -175,6 +192,7 @@ impl Trainer {
             // 4. Metrics.
             let evaluate = t % self.cfg.eval_every == 0 || t + 1 == self.cfg.iterations;
             let (acc, loss) = if evaluate {
+                let _sp = crate::util::prof::span("eval");
                 let acc = crate::model::accuracy(&params, &self.corpus.test);
                 let loss =
                     crate::model::loss(&params, &self.corpus.train, &self.shards[0]);
@@ -200,6 +218,13 @@ impl Trainer {
             }
             if !acc.is_nan() {
                 log.final_accuracy = acc;
+            }
+            // Diagnostics drain first so a consumer correlating the two
+            // streams has the round's device detail before its summary.
+            if let (Some(sink), Some(observer)) = (&diag_sink, self.diag_observer.as_mut()) {
+                for diag in sink.drain() {
+                    observer(&diag);
+                }
             }
             if let Some(observer) = self.round_observer.as_mut() {
                 observer(&record);
@@ -323,6 +348,34 @@ mod tests {
             let log = tr.run();
             assert_eq!(log.records.len(), 6, "{scheme:?}");
             assert!(log.final_accuracy > 0.05, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn diag_observer_sees_every_round_and_never_perturbs() {
+        use std::sync::{Arc, Mutex};
+        let run = |probe: bool| {
+            let mut tr = Trainer::new(smoke_cfg(Scheme::ADsgd)).unwrap();
+            let collected: Arc<Mutex<Vec<RoundDiagnostics>>> = Arc::default();
+            if probe {
+                let c = Arc::clone(&collected);
+                tr.diag_observer = Some(Box::new(move |d: &RoundDiagnostics| {
+                    c.lock().unwrap().push(d.clone());
+                }));
+            }
+            let norms: Vec<f64> = tr.run().records.iter().map(|r| r.grad_norm).collect();
+            let diags = std::mem::take(&mut *collected.lock().unwrap());
+            (norms, diags)
+        };
+        let (plain, none) = run(false);
+        let (probed, diags) = run(true);
+        assert_eq!(plain, probed, "probes must not perturb the trajectory");
+        assert!(none.is_empty(), "no observer, no diagnostics");
+        assert_eq!(diags.len(), 6, "one diagnostics record per round");
+        for (t, d) in diags.iter().enumerate() {
+            assert_eq!(d.t, t);
+            assert_eq!(d.scheme, "A-DSGD");
+            assert_eq!(d.devices.len(), 10, "smoke preset has 10 devices");
         }
     }
 

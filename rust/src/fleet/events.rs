@@ -15,11 +15,19 @@
 //!  "round":3,"ms":1754650000123,"grad_norm":1.25,"test_accuracy":0.41}
 //! ```
 //!
-//! * `v` — schema version. Readers skip lines with an unknown version.
+//! * `v` — schema version, **per kind**: the twelve v1 kinds still
+//!   write `"v":1` byte-for-byte (a v1 reader replays any log written
+//!   by this build minus the kinds it doesn't know), while the
+//!   `device` kind added for link diagnostics writes `"v":2`. Readers
+//!   built from this source accept both and skip anything newer.
 //! * `kind` — one of the [`EventKind`] names (lifecycle order:
 //!   `enqueued`, `claimed`, `reclaimed`, `heartbeat`, `executed`,
-//!   `resumed`, `cached`, `already_done`, `snapshot`, `round`,
-//!   `completed`, `quarantined`).
+//!   `resumed`, `cached`, `already_done`, `snapshot`, `device`,
+//!   `round`, `completed`, `quarantined`). `device` carries one
+//!   transmitter's link diagnostics for one round (its `device` /
+//!   `outcome` / norm / energy payload fields — see
+//!   `OBSERVABILITY.md`) and sorts immediately before the round's
+//!   summarizing `round` event.
 //! * `key` — the run's content-addressed cache key (store directory
 //!   name); empty for events not tied to a run.
 //! * `label` — optional human-readable run label (carried by
@@ -70,8 +78,13 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
 
-/// Schema version emitted by this build; readers skip other versions.
+/// Base schema version: every kind that existed before link
+/// diagnostics still writes (and parses as) version 1.
 pub const EVENT_VERSION: u64 = 1;
+
+/// Highest schema version this build understands; readers skip
+/// anything newer, per the fail-soft contract.
+pub const MAX_EVENT_VERSION: u64 = 2;
 
 /// Typed event kinds, declared in lifecycle order (the declaration
 /// order is also the deterministic sort order within a run+round).
@@ -97,6 +110,10 @@ pub enum EventKind {
     AlreadyDone,
     /// A snapshot was persisted at `round`.
     Snapshot,
+    /// One device's link diagnostics for one round (schema v2; emitted
+    /// only when diagnostics are enabled). Sorts before the round's
+    /// `round` summary, mirroring the trainer's observer order.
+    Device,
     /// Per-round telemetry from the trainer callback.
     Round,
     /// A run finished and its result was persisted.
@@ -107,7 +124,7 @@ pub enum EventKind {
 
 impl EventKind {
     /// All kinds, in lifecycle (= sort) order.
-    pub const ALL: [EventKind; 12] = [
+    pub const ALL: [EventKind; 13] = [
         EventKind::Enqueued,
         EventKind::Claimed,
         EventKind::Reclaimed,
@@ -117,6 +134,7 @@ impl EventKind {
         EventKind::Cached,
         EventKind::AlreadyDone,
         EventKind::Snapshot,
+        EventKind::Device,
         EventKind::Round,
         EventKind::Completed,
         EventKind::Quarantined,
@@ -134,6 +152,7 @@ impl EventKind {
             EventKind::Cached => "cached",
             EventKind::AlreadyDone => "already_done",
             EventKind::Snapshot => "snapshot",
+            EventKind::Device => "device",
             EventKind::Round => "round",
             EventKind::Completed => "completed",
             EventKind::Quarantined => "quarantined",
@@ -143,6 +162,17 @@ impl EventKind {
     /// Inverse of [`EventKind::name`].
     pub fn parse(s: &str) -> Option<EventKind> {
         EventKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// The schema version this kind is written with. Versioning is
+    /// per kind so that pre-diagnostics readers replay everything
+    /// they already understood byte-for-byte: only the new `device`
+    /// kind advances past [`EVENT_VERSION`].
+    pub fn wire_version(self) -> u64 {
+        match self {
+            EventKind::Device => 2,
+            _ => EVENT_VERSION,
+        }
     }
 }
 
@@ -177,7 +207,7 @@ impl Event {
     pub fn to_line(&self) -> String {
         let mut s = String::with_capacity(96);
         s.push_str("{\"v\":");
-        s.push_str(&EVENT_VERSION.to_string());
+        s.push_str(&self.kind.wire_version().to_string());
         s.push_str(",\"kind\":\"");
         s.push_str(self.kind.name());
         s.push('"');
@@ -269,7 +299,7 @@ impl Event {
                 break;
             }
         }
-        if version != EVENT_VERSION {
+        if version == 0 || version > MAX_EVENT_VERSION {
             return Err(format!("unsupported event version {version}"));
         }
         if !saw_kind {
@@ -653,6 +683,57 @@ mod tests {
             assert_eq!(EventKind::parse(k.name()), Some(k));
         }
         assert_eq!(EventKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn per_kind_versioning_keeps_v1_lines_byte_identical() {
+        // Every pre-diagnostics kind still writes "v":1 — a v1 reader
+        // replays logs from this build minus only the kinds it never
+        // knew about.
+        for k in EventKind::ALL {
+            let ev = Event {
+                kind: k,
+                key: "k".into(),
+                label: String::new(),
+                worker: "w0".into(),
+                round: None,
+                unix_ms: 5,
+                data: vec![],
+            };
+            let line = ev.to_line();
+            let expect = if k == EventKind::Device { 2 } else { 1 };
+            assert!(
+                line.starts_with(&format!("{{\"v\":{expect},")),
+                "{k:?}: {line}"
+            );
+            assert_eq!(Event::parse(&line).unwrap(), ev, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn device_event_roundtrips_at_v2() {
+        let ev = Event {
+            kind: EventKind::Device,
+            key: "0123456789abcdef".into(),
+            label: String::new(),
+            worker: "w1".into(),
+            round: Some(4),
+            unix_ms: 77,
+            data: vec![
+                ("device".into(), 3.0),
+                ("outcome".into(), 2.0),
+                ("pre_sparsify_norm".into(), 1.5),
+                ("tx_energy".into(), 500.0),
+            ],
+        };
+        let line = ev.to_line();
+        assert!(line.starts_with("{\"v\":2,\"kind\":\"device\""), "{line}");
+        assert_eq!(Event::parse(&line).unwrap(), ev);
+        // Versions beyond MAX are still skipped (fail-soft forward
+        // compatibility), and v0 was never valid.
+        let future = line.replacen("{\"v\":2,", "{\"v\":3,", 1);
+        assert!(Event::parse(&future).is_err());
+        assert!(Event::parse(&line.replacen("{\"v\":2,", "{\"v\":0,", 1)).is_err());
     }
 
     #[test]

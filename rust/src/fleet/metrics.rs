@@ -39,6 +39,18 @@ pub struct RunSeries {
     /// Eq. 6 power-audit headroom from `completed`:
     /// `1 - max_avg_power / pbar` (fraction of budget left unused).
     pub power_headroom: Option<f64>,
+    // --- link diagnostics (absent unless probes were enabled) ---------
+    /// Effective receive SNR (dB) by round.
+    pub snr_db: BTreeMap<u64, f64>,
+    /// Per-round Eq. 6 headroom gauge `P_t − max‖x_m‖²` from the link
+    /// probe (absolute energy units, unlike the completed-run audit).
+    pub link_headroom: BTreeMap<u64, f64>,
+    /// Devices that actually transmitted, by round.
+    pub participating: BTreeMap<u64, f64>,
+    /// RMS consensus distance by round (decentralized runs only).
+    pub consensus: BTreeMap<u64, f64>,
+    /// Deduplicated `(round, device)` diagnostics points seen.
+    pub device_points: BTreeSet<(u64, u64)>,
 }
 
 impl RunSeries {
@@ -50,6 +62,31 @@ impl RunSeries {
     /// Latest `(round, accuracy)` gauge.
     pub fn last_accuracy(&self) -> Option<(u64, f64)> {
         self.accuracy.iter().next_back().map(|(&r, &v)| (r, v))
+    }
+
+    /// Latest `(round, value)` of a per-round link series.
+    fn last_of(series: &BTreeMap<u64, f64>) -> Option<(u64, f64)> {
+        series.iter().next_back().map(|(&r, &v)| (r, v))
+    }
+
+    /// Latest `(round, SNR dB)` gauge.
+    pub fn last_snr_db(&self) -> Option<(u64, f64)> {
+        Self::last_of(&self.snr_db)
+    }
+
+    /// Latest `(round, headroom)` gauge from the link probe.
+    pub fn last_link_headroom(&self) -> Option<(u64, f64)> {
+        Self::last_of(&self.link_headroom)
+    }
+
+    /// Latest `(round, transmitting-device count)` gauge.
+    pub fn last_participating(&self) -> Option<(u64, f64)> {
+        Self::last_of(&self.participating)
+    }
+
+    /// Latest `(round, consensus distance)` gauge.
+    pub fn last_consensus(&self) -> Option<(u64, f64)> {
+        Self::last_of(&self.consensus)
     }
 
     /// Completed fraction in `[0, 1]`, when the plan is known.
@@ -174,7 +211,7 @@ impl Metrics {
             };
             let _ = writeln!(
                 s,
-                "run[{key}] label={} planned={} rounds={} grad_last={} acc_last={} final_acc={} headroom={}",
+                "run[{key}] label={} planned={} rounds={} grad_last={} acc_last={} final_acc={} headroom={} snr_last={} link_headroom_last={} participating_last={} consensus_last={} device_points={}",
                 run.label,
                 run.planned_rounds.map_or("-".into(), |p| p.to_string()),
                 run.rounds.len(),
@@ -182,6 +219,11 @@ impl Metrics {
                 bits(run.last_accuracy().map(|(_, v)| v)),
                 bits(run.final_accuracy),
                 bits(run.power_headroom),
+                bits(run.last_snr_db().map(|(_, v)| v)),
+                bits(run.last_link_headroom().map(|(_, v)| v)),
+                bits(run.last_participating().map(|(_, v)| v)),
+                bits(run.last_consensus().map(|(_, v)| v)),
+                run.device_points.len(),
             );
         }
         s
@@ -313,6 +355,93 @@ impl Metrics {
                 }
             }
         }
+
+        // Link diagnostics: only rendered when at least one run carried
+        // probe payloads, so probe-less stores export byte-identical
+        // text to pre-diagnostics builds.
+        let has_link = self.runs.values().any(|r| {
+            !r.snr_db.is_empty()
+                || !r.link_headroom.is_empty()
+                || !r.participating.is_empty()
+                || !r.consensus.is_empty()
+                || !r.device_points.is_empty()
+        });
+        if has_link {
+            let gauge = |s: &mut String, name: &str, help: &str, f: &dyn Fn(&RunSeries) -> Option<f64>| {
+                let _ = writeln!(s, "# HELP {name} {help}");
+                let _ = writeln!(s, "# TYPE {name} gauge");
+                for (k, run) in &self.runs {
+                    if let Some(v) = f(run) {
+                        let _ = writeln!(s, "{name}{{key=\"{k}\"}} {v}");
+                    }
+                }
+            };
+            gauge(
+                &mut s,
+                "ota_link_last_snr_db",
+                "Latest effective receive SNR per run (dB).",
+                &|r| r.last_snr_db().map(|(_, v)| v),
+            );
+            gauge(
+                &mut s,
+                "ota_link_power_headroom",
+                "Latest per-round Eq. 6 headroom P_t - max tx energy.",
+                &|r| r.last_link_headroom().map(|(_, v)| v),
+            );
+            gauge(
+                &mut s,
+                "ota_link_participating",
+                "Latest transmitting-device count per run.",
+                &|r| r.last_participating().map(|(_, v)| v),
+            );
+            gauge(
+                &mut s,
+                "ota_link_consensus_distance",
+                "Latest RMS replica disagreement per run (D2D).",
+                &|r| r.last_consensus().map(|(_, v)| v),
+            );
+            let _ = writeln!(
+                s,
+                "# HELP ota_link_device_events_total Deduplicated (round, device) diagnostics points."
+            );
+            let _ = writeln!(s, "# TYPE ota_link_device_events_total counter");
+            for (k, run) in &self.runs {
+                if !run.device_points.is_empty() {
+                    let _ = writeln!(
+                        s,
+                        "ota_link_device_events_total{{key=\"{k}\"}} {}",
+                        run.device_points.len()
+                    );
+                }
+            }
+            // Fixed-bucket SNR histogram over every probed round.
+            const SNR_BUCKETS: [f64; 9] = [-10.0, -5.0, 0.0, 5.0, 10.0, 15.0, 20.0, 25.0, 30.0];
+            let _ = writeln!(
+                s,
+                "# HELP ota_link_snr_db SNR distribution across probed rounds (dB)."
+            );
+            let _ = writeln!(s, "# TYPE ota_link_snr_db histogram");
+            for (k, run) in &self.runs {
+                if run.snr_db.is_empty() {
+                    continue;
+                }
+                let mut sum = 0.0f64;
+                for le in SNR_BUCKETS {
+                    let n = run.snr_db.values().filter(|&&v| v <= le).count();
+                    let _ = writeln!(s, "ota_link_snr_db_bucket{{key=\"{k}\",le=\"{le}\"}} {n}");
+                }
+                let _ = writeln!(
+                    s,
+                    "ota_link_snr_db_bucket{{key=\"{k}\",le=\"+Inf\"}} {}",
+                    run.snr_db.len()
+                );
+                for v in run.snr_db.values() {
+                    sum += v;
+                }
+                let _ = writeln!(s, "ota_link_snr_db_sum{{key=\"{k}\"}} {sum}");
+                let _ = writeln!(s, "ota_link_snr_db_count{{key=\"{k}\"}} {}", run.snr_db.len());
+            }
+        }
         s
     }
 }
@@ -360,6 +489,15 @@ pub fn reduce(events: &[Event]) -> Metrics {
             }
             EventKind::AlreadyDone => m.already_done += 1,
             EventKind::Snapshot => m.snapshots += 1,
+            EventKind::Device => {
+                // One transmitter's diagnostics: deduplicated on
+                // (round, device) like everything else in the core.
+                let (Some(round), Some(dev)) = (ev.round, ev.field("device")) else {
+                    continue;
+                };
+                let run = m.runs.entry(ev.key.clone()).or_default();
+                run.device_points.insert((round, dev as u64));
+            }
             EventKind::Round => {
                 let Some(round) = ev.round else { continue };
                 let run = m.runs.entry(ev.key.clone()).or_default();
@@ -369,6 +507,20 @@ pub fn reduce(events: &[Event]) -> Metrics {
                 }
                 if let Some(a) = ev.field("test_accuracy") {
                     run.accuracy.entry(round).or_insert(a);
+                }
+                // Link-diagnostics payload (absent when probes are off;
+                // first write wins, identical by determinism).
+                if let Some(v) = ev.field("snr_db") {
+                    run.snr_db.entry(round).or_insert(v);
+                }
+                if let Some(v) = ev.field("power_headroom") {
+                    run.link_headroom.entry(round).or_insert(v);
+                }
+                if let Some(v) = ev.field("participating") {
+                    run.participating.entry(round).or_insert(v);
+                }
+                if let Some(v) = ev.field("consensus_distance") {
+                    run.consensus.entry(round).or_insert(v);
                 }
                 let st = m.workers.entry(worker()).or_default();
                 st.rounds += 1;
@@ -468,6 +620,55 @@ mod tests {
         let m = reduce(&events);
         assert_eq!(m.queue_depth(), 1);
         assert!(m.to_prometheus().contains("ota_queue_depth 1"));
+    }
+
+    #[test]
+    fn link_diagnostics_fold_dedup_and_export() {
+        let mut events = vec![
+            ev(
+                EventKind::Round,
+                "k1",
+                "w0",
+                Some(0),
+                &[
+                    ("grad_norm", 2.0),
+                    ("snr_db", 12.5),
+                    ("power_headroom", 0.01),
+                    ("participating", 8.0),
+                    ("consensus_distance", 0.2),
+                ],
+            ),
+            ev(
+                EventKind::Round,
+                "k1",
+                "w0",
+                Some(1),
+                &[("grad_norm", 1.5), ("snr_db", 9.0), ("participating", 10.0)],
+            ),
+            ev(EventKind::Device, "k1", "w0", Some(0), &[("device", 0.0), ("outcome", 0.0)]),
+            ev(EventKind::Device, "k1", "w0", Some(0), &[("device", 1.0), ("outcome", 2.0)]),
+            // Duplicate device point from a second worker: deduplicated.
+            ev(EventKind::Device, "k1", "w1", Some(0), &[("device", 1.0), ("outcome", 2.0)]),
+        ];
+        let fwd = reduce(&events);
+        events.reverse();
+        let rev = reduce(&events);
+        assert_eq!(fwd.deterministic_core(), rev.deterministic_core());
+        let run = &fwd.runs["k1"];
+        assert_eq!(run.last_snr_db(), Some((1, 9.0)));
+        assert_eq!(run.last_participating(), Some((1, 10.0)));
+        assert_eq!(run.last_consensus(), Some((0, 0.2)));
+        assert_eq!(run.device_points.len(), 2, "(round, device) deduplicated");
+        let text = fwd.to_prometheus();
+        assert!(text.contains("ota_link_last_snr_db{key=\"k1\"} 9"));
+        assert!(text.contains("ota_link_participating{key=\"k1\"} 10"));
+        assert!(text.contains("ota_link_device_events_total{key=\"k1\"} 2"));
+        assert!(text.contains("ota_link_snr_db_bucket{key=\"k1\",le=\"10\"} 1"));
+        assert!(text.contains("ota_link_snr_db_bucket{key=\"k1\",le=\"+Inf\"} 2"));
+        assert!(text.contains("ota_link_snr_db_count{key=\"k1\"} 2"));
+        // A store without probes exports no ota_link_* series at all.
+        let plain = reduce(&[ev(EventKind::Round, "k", "w", Some(0), &[("grad_norm", 1.0)])]);
+        assert!(!plain.to_prometheus().contains("ota_link_"));
     }
 
     #[test]

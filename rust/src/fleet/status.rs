@@ -221,12 +221,12 @@ pub fn render_dashboard(store_dir: &str, st: &FleetStatus, m: &Metrics) -> Strin
             it.rounds_total
         );
         if let Some(run) = m.runs.get(&it.key) {
+            let gauge = |v: Option<(u64, f64)>| {
+                v.map_or("-".to_string(), |(_, x)| format!("{x:.4}"))
+            };
             let grad = sparkline(run.grad_norm.values().copied(), 32);
             let acc = sparkline(run.accuracy.values().copied(), 32);
             if !grad.is_empty() || !acc.is_empty() {
-                let gauge = |v: Option<(u64, f64)>| {
-                    v.map_or("-".to_string(), |(_, x)| format!("{x:.4}"))
-                };
                 let _ = writeln!(
                     s,
                     "  ‖ĝ‖ {} {}   acc {} {}",
@@ -234,6 +234,29 @@ pub fn render_dashboard(store_dir: &str, st: &FleetStatus, m: &Metrics) -> Strin
                     gauge(run.last_grad_norm()),
                     acc,
                     gauge(run.last_accuracy()),
+                );
+            }
+            // Link-diagnostics pane: only runs whose probes were enabled
+            // carry these series.
+            if !run.snr_db.is_empty() || !run.participating.is_empty() {
+                let snr = sparkline(run.snr_db.values().copied(), 32);
+                let _ = writeln!(
+                    s,
+                    "  SNR {} {} dB   tx {}/dev   headroom {}",
+                    snr,
+                    gauge(run.last_snr_db()),
+                    run.last_participating()
+                        .map_or("-".to_string(), |(_, v)| format!("{v:.0}")),
+                    gauge(run.last_link_headroom()),
+                );
+            }
+            if !run.consensus.is_empty() {
+                let cons = sparkline(run.consensus.values().copied(), 32);
+                let _ = writeln!(
+                    s,
+                    "  consensus {} {}",
+                    cons,
+                    gauge(run.last_consensus()),
                 );
             }
         }
@@ -389,6 +412,39 @@ mod tests {
         assert!(dash.contains("‖ĝ‖"), "{dash}");
         assert!(dash.contains("workers:"), "{dash}");
         assert!(dash.contains("[...................."), "fresh runs are empty bars:\n{dash}");
+        assert!(!dash.contains("SNR"), "no probes, no link pane:\n{dash}");
+
+        // With link payloads the SNR/participation/headroom pane and the
+        // consensus sparkline appear.
+        let m = super::super::metrics::reduce(&[
+            mk(EventKind::Executed, None, &[]),
+            mk(
+                EventKind::Round,
+                Some(0),
+                &[
+                    ("grad_norm", 2.0),
+                    ("snr_db", 11.0),
+                    ("participating", 9.0),
+                    ("power_headroom", 0.02),
+                    ("consensus_distance", 0.3),
+                ],
+            ),
+            mk(
+                EventKind::Round,
+                Some(1),
+                &[
+                    ("grad_norm", 1.0),
+                    ("snr_db", 12.0),
+                    ("participating", 10.0),
+                    ("power_headroom", 0.01),
+                    ("consensus_distance", 0.2),
+                ],
+            ),
+        ]);
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m);
+        assert!(dash.contains("SNR"), "{dash}");
+        assert!(dash.contains("tx 10/dev"), "{dash}");
+        assert!(dash.contains("consensus"), "{dash}");
         let _ = fs::remove_dir_all(&dir);
     }
 }

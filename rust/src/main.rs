@@ -80,6 +80,8 @@ fn usage() -> Usage {
             ("--worker-id <id>", "worker identity in lease records (worker)"),
             ("--no-telemetry", "disable the store's fleet event log"),
             ("--telemetry-every <N>", "round-event cadence in rounds (default 1)"),
+            ("--no-diagnostics", "disable link diagnostics probes (device events, SNR)"),
+            ("--profile-out <file>", "write a Chrome trace of pipeline spans (train)"),
             ("--once", "render a single dashboard frame and exit (watch)"),
             ("--interval-secs <s>", "dashboard refresh cadence (watch; default 2)"),
             ("--quiet", "suppress per-round progress"),
@@ -142,6 +144,9 @@ fn campaign_from_args(args: &Args, force_resume: bool) -> Option<CampaignConfig>
     c.keep_last_n = args.usize("keep-last-n", c.keep_last_n);
     if args.flag("no-telemetry") {
         c.telemetry.enabled = false;
+    }
+    if args.flag("no-diagnostics") {
+        c.telemetry.diagnostics = false;
     }
     c.telemetry.every = args.usize("telemetry-every", c.telemetry.every).max(1);
     if force_resume {
@@ -268,6 +273,10 @@ fn cmd_train(args: &Args) {
     let out = out_dir(args);
     let verbose = !args.flag("quiet");
     let campaign = campaign_from_args(args, false);
+    let profile_out = args.get("profile-out").map(str::to_string);
+    if profile_out.is_some() {
+        ota_dsgd::util::prof::enable();
+    }
     // Single runs checkpoint through the same campaign store the figure
     // sweeps use: an interrupted `repro train` resumes from its latest
     // snapshot, and re-running a finished config is a pure cache load
@@ -312,6 +321,17 @@ fn cmd_train(args: &Args) {
             trainer.run()
         }
     };
+    if let Some(path) = &profile_out {
+        ota_dsgd::util::prof::disable();
+        let spans = ota_dsgd::util::prof::take();
+        std::fs::write(path, ota_dsgd::util::prof::chrome_trace_json(&spans))
+            .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+        print!(
+            "{}",
+            ota_dsgd::util::prof::render_summary(&ota_dsgd::util::prof::summarize(&spans))
+        );
+        println!("trace ({} spans) → {path}  [open in chrome://tracing or Perfetto]", spans.len());
+    }
     println!(
         "done: final accuracy {:.4} (best {:.4}) in {:.1}s; power ok: {}",
         log.final_accuracy,
@@ -404,6 +424,9 @@ fn cmd_fleet(args: &Args) {
             .arg("--quiet");
         if !campaign.telemetry.enabled {
             cmd.arg("--no-telemetry");
+        }
+        if !campaign.telemetry.diagnostics {
+            cmd.arg("--no-diagnostics");
         }
         let child = cmd
             .spawn()

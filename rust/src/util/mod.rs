@@ -8,6 +8,7 @@ pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod logging;
+pub mod prof;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,257 @@
+//! Hierarchical span profiler for the training pipeline, zero deps.
+//!
+//! Spans attribute wall-clock to the pipeline phases PERF.md names
+//! (`encode → project → transmit → decode_amp → gradient → consensus`,
+//! plus `eval`). The profiler is a process-global, gated by one relaxed
+//! atomic load: while disabled (the default) a [`span`] call does no
+//! clock read and no allocation, so instrumented hot paths cost one
+//! branch. Enabling (`repro train --profile-out trace.json`) records
+//! `(name, thread, start, duration)` tuples that export as Chrome
+//! trace-event JSON (load in `chrome://tracing` / Perfetto) plus a
+//! per-phase summary table.
+//!
+//! Everything here is wall-clock and therefore lives strictly *outside*
+//! the deterministic core: spans never touch training state, RNG streams,
+//! event logs, or content-addresses. Nested spans are naturally
+//! hierarchical in the trace viewer because a child's `[start, start+dur)`
+//! sits inside its parent's on the same thread ("X" complete events).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// One closed span. `tid` is a small per-thread ordinal (first profiled
+/// thread = 0), not the OS thread id — stable across runs of the same
+/// schedule and friendlier in trace viewers.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    pub tid: u64,
+    /// Microseconds since the profiler's epoch (first use in the process).
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+fn records() -> &'static Mutex<Vec<SpanRecord>> {
+    static RECORDS: OnceLock<Mutex<Vec<SpanRecord>>> = OnceLock::new();
+    RECORDS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Turn span recording on (also pins the epoch so the first span doesn't
+/// pay the `OnceLock` init inside a timed region).
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drain every recorded span (oldest first per thread interleaving).
+pub fn take() -> Vec<SpanRecord> {
+    std::mem::take(&mut *records().lock().unwrap())
+}
+
+/// RAII span guard: records on drop. Obtain via [`span`].
+pub struct SpanGuard {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        // Re-check: if profiling was disabled mid-span, drop the record
+        // rather than locking a drained buffer.
+        if !is_enabled() {
+            return;
+        }
+        let start_us = start.duration_since(*epoch()).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        let tid = TID.with(|t| *t);
+        records().lock().unwrap().push(SpanRecord {
+            name: self.name,
+            tid,
+            start_us,
+            dur_us,
+        });
+    }
+}
+
+/// Open a span; it closes (and records, if profiling is enabled) when the
+/// returned guard drops. `name` should be one of the pipeline phases so
+/// the summary maps onto the PERF.md kernel table.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    let start = is_enabled().then(Instant::now);
+    SpanGuard { name, start }
+}
+
+/// Chrome trace-event JSON (the `traceEvents` array format): one complete
+/// ("ph":"X") event per span, timestamps/durations in microseconds.
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        // Span names are static identifiers (no quotes/backslashes), so no
+        // escaping pass is needed — debug-asserted to keep that true.
+        debug_assert!(s.name.chars().all(|c| c != '"' && c != '\\'));
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"pipeline\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+            s.name, s.start_us, s.dur_us, s.tid
+        ));
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// Aggregated per-phase timing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSummary {
+    pub name: &'static str,
+    pub count: usize,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+impl PhaseSummary {
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// Fold spans into one row per phase, sorted by total time descending
+/// (ties by name so the table is stable).
+pub fn summarize(spans: &[SpanRecord]) -> Vec<PhaseSummary> {
+    let mut rows: Vec<PhaseSummary> = Vec::new();
+    for s in spans {
+        match rows.iter_mut().find(|r| r.name == s.name) {
+            Some(r) => {
+                r.count += 1;
+                r.total_us += s.dur_us;
+                r.max_us = r.max_us.max(s.dur_us);
+            }
+            None => rows.push(PhaseSummary {
+                name: s.name,
+                count: 1,
+                total_us: s.dur_us,
+                max_us: s.dur_us,
+            }),
+        }
+    }
+    rows.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.name.cmp(b.name)));
+    rows
+}
+
+/// Render the summary as the fixed-width table `repro train` prints after
+/// a profiled run.
+pub fn render_summary(rows: &[PhaseSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>12} {:>12} {:>12}\n",
+        "phase", "spans", "total ms", "mean µs", "max µs"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>12.3} {:>12.1} {:>12}\n",
+            r.name,
+            r.count,
+            r.total_us as f64 / 1000.0,
+            r.mean_us(),
+            r.max_us
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test drives the whole lifecycle: the profiler is process-global
+    /// state, so independent #[test]s toggling it would race under the
+    /// parallel test harness.
+    #[test]
+    fn lifecycle_export_and_summary() {
+        // Disabled spans record nothing and cost no clock read.
+        disable();
+        let _ = take();
+        {
+            let _sp = span("encode");
+        }
+        assert!(take().is_empty());
+
+        enable();
+        {
+            let _outer = span("gradient");
+            let _inner = span("project");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        {
+            let _sp = span("project");
+        }
+        let t = std::thread::spawn(|| {
+            let _sp = span("encode");
+        });
+        t.join().unwrap();
+        disable();
+        let spans = take();
+        assert_eq!(spans.len(), 4, "{spans:?}");
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert!(names.contains(&"gradient") && names.contains(&"encode"));
+        assert_eq!(names.iter().filter(|&&n| n == "project").count(), 2);
+        // The spawned thread got its own tid.
+        let main_tid = spans.iter().find(|s| s.name == "gradient").unwrap().tid;
+        let enc_tid = spans.iter().find(|s| s.name == "encode").unwrap().tid;
+        assert_ne!(main_tid, enc_tid);
+
+        // Chrome trace export is structurally valid and contains each span.
+        let json = chrome_trace_json(&spans);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("],\"displayTimeUnit\":\"ms\"}"));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 4);
+        assert!(json.contains("\"name\":\"gradient\""));
+
+        // Summary folds, sorts by total desc, and renders.
+        let rows = summarize(&spans);
+        assert_eq!(rows.iter().map(|r| r.count).sum::<usize>(), 4);
+        let proj = rows.iter().find(|r| r.name == "project").unwrap();
+        assert_eq!(proj.count, 2);
+        assert!(rows.windows(2).all(|w| w[0].total_us >= w[1].total_us));
+        let table = render_summary(&rows);
+        assert!(table.contains("phase") && table.contains("project"));
+
+        // The nested span sat inside its parent on the same thread.
+        let grad = spans.iter().find(|s| s.name == "gradient").unwrap();
+        let inner = spans
+            .iter()
+            .filter(|s| s.name == "project" && s.tid == grad.tid)
+            .max_by_key(|s| s.dur_us)
+            .unwrap();
+        assert!(inner.start_us >= grad.start_us);
+        assert!(inner.start_us + inner.dur_us <= grad.start_us + grad.dur_us);
+    }
+}

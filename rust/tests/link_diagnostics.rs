@@ -1,0 +1,225 @@
+//! The link-diagnostics determinism contract, end to end:
+//!
+//! * **Probes are invisible to training.** The same campaign executed
+//!   with diagnostics on and off writes byte-identical `summary.csv`
+//!   files, and the replayed *training* series (grad norm, accuracy)
+//!   are bit-identical — probes are read-only by construction (extra
+//!   f64 norms over existing buffers, no RNG draws, no f32 op-order
+//!   changes), and this test pins it.
+//! * **Diagnostics are deterministic.** A 1-worker and a 4-worker
+//!   fleet over the same campaign emit the same `device`-event
+//!   payloads and the same round-level link aggregates once events
+//!   are deterministically sorted and wall clocks masked — the
+//!   deterministic core extends to diagnostics.
+//! * **Payloads are sane.** Every probed scheme reports the fields
+//!   its channel model defines, with physically coherent values.
+
+use std::path::{Path, PathBuf};
+
+use ota_dsgd::campaign::{scheduler, RunStore};
+use ota_dsgd::config::{presets, CampaignConfig, FleetConfig, RunConfig, Scheme};
+use ota_dsgd::experiments::runner::ExperimentSpec;
+use ota_dsgd::fleet;
+use ota_dsgd::fleet::events::EventKind;
+use ota_dsgd::model::PARAM_DIM;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn lean(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 4,
+        eval_every: 2,
+        channel_uses: PARAM_DIM / 8,
+        sparsity: PARAM_DIM / 16,
+        ..presets::smoke()
+    }
+}
+
+fn spec() -> ExperimentSpec {
+    ExperimentSpec {
+        id: "tdiag".into(),
+        title: "link diagnostics".into(),
+        runs: vec![
+            ("adsgd".into(), lean(Scheme::ADsgd)),
+            ("blind".into(), lean(Scheme::BlindADsgd)),
+            ("signsgd".into(), lean(Scheme::SignSgd)),
+        ],
+    }
+}
+
+fn campaign_for(store_dir: &str, diagnostics: bool) -> CampaignConfig {
+    let mut c = CampaignConfig {
+        snapshot_every: 2,
+        store_dir: store_dir.to_string(),
+        ..CampaignConfig::default()
+    };
+    c.telemetry.diagnostics = diagnostics;
+    c
+}
+
+/// `summary.csv` byte-identity and training-series bit-identity with
+/// probes on vs off: the headline read-only guarantee.
+#[test]
+fn diag_probes_do_not_perturb_summary_or_series() {
+    let base = fresh_dir("ota_diag_readonly_test");
+    let run = |name: &str, diagnostics: bool| {
+        let store_dir = base.join(name).join("store").to_str().unwrap().to_string();
+        let out = base.join(name).join("out").to_str().unwrap().to_string();
+        let campaign = campaign_for(&store_dir, diagnostics);
+        let (logs, _) = scheduler::run_experiment_cached(&spec(), &out, false, &campaign);
+        let csv = std::fs::read(Path::new(&out).join("tdiag/summary.csv")).unwrap();
+        let series: Vec<Vec<u64>> = logs
+            .iter()
+            .map(|l| l.records.iter().map(|r| r.grad_norm.to_bits()).collect())
+            .collect();
+        (csv, series, store_dir)
+    };
+    let (csv_on, series_on, store_on) = run("probes_on", true);
+    let (csv_off, series_off, store_off) = run("probes_off", false);
+    assert_eq!(csv_on, csv_off, "summary.csv must be byte-identical probes on/off");
+    assert_eq!(series_on, series_off, "grad-norm trajectories must be bit-identical");
+
+    // Probes on → device events in the log; probes off → none.
+    let count_device = |store_dir: &str| {
+        let store = RunStore::open(store_dir).unwrap();
+        fleet::read_events(store.root())
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Device)
+            .count()
+    };
+    assert!(count_device(&store_on) > 0, "diagnostics on must emit device events");
+    assert_eq!(count_device(&store_off), 0, "diagnostics off must emit none");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Drain the spec with `n` in-process workers into `base/name`.
+fn drain(base: &Path, name: &str, n: usize) -> String {
+    let store_dir = base.join(name).to_str().unwrap().to_string();
+    {
+        let store = RunStore::open(&store_dir).unwrap();
+        fleet::enqueue_specs(&store, &[spec()]).unwrap();
+    }
+    let campaign = campaign_for(&store_dir, true);
+    let fleet_cfg = FleetConfig::default();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let store_dir = &store_dir;
+                let campaign = &campaign;
+                let fleet_cfg = &fleet_cfg;
+                scope.spawn(move || {
+                    fleet::run_worker(store_dir, fleet_cfg, campaign, &format!("w{i}"), false)
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    store_dir
+}
+
+/// The worker-independent view of a store's diagnostics: every device
+/// event's `(key, round, payload-bits)` plus the deterministic core
+/// (which now carries snr/headroom/participation/consensus gauges and
+/// the device-point count), after seq-sort + wall-clock masking and
+/// with the fleet-shape-dependent writer id erased.
+fn diag_core(store_dir: &str) -> (Vec<(String, Option<u64>, Vec<(String, u64)>)>, String) {
+    let store = RunStore::open(store_dir).unwrap();
+    let mut report = fleet::read_events(store.root());
+    assert_eq!(report.unreadable_files, 0);
+    assert_eq!(report.skipped_lines, 0);
+    fleet::mask_wallclock(&mut report.events);
+    fleet::sort_events(&mut report.events);
+    let mut devices: Vec<(String, Option<u64>, Vec<(String, u64)>)> = report
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Device)
+        .map(|e| {
+            let payload: Vec<(String, u64)> =
+                e.data.iter().map(|(k, v)| (k.clone(), v.to_bits())).collect();
+            (e.key.clone(), e.round, payload)
+        })
+        .collect();
+    // A reclaimed run can re-emit a round's device events from a second
+    // worker; dedup the payloads the way the reducer dedups points.
+    devices.dedup();
+    let core = fleet::reduce(&report.events).deterministic_core();
+    (devices, core)
+}
+
+/// Fleet-shape invariance of the diagnostics themselves: same device
+/// payloads, same extended deterministic core, 1 vs 4 workers.
+#[test]
+fn diag_device_events_identical_across_fleet_shapes() {
+    let base = fresh_dir("ota_diag_fleet_shape_test");
+    let store4 = drain(&base, "store4", 4);
+    let store1 = drain(&base, "store1", 1);
+    let (dev4, core4) = diag_core(&store4);
+    let (dev1, core1) = diag_core(&store1);
+    assert!(!dev4.is_empty(), "probed fleet must emit device events");
+    assert_eq!(dev4, dev1, "device payloads must be fleet-shape independent");
+    assert_eq!(core4, core1, "extended deterministic core must match");
+    assert!(core4.contains("device_points="), "core carries the device-point count");
+    assert!(core4.contains("snr_last="), "core carries the SNR gauge");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Field-level sanity per scheme, through the full trainer + scheduler
+/// path: analog reports SNR/AMP, blind fading reports per-device gains
+/// and outcomes, digital reports bits within budget.
+#[test]
+fn diag_payloads_are_physically_coherent_per_scheme() {
+    let base = fresh_dir("ota_diag_payload_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let out = base.join("out").to_str().unwrap().to_string();
+    let campaign = campaign_for(&store_dir, true);
+    scheduler::run_experiment_cached(&spec(), &out, false, &campaign);
+    let store = RunStore::open(&store_dir).unwrap();
+    let events = fleet::read_events(store.root()).events;
+
+    // Map cache key -> scheme via the round events' co-resident runs:
+    // instead, look at rounds: every Round event with link payloads.
+    let rounds: Vec<_> = events.iter().filter(|e| e.kind == EventKind::Round).collect();
+    assert!(
+        rounds.iter().any(|e| e.field("snr_db").is_some()),
+        "noisy links must aggregate SNR into round events"
+    );
+    assert!(
+        rounds.iter().all(|e| e.field("participating").is_some()),
+        "every probed round reports a participating count"
+    );
+
+    let devices: Vec<_> = events.iter().filter(|e| e.kind == EventKind::Device).collect();
+    assert!(!devices.is_empty());
+    let m = lean(Scheme::ADsgd).devices as f64;
+    for d in &devices {
+        let idx = d.field("device").expect("device index");
+        assert!(idx >= 0.0 && idx < m, "device index in range");
+        let outcome = d.field("outcome").expect("outcome code");
+        assert!((0.0..=3.0).contains(&outcome), "known outcome code");
+        let pre = d.field("pre_sparsify_norm").unwrap();
+        let post = d.field("post_sparsify_norm").unwrap();
+        assert!(pre >= 0.0 && post >= 0.0 && pre + 1e-9 >= post, "norms coherent");
+        assert!(d.field("tx_energy").unwrap() >= 0.0);
+    }
+    // Digital payloads carry bits; at least the transmitting devices of
+    // the signsgd run must show them.
+    assert!(
+        devices.iter().any(|d| d.field("payload_bits").is_some()),
+        "digital scheme must report payload bits"
+    );
+    // Blind fading reports per-device gains.
+    assert!(
+        devices.iter().any(|d| d.field("fading_gain").is_some()),
+        "fading scheme must report per-device gains"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -1,0 +1,419 @@
+//! Contract test for the Prometheus text exposition produced by
+//! `repro metrics` ([`Metrics::to_prometheus`]), checked with a
+//! minimal hand-rolled parser of the text format:
+//!
+//! * every non-comment line parses as `name{labels} value`;
+//! * label values survive the escape round-trip (`\\`, `\"`, `\n`);
+//! * no duplicate `(name, label-set)` series in one exposition;
+//! * every sample's metric family is declared (`# HELP` + `# TYPE`)
+//!   before its first sample, histogram suffixes included;
+//! * counter-typed series are monotone under incremental log replay
+//!   (reducing ever-longer prefixes of one event stream never makes a
+//!   counter go down — the reducer is a pure, deduplicating fold);
+//! * histogram buckets are cumulative and consistent with `_count`.
+//!
+//! The exporter never needs to *emit* escapes — label values are run
+//! cache keys (hex) and sanitized worker ids — but the parser handles
+//! them so the contract stays honest if that ever changes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use ota_dsgd::fleet::events::{Event, EventKind};
+use ota_dsgd::fleet::reduce;
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+struct Sample {
+    name: String,
+    /// Sorted by label name for set comparison.
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+fn is_name_char(c: char, first: bool) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':' || (!first && c.is_ascii_digit())
+}
+
+/// Unescape a Prometheus label value body (between the quotes).
+fn unescape(raw: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(raw.len());
+    let mut chars = raw.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            Some('n') => out.push('\n'),
+            other => return Err(format!("bad escape \\{other:?} in label value")),
+        }
+    }
+    Ok(out)
+}
+
+/// Re-escape, for the round-trip check.
+fn escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Parse one sample line: `name` + optional `{k="v",...}` + ` value`.
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let err = |msg: &str| format!("{msg}: {line:?}");
+    let name_end = line
+        .char_indices()
+        .find(|&(i, c)| !is_name_char(c, i == 0))
+        .map(|(i, _)| i)
+        .unwrap_or(line.len());
+    if name_end == 0 {
+        return Err(err("no metric name"));
+    }
+    let name = line[..name_end].to_string();
+    let rest = &line[name_end..];
+    let (labels, rest) = if let Some(body) = rest.strip_prefix('{') {
+        let close = body.find('}').ok_or_else(|| err("unclosed label set"))?;
+        let mut labels = Vec::new();
+        let body_str = &body[..close];
+        let mut cursor = body_str;
+        while !cursor.is_empty() {
+            let eq = cursor.find('=').ok_or_else(|| err("label without ="))?;
+            let lname = &cursor[..eq];
+            if lname.is_empty() || !lname.chars().enumerate().all(|(i, c)| is_name_char(c, i == 0) && c != ':')
+            {
+                return Err(err("bad label name"));
+            }
+            let after = &cursor[eq + 1..];
+            let q = after.strip_prefix('"').ok_or_else(|| err("label value not quoted"))?;
+            // Find the closing quote, skipping escaped characters.
+            let mut end = None;
+            let mut chars = q.char_indices();
+            while let Some((i, c)) = chars.next() {
+                match c {
+                    '\\' => {
+                        chars.next();
+                    }
+                    '"' => {
+                        end = Some(i);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let end = end.ok_or_else(|| err("unterminated label value"))?;
+            labels.push((lname.to_string(), unescape(&q[..end])?));
+            cursor = &q[end + 1..];
+            cursor = cursor.strip_prefix(',').unwrap_or(cursor);
+        }
+        labels.sort();
+        (labels, &body[close + 1..])
+    } else {
+        (Vec::new(), rest)
+    };
+    let value: f64 = rest
+        .trim()
+        .parse()
+        .map_err(|_| err("unparseable sample value"))?;
+    Ok(Sample { name, labels, value })
+}
+
+/// Parse a whole exposition; returns samples in order plus the
+/// `# TYPE` declarations (family name -> type) in declaration order.
+fn parse_exposition(text: &str) -> (Vec<Sample>, Vec<(String, String)>) {
+    let mut samples = Vec::new();
+    let mut types = Vec::new();
+    let mut helped: BTreeSet<String> = BTreeSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("").to_string();
+            assert!(!name.is_empty(), "HELP without a metric name: {line:?}");
+            helped.insert(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE without name").to_string();
+            let ty = it.next().expect("TYPE without kind").to_string();
+            assert!(
+                ["counter", "gauge", "histogram", "summary", "untyped"].contains(&ty.as_str()),
+                "unknown TYPE {ty:?}"
+            );
+            assert!(
+                helped.contains(&name),
+                "# TYPE {name} not preceded by its # HELP"
+            );
+            types.push((name, ty));
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line:?}");
+        samples.push(parse_sample(line).unwrap_or_else(|e| panic!("{e}")));
+    }
+    (samples, types)
+}
+
+/// The metric *family* a sample belongs to: histogram samples use the
+/// `_bucket` / `_sum` / `_count` suffix convention.
+fn family<'a>(sample: &'a Sample, types: &'a [(String, String)]) -> &'a str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample.name.strip_suffix(suffix) {
+            if types.iter().any(|(n, t)| n == base && t == "histogram") {
+                return base;
+            }
+        }
+    }
+    &sample.name
+}
+
+/// A synthetic but realistic event stream: two runs (one with link
+/// diagnostics), two workers, a reclaim, duplicate rounds from the
+/// steal, and device probes.
+fn stream() -> Vec<Event> {
+    fn ev(
+        kind: EventKind,
+        key: &str,
+        worker: &str,
+        round: Option<u64>,
+        data: &[(&str, f64)],
+    ) -> Event {
+        Event {
+            kind,
+            key: key.into(),
+            label: String::new(),
+            worker: worker.into(),
+            round,
+            unix_ms: 0,
+            data: data.iter().map(|&(k, v)| (k.into(), v)).collect(),
+        }
+    }
+    let mut s = vec![
+        ev(EventKind::Enqueued, "k1", "coord", None, &[("iterations", 4.0)]),
+        ev(EventKind::Enqueued, "k2", "coord", None, &[("iterations", 2.0)]),
+        ev(EventKind::Claimed, "k1", "w0", None, &[]),
+        ev(EventKind::Executed, "k1", "w0", None, &[]),
+    ];
+    for t in 0..4u64 {
+        s.push(ev(
+            EventKind::Round,
+            "k1",
+            "w0",
+            Some(t),
+            &[
+                ("grad_norm", 4.0 - t as f64),
+                ("snr_db", 8.0 + t as f64),
+                ("power_headroom", 0.5),
+                ("participating", 10.0),
+                ("consensus_distance", 1.0 / (t + 1) as f64),
+            ],
+        ));
+        s.push(ev(
+            EventKind::Device,
+            "k1",
+            "w0",
+            Some(t),
+            &[("device", 0.0), ("outcome", 0.0), ("tx_energy", 500.0)],
+        ));
+    }
+    s.extend([
+        ev(EventKind::Heartbeat, "k1", "w0", None, &[]),
+        ev(EventKind::Snapshot, "k1", "w0", Some(2), &[]),
+        // w1 steals the stale lease and re-emits a round + device point.
+        ev(EventKind::Reclaimed, "k1", "w1", None, &[]),
+        ev(EventKind::Round, "k1", "w1", Some(3), &[("grad_norm", 1.0), ("snr_db", 11.0)]),
+        ev(
+            EventKind::Device,
+            "k1",
+            "w1",
+            Some(3),
+            &[("device", 0.0), ("outcome", 0.0), ("tx_energy", 500.0)],
+        ),
+        ev(EventKind::Completed, "k1", "w1", None, &[
+            ("final_accuracy", 0.9),
+            ("pbar", 4.0),
+            ("max_avg_power", 3.0),
+        ]),
+        // k2 never probes: exercises the mixed probe/no-probe export.
+        ev(EventKind::Claimed, "k2", "w1", None, &[]),
+        ev(EventKind::Executed, "k2", "w1", None, &[]),
+        ev(EventKind::Round, "k2", "w1", Some(0), &[("grad_norm", 2.0)]),
+        ev(EventKind::Round, "k2", "w1", Some(1), &[("grad_norm", 1.8)]),
+        ev(EventKind::Completed, "k2", "w1", None, &[("final_accuracy", 0.7)]),
+    ]);
+    s
+}
+
+/// Every line of the exposition parses; no duplicate series; every
+/// sample's family is declared before its first sample.
+#[test]
+fn prom_text_parses_with_no_duplicate_series() {
+    let text = reduce(&stream()).to_prometheus();
+    let (samples, types) = parse_exposition(&text);
+    assert!(
+        samples.iter().any(|s| s.name == "ota_link_snr_db_bucket"),
+        "stream with probes must export the SNR histogram"
+    );
+
+    // Unique (name, labelset).
+    let mut seen: BTreeSet<(String, Vec<(String, String)>)> = BTreeSet::new();
+    for s in &samples {
+        assert!(
+            seen.insert((s.name.clone(), s.labels.clone())),
+            "duplicate series {} {:?}",
+            s.name,
+            s.labels
+        );
+    }
+
+    // Families declared exactly once, before first use.
+    let mut declared: BTreeSet<&str> = BTreeSet::new();
+    for (n, _) in &types {
+        assert!(declared.insert(n), "family {n} declared twice");
+    }
+    let order: Vec<&str> = types.iter().map(|(n, _)| n.as_str()).collect();
+    let mut first_sample: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, s) in samples.iter().enumerate() {
+        first_sample.entry(family(s, &types)).or_insert(i);
+    }
+    for (fam, _) in &first_sample {
+        assert!(
+            order.contains(fam),
+            "sample family {fam} has no # TYPE declaration"
+        );
+    }
+
+    // Values are finite numbers (no NaN/Inf leaks into the export).
+    for s in &samples {
+        assert!(s.value.is_finite(), "non-finite value in {}", s.name);
+    }
+}
+
+/// Label values round-trip the escape rules, and the parser itself
+/// handles escaped values the exporter does not currently need.
+#[test]
+fn prom_label_values_escape_roundtrip() {
+    let text = reduce(&stream()).to_prometheus();
+    let (samples, _) = parse_exposition(&text);
+    let mut labeled = 0;
+    for s in &samples {
+        for (k, v) in &s.labels {
+            labeled += 1;
+            // Round-trip: re-escaping the parsed value reproduces a
+            // valid body, and the raw text contained that body.
+            assert!(text.contains(&format!("{k}=\"{}\"", escape(v))));
+            assert!(!v.contains('\n'), "raw newline in label value");
+        }
+    }
+    assert!(labeled > 0, "exposition must carry labeled series");
+
+    // The parser handles escapes (future-proofing the contract).
+    let s = parse_sample(r#"x_total{a="q\"uo\\te",b="line\nbreak"} 7"#).unwrap();
+    assert_eq!(s.labels[0].1, "q\"uo\\te");
+    assert_eq!(s.labels[1].1, "line\nbreak");
+    assert_eq!(s.value, 7.0);
+    // And rejects malformed lines rather than guessing.
+    assert!(parse_sample("x_total{a=unquoted} 1").is_err());
+    assert!(parse_sample("x_total{a=\"open} 1").is_err());
+    assert!(parse_sample("{} 1").is_err());
+    assert!(parse_sample("x_total nope").is_err());
+}
+
+/// Counters never decrease as the event log grows: reduce every
+/// prefix of one stream and compare counter samples pairwise.
+#[test]
+fn prom_counters_monotone_under_replay() {
+    let events = stream();
+    let mut prev: BTreeMap<(String, Vec<(String, String)>), f64> = BTreeMap::new();
+    for n in 0..=events.len() {
+        let text = reduce(&events[..n]).to_prometheus();
+        let (samples, types) = parse_exposition(&text);
+        let counters: BTreeSet<&str> = types
+            .iter()
+            .filter(|(_, t)| t == "counter")
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut cur = BTreeMap::new();
+        for s in &samples {
+            if !counters.contains(s.name.as_str()) {
+                continue;
+            }
+            if let Some(&old) = prev.get(&(s.name.clone(), s.labels.clone())) {
+                assert!(
+                    s.value >= old,
+                    "counter {} {:?} went backwards: {} -> {} at prefix {}",
+                    s.name,
+                    s.labels,
+                    old,
+                    s.value,
+                    n
+                );
+            }
+            cur.insert((s.name.clone(), s.labels.clone()), s.value);
+        }
+        // A counter series, once exported, never disappears.
+        for key in prev.keys() {
+            assert!(cur.contains_key(key), "counter series {key:?} vanished at prefix {n}");
+        }
+        prev = cur;
+    }
+    assert!(
+        prev.keys().any(|(n, _)| n == "ota_link_device_events_total"),
+        "full stream must export the device-event counter"
+    );
+}
+
+/// Histogram samples are internally consistent: buckets cumulative in
+/// `le`, `+Inf` bucket equals `_count`, `_sum` matches the series.
+#[test]
+fn prom_histogram_buckets_are_cumulative() {
+    let text = reduce(&stream()).to_prometheus();
+    let (samples, _) = parse_exposition(&text);
+    let key_of = |s: &Sample| {
+        s.labels
+            .iter()
+            .find(|(k, _)| k == "key")
+            .map(|(_, v)| v.clone())
+            .expect("histogram sample without key label")
+    };
+    let mut buckets: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+    let mut sums: BTreeMap<String, f64> = BTreeMap::new();
+    for s in &samples {
+        match s.name.as_str() {
+            "ota_link_snr_db_bucket" => {
+                let le = s
+                    .labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .map(|(_, v)| v.clone())
+                    .expect("bucket without le");
+                let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+                buckets.entry(key_of(s)).or_default().push((le, s.value));
+            }
+            "ota_link_snr_db_count" => {
+                counts.insert(key_of(s), s.value);
+            }
+            "ota_link_snr_db_sum" => {
+                sums.insert(key_of(s), s.value);
+            }
+            _ => {}
+        }
+    }
+    assert!(!buckets.is_empty(), "probed stream must export SNR buckets");
+    for (key, mut series) in buckets {
+        series.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for pair in series.windows(2) {
+            assert!(
+                pair[1].1 >= pair[0].1,
+                "buckets not cumulative for {key}: {pair:?}"
+            );
+        }
+        let (last_le, last_n) = *series.last().unwrap();
+        assert_eq!(last_le, f64::INFINITY, "missing +Inf bucket for {key}");
+        assert_eq!(Some(&last_n), counts.get(&key), "+Inf bucket != _count for {key}");
+        assert!(sums.contains_key(&key), "histogram {key} missing _sum");
+    }
+    // The stream's k1 saw SNR 8,9,10,11 dB over 4 probed rounds.
+    assert_eq!(counts.values().copied().sum::<f64>(), 4.0);
+}

@@ -3,12 +3,23 @@
 
 Usage:
     bench_compare.py BASELINE.json FRESH.json [--fail-over RATIO]
+    bench_compare.py --self-gate FRESH.json [--fail-over RATIO]
 
 Compares entries by name on mean_ns. An entry whose fresh mean exceeds
 ``RATIO x`` its baseline mean (default 2.0 -- generous, because shared CI
 runners are noisy) counts as a regression and fails the script. Entries
 present on only one side are reported but never fail the gate (kernels are
 added and retired across PRs).
+
+``--self-gate`` takes a *single* file and compares each optimized kernel
+against its reference formulation measured in the same run: every entry
+whose name carries a parenthetical containing "reference" (e.g.
+``dot d=7850 (reference scalar)``) is paired with the entry named by the
+same base (``dot d=7850``, or the unique non-reference entry extending
+it, e.g. ``minibatch gradient B=200 (tiled)``). The optimized side must
+not be slower than ``RATIO x`` the reference. Because both sides come
+from one process on one host, the self-gate is host-independent and
+needs no committed measured baseline.
 
 A baseline with ``unix_time == 0`` is an *estimated* seed -- numbers that
 were never measured on real hardware (authored on a host without the
@@ -68,10 +79,102 @@ def fmt_ns(ns: float) -> str:
     return f"{ns / 1e9:.3f} s"
 
 
+def split_reference(name: str) -> str | None:
+    """Base name for a reference entry, or None if it is not one.
+
+    A reference entry carries a parenthetical containing the word
+    "reference": strip that parenthetical (and surrounding whitespace)
+    to get the base shared with the optimized counterpart.
+    """
+    start = name.rfind("(")
+    if start < 0 or not name.endswith(")"):
+        return None
+    if "reference" not in name[start:].lower():
+        return None
+    return name[:start].strip()
+
+
+def pair_optimized(base: str, index: dict[str, dict]) -> str | None:
+    """The optimized counterpart of a reference entry's base name."""
+    if base in index and split_reference(base) is None:
+        return base
+    candidates = [
+        n
+        for n in index
+        if n.startswith(base) and split_reference(n) is None and n != base
+    ]
+    return candidates[0] if len(candidates) == 1 else None
+
+
+def self_gate(path: str, fail_over: float) -> int:
+    doc = load_doc(path)
+    index = results_index(doc)
+    estimated = is_estimated(doc)
+
+    pairs = []
+    unpaired = []
+    for name in sorted(index):
+        base = split_reference(name)
+        if base is None:
+            continue
+        opt = pair_optimized(base, index)
+        if opt is None:
+            unpaired.append(name)
+            continue
+        pairs.append((opt, name))
+
+    if not pairs:
+        print(f"error: no optimized/reference pairs found in {path}", file=sys.stderr)
+        return 2
+
+    regressions = []
+    print(f"{'optimized kernel':<56} {'optimized':>12} {'reference':>12} {'ratio':>8}")
+    for opt, ref in pairs:
+        o_ns, r_ns = float(index[opt]["mean_ns"]), float(index[ref]["mean_ns"])
+        ratio = o_ns / r_ns if r_ns > 0 else float("inf")
+        flag = ""
+        if ratio > fail_over:
+            regressions.append((opt, ratio))
+            flag = "  << SLOWER THAN REFERENCE"
+        print(f"{opt:<56} {fmt_ns(o_ns):>12} {fmt_ns(r_ns):>12} {ratio:>7.2f}x{flag}")
+    for name in unpaired:
+        print(f"note: no unique optimized counterpart for {name!r}; skipped")
+
+    if regressions:
+        print(
+            f"\n{len(regressions)} optimized kernel(s) slower than "
+            f"{fail_over:.2f}x their same-run reference:",
+            file=sys.stderr,
+        )
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x", file=sys.stderr)
+        if estimated:
+            print(
+                "\nfile is an estimated seed (unix_time == 0), never measured -- "
+                "reporting only, not failing. The self-gate arms on the first "
+                "measured run."
+            )
+            return 0
+        return 1
+    print(
+        f"\nself-gate clean: {len(pairs)} optimized kernel(s) within "
+        f"{fail_over:.2f}x of their reference"
+        + (" (estimated seed, unarmed)" if estimated else "")
+    )
+    return 0
+
+
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("baseline", help="committed baseline BENCH_*.json")
-    parser.add_argument("fresh", help="freshly generated BENCH_*.json")
+    parser.add_argument(
+        "fresh", nargs="?", help="freshly generated BENCH_*.json (omit with --self-gate)"
+    )
+    parser.add_argument(
+        "--self-gate",
+        action="store_true",
+        help="compare optimized vs reference pairs within the single given file",
+    )
     parser.add_argument(
         "--fail-over",
         type=float,
@@ -82,6 +185,14 @@ def main() -> int:
     args = parser.parse_args()
     if args.fail_over <= 0:
         print("error: --fail-over must be positive", file=sys.stderr)
+        return 2
+    if args.self_gate:
+        if args.fresh is not None:
+            print("error: --self-gate takes exactly one file", file=sys.stderr)
+            return 2
+        return self_gate(args.baseline, args.fail_over)
+    if args.fresh is None:
+        print("error: FRESH.json required without --self-gate", file=sys.stderr)
         return 2
 
     base_doc = load_doc(args.baseline)

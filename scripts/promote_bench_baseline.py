@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Promote a measured components-bench run to the committed baseline.
+
+Usage:
+    promote_bench_baseline.py FRESH.json [--baseline BENCH_components.json]
+    promote_bench_baseline.py FRESH.json --check
+
+The committed ``BENCH_components.json`` at the repo root seeds the CI
+regression gate (``scripts/bench_compare.py``). The tree's original
+baseline is *estimated* (``unix_time == 0``) because it was authored on
+a host without the toolchain, which leaves the cross-run gate unarmed.
+This script arms it: download the ``bench-components-json`` artifact
+from a green CI run (or run ``cargo bench --bench components`` locally)
+and promote it.
+
+Validation before anything is overwritten:
+
+* the fresh file parses and carries a non-empty ``results`` array;
+* ``unix_time > 0`` -- only *measured* runs may become the baseline;
+* every kernel name in the committed baseline is still present in the
+  fresh run (kernels may be added freely; a kernel that *vanished*
+  usually means a partial bench run, so it must be acknowledged with
+  ``--allow-missing``).
+
+``--check`` performs the validation and prints the verdict without
+writing. Exit status: 0 = promoted (or check passed), 1 = validation
+failed, 2 = bad input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+
+def load_doc(path: Path) -> dict:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"error: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(doc, dict) or not isinstance(doc.get("results"), list):
+        print(f"error: {path} has no 'results' array", file=sys.stderr)
+        sys.exit(2)
+    return doc
+
+
+def names(doc: dict) -> set[str]:
+    return {
+        e["name"]
+        for e in doc["results"]
+        if isinstance(e, dict) and isinstance(e.get("name"), str)
+    }
+
+
+def main() -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("fresh", type=Path, help="measured BENCH_components.json artifact")
+    parser.add_argument(
+        "--baseline",
+        type=Path,
+        default=repo_root / "BENCH_components.json",
+        help="committed baseline to replace (default: repo root)",
+    )
+    parser.add_argument(
+        "--check",
+        action="store_true",
+        help="validate only; do not write the baseline",
+    )
+    parser.add_argument(
+        "--allow-missing",
+        action="store_true",
+        help="permit baseline kernels absent from the fresh run",
+    )
+    args = parser.parse_args()
+
+    fresh = load_doc(args.fresh)
+    fresh_names = names(fresh)
+    failures: list[str] = []
+
+    if not fresh_names:
+        failures.append("fresh run has no named results")
+    ts = fresh.get("unix_time", 0)
+    if not isinstance(ts, (int, float)) or ts <= 0:
+        failures.append(
+            f"unix_time is {ts!r}: only measured runs (unix_time > 0) may "
+            "become the baseline"
+        )
+    bad_means = [
+        e.get("name", "?")
+        for e in fresh["results"]
+        if not isinstance(e.get("mean_ns"), (int, float)) or e.get("mean_ns", 0) <= 0
+    ]
+    if bad_means:
+        failures.append(f"non-positive or missing mean_ns: {sorted(bad_means)}")
+
+    if args.baseline.exists():
+        missing = sorted(names(load_doc(args.baseline)) - fresh_names)
+        if missing and not args.allow_missing:
+            failures.append(
+                f"{len(missing)} baseline kernel(s) absent from the fresh run "
+                f"(pass --allow-missing to acknowledge): {missing}"
+            )
+    else:
+        print(f"note: no existing baseline at {args.baseline}; promoting fresh run as-is")
+
+    if failures:
+        for f in failures:
+            print(f"error: {f}", file=sys.stderr)
+        return 1
+
+    print(f"fresh run: {len(fresh_names)} kernels, unix_time={ts}")
+    if args.check:
+        print("check passed; not writing (drop --check to promote)")
+        return 0
+    shutil.copyfile(args.fresh, args.baseline)
+    print(f"promoted {args.fresh} -> {args.baseline} (cross-run gate is now armed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
