@@ -7,6 +7,6 @@ pub mod schema;
 pub use presets::MODEL_DIM;
 pub use schema::{
     Backend, CampaignConfig, ConfigError, DatasetSpec, FadingDist, FleetConfig, GraphFamily,
-    LinkKind, MixingRule, ParticipationPolicy, PowerSchedule, RunConfig, Scheme, TelemetryConfig,
-    TopologyConfig,
+    LinkKind, MixingRule, ParticipationPolicy, PowerSchedule, RunConfig, Scheme, ServeConfig,
+    TelemetryConfig, TopologyConfig,
 };

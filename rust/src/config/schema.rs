@@ -1288,6 +1288,68 @@ impl FleetConfig {
     }
 }
 
+/// The `[serve]` table: the telemetry server's listen address
+/// (`repro serve`, see `fleet::serve`). Serving is observe-only like
+/// telemetry itself — nothing here enters a run's content-address.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// `host:port` the HTTP server binds. Port 0 picks an ephemeral
+    /// port (the chosen address is printed at startup).
+    pub listen: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { listen: "127.0.0.1:7878".into() }
+    }
+}
+
+impl ServeConfig {
+    /// Read the `[serve]` table from a parsed document (absent table =
+    /// all defaults).
+    pub fn from_doc(doc: &Document) -> Result<ServeConfig, ConfigError> {
+        let mut cfg = ServeConfig::default();
+        let Some(section) = doc.get("serve") else {
+            return Ok(cfg);
+        };
+        let bad = |k: &str, v: &Value| {
+            ConfigError::Invalid(format!("[serve] key {k:?}: unexpected value {v:?}"))
+        };
+        for (k, v) in section {
+            match k.as_str() {
+                "listen" => cfg.listen = v.as_str().ok_or_else(|| bad(k, v))?.to_string(),
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown [serve] key {other:?}"
+                    )));
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml(text: &str) -> Result<ServeConfig, ConfigError> {
+        Self::from_doc(&parser::parse(text)?)
+    }
+
+    /// `listen` must look like `host:port` — the split is validated here
+    /// so a typo fails at config load, not at bind time.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let fail = |msg: String| Err(ConfigError::Invalid(msg));
+        let Some((host, port)) = self.listen.rsplit_once(':') else {
+            return fail(format!("serve listen must be host:port, got {:?}", self.listen));
+        };
+        if host.is_empty() {
+            return fail(format!("serve listen has an empty host: {:?}", self.listen));
+        }
+        if port.parse::<u16>().is_err() {
+            return fail(format!("serve listen has a bad port: {:?}", self.listen));
+        }
+        Ok(())
+    }
+}
+
 /// Parse helper used by the launcher: read a whole document and report
 /// unknown sections.
 pub fn load_document(text: &str) -> Result<Document, ConfigError> {
@@ -1757,6 +1819,21 @@ rho = 0.85
         assert!(FleetConfig { lease_secs: 10.0, heartbeat_secs: 6.0, ..d }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn serve_table_parses_validates_and_defaults() {
+        let s = ServeConfig::from_toml("[serve]\nlisten = \"0.0.0.0:9100\"\n").unwrap();
+        assert_eq!(s.listen, "0.0.0.0:9100");
+        // Absent table = defaults, and the defaults validate.
+        let d = ServeConfig::from_toml("[run]\ndevices = 4\n").unwrap();
+        assert_eq!(d, ServeConfig::default());
+        d.validate().unwrap();
+        // Unknown keys and malformed addresses rejected at load time.
+        assert!(ServeConfig::from_toml("[serve]\nbogus = 1\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nlisten = \"no-port\"\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nlisten = \":7878\"\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nlisten = \"host:70000\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,476 @@
+//! Remote observability clients: the `--connect` side of
+//! [`super::serve`].
+//!
+//! `repro metrics --connect` and `repro watch --connect` do **not**
+//! trust the server to aggregate: they stream raw events from
+//! `/events` and fold them through the same [`Reducer`] the local CLI
+//! uses, so the remote view is the same *computation* as the local
+//! one, merely fed over TCP. That is what makes the over-the-wire
+//! determinism contract checkable: remote Prometheus text ==
+//! local `repro metrics` byte-for-byte, remote
+//! `Metrics::deterministic_core()` == local bit-for-bit.
+//!
+//! Everything here is hand-rolled on `std::net` + a minimal JSON
+//! value parser (the crate has no HTTP or JSON dependency by design)
+//! and speaks exactly the responder subset `fleet::serve` emits:
+//! `HTTP/1.x`, `Connection: close`, EOF-delimited bodies.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::events::{Cursor, Event, TailReport};
+use super::metrics::{Metrics, Reducer};
+use super::status::{FleetStatus, ItemStatus};
+
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One parsed HTTP response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    /// Header names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// `GET http://{addr}{path}` with `Connection: close`; the body is
+/// read to EOF. `addr` is `host:port`.
+pub fn http_get(addr: &str, path: &str) -> io::Result<Response> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let req = format!("GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    parse_response(&raw)
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn parse_response(raw: &[u8]) -> io::Result<Response> {
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| (p, p + 4))
+        .or_else(|| raw.windows(2).position(|w| w == b"\n\n").map(|p| (p, p + 2)))
+        .ok_or_else(|| bad("response has no header/body separator"))?;
+    let head = String::from_utf8_lossy(&raw[..head_end.0]);
+    let mut lines = head.lines();
+    let status_line = lines.next().ok_or_else(|| bad("empty response"))?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad(format!("not an HTTP/1.x response: {status_line:?}")));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad(format!("bad status line: {status_line:?}")))?;
+    let headers = lines
+        .filter_map(|l| {
+            l.split_once(':')
+                .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        })
+        .collect();
+    Ok(Response { status, headers, body: raw[head_end.1..].to_vec() })
+}
+
+/// Fetch `/events?after=<cursor>` and reassemble the server's
+/// [`TailReport`]: whole event lines from the body, advanced cursor
+/// and skip accounting from the `x-ota-*` headers. Like the local
+/// reader it is fail-soft on content: a body line that does not parse
+/// is counted as skipped, never fatal.
+pub fn fetch_events(addr: &str, cursor: &Cursor) -> io::Result<TailReport> {
+    let path = format!("/events?after={}", cursor.render());
+    let resp = http_get(addr, &path)?;
+    if resp.status != 200 {
+        return Err(bad(format!("GET /events: HTTP {}", resp.status)));
+    }
+    let next = resp
+        .header("x-ota-cursor")
+        .ok_or_else(|| bad("missing x-ota-cursor header"))?;
+    let mut tail = TailReport {
+        cursor: Cursor::parse(next).map_err(bad)?,
+        consumed_skipped: header_count(&resp, "x-ota-skipped")?,
+        pending_tails: header_count(&resp, "x-ota-pending")?,
+        unreadable_files: header_count(&resp, "x-ota-unreadable")?,
+        ..TailReport::default()
+    };
+    for line in String::from_utf8_lossy(&resp.body).lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Event::parse(line) {
+            Ok(ev) => tail.events.push(ev),
+            Err(_) => tail.consumed_skipped += 1,
+        }
+    }
+    Ok(tail)
+}
+
+fn header_count(resp: &Response, name: &str) -> io::Result<usize> {
+    resp.header(name)
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| bad(format!("bad {name} header")))
+}
+
+/// One-shot remote reduction: stream the whole log from the zero
+/// cursor and fold it through the same [`Reducer`] as the local path.
+/// `repro metrics --connect` prints `.to_prometheus()` of this.
+pub fn remote_metrics(addr: &str) -> io::Result<Metrics> {
+    let tail = fetch_events(addr, &Cursor::default())?;
+    let mut r = Reducer::default();
+    r.absorb_tail(&tail);
+    Ok(r.metrics())
+}
+
+/// Fetch `/status` and parse it back into the server's
+/// [`FleetStatus`] (plus the server-side store path, informational).
+/// The fail-soft `unreadable` count rides along untouched, so
+/// `repro fleet-status --connect` keeps the skip-and-count contract
+/// end to end.
+pub fn fetch_status(addr: &str) -> io::Result<(String, FleetStatus)> {
+    let resp = http_get(addr, "/status")?;
+    if resp.status != 200 {
+        return Err(bad(format!("GET /status: HTTP {}", resp.status)));
+    }
+    parse_status(&String::from_utf8_lossy(&resp.body))
+}
+
+/// Parse the `/status` JSON document (the inverse of
+/// `status::status_to_json`; the round-trip is pinned in
+/// `rust/tests/remote_observability.rs`).
+pub fn parse_status(text: &str) -> io::Result<(String, FleetStatus)> {
+    let doc = Json::parse(text).map_err(bad)?;
+    let obj = doc.as_obj().ok_or_else(|| bad("/status: not an object"))?;
+    let field = |name: &str| {
+        obj.iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v)
+            .ok_or_else(|| bad(format!("/status: missing `{name}`")))
+    };
+    let count = |name: &str| -> io::Result<usize> {
+        field(name)?
+            .as_f64()
+            .map(|v| v as usize)
+            .ok_or_else(|| bad(format!("/status: `{name}` is not a number")))
+    };
+    let store_dir = field("store_dir")?
+        .as_str()
+        .ok_or_else(|| bad("/status: `store_dir` is not a string"))?
+        .to_string();
+    let mut st = FleetStatus {
+        unreadable: count("unreadable")?,
+        complete: count("complete")?,
+        running: count("running")?,
+        stale: count("stale")?,
+        rounds_done: count("rounds_done")?,
+        rounds_total: count("rounds_total")?,
+        ..FleetStatus::default()
+    };
+    let items = field("items")?
+        .as_arr()
+        .ok_or_else(|| bad("/status: `items` is not an array"))?;
+    for item in items {
+        let obj = item.as_obj().ok_or_else(|| bad("/status: item is not an object"))?;
+        let get = |name: &str| {
+            obj.iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v)
+                .ok_or_else(|| bad(format!("/status item: missing `{name}`")))
+        };
+        let s = |name: &str| -> io::Result<String> {
+            get(name)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("/status item: `{name}` is not a string")))
+        };
+        let n = |name: &str| -> io::Result<usize> {
+            get(name)?
+                .as_f64()
+                .map(|v| v as usize)
+                .ok_or_else(|| bad(format!("/status item: `{name}` is not a number")))
+        };
+        st.items.push(ItemStatus {
+            seq: n("seq")?,
+            key: s("key")?,
+            label: s("label")?,
+            spec_id: s("spec_id")?,
+            state: s("state")?,
+            rounds_done: n("rounds_done")?,
+            rounds_total: n("rounds_total")?,
+        });
+    }
+    Ok((store_dir, st))
+}
+
+/// Minimal recursive JSON value — just enough to parse the structured
+/// documents `fleet::serve` emits (`/status`, `/health`). The event
+/// wire format stays on the flat parser in [`super::events`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing bytes at {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, name: &str) -> Option<&Json> {
+        self.as_obj()?
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v)
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.bytes.get(self.pos).is_some_and(|b| b.is_ascii_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn lit(&mut self, lit: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') if self.lit("true") => Ok(Json::Bool(true)),
+            Some(b'f') if self.lit("false") => Ok(Json::Bool(false)),
+            Some(b'n') if self.lit("null") => Ok(Json::Null),
+            Some(_) => self.number().map(Json::Num),
+            None => Err("unexpected end of document".into()),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.pos += 1; // {
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.eat(b'}') {
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            if !self.eat(b':') {
+                return Err(format!("expected `:` at byte {}", self.pos));
+            }
+            out.push((key, self.value()?));
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            if self.eat(b'}') {
+                return Ok(Json::Obj(out));
+            }
+            return Err(format!("expected `,` or `}}` at byte {}", self.pos));
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.pos += 1; // [
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.eat(b']') {
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            if self.eat(b']') {
+                return Ok(Json::Arr(out));
+            }
+            return Err(format!("expected `,` or `]` at byte {}", self.pos));
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if !self.eat(b'"') {
+            return Err(format!("expected string at byte {}", self.pos));
+        }
+        let mut out = String::new();
+        loop {
+            let b = self.peek().ok_or("unterminated string")?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().ok_or("dangling escape")?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(format!("unknown escape \\{}", e as char)),
+                    }
+                }
+                _ => {
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len() && (self.bytes[end] & 0xC0) == 0x80 {
+                        end += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| "invalid utf-8 in string".to_string())?;
+                    out.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.pos;
+        while self.peek().is_some_and(|b| {
+            b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E')
+        }) {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(format!("expected a value at byte {start}"));
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parses_nested_documents() {
+        let doc = Json::parse(
+            "{\"a\":[1,2.5,-3e2],\"b\":{\"c\":\"x\\ny\",\"d\":true},\"e\":null}",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("a").unwrap().as_arr().unwrap()[2].as_f64(), Some(-300.0));
+        assert_eq!(doc.get("b").unwrap().get("c").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(doc.get("b").unwrap().get("d").unwrap(), &Json::Bool(true));
+        assert_eq!(doc.get("e").unwrap(), &Json::Null);
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,2}").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+    }
+
+    #[test]
+    fn http_response_parses_status_headers_body() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nX-OTA-Cursor: w0:12\r\n\r\nbody bytes";
+        let resp = parse_response(raw).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("x-ota-cursor"), Some("w0:12"));
+        assert_eq!(resp.header("content-type"), Some("text/plain"));
+        assert_eq!(resp.body, b"body bytes");
+        assert!(parse_response(b"junk with no separator").is_err());
+    }
+}

@@ -72,8 +72,9 @@
 //! Per-worker throughput and reclaim counts are intentionally
 //! *outside* that core — they describe the fleet, not the campaign.
 
+use std::collections::BTreeMap;
 use std::fs::{self, OpenOptions};
-use std::io::{self, Write};
+use std::io::{self, Read as _, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -421,12 +422,126 @@ pub struct ReadReport {
 /// Read every `*.jsonl` segment under the store's event directory.
 /// Fail-soft: a missing directory yields an empty report; torn or
 /// unparseable lines and unreadable files are counted, never fatal.
+///
+/// Equivalent to [`read_events_from`] with an empty [`Cursor`]: the
+/// batch read is literally the from-zero special case of the
+/// incremental tail, so the two accountings can never drift apart.
 pub fn read_events(store_root: &Path) -> ReadReport {
-    let mut report = ReadReport::default();
+    let tail = read_events_from(store_root, &Cursor::default());
+    ReadReport {
+        events: tail.events,
+        skipped_lines: tail.consumed_skipped + tail.pending_tails,
+        unreadable_files: tail.unreadable_files,
+    }
+}
+
+/// A reader's position in the store's event log: one consumed-byte
+/// offset per writer segment, keyed by the sanitized writer id (the
+/// segment's file stem). An absent writer reads from offset 0, so a
+/// default cursor replays the whole log and segments that appear later
+/// (new workers joining the fleet) are picked up automatically.
+///
+/// The wire form is `writer:offset` pairs joined by commas
+/// (`w0:1024,w1:768`, empty string for the zero cursor) — unambiguous
+/// because writer ids are sanitized to `[A-Za-z0-9._-]` at
+/// [`EventLog::open`], which admits neither `:` nor `,`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Cursor {
+    offsets: BTreeMap<String, u64>,
+}
+
+impl Cursor {
+    /// Consumed-byte offset for one writer segment (0 if never seen).
+    pub fn offset(&self, writer: &str) -> u64 {
+        self.offsets.get(writer).copied().unwrap_or(0)
+    }
+
+    /// The writers this cursor has consumed bytes from.
+    pub fn writers(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.offsets.iter().map(|(w, &o)| (w.as_str(), o))
+    }
+
+    fn advance(&mut self, writer: &str, offset: u64) {
+        if offset > 0 {
+            self.offsets.insert(writer.to_string(), offset);
+        }
+    }
+
+    /// Wire form: `w0:1024,w1:768` (empty for the zero cursor).
+    pub fn render(&self) -> String {
+        self.offsets
+            .iter()
+            .map(|(w, o)| format!("{w}:{o}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Inverse of [`Cursor::render`]. `Err` carries a short reason.
+    pub fn parse(s: &str) -> Result<Cursor, String> {
+        let mut c = Cursor::default();
+        for pair in s.split(',') {
+            if pair.is_empty() {
+                continue;
+            }
+            let (writer, off) = pair
+                .rsplit_once(':')
+                .ok_or_else(|| format!("cursor pair `{pair}` has no `:`"))?;
+            if writer.is_empty()
+                || !writer
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+            {
+                return Err(format!("bad writer id `{writer}` in cursor"));
+            }
+            let off: u64 = off
+                .parse()
+                .map_err(|_| format!("bad offset `{off}` in cursor"))?;
+            c.offsets.insert(writer.to_string(), off);
+        }
+        Ok(c)
+    }
+}
+
+/// One incremental read of the log: everything appended past a
+/// [`Cursor`], plus the advanced cursor and the reader's fail-soft
+/// accounting. See [`read_events_from`].
+#[derive(Clone, Debug, Default)]
+pub struct TailReport {
+    /// Newly parsed events, in per-file order.
+    pub events: Vec<Event>,
+    /// The cursor after this read; feed it back to resume.
+    pub cursor: Cursor,
+    /// Garbage *terminated* lines consumed (and permanently skipped)
+    /// by this read. Cumulative across a cursor chain: a consumed line
+    /// is never revisited, so a resumed reader adds these up.
+    pub consumed_skipped: usize,
+    /// Segments currently ending in a torn, unterminated line. The
+    /// cursor does **not** advance past a torn tail — the writer may
+    /// still be mid-append — so this is a point-in-time count, not a
+    /// cumulative one: the same tail reports 1 on every read until the
+    /// writer terminates it (then it parses) or appends past it (then
+    /// it is consumed as garbage and moves into `consumed_skipped`).
+    pub pending_tails: usize,
+    /// Segments unreadable at this read (open/read failure, or a
+    /// segment shorter than the cursor claims was consumed — an
+    /// append-only file must never shrink). Point-in-time, like
+    /// `pending_tails`; the cursor is left untouched for retry.
+    pub unreadable_files: usize,
+}
+
+/// Incrementally read every `*.jsonl` segment past `cursor`, never
+/// consuming a partial line: a torn tail is left unconsumed (and
+/// counted in [`TailReport::pending_tails`]) so the next read resumes
+/// exactly at the line boundary. Fail-soft like [`read_events`], and
+/// equivalent to it from the zero cursor:
+/// `consumed_skipped + pending_tails` is then exactly the batch
+/// reader's `skipped_lines`.
+pub fn read_events_from(store_root: &Path, cursor: &Cursor) -> TailReport {
+    let mut tail = TailReport { cursor: cursor.clone(), ..TailReport::default() };
     let dir = events_dir(store_root);
     let entries = match fs::read_dir(&dir) {
         Ok(e) => e,
-        Err(_) => return report,
+        Err(_) => return tail,
     };
     let mut files: Vec<PathBuf> = entries
         .filter_map(|e| e.ok().map(|e| e.path()))
@@ -434,33 +549,63 @@ pub fn read_events(store_root: &Path) -> ReadReport {
         .collect();
     files.sort();
     for path in files {
-        let bytes = match fs::read(&path) {
+        let Some(writer) = path.file_stem().and_then(|s| s.to_str()).map(str::to_string)
+        else {
+            continue;
+        };
+        let offset = cursor.offset(&writer);
+        let bytes = match read_segment_from(&path, offset) {
             Ok(b) => b,
             Err(_) => {
-                report.unreadable_files += 1;
+                tail.unreadable_files += 1;
                 continue;
             }
         };
-        let text = String::from_utf8_lossy(&bytes);
-        let terminated = text.ends_with('\n');
-        let lines: Vec<&str> = text.lines().collect();
-        for (i, line) in lines.iter().enumerate() {
+        // Only whole lines are consumed: split at the final newline and
+        // leave anything after it (a torn or in-flight append) for the
+        // next read.
+        let consumed_len = match bytes.iter().rposition(|&b| b == b'\n') {
+            Some(last_nl) => last_nl + 1,
+            None => 0,
+        };
+        for line in bytes[..consumed_len].split(|&b| b == b'\n') {
+            let line = String::from_utf8_lossy(line);
+            let line = line.trim_end_matches('\r');
             if line.trim().is_empty() {
                 continue;
             }
-            // An unterminated final line is a torn append from a killed
-            // writer: skip it without even attempting a parse.
-            if i + 1 == lines.len() && !terminated {
-                report.skipped_lines += 1;
-                continue;
-            }
             match Event::parse(line) {
-                Ok(ev) => report.events.push(ev),
-                Err(_) => report.skipped_lines += 1,
+                Ok(ev) => tail.events.push(ev),
+                Err(_) => tail.consumed_skipped += 1,
             }
         }
+        if bytes[consumed_len..].iter().any(|b| !b.is_ascii_whitespace()) {
+            tail.pending_tails += 1;
+        }
+        tail.cursor.advance(&writer, offset + consumed_len as u64);
     }
-    report
+    tail
+}
+
+/// Read one segment from `offset` to EOF. `Err` on open/seek/read
+/// failure or if the file is shorter than `offset` (an append-only
+/// segment must never shrink — a shorter file means the cursor belongs
+/// to a different incarnation of the store).
+fn read_segment_from(path: &Path, offset: u64) -> io::Result<Vec<u8>> {
+    let mut f = fs::File::open(path)?;
+    let len = f.metadata()?.len();
+    if len < offset {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "segment shrank below the cursor offset",
+        ));
+    }
+    if offset > 0 {
+        f.seek(SeekFrom::Start(offset))?;
+    }
+    let mut buf = Vec::with_capacity((len - offset) as usize);
+    f.read_to_end(&mut buf)?;
+    Ok(buf)
 }
 
 /// Zero the wall-clock field of every event (the determinism mask).
@@ -487,7 +632,7 @@ pub fn sort_events(events: &mut [Event]) {
     });
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -768,6 +913,97 @@ mod tests {
         let report = read_events(&root);
         assert!(report.events.is_empty());
         assert_eq!(report.skipped_lines, 1);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn cursor_renders_and_parses_roundtrip() {
+        let mut c = Cursor::default();
+        assert_eq!(c.render(), "");
+        assert_eq!(Cursor::parse("").unwrap(), c);
+        c.advance("w0", 1024);
+        c.advance("sched-123", 77);
+        assert_eq!(c.render(), "sched-123:77,w0:1024");
+        assert_eq!(Cursor::parse(&c.render()).unwrap(), c);
+        assert_eq!(c.offset("w0"), 1024);
+        assert_eq!(c.offset("nope"), 0);
+        assert!(Cursor::parse("w0").is_err(), "missing `:`");
+        assert!(Cursor::parse("w0:abc").is_err(), "bad offset");
+        assert!(Cursor::parse("w:0/evil:1").is_err(), "bad writer chars");
+    }
+
+    #[test]
+    fn incremental_tail_never_consumes_a_torn_line() {
+        let root = tmp("tail");
+        let log = EventLog::open(&root, "w0").unwrap();
+        log.emit(EventKind::Claimed, "k1", None, &[]);
+        let first = read_events_from(&root, &Cursor::default());
+        assert_eq!(first.events.len(), 1);
+        assert_eq!((first.consumed_skipped, first.pending_tails), (0, 0));
+
+        // A torn append: the cursor must not move past it, and it is
+        // reported as a pending tail on every read until resolved.
+        let path = events_dir(&root).join("w0.jsonl");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"v\":1,\"kind\":\"comp").unwrap();
+        drop(f);
+        let torn = read_events_from(&root, &first.cursor);
+        assert!(torn.events.is_empty());
+        assert_eq!(torn.pending_tails, 1);
+        assert_eq!(torn.cursor, first.cursor, "cursor parked before the tear");
+
+        // The writer finishes the line: the next read parses it whole.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"leted\",\"key\":\"k1\",\"ms\":0}\n").unwrap();
+        drop(f);
+        let healed = read_events_from(&root, &torn.cursor);
+        assert_eq!(healed.events.len(), 1);
+        assert_eq!(healed.events[0].kind, EventKind::Completed);
+        assert_eq!((healed.consumed_skipped, healed.pending_tails), (0, 0));
+
+        // A new writer segment appears: picked up from offset 0.
+        let log2 = EventLog::open(&root, "w1").unwrap();
+        log2.emit(EventKind::Heartbeat, "k1", None, &[]);
+        let grown = read_events_from(&root, &healed.cursor);
+        assert_eq!(grown.events.len(), 1);
+        assert_eq!(grown.events[0].worker, "w1");
+        assert!(grown.cursor.offset("w1") > 0);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn batch_read_is_the_zero_cursor_special_case() {
+        let root = tmp("batchzero");
+        let log = EventLog::open(&root, "w0").unwrap();
+        log.emit(EventKind::Claimed, "k1", None, &[]);
+        let path = events_dir(&root).join("w0.jsonl");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"garbage line\n").unwrap();
+        f.write_all(b"{\"v\":1,\"kind\":\"torn").unwrap();
+        drop(f);
+        let batch = read_events(&root);
+        let tail = read_events_from(&root, &Cursor::default());
+        assert_eq!(batch.events, tail.events);
+        assert_eq!(
+            batch.skipped_lines,
+            tail.consumed_skipped + tail.pending_tails,
+            "batch skip accounting == consumed garbage + pending tails"
+        );
+        assert_eq!(batch.unreadable_files, tail.unreadable_files);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn shrunk_segment_reads_as_unreadable_not_corrupt() {
+        let root = tmp("shrunk");
+        let log = EventLog::open(&root, "w0").unwrap();
+        log.emit(EventKind::Claimed, "k1", None, &[]);
+        let tail = read_events_from(&root, &Cursor::default());
+        fs::write(events_dir(&root).join("w0.jsonl"), b"{}").unwrap();
+        let after = read_events_from(&root, &tail.cursor);
+        assert!(after.events.is_empty());
+        assert_eq!(after.unreadable_files, 1);
+        assert_eq!(after.cursor, tail.cursor, "cursor untouched for retry");
         fs::remove_dir_all(&root).ok();
     }
 

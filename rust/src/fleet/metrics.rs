@@ -19,7 +19,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt::Write as _;
 
-use super::events::{Event, EventKind, ReadReport};
+use super::events::{Event, EventKind, ReadReport, TailReport};
 
 /// Per-run telemetry folded from `round` / `completed` / `enqueued`.
 #[derive(Clone, Debug, Default)]
@@ -32,6 +32,8 @@ pub struct RunSeries {
     pub rounds: BTreeSet<u64>,
     /// grad-norm by round (first write wins; identical by determinism).
     pub grad_norm: BTreeMap<u64, f64>,
+    /// training loss by round (feeds the diverging-loss health check).
+    pub train_loss: BTreeMap<u64, f64>,
     /// test accuracy by round (only rounds that evaluated).
     pub accuracy: BTreeMap<u64, f64>,
     /// Final accuracy from `completed`.
@@ -62,6 +64,11 @@ impl RunSeries {
     /// Latest `(round, accuracy)` gauge.
     pub fn last_accuracy(&self) -> Option<(u64, f64)> {
         self.accuracy.iter().next_back().map(|(&r, &v)| (r, v))
+    }
+
+    /// Latest `(round, train loss)` gauge.
+    pub fn last_train_loss(&self) -> Option<(u64, f64)> {
+        Self::last_of(&self.train_loss)
     }
 
     /// Latest `(round, value)` of a per-round link series.
@@ -155,6 +162,9 @@ pub struct Metrics {
     // --- operational (fleet-shape dependent) --------------------------
     /// Stale-lease steals (exactly one event per steal).
     pub reclaims: u64,
+    /// Reclaims per run key — repeated steals of one key are the
+    /// lease-churn health signal (see [`super::health`]).
+    pub reclaims_by_key: BTreeMap<String, u64>,
     /// Claim races that found the result already landed.
     pub already_done: u64,
     /// Snapshot events (resumes re-snapshot, so this may exceed the
@@ -211,11 +221,12 @@ impl Metrics {
             };
             let _ = writeln!(
                 s,
-                "run[{key}] label={} planned={} rounds={} grad_last={} acc_last={} final_acc={} headroom={} snr_last={} link_headroom_last={} participating_last={} consensus_last={} device_points={}",
+                "run[{key}] label={} planned={} rounds={} grad_last={} loss_last={} acc_last={} final_acc={} headroom={} snr_last={} link_headroom_last={} participating_last={} consensus_last={} device_points={}",
                 run.label,
                 run.planned_rounds.map_or("-".into(), |p| p.to_string()),
                 run.rounds.len(),
                 bits(run.last_grad_norm().map(|(_, v)| v)),
+                bits(run.last_train_loss().map(|(_, v)| v)),
                 bits(run.last_accuracy().map(|(_, v)| v)),
                 bits(run.final_accuracy),
                 bits(run.power_headroom),
@@ -442,14 +453,103 @@ impl Metrics {
                 let _ = writeln!(s, "ota_link_snr_db_count{{key=\"{k}\"}} {}", run.snr_db.len());
             }
         }
+        // Health: the deterministic findings catalog is a pure function
+        // of `self`, so embedding it here keeps every rendering path —
+        // local CLI, telemetry server, remote client — byte-identical.
+        s.push_str(&super::health::render_prometheus(&super::health::evaluate(
+            self,
+            &super::health::HealthPolicy::default(),
+        )));
         s
     }
 }
 
-/// Fold events into [`Metrics`]. Order-insensitive by construction.
+/// Fold events into [`Metrics`]. Order-insensitive by construction,
+/// and literally the from-empty special case of [`Reducer`] — batch
+/// and incremental reduction share one fold, so they cannot drift.
 pub fn reduce(events: &[Event]) -> Metrics {
-    let mut m = Metrics::default();
-    for ev in events {
+    let mut r = Reducer::default();
+    r.fold(events);
+    r.into_metrics()
+}
+
+/// Incremental reducer: the same pure fold as [`reduce`], kept alive
+/// across reads so a dashboard frame or a telemetry server only folds
+/// the bytes appended since the last poll ([`TailReport`]s from
+/// [`super::events::read_events_from`]).
+///
+/// Skip accounting is two-tier, mirroring the tail reader: garbage
+/// lines *consumed* by some read are gone forever and accumulate,
+/// while torn tails and unreadable segments are point-in-time
+/// observations refreshed by each read. [`Reducer::metrics`] renders
+/// `skipped_lines = consumed + pending`, which makes the incremental
+/// view byte-identical to [`reduce_report`] over a from-scratch batch
+/// read of the same log.
+#[derive(Clone, Debug, Default)]
+pub struct Reducer {
+    m: Metrics,
+    /// Garbage lines permanently consumed across the cursor chain.
+    consumed_skipped: usize,
+    /// Latest read's torn-tail count (point-in-time).
+    pending_tails: usize,
+    /// Latest read's unreadable-segment count (point-in-time).
+    unreadable_files: usize,
+}
+
+impl Reducer {
+    /// Fold a batch of events into the running state.
+    pub fn fold(&mut self, events: &[Event]) {
+        for ev in events {
+            fold_event(&mut self.m, ev);
+        }
+    }
+
+    /// Fold one incremental read: its events plus its skip accounting.
+    pub fn absorb_tail(&mut self, tail: &TailReport) {
+        self.absorb(
+            &tail.events,
+            tail.consumed_skipped,
+            tail.pending_tails,
+            tail.unreadable_files,
+        );
+    }
+
+    /// [`Reducer::absorb_tail`] with the accounting passed explicitly —
+    /// the remote client path, where the counts arrive as response
+    /// headers rather than a local [`TailReport`].
+    pub fn absorb(
+        &mut self,
+        events: &[Event],
+        consumed_skipped: usize,
+        pending_tails: usize,
+        unreadable_files: usize,
+    ) {
+        self.fold(events);
+        self.consumed_skipped += consumed_skipped;
+        self.pending_tails = pending_tails;
+        self.unreadable_files = unreadable_files;
+    }
+
+    /// The current metrics view (cloned; reducers outlive frames).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.m.clone();
+        m.skipped_lines = self.consumed_skipped + self.pending_tails;
+        m.unreadable_files = self.unreadable_files;
+        m
+    }
+
+    /// Consume the reducer (the batch [`reduce`] path).
+    fn into_metrics(mut self) -> Metrics {
+        self.m.skipped_lines = self.consumed_skipped + self.pending_tails;
+        self.m.unreadable_files = self.unreadable_files;
+        self.m
+    }
+}
+
+/// Fold one event — the single definition both [`reduce`] and
+/// [`Reducer`] replay.
+fn fold_event(m: &mut Metrics, ev: &Event) {
+    {
         m.events_total += 1;
         let worker = || ev.worker.clone();
         match ev.kind {
@@ -470,6 +570,9 @@ pub fn reduce(events: &[Event]) -> Metrics {
             }
             EventKind::Reclaimed => {
                 m.reclaims += 1;
+                if !ev.key.is_empty() {
+                    *m.reclaims_by_key.entry(ev.key.clone()).or_default() += 1;
+                }
                 m.workers.entry(worker()).or_default().reclaims += 1;
             }
             EventKind::Heartbeat => {
@@ -493,17 +596,20 @@ pub fn reduce(events: &[Event]) -> Metrics {
                 // One transmitter's diagnostics: deduplicated on
                 // (round, device) like everything else in the core.
                 let (Some(round), Some(dev)) = (ev.round, ev.field("device")) else {
-                    continue;
+                    return;
                 };
                 let run = m.runs.entry(ev.key.clone()).or_default();
                 run.device_points.insert((round, dev as u64));
             }
             EventKind::Round => {
-                let Some(round) = ev.round else { continue };
+                let Some(round) = ev.round else { return };
                 let run = m.runs.entry(ev.key.clone()).or_default();
                 run.rounds.insert(round);
                 if let Some(g) = ev.field("grad_norm") {
                     run.grad_norm.entry(round).or_insert(g);
+                }
+                if let Some(l) = ev.field("train_loss") {
+                    run.train_loss.entry(round).or_insert(l);
                 }
                 if let Some(a) = ev.field("test_accuracy") {
                     run.accuracy.entry(round).or_insert(a);
@@ -548,7 +654,6 @@ pub fn reduce(events: &[Event]) -> Metrics {
             }
         }
     }
-    m
 }
 
 /// [`reduce`] plus the reader's skip counters.
@@ -669,6 +774,38 @@ mod tests {
         // A store without probes exports no ota_link_* series at all.
         let plain = reduce(&[ev(EventKind::Round, "k", "w", Some(0), &[("grad_norm", 1.0)])]);
         assert!(!plain.to_prometheus().contains("ota_link_"));
+    }
+
+    #[test]
+    fn incremental_reducer_matches_batch_reduce() {
+        let events = vec![
+            ev(EventKind::Enqueued, "k1", "coord", None, &[("iterations", 4.0)]),
+            ev(EventKind::Executed, "k1", "w0", None, &[]),
+            ev(EventKind::Round, "k1", "w0", Some(0), &[("grad_norm", 2.0), ("train_loss", 1.0)]),
+            ev(EventKind::Reclaimed, "k1", "w1", None, &[]),
+            ev(EventKind::Round, "k1", "w1", Some(1), &[("grad_norm", 1.5), ("train_loss", 0.8)]),
+            ev(EventKind::Completed, "k1", "w1", None, &[("final_accuracy", 0.8)]),
+        ];
+        let batch = reduce(&events);
+        let mut r = Reducer::default();
+        for chunk in events.chunks(2) {
+            r.fold(chunk);
+        }
+        let inc = r.metrics();
+        assert_eq!(inc.deterministic_core(), batch.deterministic_core());
+        assert_eq!(inc.to_prometheus(), batch.to_prometheus());
+        assert_eq!(inc.reclaims_by_key.get("k1"), Some(&1));
+        assert_eq!(inc.runs["k1"].last_train_loss(), Some((1, 0.8)));
+
+        // Skip accounting: consumed garbage accumulates across tails,
+        // pending tails / unreadable files are snapshots of the latest.
+        let mut r = Reducer::default();
+        r.absorb(&events[..3], 1, 1, 0);
+        r.absorb(&events[3..], 2, 1, 1);
+        let m = r.metrics();
+        assert_eq!(m.skipped_lines, 1 + 2 + 1, "consumed accumulates + latest pending");
+        assert_eq!(m.unreadable_files, 1, "latest snapshot, not a sum");
+        assert_eq!(m.deterministic_core(), batch.deterministic_core());
     }
 
     #[test]

@@ -41,6 +41,20 @@
 //!   (`repro fleet-status`) and the terminal dashboard renderer: a torn
 //!   or mid-write queue item or lease record is skipped and *counted*,
 //!   never fatal — status must stay readable while writers are live.
+//! * [`health`] — fleet health findings derived from the replayed
+//!   metrics (lease churn, Eq. 6 power-headroom violations, diverging
+//!   loss) plus a poll-history stall tracker. The deterministic kinds
+//!   are embedded in the Prometheus exposition; stall findings — which
+//!   depend on *when* you looked — appear only in `/health` JSON and
+//!   the `repro watch` alerts pane.
+//! * [`serve`] — the network-native observability plane
+//!   (`repro serve`): a dependency-free HTTP/1.1 server over the
+//!   event log exposing `/metrics`, `/status`, `/events` (cursor-based
+//!   incremental tail) and `/health`.
+//! * [`client`] — the `--connect` side: remote watch/metrics/status
+//!   clients that stream `/events` and fold them through the *same*
+//!   reducer as the local path, so remote output is byte-identical to
+//!   local output by construction.
 //!
 //! # Why a fleet changes nothing about the numbers
 //!
@@ -55,21 +69,30 @@
 //! is likewise harmless: both writers produce identical blobs through
 //! atomic renames.
 
+pub mod client;
 pub mod events;
+pub mod health;
 pub mod lease;
 pub mod metrics;
 pub mod queue;
+pub mod serve;
 pub mod status;
 pub mod worker;
 
+pub use client::{fetch_events, fetch_status, http_get, parse_status, remote_metrics, Response};
 pub use events::{
-    events_dir, mask_wallclock, read_events, sort_events, Event, EventKind, EventLog, ReadReport,
+    events_dir, mask_wallclock, read_events, read_events_from, sort_events, Cursor, Event,
+    EventKind, EventLog, ReadReport, TailReport,
 };
+pub use health::{evaluate, Finding, HealthKind, HealthPolicy, HealthTracker};
 pub use lease::{lease_dir, lease_state, try_acquire, try_acquire_with, Lease, LeaseState};
-pub use metrics::{reduce, reduce_report, Metrics, RunSeries, WorkerStats};
+pub use metrics::{reduce, reduce_report, Metrics, Reducer, RunSeries, WorkerStats};
 pub use queue::{
     claim_order, collect_outputs, enqueue_specs, list_item_names, load_queue, load_queue_counted,
     order_by_remaining, queue_dir, remaining_rounds, WorkItem,
 };
-pub use status::{collect_status, render_dashboard, render_status, FleetStatus, ItemStatus};
-pub use worker::{run_worker, WorkerReport};
+pub use serve::{Server, ServeOptions};
+pub use status::{
+    collect_status, render_dashboard, render_status, status_to_json, FleetStatus, ItemStatus,
+};
+pub use worker::{install_stop_signals, run_worker, run_worker_ctl, WorkerReport};

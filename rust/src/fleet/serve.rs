@@ -1,0 +1,372 @@
+//! `repro serve` — the store's observability surfaces over the wire.
+//!
+//! A dependency-free telemetry server on `std::net` with a
+//! hand-rolled minimal HTTP/1.1 responder (GET-only, `Connection:
+//! close`, one response per connection), exposing exactly what the
+//! local CLI reads from a shared filesystem — so a fleet can be
+//! watched from a machine that mounts nothing:
+//!
+//! | endpoint | body |
+//! |---|---|
+//! | `GET /metrics` | the Prometheus text of `repro metrics`, byte-identical |
+//! | `GET /status`  | [`super::status::collect_status`] as JSON |
+//! | `GET /events?after=<cursor>` | incremental JSONL event tail (see below) |
+//! | `GET /health`  | active health findings as JSON (observes one poll) |
+//!
+//! `/events` is the primitive the remote clients build on: the query
+//! carries a [`Cursor`] (`w0:1024,w1:768` per-segment byte offsets),
+//! the body carries only **whole** re-serialized event lines past it
+//! (a torn tail is never shipped — [`read_events_from`] parks the
+//! cursor before it), and the response headers return the advanced
+//! cursor plus the reader's fail-soft accounting:
+//!
+//! ```text
+//! x-ota-cursor:     <cursor to pass as ?after= next time>
+//! x-ota-skipped:    garbage lines consumed by this read
+//! x-ota-pending:    segments currently ending in a torn tail
+//! x-ota-unreadable: segments unreadable at this read
+//! ```
+//!
+//! The determinism contract extends over the wire: a client folding
+//! the streamed events through the same [`Reducer`] reaches the same
+//! `Metrics` — bit-identical `deterministic_core()`, byte-identical
+//! Prometheus text — as a local reduction of the store (pinned in
+//! `rust/tests/remote_observability.rs`). The server is observe-only
+//! by construction: it shares the read-side code paths and never
+//! touches run content-addresses, blobs, or goldens.
+//!
+//! Robustness at the socket: request lines over 8 KiB → `431`,
+//! malformed request lines → `400`, non-GET methods → `405`, unknown
+//! paths → `404`, and a slow or stalled client is cut off by a read
+//! timeout. Each connection gets its own thread; the incremental
+//! reducer state is behind one mutex, so concurrent scrapes serialize
+//! on the fold but never observe a partial line.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::campaign::RunStore;
+
+use super::events::{read_events_from, Cursor};
+use super::health::{self, HealthPolicy, HealthTracker};
+use super::metrics::Reducer;
+use super::status::{collect_status, status_to_json};
+
+/// Cap on the request head (request line + headers) we will buffer.
+const MAX_REQUEST_HEAD: usize = 8 * 1024;
+/// Per-connection socket timeout: a stalled client cannot pin a
+/// handler thread forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Server policy knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Lease TTL used by the `/status` view (matches `fleet-status`).
+    pub lease_secs: f64,
+    /// Health thresholds for `/health` findings.
+    pub policy: HealthPolicy,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            lease_secs: crate::config::FleetConfig::default().lease_secs,
+            policy: HealthPolicy::default(),
+        }
+    }
+}
+
+/// Incremental state shared by `/metrics` and `/health`: one cursor
+/// chain and reducer per server, so each scrape folds only the bytes
+/// appended since the previous one.
+struct ServerState {
+    cursor: Cursor,
+    reducer: Reducer,
+    tracker: HealthTracker,
+}
+
+struct Shared {
+    store: RunStore,
+    store_dir: String,
+    opts: ServeOptions,
+    state: Mutex<ServerState>,
+    stop: AtomicBool,
+}
+
+/// A running telemetry server. Binding spawns the accept loop on a
+/// background thread; [`Server::join`] blocks until [`Server::stop`]
+/// (tests) or forever (the CLI).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `127.0.0.1:7878`; port 0 picks a free port)
+    /// and start serving `store_dir`'s observability surfaces.
+    pub fn bind(store_dir: &str, listen: &str, opts: ServeOptions) -> io::Result<Server> {
+        let store = RunStore::open(store_dir)?;
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            store,
+            store_dir: store_dir.to_string(),
+            opts,
+            state: Mutex::new(ServerState {
+                cursor: Cursor::default(),
+                reducer: Reducer::default(),
+                tracker: HealthTracker::default(),
+            }),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let conn_shared = Arc::clone(&accept_shared);
+                std::thread::spawn(move || handle_connection(stream, &conn_shared));
+            }
+        });
+        Ok(Server { addr, shared, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block on the accept loop (the CLI's foreground mode).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Ask the accept loop to exit and unblock it with one dummy
+    /// connection (tests; idempotent).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One parsed request target, already routed past method checks.
+struct Request {
+    path: String,
+    query: String,
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut stream = stream;
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err((code, reason)) => {
+            respond(&mut stream, code, reason, "text/plain", &[], reason.as_bytes());
+            return;
+        }
+    };
+    match req.path.as_str() {
+        "/metrics" => {
+            let body = {
+                let mut st = shared.state.lock().unwrap();
+                let tail = read_events_from(shared.store.root(), &st.cursor);
+                st.cursor = tail.cursor.clone();
+                st.reducer.absorb_tail(&tail);
+                st.reducer.metrics().to_prometheus()
+            };
+            respond(
+                &mut stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                &[],
+                body.as_bytes(),
+            );
+        }
+        "/status" => {
+            let ttl = Duration::from_secs_f64(shared.opts.lease_secs);
+            let status = collect_status(&shared.store, ttl);
+            let body = status_to_json(&shared.store_dir, &status);
+            respond(&mut stream, 200, "OK", "application/json", &[], body.as_bytes());
+        }
+        "/events" => {
+            let after = req
+                .query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("after="))
+                .unwrap_or("");
+            let cursor = match Cursor::parse(after) {
+                Ok(c) => c,
+                Err(e) => {
+                    let msg = format!("bad cursor: {e}");
+                    respond(&mut stream, 400, "Bad Request", "text/plain", &[], msg.as_bytes());
+                    return;
+                }
+            };
+            // Stateless by design: the *client* owns this cursor chain,
+            // so any number of independent tailing clients can follow
+            // one server without sharing positions.
+            let tail = read_events_from(shared.store.root(), &cursor);
+            let mut body = String::with_capacity(tail.events.len() * 96);
+            for ev in &tail.events {
+                body.push_str(&ev.to_line());
+                body.push('\n');
+            }
+            let headers = [
+                ("x-ota-cursor".to_string(), tail.cursor.render()),
+                ("x-ota-skipped".to_string(), tail.consumed_skipped.to_string()),
+                ("x-ota-pending".to_string(), tail.pending_tails.to_string()),
+                ("x-ota-unreadable".to_string(), tail.unreadable_files.to_string()),
+            ];
+            respond(&mut stream, 200, "OK", "application/x-ndjson", &headers, body.as_bytes());
+        }
+        "/health" => {
+            let body = {
+                let mut st = shared.state.lock().unwrap();
+                let tail = read_events_from(shared.store.root(), &st.cursor);
+                st.cursor = tail.cursor.clone();
+                st.reducer.absorb_tail(&tail);
+                let m = st.reducer.metrics();
+                // Each `/health` request is one stall-detection poll —
+                // the scraper's cadence defines "not advancing".
+                st.tracker.observe(&m);
+                let mut findings = health::evaluate(&m, &shared.opts.policy);
+                findings.extend(st.tracker.stalled(&shared.opts.policy));
+                health_json(st.tracker.polls(), &findings)
+            };
+            respond(&mut stream, 200, "OK", "application/json", &[], body.as_bytes());
+        }
+        _ => {
+            respond(&mut stream, 404, "Not Found", "text/plain", &[], b"not found");
+        }
+    }
+}
+
+/// `/health` response body.
+fn health_json(polls: u64, findings: &[health::Finding]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(64);
+    let _ = write!(s, "{{\"polls\":{polls},\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"kind\":\"{}\",\"key\":\"{}\",\"value\":{},\"detail\":\"{}\"}}",
+            f.kind.name(),
+            super::events::json_escape(&f.key),
+            f.value,
+            super::events::json_escape(&f.detail),
+        );
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Read and parse the request head. Tolerates the head arriving in any
+/// number of TCP segments; rejects oversized heads (`431`), malformed
+/// request lines (`400`), non-GET methods (`405`), and HTTP versions
+/// this responder does not speak (`505`).
+fn read_request(stream: &mut TcpStream) -> Result<Request, (u16, &'static str)> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    while !head_complete(&buf) {
+        if buf.len() > MAX_REQUEST_HEAD {
+            return Err((431, "Request Header Fields Too Large"));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // EOF: parse whatever arrived
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break, // timeout/reset: same
+        }
+    }
+    if buf.len() > MAX_REQUEST_HEAD {
+        return Err((431, "Request Header Fields Too Large"));
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Err((400, "Bad Request"));
+    };
+    if parts.next().is_some() || !target.starts_with('/') {
+        return Err((400, "Bad Request"));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err((505, "HTTP Version Not Supported"));
+    }
+    if method != "GET" {
+        return Err((405, "Method Not Allowed"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    Ok(Request { path, query })
+}
+
+/// The head is complete once the blank line after the headers arrives.
+fn head_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(String, String)],
+    body: &[u8],
+) {
+    let mut head = format!(
+        "HTTP/1.1 {code} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body))
+        .and_then(|()| stream.flush());
+    let _ = stream.shutdown(Shutdown::Write);
+    // Lingering close: drain whatever the client is still sending (an
+    // oversized head, a request body we never read) before the socket
+    // drops. Closing with unread bytes queued makes the kernel send
+    // RST instead of FIN, which can destroy the response in flight —
+    // the client would see a connection reset instead of our 431/400.
+    let mut scratch = [0u8; 1024];
+    let mut drained = 0usize;
+    while drained < 64 * 1024 {
+        match stream.read(&mut scratch) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => drained += n,
+        }
+    }
+}

@@ -19,6 +19,8 @@ use std::time::Duration;
 
 use crate::campaign::RunStore;
 
+use super::events::json_escape;
+use super::health::Finding;
 use super::metrics::Metrics;
 use super::{lease, queue};
 
@@ -96,6 +98,43 @@ pub fn collect_status(store: &RunStore, ttl: Duration) -> FleetStatus {
         });
     }
     st
+}
+
+/// Render a [`FleetStatus`] as the `/status` JSON document served by
+/// `fleet::serve` (and parsed back by `fleet::client::parse_status`,
+/// which pins the round-trip). `store_dir` names the store on the
+/// *server* machine — informational for the remote viewer.
+pub fn status_to_json(store_dir: &str, st: &FleetStatus) -> String {
+    let mut s = String::with_capacity(256);
+    let _ = write!(
+        s,
+        "{{\"store_dir\":\"{}\",\"unreadable\":{},\"complete\":{},\"running\":{},\"stale\":{},\"rounds_done\":{},\"rounds_total\":{},\"items\":[",
+        json_escape(store_dir),
+        st.unreadable,
+        st.complete,
+        st.running,
+        st.stale,
+        st.rounds_done,
+        st.rounds_total
+    );
+    for (i, it) in st.items.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"seq\":{},\"key\":\"{}\",\"label\":\"{}\",\"spec_id\":\"{}\",\"state\":\"{}\",\"rounds_done\":{},\"rounds_total\":{}}}",
+            it.seq,
+            json_escape(&it.key),
+            json_escape(&it.label),
+            json_escape(&it.spec_id),
+            json_escape(&it.state),
+            it.rounds_done,
+            it.rounds_total
+        );
+    }
+    s.push_str("]}");
+    s
 }
 
 /// The classic `repro fleet-status` table.
@@ -179,8 +218,14 @@ fn sparkline(values: impl Iterator<Item = f64>, width: usize) -> String {
 }
 
 /// The `repro watch` dashboard: the queue/lease view joined with the
-/// replayed event-log metrics.
-pub fn render_dashboard(store_dir: &str, st: &FleetStatus, m: &Metrics) -> String {
+/// replayed event-log metrics and the active health findings (the
+/// alerts pane; pass `&[]` when health is not being tracked).
+pub fn render_dashboard(
+    store_dir: &str,
+    st: &FleetStatus,
+    m: &Metrics,
+    findings: &[Finding],
+) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
@@ -201,6 +246,12 @@ pub fn render_dashboard(store_dir: &str, st: &FleetStatus, m: &Metrics) -> Strin
             "unreadable: {} queue item(s), {} log line(s), {} log file(s) skipped",
             st.unreadable, m.skipped_lines, m.unreadable_files
         );
+    }
+    if !findings.is_empty() {
+        let _ = writeln!(s, "alerts:");
+        for f in findings {
+            let _ = writeln!(s, "  !! {:<16} {}", f.kind.name(), f.detail);
+        }
     }
     let _ = writeln!(s);
     for it in &st.items {
@@ -408,11 +459,23 @@ mod tests {
             mk(EventKind::Round, Some(1), &[("grad_norm", 1.0), ("test_accuracy", 0.5)]),
         ]);
         let st = collect_status(&store, Duration::from_secs(30));
-        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m);
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[]);
         assert!(dash.contains("‖ĝ‖"), "{dash}");
         assert!(dash.contains("workers:"), "{dash}");
         assert!(dash.contains("[...................."), "fresh runs are empty bars:\n{dash}");
         assert!(!dash.contains("SNR"), "no probes, no link pane:\n{dash}");
+        assert!(!dash.contains("alerts:"), "no findings, no pane:\n{dash}");
+
+        // Health findings render as the alerts pane.
+        let finding = crate::fleet::health::Finding {
+            kind: crate::fleet::health::HealthKind::LeaseChurn,
+            key: key.clone(),
+            value: 4.0,
+            detail: format!("run {key} reclaimed 4×"),
+        };
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[finding]);
+        assert!(dash.contains("alerts:"), "{dash}");
+        assert!(dash.contains("!! lease_churn"), "{dash}");
 
         // With link payloads the SNR/participation/headroom pane and the
         // consensus sparkline appear.
@@ -441,10 +504,39 @@ mod tests {
                 ],
             ),
         ]);
-        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m);
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[]);
         assert!(dash.contains("SNR"), "{dash}");
         assert!(dash.contains("tx 10/dev"), "{dash}");
         assert!(dash.contains("consensus"), "{dash}");
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// The `/status` JSON carries every field the table renderer uses,
+    /// escaped; the parse side lives in `fleet::client` and the full
+    /// round-trip is pinned in `rust/tests/remote_observability.rs`.
+    #[test]
+    fn status_json_renders_items_and_counts() {
+        let st = FleetStatus {
+            items: vec![ItemStatus {
+                seq: 0,
+                key: "abc123".into(),
+                label: "A-DSGD \"quoted\"".into(),
+                spec_id: "fig2".into(),
+                state: "run:w0".into(),
+                rounds_done: 3,
+                rounds_total: 8,
+            }],
+            unreadable: 2,
+            complete: 0,
+            running: 1,
+            stale: 0,
+            rounds_done: 3,
+            rounds_total: 8,
+        };
+        let json = status_to_json("/data/store", &st);
+        assert!(json.contains("\"unreadable\":2"), "{json}");
+        assert!(json.contains("\"key\":\"abc123\""), "{json}");
+        assert!(json.contains("\\\"quoted\\\""), "labels are escaped: {json}");
+        assert!(json.contains("\"state\":\"run:w0\""), "{json}");
     }
 }

@@ -11,6 +11,13 @@
 //! resumes from the latest snapshot (bit-identical to never having
 //! stopped; see `rust/tests/campaign_resume.rs`). The worker exits when
 //! every queued run has a cached result.
+//!
+//! With `--follow` the worker becomes a **standing** worker: instead of
+//! exiting on a drained (or empty) queue it keeps polling for items a
+//! later campaign may enqueue, sleeping in short heartbeat-friendly
+//! ticks between passes, and exits cleanly when its stop flag is set
+//! (SIGTERM/SIGINT via [`install_stop_signals`], or an in-process
+//! `AtomicBool` in tests).
 
 use std::io;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -46,6 +53,60 @@ pub fn run_worker(
     worker_id: &str,
     verbose: bool,
 ) -> io::Result<WorkerReport> {
+    run_worker_ctl(store_dir, fleet, campaign, worker_id, verbose, false, None)
+}
+
+/// Install SIGTERM/SIGINT handlers that set (and return) a process-wide
+/// stop flag, for `repro worker --follow`. The handler only stores an
+/// `AtomicBool` (async-signal-safe); the worker loop notices it at the
+/// next idle tick and exits cleanly. On non-unix targets the flag is
+/// returned un-wired.
+pub fn install_stop_signals() -> &'static AtomicBool {
+    static STOP: AtomicBool = AtomicBool::new(false);
+    #[cfg(unix)]
+    {
+        extern "C" fn on_signal(_signum: i32) {
+            STOP.store(true, Ordering::Relaxed);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_signal as usize);
+            signal(SIGINT, on_signal as usize);
+        }
+    }
+    &STOP
+}
+
+/// Sleep `total` in short ticks, returning early when `stop` is set.
+fn idle_sleep(total: Duration, stop: Option<&AtomicBool>) {
+    let tick = Duration::from_millis(25).min(total);
+    let mut slept = Duration::ZERO;
+    while slept < total {
+        if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            return;
+        }
+        std::thread::sleep(tick);
+        slept += tick;
+    }
+}
+
+/// [`run_worker`] with lifecycle control: `follow` keeps the worker
+/// standing after the queue drains (polling for a later campaign's
+/// items), and `stop` — checked between claims and during idle sleeps,
+/// never mid-run — requests a clean exit.
+pub fn run_worker_ctl(
+    store_dir: &str,
+    fleet: &FleetConfig,
+    campaign: &CampaignConfig,
+    worker_id: &str,
+    verbose: bool,
+    follow: bool,
+    stop: Option<&AtomicBool>,
+) -> io::Result<WorkerReport> {
     fleet
         .validate()
         .unwrap_or_else(|e| panic!("invalid fleet config: {e}"));
@@ -78,7 +139,15 @@ pub fn run_worker(
     // set actually changes.
     let mut cached_names: Vec<String> = Vec::new();
     let mut items: Vec<queue::WorkItem> = Vec::new();
+    // Follow mode: the queue generation (item-name set) whose drained
+    // results were already decode-verified, so a standing worker does
+    // not re-decode every result blob on every idle pass.
+    let mut verified_names: Option<Vec<String>> = None;
     loop {
+        if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            println!("[{worker_id}] stop requested — exiting cleanly");
+            break;
+        }
         // `repro fleet` may *replace* the queue with a new campaign while
         // this worker is attached (`enqueue_specs` semantics) — an
         // attached worker must not keep grinding an abandoned campaign's
@@ -89,6 +158,12 @@ pub fn run_worker(
             cached_names = names;
         }
         if items.is_empty() {
+            if follow {
+                // A standing worker outlives campaigns: an empty queue
+                // just means the next one has not been enqueued yet.
+                idle_sleep(poll, stop);
+                continue;
+            }
             empty_passes += 1;
             if empty_passes > 3 {
                 println!("[{worker_id}] queue at {store_dir} is empty — nothing to do");
@@ -105,12 +180,26 @@ pub fn run_worker(
             .filter(|&i| !store.has_result(&items[i].cfg))
             .collect();
         if pending.is_empty() {
+            if follow && verified_names.as_ref() == Some(&cached_names) {
+                // This campaign already drained and verified; wait for
+                // the next one without re-decoding its results.
+                idle_sleep(poll, stop);
+                continue;
+            }
             // A stat cannot see corruption. Before declaring the queue
             // drained, verify every result decodes: a corrupt blob is
             // quarantined by `load_result` (reads as a miss), the next
             // pass recomputes it, and the campaign completes — instead of
             // aborting downstream in `collect_outputs`.
             if items.iter().all(|item| store.load_result(&item.cfg).is_some()) {
+                if follow {
+                    verified_names = Some(cached_names.clone());
+                    println!(
+                        "[{worker_id}] queue drained — standing by for the next campaign"
+                    );
+                    idle_sleep(poll, stop);
+                    continue;
+                }
                 break;
             }
             bad_drains += 1;
@@ -155,7 +244,7 @@ pub fn run_worker(
             }
             // Everything pending is leased by live rivals — wait for
             // either a result to land or a lease to expire.
-            None => std::thread::sleep(poll),
+            None => idle_sleep(poll, stop),
         }
     }
     Ok(report)
@@ -306,6 +395,62 @@ mod tests {
         // Every item now has a result; a late-attached worker exits clean.
         let report2 = run_worker(&store_dir, &fleet, &campaign, "w1", false).unwrap();
         assert_eq!(report2, WorkerReport::default());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    /// A `--follow` worker outlives the drain, picks up a campaign
+    /// enqueued *after* it went idle, and exits when its stop flag is
+    /// set.
+    #[test]
+    fn follow_worker_picks_up_later_campaign_and_stops() {
+        let base = std::env::temp_dir().join("ota_worker_follow_test");
+        let _ = std::fs::remove_dir_all(&base);
+        let store_dir = base.join("store").to_str().unwrap().to_string();
+        let store = RunStore::open(&store_dir).unwrap();
+        let mut cfg = presets::smoke();
+        cfg.iterations = 2;
+        cfg.eval_every = 1;
+        let spec = |id: &str, scheme: Scheme| ExperimentSpec {
+            id: id.into(),
+            title: id.into(),
+            runs: vec![(id.into(), RunConfig { scheme, ..cfg.clone() })],
+        };
+        queue::enqueue_specs(&store, &[spec("tf1", Scheme::ErrorFree)]).unwrap();
+        let fleet = FleetConfig::default();
+        let campaign = CampaignConfig {
+            snapshot_every: 1,
+            store_dir: store_dir.clone(),
+            ..CampaignConfig::default()
+        };
+        let stop = AtomicBool::new(false);
+        let report = std::thread::scope(|scope| {
+            let handle = scope.spawn(|| {
+                run_worker_ctl(&store_dir, &fleet, &campaign, "wf", false, true, Some(&stop))
+            });
+            // First campaign drains; the standing worker must still be
+            // alive to claim the second one.
+            let second = spec("tf2", Scheme::SignSgd);
+            let deadline = std::time::Instant::now() + Duration::from_secs(60);
+            let mut enqueued = false;
+            loop {
+                let drained_first = queue::load_queue(&store)
+                    .map(|items| !items.is_empty() && items.iter().all(|i| store.has_result(&i.cfg)))
+                    .unwrap_or(false);
+                if drained_first && !enqueued {
+                    queue::enqueue_specs(&store, std::slice::from_ref(&second)).unwrap();
+                    enqueued = true;
+                }
+                if enqueued && store.has_result(&second.runs[0].1) {
+                    break;
+                }
+                assert!(std::time::Instant::now() < deadline, "follow worker stalled");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            stop.store(true, Ordering::Relaxed);
+            handle.join().unwrap().unwrap()
+        });
+        // One run per campaign, both executed by the same standing worker.
+        assert_eq!(report.executed, 2);
         let _ = std::fs::remove_dir_all(&base);
     }
 }

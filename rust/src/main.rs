@@ -9,8 +9,15 @@
 //!                shared store (lease-based claims, crash reclaim)
 //!   worker       attach one worker to a store's fleet queue
 //!   fleet-status live queue/lease/progress view of a fleet store
+//!                (`--connect host:port` renders from a remote server)
 //!   metrics      replay the store's event log into Prometheus text
-//!   watch        live terminal dashboard over the store's event log
+//!                (`--connect host:port` streams events from a server —
+//!                byte-identical output by construction)
+//!   watch        live terminal dashboard over the store's event log,
+//!                incremental (each frame folds only appended bytes);
+//!                `--connect host:port` watches a remote store
+//!   serve        telemetry server over a store: /metrics /status
+//!                /events /health on a plain HTTP/1.1 listener
 //!   resume       re-run a figure campaign through the run cache (forced on)
 //!   status       list the campaign store's cached/partial runs
 //!   gc           prune snapshot history + strays per the retention policy
@@ -25,6 +32,7 @@
 use ota_dsgd::campaign::{scheduler, RunDisposition, RunStore};
 use ota_dsgd::config::{
     presets, Backend, CampaignConfig, FleetConfig, GraphFamily, PowerSchedule, RunConfig, Scheme,
+    ServeConfig,
 };
 use ota_dsgd::coordinator::{RustBackend, TrainLog, Trainer};
 use ota_dsgd::experiments::{figures, runner, theory};
@@ -43,10 +51,11 @@ fn usage() -> Usage {
             ("fig <2|3|4|5|6|7|fading|d2d>", "regenerate a paper figure's series"),
             ("all", "regenerate every figure"),
             ("fleet <fig|all>", "run a figure campaign with a worker fleet over the store"),
-            ("worker", "attach one worker to a store's fleet queue"),
-            ("fleet-status", "live fleet queue/lease/progress view"),
-            ("metrics", "fold the store's event log into Prometheus text"),
+            ("worker", "attach one worker to a store's fleet queue (--follow to stand by)"),
+            ("fleet-status", "live fleet queue/lease/progress view (--connect for remote)"),
+            ("metrics", "fold the store's event log into Prometheus text (--connect for remote)"),
             ("watch", "live dashboard over the store's event log (--once for one frame)"),
+            ("serve", "telemetry server over a store: /metrics /status /events /health"),
             ("resume <fig|all>", "re-run a figure campaign through the run cache"),
             ("status", "campaign store status (cached/partial runs)"),
             ("gc", "prune snapshot history and stray files from the store"),
@@ -78,6 +87,9 @@ fn usage() -> Usage {
             ("--lease-secs <s>", "fleet lease TTL before reclaim (default 30)"),
             ("--heartbeat-secs <s>", "fleet lease refresh cadence (default 5)"),
             ("--worker-id <id>", "worker identity in lease records (worker)"),
+            ("--follow", "keep the worker standing by for later campaigns (worker)"),
+            ("--listen <host:port>", "telemetry server bind address (serve; default 127.0.0.1:7878)"),
+            ("--connect <host:port>", "read from a `repro serve` server (watch/metrics/fleet-status)"),
             ("--no-telemetry", "disable the store's fleet event log"),
             ("--telemetry-every <N>", "round-event cadence in rounds (default 1)"),
             ("--no-diagnostics", "disable link diagnostics probes (device events, SNR)"),
@@ -102,6 +114,7 @@ fn main() {
         "fleet-status" => cmd_fleet_status(&args),
         "metrics" => cmd_metrics(&args),
         "watch" => cmd_watch(&args),
+        "serve" => cmd_serve(&args),
         "resume" => cmd_fig(&args, true),
         "status" => cmd_status(&args),
         "gc" => cmd_gc(&args),
@@ -476,8 +489,13 @@ fn cmd_worker(args: &Args) {
         .map(str::to_string)
         .unwrap_or_else(|| format!("pid{}", std::process::id()));
     let verbose = !args.flag("quiet");
-    let report = fleet::run_worker(&store_dir, &fleet_cfg, &campaign, &worker_id, verbose)
-        .unwrap_or_else(|e| panic!("worker loop: {e}"));
+    // `--follow` turns this into a standing worker: it outlives queue
+    // drains, picks up later campaigns, and exits on SIGTERM/SIGINT.
+    let follow = args.flag("follow");
+    let stop = follow.then(fleet::install_stop_signals);
+    let report =
+        fleet::run_worker_ctl(&store_dir, &fleet_cfg, &campaign, &worker_id, verbose, follow, stop)
+            .unwrap_or_else(|e| panic!("worker loop: {e}"));
     println!(
         "[{worker_id}] done: {} executed, {} resumed, {} already complete",
         report.executed, report.resumed, report.already_done
@@ -507,6 +525,14 @@ fn open_store_for_view(args: &Args) -> Option<(RunStore, String)> {
 /// Fail-soft end to end — torn queue items and mid-write lease records
 /// are skipped and surfaced as `unreadable: N`, never an abort.
 fn cmd_fleet_status(args: &Args) {
+    if let Some(addr) = args.get("connect") {
+        // Render from a remote server's `/status`. The fail-soft
+        // `unreadable: N` accounting rides the JSON untouched.
+        let (store_dir, status) = fleet::fetch_status(addr)
+            .unwrap_or_else(|e| panic!("repro fleet-status --connect {addr}: {e}"));
+        print!("{}", fleet::render_status(&store_dir, &status));
+        return;
+    }
     let Some((store, store_dir)) = open_store_for_view(args) else {
         return;
     };
@@ -519,6 +545,15 @@ fn cmd_fleet_status(args: &Args) {
 /// `repro metrics`: replay the store's event log through the
 /// deterministic reducer and dump Prometheus exposition text.
 fn cmd_metrics(args: &Args) {
+    if let Some(addr) = args.get("connect") {
+        // Stream `/events` and fold them through the same reducer the
+        // local path uses — the output is byte-identical to running
+        // `repro metrics` on the server's own store, by construction.
+        let metrics = fleet::remote_metrics(addr)
+            .unwrap_or_else(|e| panic!("repro metrics --connect {addr}: {e}"));
+        print!("{}", metrics.to_prometheus());
+        return;
+    }
     let Some((store, store_dir)) = open_store_for_view(args) else {
         return;
     };
@@ -530,32 +565,127 @@ fn cmd_metrics(args: &Args) {
     print!("{}", metrics.to_prometheus());
 }
 
+/// Per-frame dashboard state shared by the local and remote watch
+/// paths: a cursor chain + incremental reducer (each frame folds only
+/// the bytes appended since the last one — incremental == batch is
+/// pinned in `rust/tests/remote_observability.rs`) and a stall tracker
+/// whose poll cadence is the refresh cadence.
+struct WatchState {
+    cursor: fleet::Cursor,
+    reducer: fleet::Reducer,
+    tracker: fleet::HealthTracker,
+    policy: fleet::HealthPolicy,
+}
+
+impl WatchState {
+    fn new() -> WatchState {
+        WatchState {
+            cursor: fleet::Cursor::default(),
+            reducer: fleet::Reducer::default(),
+            tracker: fleet::HealthTracker::default(),
+            policy: fleet::HealthPolicy::default(),
+        }
+    }
+
+    /// Fold one frame's tail and render it against `status`.
+    fn frame(&mut self, store_dir: &str, status: &fleet::FleetStatus, tail: &fleet::TailReport) -> String {
+        self.cursor = tail.cursor.clone();
+        self.reducer.absorb_tail(tail);
+        let metrics = self.reducer.metrics();
+        self.tracker.observe(&metrics);
+        let mut findings = fleet::evaluate(&metrics, &self.policy);
+        findings.extend(self.tracker.stalled(&self.policy));
+        fleet::render_dashboard(store_dir, status, &metrics, &findings)
+    }
+}
+
 /// `repro watch`: live terminal dashboard over the queue and event log.
 /// `--once` renders a single frame (scripting/CI); otherwise refreshes
-/// every `--interval-secs` until interrupted.
+/// every `--interval-secs` until interrupted. With `--connect` the
+/// frames render from a `repro serve` server's `/status` + `/events`
+/// instead of the local filesystem — through the same reducer.
 fn cmd_watch(args: &Args) {
+    let once = args.flag("once");
+    let interval = std::time::Duration::from_secs_f64(args.f64("interval-secs", 2.0).max(0.1));
+    let mut state = WatchState::new();
+    if let Some(addr) = args.get("connect") {
+        loop {
+            let (store_dir, status) = fleet::fetch_status(addr)
+                .unwrap_or_else(|e| panic!("repro watch --connect {addr}: {e}"));
+            let tail = fleet::fetch_events(addr, &state.cursor)
+                .unwrap_or_else(|e| panic!("repro watch --connect {addr}: {e}"));
+            let frame = state.frame(&format!("{store_dir} @ {addr}"), &status, &tail);
+            if emit_frame(&frame, once, interval) {
+                return;
+            }
+        }
+    }
     let Some((store, store_dir)) = open_store_for_view(args) else {
         return;
     };
     let fleet_cfg = fleet_from_args(args);
     let ttl = std::time::Duration::from_secs_f64(fleet_cfg.lease_secs);
-    let once = args.flag("once");
-    let interval = std::time::Duration::from_secs_f64(args.f64("interval-secs", 2.0).max(0.1));
     loop {
         let status = fleet::collect_status(&store, ttl);
-        let metrics = fleet::reduce_report(&fleet::read_events(store.root()));
-        let frame = fleet::render_dashboard(&store_dir, &status, &metrics);
-        if once {
-            print!("{frame}");
+        let tail = fleet::read_events_from(store.root(), &state.cursor);
+        let frame = state.frame(&store_dir, &status, &tail);
+        if emit_frame(&frame, once, interval) {
             return;
         }
-        // ANSI clear + home keeps the frame flicker-free on any terminal
-        // the repo targets; plain output still renders under `--once`.
-        print!("\x1b[2J\x1b[H{frame}");
-        use std::io::Write as _;
-        let _ = std::io::stdout().flush();
-        std::thread::sleep(interval);
     }
+}
+
+/// Print one dashboard frame; returns true when the loop should end.
+fn emit_frame(frame: &str, once: bool, interval: std::time::Duration) -> bool {
+    if once {
+        print!("{frame}");
+        return true;
+    }
+    // ANSI clear + home keeps the frame flicker-free on any terminal
+    // the repo targets; plain output still renders under `--once`.
+    print!("\x1b[2J\x1b[H{frame}");
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    std::thread::sleep(interval);
+    false
+}
+
+/// `repro serve`: bind the telemetry server over a store and block.
+/// `[serve]` table from `--config`, `--listen` on top.
+fn cmd_serve(args: &Args) {
+    let out = out_dir(args);
+    let store_dir = match args.get("store-dir") {
+        Some(dir) => dir.to_string(),
+        None => campaign_from_args(args, true)
+            .expect("resume-forced campaign config is always present")
+            .store_dir_or(&out),
+    };
+    let mut serve_cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+            ServeConfig::from_toml(&text).unwrap_or_else(|e| panic!("{e}"))
+        }
+        None => ServeConfig::default(),
+    };
+    if let Some(listen) = args.get("listen") {
+        serve_cfg.listen = listen.to_string();
+    }
+    serve_cfg.validate().unwrap_or_else(|e| panic!("{e}"));
+    let fleet_cfg = fleet_from_args(args);
+    let opts = fleet::ServeOptions {
+        lease_secs: fleet_cfg.lease_secs,
+        policy: fleet::HealthPolicy::default(),
+    };
+    let server = fleet::Server::bind(&store_dir, &serve_cfg.listen, opts)
+        .unwrap_or_else(|e| panic!("repro serve: cannot bind {}: {e}", serve_cfg.listen));
+    let addr = server.addr();
+    println!("serving campaign store {store_dir} on http://{addr}");
+    println!("  GET /metrics                Prometheus text (== `repro metrics`)");
+    println!("  GET /status                 fleet queue/lease status as JSON");
+    println!("  GET /events?after=<cursor>  incremental event tail (whole lines only)");
+    println!("  GET /health                 health findings as JSON (one poll per scrape)");
+    server.join();
 }
 
 /// `repro gc`: prune the store per the retention policy.

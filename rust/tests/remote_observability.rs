@@ -1,0 +1,496 @@
+//! The network-native observability plane, end to end:
+//!
+//! * **Byte-identity over the wire** — for the same store, `GET
+//!   /metrics` and a remote client reducing streamed `/events` produce
+//!   Prometheus text byte-identical to the local `repro metrics` path,
+//!   and a bit-identical `deterministic_core()` — including against a
+//!   live store that grows a second campaign, garbage lines, and torn
+//!   tails between scrapes (the server's incremental reducer and the
+//!   local batch reducer must never drift).
+//! * **Cursor semantics** — `/events?after=` returns only whole lines
+//!   appended past the cursor, parks the cursor before a torn tail,
+//!   resumes mid-segment once the tail terminates, and picks up writer
+//!   segments that appear later.
+//! * **HTTP robustness** — malformed request lines, oversized heads,
+//!   unknown paths, non-GET methods, wrong versions, and request heads
+//!   dribbled across many TCP segments.
+//! * **Concurrency** — tailing clients racing a live writer only ever
+//!   see lines that parse.
+//! * **Fail-soft accounting** — the `unreadable: N` count of a torn
+//!   queue item survives the JSON round-trip to a remote
+//!   `fleet-status`.
+//! * **Observe-only** — serving every endpoint leaves every byte of
+//!   the store untouched.
+//!
+//! Every test here is named `remote_*` so CI's main Test step can skip
+//! the whole suite with one `--skip remote_` (it runs as its own named
+//! step).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use ota_dsgd::campaign::RunStore;
+use ota_dsgd::config::{presets, CampaignConfig, FleetConfig, RunConfig, Scheme};
+use ota_dsgd::experiments::runner::ExperimentSpec;
+use ota_dsgd::fleet;
+use ota_dsgd::model::PARAM_DIM;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn lean(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 4,
+        eval_every: 2,
+        channel_uses: PARAM_DIM / 8,
+        sparsity: PARAM_DIM / 16,
+        ..presets::smoke()
+    }
+}
+
+fn spec(id: &str, schemes: &[Scheme]) -> ExperimentSpec {
+    ExperimentSpec {
+        id: id.into(),
+        title: format!("remote observability {id}"),
+        runs: schemes
+            .iter()
+            .map(|&s| (format!("{id}-{}", s.name()), lean(s)))
+            .collect(),
+    }
+}
+
+/// Enqueue `sp` into the store at `store_dir` and drain it with one
+/// in-process worker.
+fn drain(store_dir: &str, sp: &ExperimentSpec) {
+    {
+        let store = RunStore::open(store_dir).unwrap();
+        fleet::enqueue_specs(&store, std::slice::from_ref(sp)).unwrap();
+    }
+    let campaign = CampaignConfig {
+        snapshot_every: 1,
+        store_dir: store_dir.to_string(),
+        ..CampaignConfig::default()
+    };
+    fleet::run_worker(store_dir, &FleetConfig::default(), &campaign, "w0", false).unwrap();
+}
+
+fn serve(store_dir: &str) -> (fleet::Server, String) {
+    let server =
+        fleet::Server::bind(store_dir, "127.0.0.1:0", fleet::ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+/// The local `repro metrics` path, verbatim.
+fn local_prometheus(store: &RunStore) -> String {
+    fleet::reduce_report(&fleet::read_events(store.root())).to_prometheus()
+}
+
+fn local_core(store: &RunStore) -> String {
+    fleet::reduce_report(&fleet::read_events(store.root())).deterministic_core()
+}
+
+/// Assert the full over-the-wire determinism contract against one
+/// server at one point in time.
+fn assert_wire_identity(store: &RunStore, addr: &str, when: &str) {
+    let local_prom = local_prometheus(store);
+    let local_core = local_core(store);
+    // The server's own rendering (incremental reducer behind /metrics).
+    let resp = fleet::http_get(addr, "/metrics").unwrap();
+    assert_eq!(resp.status, 200, "{when}: /metrics must serve");
+    assert_eq!(
+        String::from_utf8_lossy(&resp.body),
+        local_prom,
+        "{when}: GET /metrics must be byte-identical to local `repro metrics`"
+    );
+    // The remote client's rendering (streamed /events through the same
+    // reducer).
+    let remote = fleet::remote_metrics(addr).unwrap();
+    assert_eq!(
+        remote.to_prometheus(),
+        local_prom,
+        "{when}: remote client Prometheus text must be byte-identical"
+    );
+    assert_eq!(
+        remote.deterministic_core(),
+        local_core,
+        "{when}: remote client deterministic core must be bit-identical"
+    );
+}
+
+/// Byte-identity over the wire, pinned against a *live* store: after
+/// the first campaign, after a second campaign lands in the same store
+/// (the long-lived server's cursor must absorb the growth), and after
+/// garbage + torn-tail injection (both sides must account skips
+/// identically).
+#[test]
+fn remote_prometheus_and_core_stay_byte_identical_as_the_store_grows() {
+    let base = fresh_dir("ota_remote_identity_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    drain(&store_dir, &spec("ph1", &[Scheme::ErrorFree, Scheme::SignSgd]));
+    let store = RunStore::open(&store_dir).unwrap();
+    let (_server, addr) = serve(&store_dir);
+    assert_wire_identity(&store, &addr, "after campaign 1");
+
+    // A second campaign grows the same store mid-flight; the same
+    // server instance must stay identical to a fresh batch read.
+    drain(&store_dir, &spec("ph2", &[Scheme::Qsgd]));
+    assert_wire_identity(&store, &addr, "after campaign 2");
+    let m = fleet::remote_metrics(&addr).unwrap();
+    assert_eq!(m.completed.len(), 3, "both campaigns visible remotely");
+    assert_eq!(m.skipped_lines, 0);
+
+    // Garbage + torn tail: consumed garbage accumulates, the pending
+    // tail is a point-in-time count — and both must match the batch
+    // reader's accounting byte-for-byte in the exposition.
+    let segment = fleet::events_dir(store.root()).join("w0.jsonl");
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"this is not json\n").unwrap();
+    fh.write_all(b"{\"v\":1,\"kind\":\"round\",\"key\":\"torn-mid-wri").unwrap();
+    drop(fh);
+    assert_wire_identity(&store, &addr, "with garbage + torn tail");
+    let m = fleet::remote_metrics(&addr).unwrap();
+    assert_eq!(m.skipped_lines, 2, "garbage + torn tail both counted");
+
+    // Terminating the torn line as more garbage moves it from pending
+    // to consumed on both sides.
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"GARBAGE-END\n").unwrap();
+    drop(fh);
+    assert_wire_identity(&store, &addr, "after the tail terminates");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// `/events?after=` cursor semantics: whole lines only, torn tails
+/// never shipped and never consumed, mid-segment resume, late writers
+/// picked up from zero, and a malformed cursor rejected with 400.
+#[test]
+fn remote_events_cursor_tails_incrementally_without_tearing() {
+    let base = fresh_dir("ota_remote_cursor_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    let log = fleet::EventLog::open(store.root(), "w0").unwrap();
+    for r in 0..3 {
+        log.emit(fleet::EventKind::Round, "k1", Some(r), &[("grad_norm", 1.0)]);
+    }
+    let (_server, addr) = serve(&store_dir);
+
+    let t1 = fleet::fetch_events(&addr, &fleet::Cursor::default()).unwrap();
+    assert_eq!(t1.events.len(), 3, "zero cursor replays everything");
+    assert_eq!(t1.consumed_skipped + t1.pending_tails + t1.unreadable_files, 0);
+    assert!(t1.cursor.offset("w0") > 0, "cursor advanced past the lines");
+
+    // Two more whole lines plus a torn half-line.
+    log.emit(fleet::EventKind::Round, "k1", Some(3), &[("grad_norm", 0.5)]);
+    log.emit(fleet::EventKind::Completed, "k1", None, &[("final_accuracy", 0.9)]);
+    let segment = fleet::events_dir(store.root()).join("w0.jsonl");
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"{\"v\":1,\"kind\":\"round\",\"key\":\"tail").unwrap();
+    drop(fh);
+
+    let t2 = fleet::fetch_events(&addr, &t1.cursor).unwrap();
+    assert_eq!(t2.events.len(), 2, "only the whole new lines arrive");
+    assert_eq!(t2.events[0].round, Some(3));
+    assert_eq!(t2.pending_tails, 1, "the torn tail is visible in accounting");
+    assert_eq!(t2.consumed_skipped, 0, "…but never consumed");
+
+    // A re-read from the same cursor is identical: the cursor was
+    // parked at the line boundary, not past the tail.
+    let t2b = fleet::fetch_events(&addr, &t1.cursor).unwrap();
+    assert_eq!(t2b.events.len(), 2);
+    assert_eq!(t2b.cursor.render(), t2.cursor.render());
+
+    // Terminate the tail into a valid event; a new writer appears.
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"\",\"ms\":7}\n").unwrap();
+    drop(fh);
+    let w1 = fleet::EventLog::open(store.root(), "w1").unwrap();
+    w1.emit(fleet::EventKind::Heartbeat, "k1", None, &[]);
+
+    let t3 = fleet::fetch_events(&addr, &t2.cursor).unwrap();
+    assert_eq!(t3.events.len(), 2, "completed tail + the new writer's event");
+    assert_eq!(t3.events[0].key, "tail", "the once-torn line resumed mid-segment");
+    assert_eq!(t3.events[1].worker, "w1", "late segments start from zero");
+    assert_eq!(t3.pending_tails, 0);
+    assert!(t3.cursor.offset("w1") > 0);
+
+    // Chained tails reassemble exactly the batch read.
+    let all = fleet::read_events(store.root());
+    assert_eq!(
+        t1.events.len() + t2.events.len() + t3.events.len(),
+        all.events.len(),
+        "cursor chain covers the log exactly once"
+    );
+
+    let bad = fleet::http_get(&addr, "/events?after=::").unwrap();
+    assert_eq!(bad.status, 400, "malformed cursors are rejected");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Send raw bytes and read the whole response back.
+fn raw_request(addr: &str, payload: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let _ = s.write_all(payload);
+    let _ = s.flush();
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// The hand-rolled HTTP layer: malformed request lines, oversized
+/// heads, unknown paths, non-GET methods, unsupported versions — and a
+/// request head dribbled byte-by-byte across many TCP segments.
+#[test]
+fn remote_http_rejects_malformed_oversized_and_unknown_requests() {
+    let base = fresh_dir("ota_remote_http_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    fleet::EventLog::open(store.root(), "w0")
+        .unwrap()
+        .emit(fleet::EventKind::Executed, "k1", None, &[]);
+    let (_server, addr) = serve(&store_dir);
+
+    assert!(
+        raw_request(&addr, b"garbage\r\n\r\n").starts_with("HTTP/1.1 400"),
+        "a one-token request line is malformed"
+    );
+    assert!(
+        raw_request(&addr, b"GET /metrics HTTP/1.1 extra\r\n\r\n").starts_with("HTTP/1.1 400"),
+        "a four-token request line is malformed"
+    );
+    assert!(
+        raw_request(&addr, b"GET metrics HTTP/1.1\r\n\r\n").starts_with("HTTP/1.1 400"),
+        "a target not starting with / is malformed"
+    );
+    assert!(
+        raw_request(&addr, b"POST /metrics HTTP/1.1\r\n\r\n").starts_with("HTTP/1.1 405"),
+        "only GET is spoken"
+    );
+    assert!(
+        raw_request(&addr, b"GET /metrics SPDY/3\r\n\r\n").starts_with("HTTP/1.1 505"),
+        "unsupported protocol versions are refused"
+    );
+    assert!(
+        raw_request(&addr, b"GET /nope HTTP/1.1\r\n\r\n").starts_with("HTTP/1.1 404"),
+        "unknown paths are 404"
+    );
+    let mut huge = b"GET /metrics HTTP/1.1\r\n".to_vec();
+    while huge.len() <= 10 * 1024 {
+        huge.extend_from_slice(b"x-padding: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+    }
+    huge.extend_from_slice(b"\r\n");
+    assert!(
+        raw_request(&addr, &huge).starts_with("HTTP/1.1 431"),
+        "an oversized request head is refused, not buffered"
+    );
+
+    // A valid request split across many tiny TCP segments must still
+    // parse and serve the byte-identical body.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for chunk in b"GET /metrics HTTP/1.1\r\nhost: x\r\n\r\n".chunks(3) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    let text = String::from_utf8_lossy(&out);
+    assert!(text.starts_with("HTTP/1.1 200"), "dribbled head still parses: {text}");
+    let body = text.split("\r\n\r\n").nth(1).unwrap_or("");
+    assert_eq!(body, local_prometheus(&store), "dribbled request serves the same bytes");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Two tailing clients race a live writer: every line either client
+/// ever receives parses (no torn lines over the wire), nothing is
+/// skipped, and both reassemble the complete log.
+#[test]
+fn remote_concurrent_scrapes_see_only_whole_lines() {
+    let base = fresh_dir("ota_remote_concurrent_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    let (_server, addr) = serve(&store_dir);
+    const N: u64 = 50;
+
+    let tail_all = |addr: String| {
+        move || {
+            let mut cursor = fleet::Cursor::default();
+            let mut got = 0u64;
+            let mut skipped = 0usize;
+            let deadline = std::time::Instant::now() + Duration::from_secs(60);
+            while got < N {
+                assert!(std::time::Instant::now() < deadline, "tailing client stalled");
+                let tail = fleet::fetch_events(&addr, &cursor).unwrap();
+                skipped += tail.consumed_skipped;
+                got += tail.events.len() as u64;
+                cursor = tail.cursor;
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            (got, skipped)
+        }
+    };
+    std::thread::scope(|scope| {
+        let a = scope.spawn(tail_all(addr.clone()));
+        let b = scope.spawn(tail_all(addr.clone()));
+        let log = fleet::EventLog::open(store.root(), "w0").unwrap();
+        for r in 0..N {
+            log.emit(fleet::EventKind::Round, "k1", Some(r), &[("grad_norm", 1.0)]);
+            // Interleave scrapes of the stateful endpoints to exercise
+            // the server-side mutex under write load.
+            if r % 16 == 0 {
+                assert_eq!(fleet::http_get(&addr, "/metrics").unwrap().status, 200);
+                assert_eq!(fleet::http_get(&addr, "/health").unwrap().status, 200);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for h in [a, b] {
+            let (got, skipped) = h.join().unwrap();
+            assert_eq!(got, N, "every event arrived exactly once");
+            assert_eq!(skipped, 0, "no line a client saw failed to parse");
+        }
+    });
+    let m = fleet::remote_metrics(&addr).unwrap();
+    assert_eq!(m.events_total, N, "the server view converges to the full log");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The fail-soft `unreadable` accounting crosses the wire intact, and
+/// the `/status` JSON round-trips through the client parser.
+#[test]
+fn remote_status_roundtrip_keeps_unreadable_accounting() {
+    let base = fresh_dir("ota_remote_status_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    fleet::enqueue_specs(&store, &[spec("st", &[Scheme::ErrorFree, Scheme::SignSgd])]).unwrap();
+    // Truncate one queue item mid-byte — the torn shape a live replace
+    // leaves behind.
+    let qdir = fleet::queue_dir(store.root());
+    let victim = std::fs::read_dir(&qdir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| p.extension().and_then(|e| e.to_str()) == Some("toml"))
+        .unwrap();
+    // An unterminated string with the `seq` key missing entirely —
+    // unparseable no matter how lenient the TOML subset is.
+    std::fs::write(&victim, "[item]\nkey = \"tor").unwrap();
+
+    let (_server, addr) = serve(&store_dir);
+    let (remote_dir, st) = fleet::fetch_status(&addr).unwrap();
+    assert_eq!(remote_dir, store_dir, "the server names its own store");
+    assert_eq!(st.unreadable, 1, "the torn item is counted, not dropped");
+    assert_eq!(st.items.len(), 1, "the readable item survives");
+    let rendered = fleet::render_status(&remote_dir, &st);
+    assert!(rendered.contains("unreadable: 1"), "{rendered}");
+
+    // Full field-level round-trip through render + parse.
+    let json = fleet::status_to_json(&store_dir, &st);
+    let (dir2, st2) = fleet::parse_status(&json).unwrap();
+    assert_eq!(dir2, store_dir);
+    assert_eq!(st2.unreadable, st.unreadable);
+    assert_eq!(st2.items.len(), st.items.len());
+    assert_eq!(st2.items[0].key, st.items[0].key);
+    assert_eq!(st2.items[0].state, st.items[0].state);
+    assert_eq!(st2.items[0].rounds_total, st.items[0].rounds_total);
+    assert_eq!((st2.complete, st2.running, st2.stale), (st.complete, st.running, st.stale));
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The satellite-1 pin for the local `repro watch` path: a frame-by-
+/// frame incremental reduction (cursor + reducer kept alive across
+/// frames) stays byte-identical to a from-scratch batch reduce of the
+/// full log at every frame — through appends, a torn tail, and its
+/// completion.
+#[test]
+fn remote_watch_incremental_frames_equal_batch_reduce() {
+    let base = fresh_dir("ota_remote_frames_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let store = RunStore::open(&store_dir).unwrap();
+    let log = fleet::EventLog::open(store.root(), "w0").unwrap();
+    let segment = fleet::events_dir(store.root()).join("w0.jsonl");
+
+    let mut cursor = fleet::Cursor::default();
+    let mut reducer = fleet::Reducer::default();
+    let mut check = |frame: &str| {
+        let tail = fleet::read_events_from(store.root(), &cursor);
+        cursor = tail.cursor.clone();
+        reducer.absorb_tail(&tail);
+        let inc = reducer.metrics();
+        let batch = fleet::reduce_report(&fleet::read_events(store.root()));
+        assert_eq!(
+            inc.to_prometheus(),
+            batch.to_prometheus(),
+            "frame `{frame}`: incremental Prometheus text must equal batch"
+        );
+        assert_eq!(
+            inc.deterministic_core(),
+            batch.deterministic_core(),
+            "frame `{frame}`: incremental core must equal batch"
+        );
+    };
+
+    check("empty store");
+    log.emit(fleet::EventKind::Executed, "k1", None, &[]);
+    log.emit(fleet::EventKind::Round, "k1", Some(0), &[("grad_norm", 2.0)]);
+    check("first events");
+    log.emit(fleet::EventKind::Round, "k1", Some(1), &[("grad_norm", 1.0)]);
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"{\"v\":1,\"kind\":\"round\",\"key\":\"to").unwrap();
+    drop(fh);
+    check("torn tail pending");
+    check("torn tail still pending"); // idempotent while the writer stalls
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"rn\",\"ms\":9}\n").unwrap();
+    drop(fh);
+    log.emit(fleet::EventKind::Completed, "k1", None, &[("final_accuracy", 0.9)]);
+    check("tail completed + more events");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Serving is observe-only: hitting every endpoint leaves every byte
+/// of the store untouched (content-addresses, results, goldens, queue,
+/// and the event log itself).
+#[test]
+fn remote_serving_leaves_every_store_byte_untouched() {
+    let base = fresh_dir("ota_remote_readonly_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    drain(&store_dir, &spec("ro", &[Scheme::ErrorFree]));
+
+    fn snapshot(dir: &Path, out: &mut BTreeMap<PathBuf, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap().filter_map(|e| e.ok()) {
+            let path = entry.path();
+            if path.is_dir() {
+                snapshot(&path, out);
+            } else {
+                out.insert(path.clone(), std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut before = BTreeMap::new();
+    snapshot(&base, &mut before);
+    assert!(!before.is_empty(), "the drained store has content to protect");
+
+    let (_server, addr) = serve(&store_dir);
+    for path in ["/metrics", "/status", "/events", "/events?after=", "/health", "/nope"] {
+        fleet::http_get(&addr, path).unwrap();
+    }
+    let mut after = BTreeMap::new();
+    snapshot(&base, &mut after);
+    assert_eq!(
+        before.keys().collect::<Vec<_>>(),
+        after.keys().collect::<Vec<_>>(),
+        "no file created or removed"
+    );
+    for (path, bytes) in &before {
+        assert_eq!(&after[path], bytes, "{} must be byte-identical", path.display());
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
