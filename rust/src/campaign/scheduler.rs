@@ -18,6 +18,7 @@ use crate::coordinator::link::RoundDiagnostics;
 use crate::coordinator::{link, LinkScheme, RoundRecord, TrainLog, Trainer};
 use crate::experiments::runner::{self, ExperimentSpec};
 use crate::fleet::events::{EventKind, EventLog};
+use crate::fleet::trace::{self, TraceLog};
 use crate::model::PARAM_DIM;
 use crate::util::threadpool::{default_workers, par_map};
 
@@ -31,8 +32,14 @@ fn attach_telemetry(store: &RunStore, campaign: &CampaignConfig) {
     if !campaign.telemetry.enabled {
         return;
     }
-    if let Ok(log) = EventLog::open(store.root(), &format!("sched-{}", std::process::id())) {
+    let writer = format!("sched-{}", std::process::id());
+    if let Ok(log) = EventLog::open(store.root(), &writer) {
         store.attach_events(log);
+    }
+    if campaign.telemetry.trace {
+        if let Ok(log) = TraceLog::open(store.root(), &writer) {
+            store.attach_trace(log);
+        }
     }
 }
 
@@ -234,19 +241,40 @@ pub(crate) fn execute_run(
     trainer.verbose = verbose;
     let events = store.event_log();
     let key = cache_key(cfg);
+    // Fleet tracing (observe-only, pure wall-clock): an `execute` span
+    // covering the whole run, a `resume` marker when restoring, and —
+    // when this run wins the per-process claim on the phase profiler —
+    // per-round trainer phase spans drained into the trace. Declared
+    // after `_run_token` so the drain drops (and flushes) first.
+    let traces = if campaign.telemetry.enabled && campaign.telemetry.trace {
+        store.trace_log()
+    } else {
+        None
+    };
+    let _run_token = traces.as_ref().map(|_| trace::RunToken::new());
+    let _exec_span = traces.as_ref().map(|t| t.scope("execute", &key, None));
+    if let Some(t) = &traces {
+        if let Some(snap) = resume {
+            t.mark("resume", &key, "", Some(snap.next_round as u64));
+        }
+    }
+    let drain = traces
+        .as_ref()
+        .and_then(|t| trace::ProfDrain::claim(t.clone(), &key))
+        .map(std::sync::Arc::new);
+    let every = campaign.telemetry.every.max(1);
+    let last = cfg.iterations.saturating_sub(1);
+    // Round-level link aggregates, carried from the diag observer
+    // (which the trainer calls first) into the same round's `round`
+    // event payload. Arc<Mutex<..>> only to satisfy the two `Send`
+    // closures — both run on the trainer thread, in order.
+    let link_agg: std::sync::Arc<std::sync::Mutex<Option<(u64, Vec<(&'static str, f64)>)>>> =
+        std::sync::Arc::default();
     if let Some(ev) = &events {
         match resume {
             Some(snap) => ev.emit(EventKind::Resumed, &key, Some(snap.next_round as u64), &[]),
             None => ev.emit(EventKind::Executed, &key, None, &[]),
         }
-        let every = campaign.telemetry.every.max(1);
-        let last = cfg.iterations.saturating_sub(1);
-        // Round-level link aggregates, carried from the diag observer
-        // (which the trainer calls first) into the same round's `round`
-        // event payload. Arc<Mutex<..>> only to satisfy the two `Send`
-        // closures — both run on the trainer thread, in order.
-        let link_agg: std::sync::Arc<std::sync::Mutex<Option<(u64, Vec<(&'static str, f64)>)>>> =
-            std::sync::Arc::default();
         if campaign.telemetry.diagnostics {
             let dev_ev = ev.clone();
             let dev_key = key.clone();
@@ -289,9 +317,18 @@ pub(crate) fn execute_run(
                 }
             }));
         }
-        let ev = ev.clone();
+    }
+    if events.is_some() || drain.is_some() {
+        let ev = events.clone();
         let obs_key = key.clone();
+        let round_drain = drain.clone();
         trainer.round_observer = Some(Box::new(move |r: &RoundRecord| {
+            // Phase spans accumulated during this round are drained
+            // every round (not cadence-thinned — a span stream with
+            // holes can't support critical-path analysis).
+            if let Some(d) = &round_drain {
+                d.drain(Some(r.iter as u64));
+            }
             // Cadence-thinned, but the final round always lands so the
             // last gauges (grad norm, accuracy) are current. Wall-clock
             // round_secs is deliberately NOT emitted: `ms` is the only
@@ -311,11 +348,16 @@ pub(crate) fn execute_run(
                         data.extend(fields);
                     }
                 }
-                ev.emit(EventKind::Round, &obs_key, Some(r.iter as u64), &data);
+                if let Some(ev) = &ev {
+                    ev.emit(EventKind::Round, &obs_key, Some(r.iter as u64), &data);
+                }
             }
         }));
     }
     let mut sink = |snap: &TrainerSnapshot| {
+        let _sp = traces
+            .as_ref()
+            .map(|t| t.scope("snapshot_save", &key, Some(snap.next_round as u64)));
         // A failed snapshot write must not kill the run it protects.
         match store.save_snapshot_retained(cfg, label, snap, campaign.keep_last_n) {
             Ok(()) => {
@@ -342,6 +384,9 @@ pub(crate) fn execute_run(
                         ("rounds", log.records.len() as f64),
                     ],
                 );
+            }
+            if let Some(t) = &traces {
+                t.mark("complete", &key, "", None);
             }
         }
         Err(e) => eprintln!("warning: result write failed for `{label}`: {e}"),

@@ -247,6 +247,9 @@ pub struct RunStore {
     /// Optional telemetry sink ([`crate::fleet::events`]); observe-only,
     /// attached by the scheduler / worker when telemetry is enabled.
     events: std::sync::Mutex<Option<EventLog>>,
+    /// Optional span sink ([`crate::fleet::trace`]); observe-only,
+    /// attached alongside the event log when tracing is enabled.
+    traces: std::sync::Mutex<Option<crate::fleet::trace::TraceLog>>,
 }
 
 impl RunStore {
@@ -257,6 +260,7 @@ impl RunStore {
         Ok(RunStore {
             root,
             events: std::sync::Mutex::new(None),
+            traces: std::sync::Mutex::new(None),
         })
     }
 
@@ -275,6 +279,21 @@ impl RunStore {
     /// to the same per-writer segment).
     pub fn event_log(&self) -> Option<EventLog> {
         self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Attach a span trace log ([`crate::fleet::trace`]): worker loop,
+    /// queue, and scheduler spans for this store are appended through
+    /// it. Observe-only, like the event log.
+    pub fn attach_trace(&self, log: crate::fleet::trace::TraceLog) {
+        *self.traces.lock().unwrap_or_else(|e| e.into_inner()) = Some(log);
+    }
+
+    /// The attached trace log, if any (cheap clone).
+    pub fn trace_log(&self) -> Option<crate::fleet::trace::TraceLog> {
+        self.traces
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .clone()

@@ -1161,11 +1161,17 @@ pub struct TelemetryConfig {
     /// trades event-log volume for visibility; `enabled = false`
     /// implies no diagnostics regardless of this flag.
     pub diagnostics: bool,
+    /// Fleet-wide span tracing (`fleet::trace`, the CLI's `--trace`):
+    /// persist worker-loop and trainer phase spans to the store for
+    /// `repro trace`. Spans are pure wall-clock and cannot perturb a
+    /// trajectory, but per-round phase spans are high-volume, so this
+    /// defaults to off; `enabled = false` implies no tracing.
+    pub trace: bool,
 }
 
 impl Default for TelemetryConfig {
     fn default() -> Self {
-        TelemetryConfig { enabled: true, every: 1, diagnostics: true }
+        TelemetryConfig { enabled: true, every: 1, diagnostics: true, trace: false }
     }
 }
 
@@ -1185,6 +1191,7 @@ impl TelemetryConfig {
                 "enabled" => cfg.enabled = v.as_bool().ok_or_else(|| bad(k, v))?,
                 "every" => cfg.every = v.as_usize().ok_or_else(|| bad(k, v))?,
                 "diagnostics" => cfg.diagnostics = v.as_bool().ok_or_else(|| bad(k, v))?,
+                "trace" => cfg.trace = v.as_bool().ok_or_else(|| bad(k, v))?,
                 other => {
                     return Err(ConfigError::Invalid(format!(
                         "unknown [telemetry] key {other:?}"
@@ -1771,10 +1778,14 @@ rho = 0.85
         assert!(!t.enabled);
         assert_eq!(t.every, 25);
         assert!(t.diagnostics, "diagnostics default on");
+        assert!(!t.trace, "tracing defaults off");
         let t =
             TelemetryConfig::from_toml("[telemetry]\ndiagnostics = false\n").unwrap();
         assert!(!t.diagnostics);
         assert!(t.enabled);
+        let t = TelemetryConfig::from_toml("[telemetry]\ntrace = true\n").unwrap();
+        assert!(t.trace);
+        assert!(TelemetryConfig::from_toml("[telemetry]\ntrace = 3\n").is_err());
         // Absent table = defaults (on, every round).
         assert_eq!(
             TelemetryConfig::from_toml("[run]\ndevices = 4\n").unwrap(),

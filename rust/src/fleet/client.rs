@@ -22,6 +22,7 @@ use std::time::Duration;
 use super::events::{Cursor, Event, TailReport};
 use super::metrics::{Metrics, Reducer};
 use super::status::{FleetStatus, ItemStatus};
+use super::trace::{Span, SpanTailReport};
 
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
 
@@ -117,6 +118,40 @@ pub fn fetch_events(addr: &str, cursor: &Cursor) -> io::Result<TailReport> {
         }
         match Event::parse(line) {
             Ok(ev) => tail.events.push(ev),
+            Err(_) => tail.consumed_skipped += 1,
+        }
+    }
+    Ok(tail)
+}
+
+/// Fetch `/trace?after=<cursor>` and reassemble the server's
+/// [`SpanTailReport`] — the span-segment twin of [`fetch_events`],
+/// sharing the cursor wire form and the x-ota accounting headers.
+/// `repro trace --connect` feeds this into the same sort/render
+/// pipeline as a local read, which is what makes the two outputs
+/// byte-identical.
+pub fn fetch_spans(addr: &str, cursor: &Cursor) -> io::Result<SpanTailReport> {
+    let path = format!("/trace?after={}", cursor.render());
+    let resp = http_get(addr, &path)?;
+    if resp.status != 200 {
+        return Err(bad(format!("GET /trace: HTTP {}", resp.status)));
+    }
+    let next = resp
+        .header("x-ota-cursor")
+        .ok_or_else(|| bad("missing x-ota-cursor header"))?;
+    let mut tail = SpanTailReport {
+        cursor: Cursor::parse(next).map_err(bad)?,
+        consumed_skipped: header_count(&resp, "x-ota-skipped")?,
+        pending_tails: header_count(&resp, "x-ota-pending")?,
+        unreadable_files: header_count(&resp, "x-ota-unreadable")?,
+        ..SpanTailReport::default()
+    };
+    for line in String::from_utf8_lossy(&resp.body).lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Span::parse(line) {
+            Ok(sp) => tail.spans.push(sp),
             Err(_) => tail.consumed_skipped += 1,
         }
     }
@@ -461,6 +496,111 @@ mod tests {
         assert!(Json::parse("{\"a\":}").is_err());
         assert!(Json::parse("[1,2}").is_err());
         assert!(Json::parse("{} trailing").is_err());
+    }
+
+    /// Deterministic pseudo-random string: the property-test driver for
+    /// the serializer/parser round trips below. A seeded LCG keeps the
+    /// cases reproducible (no RNG dependency, no flaky shrinking).
+    fn lcg_string(seed: &mut u64, max_len: usize) -> String {
+        let mut next = || {
+            *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (*seed >> 33) as u32
+        };
+        let len = next() as usize % (max_len + 1);
+        (0..len)
+            .map(|_| {
+                // Bias toward hostile characters: quotes, backslashes,
+                // control bytes, multi-byte unicode, and plain ASCII.
+                match next() % 8 {
+                    0 => '"',
+                    1 => '\\',
+                    2 => char::from_u32(next() % 0x20).unwrap(),
+                    3 => '\u{2603}',   // ☃ (3-byte UTF-8)
+                    4 => '\u{1F600}',  // 😀 (4-byte UTF-8, surrogate pair in JSON)
+                    5 => '/',
+                    _ => char::from_u32(0x20 + next() % 0x5f).unwrap(),
+                }
+            })
+            .collect()
+    }
+
+    /// Property: any string escaped by the `fleet::events` serializer
+    /// parses back to itself through this module's `Json` parser — the
+    /// two hand-rolled halves of the wire format agree on escaping.
+    #[test]
+    fn escaped_strings_round_trip_against_events_serializer() {
+        let mut seed = 0x07A5_EEDu64 ^ 42;
+        for case in 0..200 {
+            let original = lcg_string(&mut seed, 24);
+            let doc = format!("\"{}\"", crate::fleet::events::json_escape(&original));
+            let parsed = Json::parse(&doc)
+                .unwrap_or_else(|e| panic!("case {case}: {doc:?} failed to parse: {e}"));
+            assert_eq!(parsed.as_str(), Some(original.as_str()), "case {case}: {doc:?}");
+        }
+    }
+
+    /// Property: escaped strings survive nesting inside arrays and
+    /// objects of pseudo-random shape.
+    #[test]
+    fn nested_documents_round_trip_escaped_strings() {
+        let mut seed = 7;
+        for case in 0..50 {
+            let key = lcg_string(&mut seed, 8);
+            let val = lcg_string(&mut seed, 16);
+            let deep = lcg_string(&mut seed, 16);
+            let esc = crate::fleet::events::json_escape;
+            // The fixed field name is longer than `lcg_string`'s max
+            // length, so a generated key can never shadow it.
+            let doc = format!(
+                "{{\"{}\":[\"{}\",{{\"inner\":[[\"{}\"],null,true]}}],\"numeric-edge\":-0.5e3}}",
+                esc(&key),
+                esc(&val),
+                esc(&deep)
+            );
+            let parsed = Json::parse(&doc)
+                .unwrap_or_else(|e| panic!("case {case}: {doc:?} failed to parse: {e}"));
+            let arr = parsed.get(&key).and_then(Json::as_arr).unwrap();
+            assert_eq!(arr[0].as_str(), Some(val.as_str()), "case {case}");
+            let inner = arr[1].get("inner").and_then(Json::as_arr).unwrap();
+            assert_eq!(inner[0].as_arr().unwrap()[0].as_str(), Some(deep.as_str()));
+            assert_eq!(inner[1], Json::Null);
+            assert_eq!(inner[2], Json::Bool(true));
+            assert_eq!(parsed.get("numeric-edge").unwrap().as_f64(), Some(-500.0));
+        }
+    }
+
+    #[test]
+    fn unicode_escapes_parse_including_raw_codepoints() {
+        // \uXXXX escapes decode; unpaired surrogates degrade to U+FFFD
+        // instead of panicking or corrupting the rest of the string.
+        let doc = Json::parse("\"snow \\u2603 man\"").unwrap();
+        assert_eq!(doc.as_str(), Some("snow \u{2603} man"));
+        let doc = Json::parse("\"bad \\ud800 half\"").unwrap();
+        assert_eq!(doc.as_str(), Some("bad \u{fffd} half"));
+        // Raw multi-byte UTF-8 passes through untouched.
+        let doc = Json::parse("\"emoji 😀 λ\"").unwrap();
+        assert_eq!(doc.as_str(), Some("emoji 😀 λ"));
+        assert!(Json::parse("\"truncated \\u26").is_err());
+        assert!(Json::parse("\"dangling \\").is_err());
+    }
+
+    #[test]
+    fn numeric_edge_cases_parse_like_rust_floats() {
+        for (text, want) in [
+            ("0", 0.0),
+            ("-0", -0.0),
+            ("1e-12", 1e-12),
+            ("-2.5E+4", -25000.0),
+            ("9007199254740993", 9007199254740993.0), // > 2^53: f64-rounded, not an error
+            ("0.1", 0.1),
+        ] {
+            let v = Json::parse(text).unwrap().as_f64().unwrap();
+            assert_eq!(v, want, "{text}");
+        }
+        assert_eq!(Json::parse("-0").unwrap().as_f64().map(f64::is_sign_negative), Some(true));
+        assert!(Json::parse("1.2.3").is_err());
+        assert!(Json::parse("--1").is_err());
+        assert!(Json::parse("[1,]").is_err());
     }
 
     #[test]

@@ -400,7 +400,7 @@ impl EventLog {
     }
 }
 
-fn unix_ms_now() -> u64 {
+pub(crate) fn unix_ms_now() -> u64 {
     SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_millis() as u64)
@@ -461,7 +461,7 @@ impl Cursor {
         self.offsets.iter().map(|(w, &o)| (w.as_str(), o))
     }
 
-    fn advance(&mut self, writer: &str, offset: u64) {
+    pub(crate) fn advance(&mut self, writer: &str, offset: u64) {
         if offset > 0 {
             self.offsets.insert(writer.to_string(), offset);
         }
@@ -537,9 +537,38 @@ pub struct TailReport {
 /// `consumed_skipped + pending_tails` is then exactly the batch
 /// reader's `skipped_lines`.
 pub fn read_events_from(store_root: &Path, cursor: &Cursor) -> TailReport {
-    let mut tail = TailReport { cursor: cursor.clone(), ..TailReport::default() };
-    let dir = events_dir(store_root);
-    let entries = match fs::read_dir(&dir) {
+    let seg = tail_segments(&events_dir(store_root), cursor);
+    let mut tail = TailReport {
+        cursor: seg.cursor,
+        pending_tails: seg.pending_tails,
+        unreadable_files: seg.unreadable_files,
+        ..TailReport::default()
+    };
+    for line in &seg.lines {
+        match Event::parse(line) {
+            Ok(ev) => tail.events.push(ev),
+            Err(_) => tail.consumed_skipped += 1,
+        }
+    }
+    tail
+}
+
+/// One incremental pass over a directory of per-writer `*.jsonl`
+/// segments: every whole line past `cursor` (torn tails left
+/// unconsumed), the advanced cursor, and the fail-soft accounting.
+/// Shared by the event log and [`super::trace`] so both speak exactly
+/// the same append/torn-tail discipline.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct SegmentTail {
+    pub(crate) lines: Vec<String>,
+    pub(crate) cursor: Cursor,
+    pub(crate) pending_tails: usize,
+    pub(crate) unreadable_files: usize,
+}
+
+pub(crate) fn tail_segments(dir: &Path, cursor: &Cursor) -> SegmentTail {
+    let mut tail = SegmentTail { cursor: cursor.clone(), ..SegmentTail::default() };
+    let entries = match fs::read_dir(dir) {
         Ok(e) => e,
         Err(_) => return tail,
     };
@@ -574,10 +603,7 @@ pub fn read_events_from(store_root: &Path, cursor: &Cursor) -> TailReport {
             if line.trim().is_empty() {
                 continue;
             }
-            match Event::parse(line) {
-                Ok(ev) => tail.events.push(ev),
-                Err(_) => tail.consumed_skipped += 1,
-            }
+            tail.lines.push(line.to_string());
         }
         if bytes[consumed_len..].iter().any(|b| !b.is_ascii_whitespace()) {
             tail.pending_tails += 1;
@@ -650,18 +676,19 @@ pub(crate) fn json_escape(s: &str) -> String {
 
 /// Minimal flat-JSON tokenizer for the line schema above (strings,
 /// numbers, `null`; no nesting). Hand-rolled because the crate has no
-/// JSON dependency by design.
-struct JsonParser<'a> {
+/// JSON dependency by design. Shared with [`super::trace`], whose span
+/// lines use the same flat shape.
+pub(crate) struct JsonParser<'a> {
     bytes: &'a [u8],
     pos: usize,
 }
 
 impl<'a> JsonParser<'a> {
-    fn new(s: &'a str) -> Self {
+    pub(crate) fn new(s: &'a str) -> Self {
         JsonParser { bytes: s.as_bytes(), pos: 0 }
     }
 
-    fn skip_ws(&mut self) {
+    pub(crate) fn skip_ws(&mut self) {
         while self
             .bytes
             .get(self.pos)
@@ -675,7 +702,7 @@ impl<'a> JsonParser<'a> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn eat(&mut self, b: u8) -> bool {
+    pub(crate) fn eat(&mut self, b: u8) -> bool {
         if self.peek() == Some(b) {
             self.pos += 1;
             true
@@ -684,7 +711,7 @@ impl<'a> JsonParser<'a> {
         }
     }
 
-    fn eat_literal(&mut self, lit: &str) -> bool {
+    pub(crate) fn eat_literal(&mut self, lit: &str) -> bool {
         if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
             true
@@ -693,7 +720,7 @@ impl<'a> JsonParser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), String> {
+    pub(crate) fn expect(&mut self, b: u8) -> Result<(), String> {
         self.skip_ws();
         if self.eat(b) {
             Ok(())
@@ -702,7 +729,7 @@ impl<'a> JsonParser<'a> {
         }
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    pub(crate) fn string(&mut self) -> Result<String, String> {
         self.skip_ws();
         if !self.eat(b'"') {
             return Err(format!("expected string at byte {}", self.pos));
@@ -757,7 +784,7 @@ impl<'a> JsonParser<'a> {
         }
     }
 
-    fn number(&mut self) -> Result<f64, String> {
+    pub(crate) fn number(&mut self) -> Result<f64, String> {
         self.skip_ws();
         let start = self.pos;
         while self.peek().is_some_and(|b| {

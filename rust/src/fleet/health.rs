@@ -92,6 +92,14 @@ pub struct HealthPolicy {
     pub divergence_min_rounds: usize,
     /// Consecutive polls without round progress before a run stalls.
     pub stall_polls: u32,
+    /// Minimum wall-clock between *counted* stall polls for
+    /// [`HealthTracker::observe_at`]. Keying the poll history on
+    /// elapsed time instead of call count keeps the effective stall
+    /// window (`stall_polls × stall_poll_secs`) independent of how
+    /// many clients happen to be scraping `/health` concurrently —
+    /// two monitors must not halve it. `0.0` restores the legacy
+    /// every-call advance.
+    pub stall_poll_secs: f64,
 }
 
 impl Default for HealthPolicy {
@@ -101,6 +109,7 @@ impl Default for HealthPolicy {
             divergence_factor: 2.0,
             divergence_min_rounds: 8,
             stall_polls: 3,
+            stall_poll_secs: 2.0,
         }
     }
 }
@@ -168,13 +177,43 @@ pub struct HealthTracker {
     /// Per-key (last observed round count, polls without progress).
     seen: BTreeMap<String, (usize, u32)>,
     polls: u64,
+    /// When the stall counters last advanced (unix ms), for
+    /// [`observe_at`](HealthTracker::observe_at)'s rate limiting.
+    last_advance_ms: Option<u64>,
 }
 
 impl HealthTracker {
-    /// Observe one poll. Only *active* runs are tracked: started
-    /// (executed or resumed) and not yet completed. Completed or
-    /// unseen runs are dropped so a finished store never alarms.
+    /// Observe one poll, advancing the stall counters unconditionally.
+    /// Right for a *single* caller with its own cadence (the
+    /// `repro watch` loop); a shared tracker behind an endpoint must
+    /// use [`observe_at`](HealthTracker::observe_at) instead, or N
+    /// concurrent scrapers divide the stall window by N. Only *active*
+    /// runs are tracked: started (executed or resumed) and not yet
+    /// completed. Completed or unseen runs are dropped so a finished
+    /// store never alarms.
     pub fn observe(&mut self, m: &Metrics) {
+        self.update(m, true);
+    }
+
+    /// Observe one poll at wall-clock `now_ms`, advancing the stall
+    /// counters only when at least [`HealthPolicy::stall_poll_secs`]
+    /// has elapsed since they last advanced. Interleaved scrapers all
+    /// refresh the round counts (progress is never missed — a run that
+    /// advanced resets its counter on *any* observation) but the
+    /// no-progress clock ticks on elapsed time, not on request rate.
+    pub fn observe_at(&mut self, m: &Metrics, now_ms: u64, policy: &HealthPolicy) {
+        let interval_ms = (policy.stall_poll_secs.max(0.0) * 1000.0) as u64;
+        let advance = match self.last_advance_ms {
+            Some(prev) => now_ms.saturating_sub(prev) >= interval_ms,
+            None => true,
+        };
+        if advance {
+            self.last_advance_ms = Some(now_ms);
+        }
+        self.update(m, advance);
+    }
+
+    fn update(&mut self, m: &Metrics, advance: bool) {
         self.polls += 1;
         let mut next = BTreeMap::new();
         for key in m.executed.union(&m.resumed) {
@@ -183,7 +222,7 @@ impl HealthTracker {
             }
             let rounds = m.runs.get(key).map_or(0, |r| r.rounds.len());
             let stalls = match self.seen.get(key) {
-                Some(&(prev, stalls)) if rounds <= prev => stalls + 1,
+                Some(&(prev, stalls)) if rounds <= prev => stalls + u32::from(advance),
                 _ => 0,
             };
             next.insert(key.clone(), (rounds, stalls));
@@ -378,6 +417,61 @@ mod tests {
             t.observe(&done);
         }
         assert!(t.stalled(&policy).is_empty());
+    }
+
+    /// Two monitors scraping the same endpoint must not halve the
+    /// stall window: with `observe_at`, interleaved scrapes inside one
+    /// `stall_poll_secs` window advance the no-progress clock once.
+    #[test]
+    fn interleaved_scrapers_advance_stall_clock_once_per_window() {
+        let active = reduce(&[
+            ev(EventKind::Executed, "k1", None, &[]),
+            ev(EventKind::Round, "k1", Some(0), &[]),
+        ]);
+        let policy = HealthPolicy { stall_poll_secs: 2.0, ..HealthPolicy::default() };
+        let mut t = HealthTracker::default();
+        // Two scrapers, each polling every 2s, phase-shifted by 100ms:
+        // 8 seconds of wall clock = 4 windows = at most 4 counted polls
+        // (first sighting is progress), not 8 — the counter must stay
+        // below the 3-poll threshold until 3 *windows* elapse.
+        let mut counted = 0u32;
+        for window in 0u64..4 {
+            let base = 1_000_000 + window * 2_000;
+            t.observe_at(&active, base, &policy); // scraper A
+            t.observe_at(&active, base + 100, &policy); // scraper B
+            if window > 0 {
+                counted += 1;
+            }
+            let stalled = !t.stalled(&policy).is_empty();
+            assert_eq!(
+                stalled,
+                counted >= policy.stall_polls,
+                "window {window}: {counted} counted poll(s)"
+            );
+        }
+        assert_eq!(t.polls(), 8, "every scrape is still a poll");
+        // Legacy mode: stall_poll_secs = 0 restores per-call advance.
+        let legacy = HealthPolicy { stall_poll_secs: 0.0, ..policy };
+        let mut t = HealthTracker::default();
+        for i in 0..4 {
+            t.observe_at(&active, 5_000_000 + i, &legacy);
+        }
+        assert_eq!(t.stalled(&legacy).len(), 1, "3 flat polls after first sighting");
+        // Progress observed by either scraper resets the counter even
+        // mid-window.
+        let progressed = reduce(&[
+            ev(EventKind::Executed, "k1", None, &[]),
+            ev(EventKind::Round, "k1", Some(0), &[]),
+            ev(EventKind::Round, "k1", Some(1), &[]),
+        ]);
+        let mut t = HealthTracker::default();
+        t.observe_at(&active, 0, &policy);
+        t.observe_at(&active, 2_000, &policy);
+        t.observe_at(&active, 4_000, &policy);
+        t.observe_at(&active, 6_000, &policy);
+        assert_eq!(t.stalled(&policy).len(), 1);
+        t.observe_at(&progressed, 6_050, &policy); // off-window scrape sees progress
+        assert!(t.stalled(&policy).is_empty(), "progress resets regardless of window");
     }
 
     #[test]

@@ -47,14 +47,20 @@
 //!   are embedded in the Prometheus exposition; stall findings — which
 //!   depend on *when* you looked — appear only in `/health` JSON and
 //!   the `repro watch` alerts pane.
+//! * [`trace`] — fleet-wide distributed tracing: per-writer span
+//!   segments in the store (same crash-safe append/torn-tail rules as
+//!   [`events`]) capturing the worker loop and the trainer's phase
+//!   spans, merged by `repro trace` into a per-worker-lane Chrome
+//!   trace plus a critical-path / utilization report. Spans are pure
+//!   wall-clock and live outside the deterministic core.
 //! * [`serve`] — the network-native observability plane
 //!   (`repro serve`): a dependency-free HTTP/1.1 server over the
 //!   event log exposing `/metrics`, `/status`, `/events` (cursor-based
-//!   incremental tail) and `/health`.
+//!   incremental tail), `/trace` and `/health`.
 //! * [`client`] — the `--connect` side: remote watch/metrics/status
-//!   clients that stream `/events` and fold them through the *same*
-//!   reducer as the local path, so remote output is byte-identical to
-//!   local output by construction.
+//!   clients that stream `/events` (and `/trace`) and fold them
+//!   through the *same* reducer as the local path, so remote output is
+//!   byte-identical to local output by construction.
 //!
 //! # Why a fleet changes nothing about the numbers
 //!
@@ -77,9 +83,12 @@ pub mod metrics;
 pub mod queue;
 pub mod serve;
 pub mod status;
+pub mod trace;
 pub mod worker;
 
-pub use client::{fetch_events, fetch_status, http_get, parse_status, remote_metrics, Response};
+pub use client::{
+    fetch_events, fetch_spans, fetch_status, http_get, parse_status, remote_metrics, Response,
+};
 pub use events::{
     events_dir, mask_wallclock, read_events, read_events_from, sort_events, Cursor, Event,
     EventKind, EventLog, ReadReport, TailReport,
@@ -94,5 +103,9 @@ pub use queue::{
 pub use serve::{Server, ServeOptions};
 pub use status::{
     collect_status, render_dashboard, render_status, status_to_json, FleetStatus, ItemStatus,
+};
+pub use trace::{
+    chrome_trace, read_spans, read_spans_from, render_report as render_trace_report, sort_spans,
+    trace_dir, utilization, Span, SpanReadReport, SpanTailReport, TraceLog, WorkerUtil,
 };
 pub use worker::{install_stop_signals, run_worker, run_worker_ctl, WorkerReport};

@@ -99,6 +99,11 @@ pub fn enqueue_specs(
                     &[("seq", seq as f64), ("iterations", cfg.iterations as f64)],
                 );
             }
+            // Enqueue instants anchor per-run queue-wait in the trace
+            // report: queue-wait = first `execute` start − `enqueue`.
+            if let Some(tl) = store.trace_log() {
+                tl.mark("enqueue", &key, &clean(&spec.id), None);
+            }
             items.push(WorkItem {
                 seq,
                 spec_id: spec.id.clone(),
@@ -255,6 +260,7 @@ pub fn collect_outputs(
     specs: &[ExperimentSpec],
     out_dir: &str,
 ) -> Result<Vec<Vec<TrainLog>>, String> {
+    let _sp = store.trace_log().map(|t| t.scope("collect", "", None));
     let mut all = Vec::new();
     for spec in specs {
         let logs: Vec<TrainLog> = spec

@@ -11,6 +11,7 @@
 //! | `GET /metrics` | the Prometheus text of `repro metrics`, byte-identical |
 //! | `GET /status`  | [`super::status::collect_status`] as JSON |
 //! | `GET /events?after=<cursor>` | incremental JSONL event tail (see below) |
+//! | `GET /trace?after=<cursor>`  | incremental JSONL span tail, same cursor scheme |
 //! | `GET /health`  | active health findings as JSON (observes one poll) |
 //!
 //! `/events` is the primitive the remote clients build on: the query
@@ -55,6 +56,7 @@ use super::events::{read_events_from, Cursor};
 use super::health::{self, HealthPolicy, HealthTracker};
 use super::metrics::Reducer;
 use super::status::{collect_status, status_to_json};
+use super::trace;
 
 /// Cap on the request head (request line + headers) we will buffer.
 const MAX_REQUEST_HEAD: usize = 8 * 1024;
@@ -239,6 +241,38 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
             ];
             respond(&mut stream, 200, "OK", "application/x-ndjson", &headers, body.as_bytes());
         }
+        "/trace" => {
+            let after = req
+                .query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("after="))
+                .unwrap_or("");
+            let cursor = match Cursor::parse(after) {
+                Ok(c) => c,
+                Err(e) => {
+                    let msg = format!("bad cursor: {e}");
+                    respond(&mut stream, 400, "Bad Request", "text/plain", &[], msg.as_bytes());
+                    return;
+                }
+            };
+            // Same stateless cursor contract as `/events`, over the span
+            // segments: whole re-serialized lines only, torn tails held
+            // back, accounting in the same x-ota headers — which is what
+            // makes `repro trace --connect` byte-identical to local.
+            let tail = trace::read_spans_from(shared.store.root(), &cursor);
+            let mut body = String::with_capacity(tail.spans.len() * 96);
+            for sp in &tail.spans {
+                body.push_str(&sp.to_line());
+                body.push('\n');
+            }
+            let headers = [
+                ("x-ota-cursor".to_string(), tail.cursor.render()),
+                ("x-ota-skipped".to_string(), tail.consumed_skipped.to_string()),
+                ("x-ota-pending".to_string(), tail.pending_tails.to_string()),
+                ("x-ota-unreadable".to_string(), tail.unreadable_files.to_string()),
+            ];
+            respond(&mut stream, 200, "OK", "application/x-ndjson", &headers, body.as_bytes());
+        }
         "/health" => {
             let body = {
                 let mut st = shared.state.lock().unwrap();
@@ -246,9 +280,11 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
                 st.cursor = tail.cursor.clone();
                 st.reducer.absorb_tail(&tail);
                 let m = st.reducer.metrics();
-                // Each `/health` request is one stall-detection poll —
-                // the scraper's cadence defines "not advancing".
-                st.tracker.observe(&m);
+                // Stall detection is keyed on elapsed wall-clock, not
+                // request count: any number of concurrent scrapers share
+                // this tracker, and N monitors must not divide the stall
+                // window by N (`HealthPolicy::stall_poll_secs`).
+                st.tracker.observe_at(&m, super::events::unix_ms_now(), &shared.opts.policy);
                 let mut findings = health::evaluate(&m, &shared.opts.policy);
                 findings.extend(st.tracker.stalled(&shared.opts.policy));
                 health_json(st.tracker.polls(), &findings)

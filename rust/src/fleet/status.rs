@@ -22,6 +22,7 @@ use crate::campaign::RunStore;
 use super::events::json_escape;
 use super::health::Finding;
 use super::metrics::Metrics;
+use super::trace::WorkerUtil;
 use super::{lease, queue};
 
 /// One queue item's observed state.
@@ -218,13 +219,16 @@ fn sparkline(values: impl Iterator<Item = f64>, width: usize) -> String {
 }
 
 /// The `repro watch` dashboard: the queue/lease view joined with the
-/// replayed event-log metrics and the active health findings (the
-/// alerts pane; pass `&[]` when health is not being tracked).
+/// replayed event-log metrics, the active health findings (the alerts
+/// pane; pass `&[]` when health is not being tracked), and the
+/// trace-fed worker-utilization pane (pass `&[]` when tracing is off
+/// or the store has no spans — the pane fails soft to absent).
 pub fn render_dashboard(
     store_dir: &str,
     st: &FleetStatus,
     m: &Metrics,
     findings: &[Finding],
+    util: &[WorkerUtil],
 ) -> String {
     let mut s = String::new();
     let _ = writeln!(
@@ -326,6 +330,27 @@ pub fn render_dashboard(
             }
             if rate > 0.0 {
                 line.push_str(&format!(" {rate:.2} r/s"));
+            }
+            let _ = writeln!(s, "{line}");
+        }
+    }
+    if !util.is_empty() {
+        let _ = writeln!(s);
+        let _ = writeln!(s, "utilization (from trace spans):");
+        for u in util {
+            let busy = 100.0 * u.busy_frac();
+            let mut line = format!(
+                "  {:<12} busy {:>5.1}%  idle {:>5.1}%  phase {}",
+                u.worker,
+                busy,
+                100.0 - busy,
+                u.last_phase
+            );
+            if let Some(ws) = m.workers.get(&u.worker) {
+                let rate = ws.rounds_per_sec();
+                if rate > 0.0 {
+                    line.push_str(&format!("  {rate:.2} r/s"));
+                }
             }
             let _ = writeln!(s, "{line}");
         }
@@ -459,12 +484,13 @@ mod tests {
             mk(EventKind::Round, Some(1), &[("grad_norm", 1.0), ("test_accuracy", 0.5)]),
         ]);
         let st = collect_status(&store, Duration::from_secs(30));
-        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[]);
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[], &[]);
         assert!(dash.contains("‖ĝ‖"), "{dash}");
         assert!(dash.contains("workers:"), "{dash}");
         assert!(dash.contains("[...................."), "fresh runs are empty bars:\n{dash}");
         assert!(!dash.contains("SNR"), "no probes, no link pane:\n{dash}");
         assert!(!dash.contains("alerts:"), "no findings, no pane:\n{dash}");
+        assert!(!dash.contains("utilization"), "no spans, no pane:\n{dash}");
 
         // Health findings render as the alerts pane.
         let finding = crate::fleet::health::Finding {
@@ -473,9 +499,24 @@ mod tests {
             value: 4.0,
             detail: format!("run {key} reclaimed 4×"),
         };
-        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[finding]);
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[finding], &[]);
         assert!(dash.contains("alerts:"), "{dash}");
         assert!(dash.contains("!! lease_churn"), "{dash}");
+
+        // Trace-fed utilization renders its own pane, joined with the
+        // event-fed per-worker rate where both views know the worker.
+        let util = vec![WorkerUtil {
+            worker: "w0".into(),
+            busy_us: 750_000,
+            window_us: 1_000_000,
+            spans: 12,
+            last_phase: "execute".into(),
+            last_end_us: 1_000_000,
+        }];
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[], &util);
+        assert!(dash.contains("utilization (from trace spans):"), "{dash}");
+        assert!(dash.contains("busy  75.0%"), "{dash}");
+        assert!(dash.contains("phase execute"), "{dash}");
 
         // With link payloads the SNR/participation/headroom pane and the
         // consensus sparkline appear.
@@ -504,7 +545,7 @@ mod tests {
                 ],
             ),
         ]);
-        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[]);
+        let dash = render_dashboard(dir.to_str().unwrap(), &st, &m, &[], &[]);
         assert!(dash.contains("SNR"), "{dash}");
         assert!(dash.contains("tx 10/dev"), "{dash}");
         assert!(dash.contains("consensus"), "{dash}");

@@ -1,0 +1,925 @@
+//! Fleet-wide distributed tracing: crash-safe span persistence in the
+//! run store, merging N workers' timelines into one trace.
+//!
+//! [`util::prof`](crate::util::prof) sees one process and dies with it.
+//! This layer promotes those spans — plus new worker-loop spans (claim
+//! scan, lease acquire, heartbeat, execute, snapshot save/load, resume,
+//! collect) — into per-writer JSONL segments under
+//! `<store>/fleet/trace/`, written with **exactly** the append /
+//! torn-tail / fail-soft discipline of [`super::events`] (one file per
+//! writer, one `write(2)` per span, readers skip+count torn or unknown
+//! lines, emission never fails a run).
+//!
+//! # Span schema (v1)
+//!
+//! One flat JSON object per line, fixed field order:
+//!
+//! ```text
+//! {"v":1,"name":"execute","key":"06e71b1ab9b1e1b7","campaign":"fig1",
+//!  "worker":"w0","tid":0,"round":3,"us":1754650000123456,"dur":45678}
+//! ```
+//!
+//! * `v` — span schema version; readers skip anything newer than
+//!   [`MAX_TRACE_VERSION`].
+//! * `name` — the phase: trainer phases (`encode`, `project`,
+//!   `transmit`, `decode_amp`, `gradient`, `consensus`, `eval`) or
+//!   worker-loop phases (`enqueue`, `claim_scan`, `lease_acquire`,
+//!   `heartbeat`, `snapshot_load`, `resume`, `execute`,
+//!   `snapshot_save`, `complete`, `collect`).
+//! * causal context, outermost first: `campaign` (figure/spec id,
+//!   stamped where known — e.g. at enqueue) → `key` (run
+//!   content-hash) → `round` → `name` (phase). Joining on `key` links
+//!   a span to every event, snapshot, and result for that run.
+//! * `worker` — the writer id (worker id / scheduler / coordinator),
+//!   which is also the segment file stem.
+//! * `tid` — the emitting thread's profiler ordinal
+//!   ([`crate::util::prof::current_tid`]), so in-process parallelism
+//!   gets its own lanes under the worker's process lane.
+//! * `us` / `dur` — start (unix microseconds) and duration
+//!   (microseconds). Spans are pure wall-clock and live strictly
+//!   outside the deterministic core: no RNG draws, no f32 op-order
+//!   change, nothing fed back into training state or content
+//!   addresses. Goldens and `summary.csv` are byte-identical with
+//!   tracing on or off.
+//!
+//! # Reading
+//!
+//! [`read_spans_from`] reuses the event log's segment tailer (same
+//! [`Cursor`], same accounting), so `GET /trace` serves spans with the
+//! exact cursor semantics `/events` already has and
+//! `repro trace --connect` is byte-identical to a local read.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+use std::{fs, io};
+
+use super::events::{json_escape, tail_segments, Cursor, JsonParser};
+use crate::util::prof;
+
+/// Span schema version written by this build.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Highest span schema version this build understands.
+pub const MAX_TRACE_VERSION: u64 = 1;
+
+/// One timed (or instantaneous, `dur_us == 0`) phase on some worker's
+/// timeline. See the module docs for the wire schema.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Phase name.
+    pub name: String,
+    /// Run content-hash; empty if not run-scoped.
+    pub key: String,
+    /// Campaign / figure spec id; empty where the emitter doesn't know it.
+    pub campaign: String,
+    /// Writer id (segment file stem).
+    pub worker: String,
+    /// Per-thread lane ordinal within the writer's process.
+    pub tid: u64,
+    /// 0-based round for per-round phases.
+    pub round: Option<u64>,
+    /// Start, unix microseconds.
+    pub start_us: u64,
+    /// Duration, microseconds (0 for instantaneous markers).
+    pub dur_us: u64,
+}
+
+impl Span {
+    /// End of the span on the unix-microsecond axis.
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"v\":");
+        s.push_str(&TRACE_VERSION.to_string());
+        s.push_str(",\"name\":\"");
+        s.push_str(&json_escape(&self.name));
+        s.push('"');
+        if !self.key.is_empty() {
+            s.push_str(",\"key\":\"");
+            s.push_str(&json_escape(&self.key));
+            s.push('"');
+        }
+        if !self.campaign.is_empty() {
+            s.push_str(",\"campaign\":\"");
+            s.push_str(&json_escape(&self.campaign));
+            s.push('"');
+        }
+        if !self.worker.is_empty() {
+            s.push_str(",\"worker\":\"");
+            s.push_str(&json_escape(&self.worker));
+            s.push('"');
+        }
+        s.push_str(",\"tid\":");
+        s.push_str(&self.tid.to_string());
+        if let Some(r) = self.round {
+            s.push_str(",\"round\":");
+            s.push_str(&r.to_string());
+        }
+        s.push_str(",\"us\":");
+        s.push_str(&self.start_us.to_string());
+        s.push_str(",\"dur\":");
+        s.push_str(&self.dur_us.to_string());
+        s.push('}');
+        s
+    }
+
+    /// Parse one line. `Err` carries a short reason; callers count it
+    /// as a skipped line rather than aborting (fail-soft contract).
+    pub fn parse(line: &str) -> Result<Span, String> {
+        let mut p = JsonParser::new(line);
+        p.expect(b'{')?;
+        let mut sp = Span {
+            name: String::new(),
+            key: String::new(),
+            campaign: String::new(),
+            worker: String::new(),
+            tid: 0,
+            round: None,
+            start_us: 0,
+            dur_us: 0,
+        };
+        let mut version = 0u64;
+        loop {
+            p.skip_ws();
+            if p.eat(b'}') {
+                break;
+            }
+            let field = p.string()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            match field.as_str() {
+                "v" => version = p.number()? as u64,
+                "name" => sp.name = p.string()?,
+                "key" => sp.key = p.string()?,
+                "campaign" => sp.campaign = p.string()?,
+                "worker" => sp.worker = p.string()?,
+                "tid" => sp.tid = p.number()? as u64,
+                "round" => sp.round = Some(p.number()? as u64),
+                "us" => sp.start_us = p.number()? as u64,
+                "dur" => sp.dur_us = p.number()? as u64,
+                _ => {
+                    // Forward compat: unknown numeric or null fields are
+                    // tolerated and dropped, like the event parser.
+                    if !p.eat_literal("null") {
+                        p.number()?;
+                    }
+                }
+            }
+            p.skip_ws();
+            if !p.eat(b',') {
+                p.expect(b'}')?;
+                break;
+            }
+        }
+        if version == 0 || version > MAX_TRACE_VERSION {
+            return Err(format!("unsupported span version {version}"));
+        }
+        if sp.name.is_empty() {
+            return Err("missing `name`".into());
+        }
+        Ok(sp)
+    }
+}
+
+/// Directory holding the per-writer span segments.
+pub fn trace_dir(store_root: &Path) -> PathBuf {
+    store_root.join("fleet").join("trace")
+}
+
+pub(crate) fn unix_us_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+static TRACE_EMIT_FAILED: AtomicBool = AtomicBool::new(false);
+
+/// Handle for appending spans as one writer. Cloning is cheap; all
+/// clones append to the same per-writer segment file, one `write(2)`
+/// per span (the crash-safety invariant, same as [`super::events`]).
+#[derive(Clone, Debug)]
+pub struct TraceLog {
+    path: PathBuf,
+    writer: String,
+}
+
+impl TraceLog {
+    /// Open (creating directories as needed) the span segment for
+    /// `writer`. Writer ids are sanitized to `[A-Za-z0-9._-]` exactly
+    /// like [`super::events::EventLog::open`], so the shared [`Cursor`]
+    /// wire form stays unambiguous.
+    pub fn open(store_root: &Path, writer: &str) -> io::Result<TraceLog> {
+        let dir = trace_dir(store_root);
+        fs::create_dir_all(&dir)?;
+        let writer: String = writer
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                    c
+                } else {
+                    '-'
+                }
+            })
+            .collect();
+        let writer = if writer.is_empty() { "anon".to_string() } else { writer };
+        let path = dir.join(format!("{writer}.jsonl"));
+        Ok(TraceLog { path, writer })
+    }
+
+    /// The sanitized writer id this log appends as.
+    pub fn writer(&self) -> &str {
+        &self.writer
+    }
+
+    /// Emit one span. Never fails: tracing must never take down a run,
+    /// so append errors are reported once to stderr and dropped.
+    pub fn emit(
+        &self,
+        name: &str,
+        key: &str,
+        campaign: &str,
+        round: Option<u64>,
+        start_us: u64,
+        dur_us: u64,
+    ) {
+        self.append(&Span {
+            name: name.to_string(),
+            key: key.to_string(),
+            campaign: campaign.to_string(),
+            worker: self.writer.clone(),
+            tid: prof::current_tid(),
+            round,
+            start_us,
+            dur_us,
+        })
+    }
+
+    /// Emit an instantaneous marker span (`dur == 0`) stamped now.
+    pub fn mark(&self, name: &str, key: &str, campaign: &str, round: Option<u64>) {
+        self.emit(name, key, campaign, round, unix_us_now(), 0)
+    }
+
+    /// Open an RAII scope: the span is emitted when the guard drops,
+    /// covering the wall-clock between the two points.
+    pub fn scope(&self, name: &'static str, key: &str, round: Option<u64>) -> SpanScope {
+        SpanScope {
+            log: self.clone(),
+            name,
+            key: key.to_string(),
+            round,
+            started: Instant::now(),
+            start_us: unix_us_now(),
+        }
+    }
+
+    fn append(&self, span: &Span) {
+        let mut line = span.to_line();
+        line.push('\n');
+        let res = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .and_then(|mut f| io::Write::write_all(&mut f, line.as_bytes()));
+        if let Err(e) = res {
+            if !TRACE_EMIT_FAILED.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "warning: trace append failed ({}): {e} — further failures are silent",
+                    self.path.display()
+                );
+            }
+        }
+    }
+}
+
+/// RAII span guard from [`TraceLog::scope`]: emits on drop.
+pub struct SpanScope {
+    log: TraceLog,
+    name: &'static str,
+    key: String,
+    round: Option<u64>,
+    started: Instant,
+    start_us: u64,
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        let dur_us = self.started.elapsed().as_micros() as u64;
+        self.log
+            .emit(self.name, &self.key, "", self.round, self.start_us, dur_us);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bridging util::prof phase spans into the fleet trace.
+
+static PROF_DRAIN_CLAIMED: AtomicBool = AtomicBool::new(false);
+static ACTIVE_TRACED_RUNS: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII marker: one traced run is executing in this process. Used to
+/// detect in-process run concurrency (`par_map` campaigns), where
+/// drained phase spans cannot be attributed to a single run.
+pub struct RunToken(());
+
+impl RunToken {
+    pub fn new() -> RunToken {
+        ACTIVE_TRACED_RUNS.fetch_add(1, Ordering::SeqCst);
+        RunToken(())
+    }
+}
+
+impl Default for RunToken {
+    fn default() -> Self {
+        RunToken::new()
+    }
+}
+
+impl Drop for RunToken {
+    fn drop(&mut self) {
+        ACTIVE_TRACED_RUNS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Claims the process-global [`prof`] buffer for one run and drains it
+/// into the fleet trace every round, stamping each phase span with the
+/// run key and round. Exactly one run per process may hold the claim;
+/// `--profile-out` (which enabled prof first) always wins, so the two
+/// consumers never steal each other's records.
+pub struct ProfDrain {
+    log: TraceLog,
+    key: String,
+}
+
+impl ProfDrain {
+    /// Try to claim phase-span capture for the run `key`. `None` if the
+    /// profiler is already enabled externally or another run holds the
+    /// claim — the run still traces its worker-level spans, it just
+    /// skips per-phase detail.
+    pub fn claim(log: TraceLog, key: &str) -> Option<ProfDrain> {
+        if prof::is_enabled() {
+            return None;
+        }
+        if PROF_DRAIN_CLAIMED.swap(true, Ordering::SeqCst) {
+            return None;
+        }
+        prof::enable();
+        let _ = prof::take(); // drop stale records from any previous owner
+        Some(ProfDrain { log, key: key.to_string() })
+    }
+
+    /// Drain accumulated phase spans, attributing them to `round`.
+    /// If another traced run started concurrently in this process the
+    /// records can't be attributed to one run, so they are discarded
+    /// (fail-soft: observability loses detail, never invents it).
+    pub fn drain(&self, round: Option<u64>) {
+        let spans = prof::take();
+        if ACTIVE_TRACED_RUNS.load(Ordering::SeqCst) > 1 {
+            return;
+        }
+        let base = prof::epoch_unix_us();
+        for s in &spans {
+            self.log.append(&Span {
+                name: s.name.to_string(),
+                key: self.key.clone(),
+                campaign: String::new(),
+                worker: self.log.writer.clone(),
+                tid: s.tid,
+                round,
+                start_us: base.saturating_add(s.start_us),
+                dur_us: s.dur_us,
+            });
+        }
+    }
+}
+
+impl Drop for ProfDrain {
+    fn drop(&mut self) {
+        self.drain(None);
+        prof::disable();
+        let _ = prof::take();
+        PROF_DRAIN_CLAIMED.store(false, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reading.
+
+/// Batch read of a store's whole trace directory (fail-soft).
+#[derive(Clone, Debug, Default)]
+pub struct SpanReadReport {
+    /// Parsed spans, in per-file order (see [`sort_spans`]).
+    pub spans: Vec<Span>,
+    /// Lines skipped: torn tails, parse failures, unknown versions.
+    pub skipped_lines: usize,
+    /// Segment files that could not be read at all.
+    pub unreadable_files: usize,
+}
+
+/// One incremental read of the trace past a [`Cursor`] — the same
+/// accounting contract as [`super::events::TailReport`].
+#[derive(Clone, Debug, Default)]
+pub struct SpanTailReport {
+    /// Newly parsed spans, in per-file order.
+    pub spans: Vec<Span>,
+    /// The cursor after this read; feed it back to resume.
+    pub cursor: Cursor,
+    /// Garbage terminated lines consumed (cumulative across a chain).
+    pub consumed_skipped: usize,
+    /// Segments currently ending in a torn line (point-in-time).
+    pub pending_tails: usize,
+    /// Segments unreadable at this read (point-in-time).
+    pub unreadable_files: usize,
+}
+
+/// Read every span segment under the store's trace directory.
+/// Equivalent to [`read_spans_from`] with the zero cursor.
+pub fn read_spans(store_root: &Path) -> SpanReadReport {
+    let tail = read_spans_from(store_root, &Cursor::default());
+    SpanReadReport {
+        spans: tail.spans,
+        skipped_lines: tail.consumed_skipped + tail.pending_tails,
+        unreadable_files: tail.unreadable_files,
+    }
+}
+
+/// Incrementally read every span segment past `cursor`, never
+/// consuming a partial line — the trace analogue of
+/// [`super::events::read_events_from`], built on the same segment
+/// tailer so the two can never drift in torn-tail semantics.
+pub fn read_spans_from(store_root: &Path, cursor: &Cursor) -> SpanTailReport {
+    let seg = tail_segments(&trace_dir(store_root), cursor);
+    let mut tail = SpanTailReport {
+        cursor: seg.cursor,
+        pending_tails: seg.pending_tails,
+        unreadable_files: seg.unreadable_files,
+        ..SpanTailReport::default()
+    };
+    for line in &seg.lines {
+        match Span::parse(line) {
+            Ok(sp) => tail.spans.push(sp),
+            Err(_) => tail.consumed_skipped += 1,
+        }
+    }
+    tail
+}
+
+/// Deterministic merge order for rendering: by start time, then
+/// writer, lane, name, duration, key, round. Local and `--connect`
+/// readers sort the same spans into the same sequence, which is what
+/// makes `repro trace --connect` byte-identical to local.
+pub fn sort_spans(spans: &mut [Span]) {
+    spans.sort_by(|a, b| {
+        (a.start_us, &a.worker, a.tid, &a.name, a.dur_us, &a.key, a.round)
+            .cmp(&(b.start_us, &b.worker, b.tid, &b.name, b.dur_us, &b.key, b.round))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Analysis: utilization, critical path, Chrome export.
+
+/// One worker lane's busy/idle accounting over the fleet window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerUtil {
+    pub worker: String,
+    /// Microseconds covered by at least one span (interval union, so
+    /// nested phase spans don't double-count).
+    pub busy_us: u64,
+    /// The fleet window (earliest span start → latest span end),
+    /// shared by every worker so fractions are comparable.
+    pub window_us: u64,
+    /// Number of spans on this lane.
+    pub spans: usize,
+    /// Name of the latest-ending span (the lane's current phase).
+    pub last_phase: String,
+    /// When that span ended, unix microseconds.
+    pub last_end_us: u64,
+}
+
+impl WorkerUtil {
+    pub fn busy_frac(&self) -> f64 {
+        if self.window_us == 0 {
+            0.0
+        } else {
+            (self.busy_us as f64 / self.window_us as f64).min(1.0)
+        }
+    }
+}
+
+/// Fold spans into per-worker utilization, sorted by worker name.
+/// Empty input yields an empty vec (the fail-soft "no pane" signal).
+pub fn utilization(spans: &[Span]) -> Vec<WorkerUtil> {
+    if spans.is_empty() {
+        return Vec::new();
+    }
+    let t0 = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let t1 = spans.iter().map(Span::end_us).max().unwrap_or(0);
+    let window_us = t1.saturating_sub(t0);
+    let mut workers: Vec<&str> = spans.iter().map(|s| s.worker.as_str()).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    workers
+        .into_iter()
+        .map(|w| {
+            let mut ivals: Vec<(u64, u64)> = spans
+                .iter()
+                .filter(|s| s.worker == w)
+                .map(|s| (s.start_us, s.end_us()))
+                .collect();
+            ivals.sort_unstable();
+            let mut busy_us = 0u64;
+            let mut cur: Option<(u64, u64)> = None;
+            for (a, b) in ivals {
+                match cur {
+                    Some((ca, cb)) if a <= cb => cur = Some((ca, cb.max(b))),
+                    Some((ca, cb)) => {
+                        busy_us += cb - ca;
+                        cur = Some((a, b));
+                    }
+                    None => cur = Some((a, b)),
+                }
+            }
+            if let Some((ca, cb)) = cur {
+                busy_us += cb - ca;
+            }
+            let last = spans
+                .iter()
+                .filter(|s| s.worker == w)
+                .max_by(|x, y| {
+                    (x.end_us(), x.start_us, &x.name).cmp(&(y.end_us(), y.start_us, &y.name))
+                })
+                .expect("worker has at least one span");
+            WorkerUtil {
+                worker: w.to_string(),
+                busy_us,
+                window_us,
+                spans: spans.iter().filter(|s| s.worker == w).count(),
+                last_phase: last.name.clone(),
+                last_end_us: last.end_us(),
+            }
+        })
+        .collect()
+}
+
+fn ms(us: u64) -> f64 {
+    us as f64 / 1000.0
+}
+
+/// Render the merged-trace text report: header, per-run critical-path
+/// table (queue-wait vs execute vs snapshot overhead), and per-worker
+/// utilization with straggler ranking. Pure function of its inputs, so
+/// local and `--connect` renderings are byte-identical by
+/// construction. `spans` must already be ordered by [`sort_spans`].
+pub fn render_report(
+    spans: &[Span],
+    consumed_skipped: usize,
+    pending_tails: usize,
+    unreadable_files: usize,
+) -> String {
+    let mut out = String::new();
+    let util = utilization(spans);
+    let window_us = util.first().map(|u| u.window_us).unwrap_or(0);
+    out.push_str(&format!(
+        "fleet trace: {} span(s) · {} worker lane(s) · makespan {:.3} ms\n",
+        spans.len(),
+        util.len(),
+        ms(window_us)
+    ));
+    if consumed_skipped + pending_tails + unreadable_files > 0 {
+        out.push_str(&format!(
+            "fail-soft: {consumed_skipped} skipped line(s) · {pending_tails} pending tail(s) · {unreadable_files} unreadable file(s)\n"
+        ));
+    }
+
+    // Per-run critical path: queue-wait (enqueue → first execute start),
+    // execute, snapshot overhead (save + load), per key.
+    let mut keys: Vec<&str> = spans
+        .iter()
+        .filter(|s| !s.key.is_empty())
+        .map(|s| s.key.as_str())
+        .collect();
+    keys.sort_unstable();
+    keys.dedup();
+    out.push_str("\ncritical path per run (queue-wait → execute → snapshot):\n");
+    if keys.is_empty() {
+        out.push_str("  (no run-scoped spans)\n");
+    } else {
+        let mut rows: Vec<(String, String, Option<u64>, u64, u64, usize)> = keys
+            .iter()
+            .map(|&key| {
+                let of = |name: &str| spans.iter().filter(move |s| s.key == key && s.name == name);
+                let enq = of("enqueue").map(|s| s.start_us).min();
+                let exec_start = of("execute").map(|s| s.start_us).min();
+                let queue_wait = match (enq, exec_start) {
+                    (Some(e), Some(x)) => Some(x.saturating_sub(e)),
+                    _ => None,
+                };
+                let exec_us: u64 = of("execute").map(|s| s.dur_us).sum();
+                let snap_us: u64 = of("snapshot_save")
+                    .chain(of("snapshot_load"))
+                    .map(|s| s.dur_us)
+                    .sum();
+                let mut execers: Vec<&str> =
+                    of("execute").map(|s| s.worker.as_str()).collect();
+                execers.sort_unstable();
+                execers.dedup();
+                let who = if execers.is_empty() { "-".to_string() } else { execers.join("+") };
+                let rounds = spans
+                    .iter()
+                    .filter(|s| s.key == key)
+                    .filter_map(|s| s.round)
+                    .collect::<std::collections::BTreeSet<u64>>()
+                    .len();
+                (key.to_string(), who, queue_wait, exec_us, snap_us, rounds)
+            })
+            .collect();
+        // Longest execute first: the top row is the campaign's critical run.
+        rows.sort_by(|a, b| b.3.cmp(&a.3).then(a.0.cmp(&b.0)));
+        out.push_str(&format!(
+            "  {:<18} {:<12} {:>13} {:>12} {:>12} {:>7}\n",
+            "key", "worker", "queue-wait ms", "execute ms", "snapshot ms", "rounds"
+        ));
+        for (key, who, queue_wait, exec_us, snap_us, rounds) in rows {
+            let qw = match queue_wait {
+                Some(us) => format!("{:.3}", ms(us)),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "  {:<18} {:<12} {:>13} {:>12.3} {:>12.3} {:>7}\n",
+                key,
+                who,
+                qw,
+                ms(exec_us),
+                ms(snap_us),
+                rounds
+            ));
+        }
+    }
+
+    // Per-worker utilization, busiest first; straggler = latest finisher.
+    out.push_str("\nworker utilization (busy/idle over the fleet window):\n");
+    if util.is_empty() {
+        out.push_str("  (no spans)\n");
+    } else {
+        let mut by_busy = util.clone();
+        by_busy.sort_by(|a, b| {
+            b.busy_us.cmp(&a.busy_us).then(a.worker.cmp(&b.worker))
+        });
+        out.push_str(&format!(
+            "  {:<12} {:>7} {:>7} {:>7}  {}\n",
+            "worker", "busy %", "idle %", "spans", "last phase"
+        ));
+        for u in &by_busy {
+            let busy = 100.0 * u.busy_frac();
+            out.push_str(&format!(
+                "  {:<12} {:>7.1} {:>7.1} {:>7}  {}\n",
+                u.worker,
+                busy,
+                100.0 - busy,
+                u.spans,
+                u.last_phase
+            ));
+        }
+        if util.len() > 1 {
+            let straggler = util
+                .iter()
+                .max_by(|a, b| {
+                    (a.last_end_us, &a.worker).cmp(&(b.last_end_us, &b.worker))
+                })
+                .expect("non-empty");
+            let first_done = util.iter().map(|u| u.last_end_us).min().unwrap_or(0);
+            out.push_str(&format!(
+                "  straggler: {} (finished {:.3} ms after the first idle lane)\n",
+                straggler.worker,
+                ms(straggler.last_end_us.saturating_sub(first_done))
+            ));
+        }
+    }
+    out
+}
+
+/// Merged Chrome trace-event JSON: one process (`pid`) lane per
+/// worker, one thread row per `(worker, tid)`, with "M" metadata
+/// events naming both. Timestamps are rebased to the earliest span so
+/// viewers open at t≈0. `spans` must already be ordered by
+/// [`sort_spans`] for deterministic output.
+pub fn chrome_trace(spans: &[Span]) -> String {
+    let mut workers: Vec<&str> = spans.iter().map(|s| s.worker.as_str()).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    let pid_of = |w: &str| workers.iter().position(|x| *x == w).unwrap_or(0) as u64 + 1;
+    let t0 = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let mut events: Vec<String> = Vec::with_capacity(spans.len() + 2 * workers.len());
+    for w in &workers {
+        events.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+            pid_of(w),
+            json_escape(w)
+        ));
+    }
+    let mut lanes: Vec<(&str, u64)> = spans.iter().map(|s| (s.worker.as_str(), s.tid)).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for (w, tid) in lanes {
+        events.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{tid},\"args\":{{\"name\":\"lane-{tid}\"}}}}",
+            pid_of(w)
+        ));
+    }
+    for s in spans {
+        let mut args = String::new();
+        if !s.key.is_empty() {
+            args.push_str(&format!(",\"key\":\"{}\"", json_escape(&s.key)));
+        }
+        if !s.campaign.is_empty() {
+            args.push_str(&format!(",\"campaign\":\"{}\"", json_escape(&s.campaign)));
+        }
+        if let Some(r) = s.round {
+            args.push_str(&format!(",\"round\":{r}"));
+        }
+        let args = if args.is_empty() {
+            String::new()
+        } else {
+            format!(",\"args\":{{{}}}", &args[1..])
+        };
+        events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"fleet\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}{}}}",
+            json_escape(&s.name),
+            s.start_us - t0,
+            s.dur_us,
+            pid_of(&s.worker),
+            s.tid,
+            args
+        ));
+    }
+    format!(
+        "{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}",
+        events.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("ota_tracemod_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn mk(name: &str, key: &str, worker: &str, start: u64, dur: u64) -> Span {
+        Span {
+            name: name.into(),
+            key: key.into(),
+            campaign: String::new(),
+            worker: worker.into(),
+            tid: 0,
+            round: None,
+            start_us: start,
+            dur_us: dur,
+        }
+    }
+
+    #[test]
+    fn span_line_roundtrips_with_hostile_strings() {
+        let sp = Span {
+            name: "lease \"acquire\"\\".into(),
+            key: "0123456789abcdef".into(),
+            campaign: "fig-λ\n".into(),
+            worker: "w0".into(),
+            tid: 3,
+            round: Some(7),
+            start_us: 1_754_650_000_123_456,
+            dur_us: 42,
+        };
+        assert_eq!(Span::parse(&sp.to_line()).unwrap(), sp);
+        let bare = mk("execute", "", "w1", 5, 0);
+        assert_eq!(Span::parse(&bare.to_line()).unwrap(), bare);
+    }
+
+    #[test]
+    fn unknown_span_versions_and_garbage_are_skipped() {
+        assert!(Span::parse("{\"v\":99,\"name\":\"x\",\"tid\":0,\"us\":0,\"dur\":0}").is_err());
+        assert!(Span::parse("{\"v\":1,\"tid\":0,\"us\":0,\"dur\":0}").is_err(), "missing name");
+        assert!(Span::parse("not json").is_err());
+        // Unknown numeric / null fields are tolerated (forward compat).
+        let sp = Span::parse("{\"v\":1,\"name\":\"x\",\"tid\":1,\"us\":9,\"dur\":2,\"future\":3,\"gone\":null}")
+            .unwrap();
+        assert_eq!((sp.name.as_str(), sp.start_us, sp.dur_us), ("x", 9, 2));
+    }
+
+    #[test]
+    fn log_appends_and_tail_skips_torn_lines() {
+        let root = tmp("torn");
+        let log = TraceLog::open(&root, "w0/evil").unwrap();
+        assert_eq!(log.writer(), "w0-evil", "writer sanitized");
+        log.emit("lease_acquire", "k1", "", None, 10, 5);
+        log.mark("enqueue", "k1", "fig1", None);
+        let first = read_spans_from(&root, &Cursor::default());
+        assert_eq!(first.spans.len(), 2);
+        assert_eq!((first.consumed_skipped, first.pending_tails), (0, 0));
+
+        // Torn tail: cursor parks, pending counted, nothing fatal.
+        let path = trace_dir(&root).join("w0-evil.jsonl");
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"v\":1,\"name\":\"exec").unwrap();
+        drop(f);
+        let torn = read_spans_from(&root, &first.cursor);
+        assert!(torn.spans.is_empty());
+        assert_eq!(torn.pending_tails, 1);
+        assert_eq!(torn.cursor, first.cursor);
+
+        // Writer completes the line: parses whole on the next read.
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"ute\",\"tid\":0,\"us\":20,\"dur\":7}\n").unwrap();
+        drop(f);
+        let healed = read_spans_from(&root, &torn.cursor);
+        assert_eq!(healed.spans.len(), 1);
+        assert_eq!(healed.spans[0].name, "execute");
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn batch_read_is_zero_cursor_special_case() {
+        let root = tmp("batch");
+        let log = TraceLog::open(&root, "w0").unwrap();
+        log.emit("execute", "k", "", None, 0, 3);
+        let path = trace_dir(&root).join("w0.jsonl");
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"garbage\n{\"v\":1,\"name\":\"to").unwrap();
+        drop(f);
+        let batch = read_spans(&root);
+        let tail = read_spans_from(&root, &Cursor::default());
+        assert_eq!(batch.spans, tail.spans);
+        assert_eq!(batch.skipped_lines, tail.consumed_skipped + tail.pending_tails);
+        assert_eq!(batch.skipped_lines, 2);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn utilization_unions_nested_spans_and_ranks_stragglers() {
+        let spans = vec![
+            // w0 busy [0, 100) with a nested phase inside — no double count.
+            mk("execute", "k1", "w0", 0, 100),
+            mk("gradient", "k1", "w0", 10, 20),
+            // w1 busy [0, 50) ∪ [150, 200): two disjoint intervals.
+            mk("execute", "k2", "w1", 0, 50),
+            mk("snapshot_save", "k2", "w1", 150, 50),
+        ];
+        let util = utilization(&spans);
+        assert_eq!(util.len(), 2);
+        let w0 = &util[0];
+        let w1 = &util[1];
+        assert_eq!((w0.worker.as_str(), w0.busy_us, w0.window_us), ("w0", 100, 200));
+        assert_eq!((w1.worker.as_str(), w1.busy_us), ("w1", 100));
+        assert_eq!(w1.last_phase, "snapshot_save");
+        assert!(w1.last_end_us > w0.last_end_us, "w1 is the straggler");
+        assert!(utilization(&[]).is_empty(), "fail-soft on no spans");
+    }
+
+    #[test]
+    fn report_and_chrome_export_are_deterministic() {
+        let mut spans = vec![
+            mk("enqueue", "k1", "coordinator", 0, 0),
+            mk("execute", "k1", "w0", 40, 100),
+            mk("snapshot_save", "k1", "w0", 90, 10),
+            mk("execute", "k2", "w1", 10, 300),
+        ];
+        let mut rev: Vec<Span> = spans.iter().rev().cloned().collect();
+        sort_spans(&mut spans);
+        sort_spans(&mut rev);
+        assert_eq!(spans, rev, "sort is order-insensitive");
+        let report = render_report(&spans, 1, 0, 0);
+        assert!(report.contains("critical path per run"), "{report}");
+        // k2 has the longest execute → ranked first.
+        let k1_at = report.find("k1").unwrap();
+        let k2_at = report.find("k2").unwrap();
+        assert!(k2_at < k1_at, "{report}");
+        // Queue wait for k1 = execute start (40µs) − enqueue (0µs).
+        assert!(report.contains("0.040"), "{report}");
+        assert!(report.contains("straggler"), "{report}");
+        assert_eq!(report, render_report(&spans, 1, 0, 0));
+
+        let json = chrome_trace(&spans);
+        let doc = crate::fleet::client::Json::parse(&json).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // 3 worker lanes → 3 process_name + 3 thread_name metas + 4 spans.
+        assert_eq!(events.len(), 10, "{json}");
+        let pids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter_map(|e| e.get("pid").and_then(|p| p.as_f64()))
+            .map(|p| p as u64)
+            .collect();
+        assert_eq!(pids.len(), 3, "one pid lane per worker");
+        assert_eq!(json, chrome_trace(&spans));
+    }
+}

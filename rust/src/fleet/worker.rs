@@ -30,6 +30,7 @@ use crate::config::{CampaignConfig, FleetConfig};
 use super::events::{EventKind, EventLog};
 use super::lease::{self, Lease};
 use super::queue::{self, WorkItem};
+use super::trace::{self, TraceLog};
 
 /// What one worker did over its lifetime.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -117,8 +118,18 @@ pub fn run_worker_ctl(
         if let Ok(log) = EventLog::open(store.root(), worker_id) {
             store.attach_events(log);
         }
+        // Tracing rides on telemetry: this worker's spans go to its own
+        // segment under <store>/fleet/trace/, and the store attachment
+        // routes scheduler spans (execute, snapshot_save, phases)
+        // through the same writer.
+        if campaign.telemetry.trace {
+            if let Ok(log) = TraceLog::open(store.root(), worker_id) {
+                store.attach_trace(log);
+            }
+        }
     }
     let events = store.event_log();
+    let traces = store.trace_log();
     let mut report = WorkerReport::default();
     let ttl = Duration::from_secs_f64(fleet.lease_secs);
     let ldir = lease::lease_dir(store.root());
@@ -216,22 +227,43 @@ pub fn run_worker_ctl(
         bad_drains = 0;
         // Shortest-remaining-work-first over the pending tail (manifest
         // reads scale with what is left, not with the whole campaign).
+        // The whole scan-and-acquire pass is one `claim_scan` span; a
+        // successful acquisition additionally gets a `lease_acquire`
+        // span carrying the run key and campaign id.
         let mut claimed: Option<(usize, Lease)> = None;
-        for idx in queue::order_by_remaining(&items, pending, &store) {
-            let key = items[idx].key.clone();
-            let mut on_reclaim = || {
-                if let Some(ev) = &events {
-                    ev.emit(EventKind::Reclaimed, &key, None, &[]);
+        {
+            let _scan = traces.as_ref().map(|t| t.scope("claim_scan", "", None));
+            for idx in queue::order_by_remaining(&items, pending, &store) {
+                let key = items[idx].key.clone();
+                let mut on_reclaim = || {
+                    if let Some(ev) = &events {
+                        ev.emit(EventKind::Reclaimed, &key, None, &[]);
+                    }
+                };
+                let acquire_started = (std::time::Instant::now(), trace::unix_us_now());
+                if let Some(l) = lease::try_acquire_with(
+                    &ldir,
+                    &items[idx].key,
+                    worker_id,
+                    ttl,
+                    &mut on_reclaim,
+                )? {
+                    if let Some(ev) = &events {
+                        ev.emit(EventKind::Claimed, &items[idx].key, None, &[]);
+                    }
+                    if let Some(t) = &traces {
+                        t.emit(
+                            "lease_acquire",
+                            &items[idx].key,
+                            &items[idx].spec_id,
+                            None,
+                            acquire_started.1,
+                            acquire_started.0.elapsed().as_micros() as u64,
+                        );
+                    }
+                    claimed = Some((idx, l));
+                    break;
                 }
-            };
-            if let Some(l) =
-                lease::try_acquire_with(&ldir, &items[idx].key, worker_id, ttl, &mut on_reclaim)?
-            {
-                if let Some(ev) = &events {
-                    ev.emit(EventKind::Claimed, &items[idx].key, None, &[]);
-                }
-                claimed = Some((idx, l));
-                break;
             }
         }
         match claimed {
@@ -273,9 +305,13 @@ fn execute_item(
         }
         return Ok(());
     }
-    let resume = store
-        .load_best_snapshot(&item.cfg)
-        .filter(|snap| scheduler::snapshot_restorable(&item.cfg, snap));
+    let traces = store.trace_log();
+    let resume = {
+        let _sp = traces.as_ref().map(|t| t.scope("snapshot_load", &item.key, None));
+        store
+            .load_best_snapshot(&item.cfg)
+            .filter(|snap| scheduler::snapshot_restorable(&item.cfg, snap))
+    };
     match &resume {
         Some(snap) => {
             report.resumed += 1;
@@ -315,10 +351,21 @@ fn execute_item(
                 since_beat += tick;
                 if since_beat >= interval {
                     since_beat = Duration::ZERO;
+                    let beat_started = (std::time::Instant::now(), trace::unix_us_now());
                     match l.heartbeat() {
                         Ok(true) => {
                             if let Some(ev) = &events {
                                 ev.emit(EventKind::Heartbeat, &item.key, None, &[]);
+                            }
+                            if let Some(t) = &traces {
+                                t.emit(
+                                    "heartbeat",
+                                    &item.key,
+                                    "",
+                                    None,
+                                    beat_started.1,
+                                    beat_started.0.elapsed().as_micros() as u64,
+                                );
                             }
                         }
                         // Lease lost (we stalled past the TTL) or the

@@ -17,7 +17,10 @@
 //!                incremental (each frame folds only appended bytes);
 //!                `--connect host:port` watches a remote store
 //!   serve        telemetry server over a store: /metrics /status
-//!                /events /health on a plain HTTP/1.1 listener
+//!                /events /trace /health on a plain HTTP/1.1 listener
+//!   trace        merge the store's fleet trace spans into a critical-path
+//!                + utilization report (`--connect host:port` renders from
+//!                a remote server — byte-identical by construction)
 //!   resume       re-run a figure campaign through the run cache (forced on)
 //!   status       list the campaign store's cached/partial runs
 //!   gc           prune snapshot history + strays per the retention policy
@@ -55,7 +58,8 @@ fn usage() -> Usage {
             ("fleet-status", "live fleet queue/lease/progress view (--connect for remote)"),
             ("metrics", "fold the store's event log into Prometheus text (--connect for remote)"),
             ("watch", "live dashboard over the store's event log (--once for one frame)"),
-            ("serve", "telemetry server over a store: /metrics /status /events /health"),
+            ("serve", "telemetry server over a store: /metrics /status /events /trace /health"),
+            ("trace", "merged fleet trace: critical path + utilization (--connect for remote)"),
             ("resume <fig|all>", "re-run a figure campaign through the run cache"),
             ("status", "campaign store status (cached/partial runs)"),
             ("gc", "prune snapshot history and stray files from the store"),
@@ -94,6 +98,8 @@ fn usage() -> Usage {
             ("--telemetry-every <N>", "round-event cadence in rounds (default 1)"),
             ("--no-diagnostics", "disable link diagnostics probes (device events, SNR)"),
             ("--profile-out <file>", "write a Chrome trace of pipeline spans (train)"),
+            ("--trace", "record fleet trace spans to the store ([telemetry] trace)"),
+            ("--trace-out <file>", "write the merged Chrome trace JSON (trace)"),
             ("--once", "render a single dashboard frame and exit (watch)"),
             ("--interval-secs <s>", "dashboard refresh cadence (watch; default 2)"),
             ("--quiet", "suppress per-round progress"),
@@ -115,6 +121,7 @@ fn main() {
         "metrics" => cmd_metrics(&args),
         "watch" => cmd_watch(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "resume" => cmd_fig(&args, true),
         "status" => cmd_status(&args),
         "gc" => cmd_gc(&args),
@@ -160,6 +167,9 @@ fn campaign_from_args(args: &Args, force_resume: bool) -> Option<CampaignConfig>
     }
     if args.flag("no-diagnostics") {
         c.telemetry.diagnostics = false;
+    }
+    if args.flag("trace") {
+        c.telemetry.trace = true;
     }
     c.telemetry.every = args.usize("telemetry-every", c.telemetry.every).max(1);
     if force_resume {
@@ -441,6 +451,9 @@ fn cmd_fleet(args: &Args) {
         if !campaign.telemetry.diagnostics {
             cmd.arg("--no-diagnostics");
         }
+        if campaign.telemetry.trace {
+            cmd.arg("--trace");
+        }
         let child = cmd
             .spawn()
             .unwrap_or_else(|e| panic!("spawn worker {i}: {e}"));
@@ -575,6 +588,11 @@ struct WatchState {
     reducer: fleet::Reducer,
     tracker: fleet::HealthTracker,
     policy: fleet::HealthPolicy,
+    /// Cursor chain over the trace segments (the utilization pane's
+    /// feed) and the spans accumulated so far. Both stay empty when
+    /// tracing is off — the pane fails soft to absent.
+    trace_cursor: fleet::Cursor,
+    spans: Vec<fleet::Span>,
 }
 
 impl WatchState {
@@ -584,18 +602,33 @@ impl WatchState {
             reducer: fleet::Reducer::default(),
             tracker: fleet::HealthTracker::default(),
             policy: fleet::HealthPolicy::default(),
+            trace_cursor: fleet::Cursor::default(),
+            spans: Vec::new(),
         }
     }
 
-    /// Fold one frame's tail and render it against `status`.
-    fn frame(&mut self, store_dir: &str, status: &fleet::FleetStatus, tail: &fleet::TailReport) -> String {
+    /// Fold one frame's tails and render them against `status`.
+    /// `span_tail` is `None` when the trace feed is unavailable (old
+    /// server, tracing off) — the dashboard renders without the pane.
+    fn frame(
+        &mut self,
+        store_dir: &str,
+        status: &fleet::FleetStatus,
+        tail: &fleet::TailReport,
+        span_tail: Option<fleet::SpanTailReport>,
+    ) -> String {
         self.cursor = tail.cursor.clone();
         self.reducer.absorb_tail(tail);
+        if let Some(st) = span_tail {
+            self.trace_cursor = st.cursor.clone();
+            self.spans.extend(st.spans);
+        }
         let metrics = self.reducer.metrics();
         self.tracker.observe(&metrics);
         let mut findings = fleet::evaluate(&metrics, &self.policy);
         findings.extend(self.tracker.stalled(&self.policy));
-        fleet::render_dashboard(store_dir, status, &metrics, &findings)
+        let util = fleet::utilization(&self.spans);
+        fleet::render_dashboard(store_dir, status, &metrics, &findings, &util)
     }
 }
 
@@ -614,7 +647,10 @@ fn cmd_watch(args: &Args) {
                 .unwrap_or_else(|e| panic!("repro watch --connect {addr}: {e}"));
             let tail = fleet::fetch_events(addr, &state.cursor)
                 .unwrap_or_else(|e| panic!("repro watch --connect {addr}: {e}"));
-            let frame = state.frame(&format!("{store_dir} @ {addr}"), &status, &tail);
+            // The trace feed is best-effort: a server predating /trace
+            // (or a store with tracing off) just means no pane.
+            let span_tail = fleet::fetch_spans(addr, &state.trace_cursor).ok();
+            let frame = state.frame(&format!("{store_dir} @ {addr}"), &status, &tail, span_tail);
             if emit_frame(&frame, once, interval) {
                 return;
             }
@@ -628,7 +664,8 @@ fn cmd_watch(args: &Args) {
     loop {
         let status = fleet::collect_status(&store, ttl);
         let tail = fleet::read_events_from(store.root(), &state.cursor);
-        let frame = state.frame(&store_dir, &status, &tail);
+        let span_tail = Some(fleet::read_spans_from(store.root(), &state.trace_cursor));
+        let frame = state.frame(&store_dir, &status, &tail, span_tail);
         if emit_frame(&frame, once, interval) {
             return;
         }
@@ -684,8 +721,49 @@ fn cmd_serve(args: &Args) {
     println!("  GET /metrics                Prometheus text (== `repro metrics`)");
     println!("  GET /status                 fleet queue/lease status as JSON");
     println!("  GET /events?after=<cursor>  incremental event tail (whole lines only)");
+    println!("  GET /trace?after=<cursor>   incremental span tail (same cursor scheme)");
     println!("  GET /health                 health findings as JSON (one poll per scrape)");
     server.join();
+}
+
+/// `repro trace`: merge every worker's span segments into one timeline
+/// and render the critical-path / utilization report. With `--connect`
+/// the spans stream from a `repro serve` server's `/trace` and pass
+/// through the same sort + render pipeline, so the two outputs are
+/// byte-identical by construction. `--trace-out file.json` additionally
+/// writes the merged Chrome trace (per-worker process lanes).
+fn cmd_trace(args: &Args) {
+    let (mut spans, skipped, pending, unreadable) = if let Some(addr) = args.get("connect") {
+        let tail = fleet::fetch_spans(addr, &fleet::Cursor::default())
+            .unwrap_or_else(|e| panic!("repro trace --connect {addr}: {e}"));
+        (tail.spans, tail.consumed_skipped, tail.pending_tails, tail.unreadable_files)
+    } else {
+        let Some((store, store_dir)) = open_store_for_view(args) else {
+            return;
+        };
+        // Zero-cursor incremental read — the exact computation the
+        // server performs for `/trace?after=`, including the
+        // skipped/pending split, keeping local and remote reports
+        // byte-identical even around torn tails.
+        let tail = fleet::read_spans_from(store.root(), &fleet::Cursor::default());
+        if tail.spans.is_empty() && tail.consumed_skipped == 0 && tail.unreadable_files == 0 {
+            eprintln!(
+                "note: no trace spans under {store_dir} (record them with --trace on \
+                 train/fleet/worker)"
+            );
+        }
+        (tail.spans, tail.consumed_skipped, tail.pending_tails, tail.unreadable_files)
+    };
+    fleet::sort_spans(&mut spans);
+    print!("{}", fleet::render_trace_report(&spans, skipped, pending, unreadable));
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, fleet::chrome_trace(&spans))
+            .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+        eprintln!(
+            "chrome trace ({} spans) → {path}  [open in chrome://tracing or Perfetto]",
+            spans.len()
+        );
+    }
 }
 
 /// `repro gc`: prune the store per the retention policy.

@@ -18,7 +18,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 /// One closed span. `tid` is a small per-thread ordinal (first profiled
 /// thread = 0), not the OS thread id — stable across runs of the same
@@ -39,9 +39,31 @@ thread_local! {
     static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
 }
 
-fn epoch() -> &'static Instant {
-    static EPOCH: OnceLock<Instant> = OnceLock::new();
-    EPOCH.get_or_init(Instant::now)
+/// The profiler's time base: a monotonic `Instant` paired with the
+/// unix-microsecond wall clock captured at the same moment, so span
+/// offsets can be rebased to absolute time (the fleet trace merges
+/// spans from many processes and needs one shared axis).
+fn epoch() -> &'static (Instant, u64) {
+    static EPOCH: OnceLock<(Instant, u64)> = OnceLock::new();
+    EPOCH.get_or_init(|| {
+        let unix_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        (Instant::now(), unix_us)
+    })
+}
+
+/// Unix microseconds corresponding to span offset 0 ([`SpanRecord::start_us`]).
+pub fn epoch_unix_us() -> u64 {
+    epoch().1
+}
+
+/// This thread's profiler ordinal (first profiled thread = 0). Shared
+/// with `fleet::trace` so directly-emitted worker spans land on the
+/// same lane numbering as drained phase spans.
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
 }
 
 fn records() -> &'static Mutex<Vec<SpanRecord>> {
@@ -83,7 +105,7 @@ impl Drop for SpanGuard {
         if !is_enabled() {
             return;
         }
-        let start_us = start.duration_since(*epoch()).as_micros() as u64;
+        let start_us = start.duration_since(epoch().0).as_micros() as u64;
         let dur_us = start.elapsed().as_micros() as u64;
         let tid = TID.with(|t| *t);
         records().lock().unwrap().push(SpanRecord {
@@ -104,24 +126,56 @@ pub fn span(name: &'static str) -> SpanGuard {
     SpanGuard { name, start }
 }
 
-/// Chrome trace-event JSON (the `traceEvents` array format): one complete
-/// ("ph":"X") event per span, timestamps/durations in microseconds.
-pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
-    let mut out = String::from("{\"traceEvents\":[");
-    for (i, s) in spans.iter().enumerate() {
-        if i > 0 {
-            out.push(',');
+/// JSON string escaping for trace export. Span names are normally
+/// static identifiers, but the exporter must stay valid JSON for any
+/// name (quotes, backslashes, control characters).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
         }
-        // Span names are static identifiers (no quotes/backslashes), so no
-        // escaping pass is needed — debug-asserted to keep that true.
-        debug_assert!(s.name.chars().all(|c| c != '"' && c != '\\'));
-        out.push_str(&format!(
-            "{{\"name\":\"{}\",\"cat\":\"pipeline\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
-            s.name, s.start_us, s.dur_us, s.tid
+    }
+    out
+}
+
+/// Chrome trace-event JSON (the `traceEvents` array format): one complete
+/// ("ph":"X") event per span, timestamps/durations in microseconds,
+/// preceded by "M" metadata events naming the process and each thread
+/// lane so viewers label rows instead of showing bare ordinals.
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
+    let mut events: Vec<String> = Vec::with_capacity(spans.len() + 4);
+    events.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{\"name\":\"repro\"}}"
+            .to_string(),
+    );
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        events.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"args\":{{\"name\":\"lane-{tid}\"}}}}"
         ));
     }
-    out.push_str("],\"displayTimeUnit\":\"ms\"}");
-    out
+    for s in spans {
+        events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"pipeline\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+            json_escape(s.name),
+            s.start_us,
+            s.dur_us,
+            s.tid
+        ));
+    }
+    format!(
+        "{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}",
+        events.join(",")
+    )
 }
 
 /// Aggregated per-phase timing.
@@ -253,5 +307,62 @@ mod tests {
             .unwrap();
         assert!(inner.start_us >= grad.start_us);
         assert!(inner.start_us + inner.dur_us <= grad.start_us + grad.dur_us);
+    }
+
+    // The exporter is a pure function of its input, so these tests touch
+    // no process-global profiler state and can run in parallel with the
+    // lifecycle test above.
+
+    #[test]
+    fn chrome_export_escapes_hostile_names_and_parses() {
+        let spans = vec![
+            SpanRecord { name: "evil\"name\\with\ncontrol\u{1}", tid: 3, start_us: 10, dur_us: 5 },
+            SpanRecord { name: "encode", tid: 0, start_us: 0, dur_us: 7 },
+        ];
+        let json = chrome_trace_json(&spans);
+        // The hardening contract: the export must parse with the crate's
+        // own strict JSON parser, hostile names and all.
+        let doc = crate::fleet::client::Json::parse(&json).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(names.contains(&"evil\"name\\with\ncontrol\u{1}"), "{names:?}");
+        assert!(names.contains(&"encode"));
+    }
+
+    #[test]
+    fn chrome_export_emits_pid_tid_metadata_lanes() {
+        let spans = vec![
+            SpanRecord { name: "a", tid: 0, start_us: 0, dur_us: 1 },
+            SpanRecord { name: "b", tid: 2, start_us: 1, dur_us: 1 },
+            SpanRecord { name: "c", tid: 0, start_us: 2, dur_us: 1 },
+        ];
+        let json = chrome_trace_json(&spans);
+        let doc = crate::fleet::client::Json::parse(&json).unwrap();
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let metas: Vec<&crate::fleet::client::Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .collect();
+        // One process_name plus one thread_name per distinct tid.
+        assert_eq!(metas.len(), 3, "{json}");
+        assert_eq!(
+            metas[0].get("name").and_then(|n| n.as_str()),
+            Some("process_name")
+        );
+        let lanes: Vec<f64> = metas
+            .iter()
+            .filter(|m| m.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+            .filter_map(|m| m.get("tid").and_then(|t| t.as_f64()))
+            .collect();
+        assert_eq!(lanes, vec![0.0, 2.0]);
+        // Complete events still carry every span.
+        let xs = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .count();
+        assert_eq!(xs, 3);
     }
 }

@@ -1,0 +1,415 @@
+//! Fleet tracing, end to end (the CI trace-smoke suite — every test is
+//! `trace_`-prefixed so the main Test step skips it):
+//!
+//! * a SIGKILL'd worker's already-flushed spans survive and merge — the
+//!   kill can at worst tear the victim's *own* trailing line, which
+//!   readers skip (counted, never fatal);
+//! * a 4-worker fleet's merged trace reconstructs every run's
+//!   claim → execute → complete chain exactly once;
+//! * `summary.csv` is byte-identical with tracing on vs off (spans are
+//!   pure wall-clock, outside the deterministic core);
+//! * `repro trace --connect` renders byte-identically to the local
+//!   store read — same spans, same report, same Chrome JSON.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use ota_dsgd::campaign::{manifest::RunStatus, RunManifest, RunStore};
+use ota_dsgd::config::{presets, CampaignConfig, FleetConfig, RunConfig, Scheme};
+use ota_dsgd::experiments::runner::ExperimentSpec;
+use ota_dsgd::fleet;
+use ota_dsgd::model::PARAM_DIM;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn read(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"))
+}
+
+fn lean(scheme: Scheme) -> RunConfig {
+    RunConfig {
+        scheme,
+        iterations: 4,
+        eval_every: 2,
+        channel_uses: PARAM_DIM / 8,
+        sparsity: PARAM_DIM / 16,
+        ..presets::smoke()
+    }
+}
+
+fn spec(id: &str) -> ExperimentSpec {
+    ExperimentSpec {
+        id: id.into(),
+        title: format!("fleet tracing {id}"),
+        runs: vec![
+            ("error-free".into(), lean(Scheme::ErrorFree)),
+            ("signsgd".into(), lean(Scheme::SignSgd)),
+            ("qsgd".into(), lean(Scheme::Qsgd)),
+        ],
+    }
+}
+
+fn traced_campaign(store_dir: &str) -> CampaignConfig {
+    let mut c = CampaignConfig {
+        snapshot_every: 1,
+        store_dir: store_dir.to_string(),
+        ..CampaignConfig::default()
+    };
+    c.telemetry.trace = true;
+    c
+}
+
+/// Spans for `key` named `name`, in merge order.
+fn of<'a>(spans: &'a [fleet::Span], key: &str, name: &str) -> Vec<&'a fleet::Span> {
+    spans.iter().filter(|s| s.key == key && s.name == name).collect()
+}
+
+/// Enqueue with a trace attached (so `enqueue` marks anchor queue-wait),
+/// returning the run keys.
+fn enqueue_traced(store_dir: &str, sp: &ExperimentSpec) -> Vec<String> {
+    let store = RunStore::open(store_dir).unwrap();
+    let log = fleet::TraceLog::open(store.root(), "enqueuer").unwrap();
+    store.attach_trace(log);
+    fleet::enqueue_specs(&store, std::slice::from_ref(sp))
+        .unwrap()
+        .into_iter()
+        .map(|i| i.key)
+        .collect()
+}
+
+/// The acceptance gate for crash safety: SIGKILL a real `repro worker
+/// --trace` mid-run. Its flushed spans must survive and merge; the
+/// survivor's resume completes the chain; an injected torn tail is
+/// skipped, not fatal.
+#[test]
+fn trace_sigkill_worker_spans_survive_and_merge() {
+    let base = fresh_dir("ota_trace_sigkill_test");
+    let cfg = RunConfig {
+        iterations: 400,
+        eval_every: 100,
+        ..lean(Scheme::ErrorFree)
+    };
+    let sp = ExperimentSpec {
+        id: "tkill".into(),
+        title: "trace sigkill".into(),
+        runs: vec![("error-free".into(), cfg.clone())],
+    };
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let keys = enqueue_traced(&store_dir, &sp);
+    let key = keys[0].clone();
+    let store = RunStore::open(&store_dir).unwrap();
+
+    // A real worker process with tracing on, snapshotting every round.
+    // (`--trace` sits directly before another `--` token: the CLI parser
+    // would otherwise consume a following bare word as its value.)
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["worker", "--store-dir", store_dir.as_str()])
+        .args(["--lease-secs", "2", "--heartbeat-secs", "0.5"])
+        .args(["--snapshot-every", "1", "--worker-id", "victim"])
+        .args(["--trace", "--quiet"])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn repro worker");
+
+    let manifest_path = store.root().join(&key).join("manifest.toml");
+    let mut progressed = false;
+    for _ in 0..3000 {
+        if let Ok(m) = RunManifest::read(&manifest_path) {
+            if m.status == RunStatus::Partial && m.snapshot_round >= 3 {
+                progressed = true;
+                break;
+            }
+            if m.status == RunStatus::Complete {
+                break;
+            }
+        }
+        if child.try_wait().expect("try_wait").is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    child.kill().ok();
+    child.wait().ok();
+    assert!(
+        progressed,
+        "worker must reach a mid-run snapshot before the kill (machine too slow or worker died early?)"
+    );
+
+    // The victim's flushed spans are already durable: its lease_acquire
+    // and per-round snapshot_save scopes landed line-by-line. The kill
+    // can at worst tear its own trailing line (counted, not fatal).
+    let rep = fleet::read_spans(store.root());
+    assert_eq!(
+        rep.unreadable_files, 0,
+        "every span segment must still open after a SIGKILL"
+    );
+    let victim: Vec<_> = rep.spans.iter().filter(|s| s.worker == "victim").collect();
+    assert!(
+        victim.iter().any(|s| s.name == "lease_acquire" && s.key == key),
+        "the victim's lease_acquire span must have been flushed: {victim:?}"
+    );
+    assert!(
+        victim.iter().any(|s| s.name == "snapshot_save" && s.key == key),
+        "at least one snapshot_save span must have been flushed before the kill"
+    );
+    assert!(
+        !rep.spans.iter().any(|s| s.name == "execute" && s.worker == "victim"),
+        "the victim died inside its execute scope, so that span never flushed"
+    );
+
+    // A surviving in-process worker (tracing on) reclaims and resumes.
+    let fleet_cfg = FleetConfig {
+        workers: 1,
+        lease_secs: 2.0,
+        heartbeat_secs: 0.5,
+    };
+    let campaign = traced_campaign(&store_dir);
+    let report = fleet::run_worker(&store_dir, &fleet_cfg, &campaign, "survivor", false).unwrap();
+    assert_eq!((report.executed, report.resumed), (0, 1));
+
+    // The merged trace now completes the chain: the survivor's resume
+    // marker, execute span and complete marker all carry the same key.
+    let rep = fleet::read_spans(store.root());
+    assert_eq!(rep.unreadable_files, 0);
+    let resumes = of(&rep.spans, &key, "resume");
+    assert_eq!(resumes.len(), 1, "exactly one resume marker");
+    assert_eq!(resumes[0].worker, "survivor");
+    assert!(
+        resumes[0].round.is_some_and(|r| r >= 3),
+        "the resume marker must carry the snapshot round it restored: {resumes:?}"
+    );
+    let execs = of(&rep.spans, &key, "execute");
+    assert_eq!(execs.len(), 1, "exactly one completed execute span");
+    assert_eq!(execs[0].worker, "survivor");
+    assert!(execs[0].dur_us > 0);
+    assert_eq!(of(&rep.spans, &key, "complete").len(), 1);
+    let parsed_before = rep.spans.len();
+    let skipped_before = rep.skipped_lines;
+
+    // Inject a garbage line plus a torn tail into the victim's segment:
+    // the reader must skip both (counted), keep every parsed span, and
+    // never flag the file unreadable. (`>` not an exact count: if the
+    // SIGKILL itself tore the victim's last line, the injected garbage
+    // concatenates onto it and the two merge into one skipped line.)
+    let segment = fleet::trace_dir(store.root()).join("victim.jsonl");
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"this is not a span\n").unwrap();
+    fh.write_all(b"{\"v\":1,\"name\":\"execute\",\"us\":12,\"dur").unwrap();
+    drop(fh);
+    let rep = fleet::read_spans(store.root());
+    assert_eq!(rep.unreadable_files, 0, "a torn tail is not an unreadable file");
+    assert_eq!(rep.spans.len(), parsed_before, "torn tail must not drop parsed spans");
+    assert!(
+        rep.skipped_lines > skipped_before,
+        "garbage + torn tail must be counted as skipped ({} -> {})",
+        skipped_before,
+        rep.skipped_lines
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A 4-worker fleet's merged trace reconstructs every run's lifecycle
+/// chain exactly once: enqueue → lease_acquire → execute → complete,
+/// causally ordered on the shared unix-microsecond axis.
+#[test]
+fn trace_fleet_reconstructs_lifecycle_chains_exactly_once() {
+    let base = fresh_dir("ota_trace_chains_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    let keys = enqueue_traced(&store_dir, &spec("tchain"));
+    assert_eq!(keys.len(), 3);
+
+    let campaign = traced_campaign(&store_dir);
+    let fleet_cfg = FleetConfig::default();
+    let reports: Vec<fleet::WorkerReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let store_dir = &store_dir;
+                let campaign = &campaign;
+                let fleet_cfg = &fleet_cfg;
+                scope.spawn(move || {
+                    fleet::run_worker(store_dir, fleet_cfg, campaign, &format!("w{i}"), false)
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let executed: usize = reports.iter().map(|r| r.executed + r.resumed).sum();
+    assert_eq!(executed, 3, "every run executed exactly once: {reports:?}");
+
+    let store = RunStore::open(&store_dir).unwrap();
+    let rep = fleet::read_spans(store.root());
+    assert_eq!(rep.unreadable_files, 0);
+    assert_eq!(rep.skipped_lines, 0, "a clean fleet writes no torn lines");
+    let workers: Vec<&str> = ["w0", "w1", "w2", "w3"].to_vec();
+    for key in &keys {
+        let enq = of(&rep.spans, key, "enqueue");
+        assert_eq!(enq.len(), 1, "{key}: exactly one enqueue marker");
+        assert_eq!(enq[0].worker, "enqueuer");
+        assert_eq!(enq[0].campaign, "tchain", "the enqueue marker carries the spec id");
+        let execs = of(&rep.spans, key, "execute");
+        assert_eq!(execs.len(), 1, "{key}: exactly one execute span across 4 workers");
+        let exec = execs[0];
+        assert!(exec.dur_us > 0, "{key}: execute must be a timed span");
+        assert!(
+            workers.contains(&exec.worker.as_str()),
+            "{key}: execute ran on a fleet worker, got {:?}",
+            exec.worker
+        );
+        let acquires = of(&rep.spans, key, "lease_acquire");
+        assert!(
+            !acquires.is_empty(),
+            "{key}: the winning claim's lease_acquire span must be recorded"
+        );
+        assert!(
+            acquires.iter().any(|a| a.worker == exec.worker),
+            "{key}: the executing worker must hold a lease_acquire span"
+        );
+        let completes = of(&rep.spans, key, "complete");
+        assert_eq!(completes.len(), 1, "{key}: exactly one complete marker");
+        assert_eq!(completes[0].worker, exec.worker);
+        // Causal order on the shared clock: enqueue ≤ acquire ≤ execute
+        // start, and complete lands inside execute (1 ms slack — the
+        // marker is SystemTime-stamped, the span end is start +
+        // Instant-elapsed, and the two clocks may micro-drift).
+        let acq = acquires.iter().find(|a| a.worker == exec.worker).unwrap();
+        assert!(enq[0].start_us <= acq.start_us, "{key}: enqueue before acquire");
+        assert!(acq.start_us <= exec.start_us, "{key}: acquire before execute");
+        assert!(
+            completes[0].start_us >= exec.start_us
+                && completes[0].start_us <= exec.end_us() + 1_000,
+            "{key}: the complete marker lands within the execute span"
+        );
+    }
+
+    // The rendered report contains a critical-path row for every run
+    // and a utilization line for every lane that emitted spans.
+    let mut spans = rep.spans.clone();
+    fleet::sort_spans(&mut spans);
+    let report = fleet::render_trace_report(&spans, 0, 0, 0);
+    assert!(report.contains("critical path per run"));
+    for key in &keys {
+        assert!(report.contains(key.as_str()), "report must list {key}");
+    }
+    assert!(report.contains("worker utilization"));
+    assert!(report.contains("straggler:"), "multi-lane traces rank the straggler");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Tracing is observe-only: the same campaign with tracing off and on
+/// produces byte-identical `summary.csv` (and identical stored
+/// trajectories), because spans are pure wall-clock — no RNG draws, no
+/// f32 op-order changes.
+#[test]
+fn trace_on_off_byte_identical_outputs() {
+    let base = fresh_dir("ota_trace_identity_test");
+    let fleet_cfg = FleetConfig::default();
+    let mut outs: Vec<PathBuf> = Vec::new();
+    for (tag, traced) in [("off", false), ("on", true)] {
+        let store_dir = base.join(format!("store_{tag}")).to_str().unwrap().to_string();
+        {
+            let store = RunStore::open(&store_dir).unwrap();
+            fleet::enqueue_specs(&store, &[spec("tident")]).unwrap();
+        }
+        let mut campaign = traced_campaign(&store_dir);
+        campaign.telemetry.trace = traced;
+        fleet::run_worker(&store_dir, &fleet_cfg, &campaign, "w0", false).unwrap();
+        let out = base.join(format!("out_{tag}"));
+        let store = RunStore::open(&store_dir).unwrap();
+        fleet::collect_outputs(&store, &[spec("tident")], out.to_str().unwrap()).unwrap();
+        let spans = fleet::read_spans(store.root());
+        if traced {
+            assert!(!spans.spans.is_empty(), "traced store must hold spans");
+        } else {
+            assert!(
+                spans.spans.is_empty(),
+                "untraced store must hold no spans: {:?}",
+                spans.spans
+            );
+        }
+        outs.push(out);
+    }
+    assert_eq!(
+        read(&outs[0].join("tident/summary.csv")),
+        read(&outs[1].join("tident/summary.csv")),
+        "summary.csv must be byte-identical with tracing off vs on"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// `repro trace --connect` ≡ local: the server's `/trace` cursor read
+/// and the local store read return the same spans and render the same
+/// report and Chrome JSON, byte for byte — including the fail-soft
+/// accounting around injected garbage and a torn tail.
+#[test]
+fn trace_connect_output_byte_identical_to_local() {
+    let base = fresh_dir("ota_trace_connect_test");
+    let store_dir = base.join("store").to_str().unwrap().to_string();
+    enqueue_traced(&store_dir, &spec("twire"));
+    let campaign = traced_campaign(&store_dir);
+    fleet::run_worker(&store_dir, &FleetConfig::default(), &campaign, "w0", false).unwrap();
+    let store = RunStore::open(&store_dir).unwrap();
+
+    // Garbage + torn tail exercise the skipped/pending split both
+    // sides must account identically.
+    let segment = fleet::trace_dir(store.root()).join("w0.jsonl");
+    let mut fh = std::fs::OpenOptions::new().append(true).open(&segment).unwrap();
+    fh.write_all(b"this is not a span\n").unwrap();
+    fh.write_all(b"{\"v\":1,\"name\":\"torn-mid-wri").unwrap();
+    drop(fh);
+
+    let server =
+        fleet::Server::bind(&store_dir, "127.0.0.1:0", fleet::ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+
+    let local = fleet::read_spans_from(store.root(), &fleet::Cursor::default());
+    let remote = fleet::fetch_spans(&addr, &fleet::Cursor::default()).unwrap();
+    assert!(!local.spans.is_empty(), "the traced run must produce spans");
+    assert_eq!(local.spans, remote.spans, "span sets must match over the wire");
+    assert_eq!(local.consumed_skipped, remote.consumed_skipped);
+    assert_eq!(local.pending_tails, remote.pending_tails);
+    assert_eq!(local.unreadable_files, remote.unreadable_files);
+    assert_eq!(local.consumed_skipped, 1, "the garbage line is consumed-skipped");
+    assert_eq!(local.pending_tails, 1, "the torn tail is pending, not consumed");
+
+    // The exact `repro trace` rendering pipeline, both sides.
+    let render = |tail: &fleet::SpanTailReport| {
+        let mut spans = tail.spans.clone();
+        fleet::sort_spans(&mut spans);
+        (
+            fleet::render_trace_report(
+                &spans,
+                tail.consumed_skipped,
+                tail.pending_tails,
+                tail.unreadable_files,
+            ),
+            fleet::chrome_trace(&spans),
+        )
+    };
+    let (local_report, local_chrome) = render(&local);
+    let (remote_report, remote_chrome) = render(&remote);
+    assert_eq!(
+        local_report, remote_report,
+        "`repro trace --connect` report must be byte-identical to local"
+    );
+    assert!(local_report.contains("fail-soft: 1 skipped line(s) · 1 pending tail(s)"));
+    assert_eq!(
+        local_chrome, remote_chrome,
+        "the merged Chrome trace must be byte-identical over the wire"
+    );
+
+    // Cursor chaining: a second read from the returned cursor is empty
+    // (the torn tail stays pending; nothing is consumed twice).
+    let next = fleet::fetch_spans(&addr, &remote.cursor).unwrap();
+    assert!(next.spans.is_empty(), "no new spans after the first read");
+    assert_eq!(next.consumed_skipped, 0, "garbage must not be re-consumed");
+    assert_eq!(next.pending_tails, 1, "the torn tail is still pending");
+    drop(server);
+    std::fs::remove_dir_all(&base).ok();
+}
